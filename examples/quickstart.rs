@@ -1,0 +1,60 @@
+//! Quickstart: build a small maze MDP, solve it with three methods, and
+//! compare their work counts — the 60-second tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use madupite::models::gridworld::GridSpec;
+use madupite::models::ModelGenerator;
+use madupite::solver::{solve_serial, Method, SolveOptions};
+
+fn main() {
+    // 1. Build a 32×32 maze MDP (1024 states, 4 actions, γ = 0.99).
+    let spec = GridSpec::maze(32, 32, 7);
+    let mdp = spec.build_serial(0.99);
+    println!(
+        "maze MDP: {} states × {} actions, {} transition nonzeros",
+        mdp.n_states(),
+        mdp.n_actions(),
+        mdp.transitions().nnz()
+    );
+
+    // 2. Solve with value iteration, modified PI, and iPI(GMRES).
+    for method in [Method::Vi, Method::Mpi { sweeps: 20 }, Method::ipi_gmres()] {
+        let opts = SolveOptions {
+            method: method.clone(),
+            atol: 1e-8,
+            max_outer: 100_000,
+            ..Default::default()
+        };
+        let r = solve_serial(&mdp, &opts);
+        println!(
+            "  {:<14} converged={} outer={:5} spmvs={:6} residual={:.2e} time={:.3}s",
+            method.name(),
+            r.converged,
+            r.outer_iterations,
+            r.total_spmvs,
+            r.residual,
+            r.wall_time_s
+        );
+    }
+
+    // 3. Inspect the solution: V* at the start corner and the first moves.
+    let r = solve_serial(
+        &mdp,
+        &SolveOptions {
+            method: Method::ipi_gmres(),
+            atol: 1e-10,
+            ..Default::default()
+        },
+    );
+    let action_names = ["north", "east", "south", "west"];
+    println!(
+        "\noptimal expected cost from the start corner: {:.4}",
+        r.value[0]
+    );
+    println!("first move from the start corner: {}", action_names[r.policy[0]]);
+    println!(
+        "value at the goal (must be 0): {:.2e}",
+        r.value[spec.goal.0 * 32 + spec.goal.1]
+    );
+}

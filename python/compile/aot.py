@@ -1,0 +1,128 @@
+"""AOT lowering: jax graphs -> HLO **text** artifacts for the Rust runtime.
+
+Run once at build time (`make artifacts`); the Rust binary is self-contained
+afterwards. HLO *text* — not serialized HloModuleProto — is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README
+and DESIGN.md §2).
+
+Artifacts written to --out-dir (default ../artifacts):
+  bellman_<S>_<A>.hlo.txt        (P, G, V, gamma) -> (TV, PI)
+  vi_<S>_<A>_k<K>.hlo.txt        (P, G, V, gamma) -> (V_k,)
+  policy_eval_<S>.hlo.txt        (P_pi, g_pi, V, gamma) -> (V',)
+  residual_<S>_<A>.hlo.txt       (P, G, V, gamma) -> (TV, PI, res)
+  manifest.json                   shape/entry-point index for the runtime
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Dense-block shapes shipped by default: (n_states, n_actions).
+DEFAULT_SHAPES = [(64, 4), (128, 4), (256, 8)]
+DEFAULT_SWEEPS = 10
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_bellman(n, m):
+    fn = jax.jit(model.bellman_min_graph)
+    return fn.lower(_spec((m, n, n)), _spec((m, n)), _spec((n,)), _spec(()))
+
+
+def lower_vi(n, m, k):
+    fn = jax.jit(lambda p, g, v, gamma: model.vi_sweeps_graph(p, g, v, gamma, k))
+    return fn.lower(_spec((m, n, n)), _spec((m, n)), _spec((n,)), _spec(()))
+
+
+def lower_policy_eval(n):
+    fn = jax.jit(model.policy_eval_graph)
+    return fn.lower(_spec((n, n)), _spec((n,)), _spec((n,)), _spec(()))
+
+
+def lower_residual(n, m):
+    fn = jax.jit(model.residual_graph)
+    return fn.lower(_spec((m, n, n)), _spec((m, n)), _spec((n,)), _spec(()))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument(
+        "--shapes",
+        default=",".join(f"{n}x{m}" for n, m in DEFAULT_SHAPES),
+        help="comma list of SxA dense block shapes, e.g. 64x4,128x4",
+    )
+    ap.add_argument("--sweeps", type=int, default=DEFAULT_SWEEPS)
+    args = ap.parse_args()
+
+    shapes = []
+    for tok in args.shapes.split(","):
+        n, m = tok.lower().split("x")
+        shapes.append((int(n), int(m)))
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": 1, "sweeps": args.sweeps, "entries": []}
+
+    def emit(name, lowered, inputs, outputs):
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {"file": name, "inputs": inputs, "outputs": outputs}
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    for n, m in shapes:
+        emit(
+            f"bellman_{n}_{m}.hlo.txt",
+            lower_bellman(n, m),
+            {"p": [m, n, n], "g": [m, n], "v": [n], "gamma": []},
+            {"tv": [n], "pi": [n]},
+        )
+        emit(
+            f"vi_{n}_{m}_k{args.sweeps}.hlo.txt",
+            lower_vi(n, m, args.sweeps),
+            {"p": [m, n, n], "g": [m, n], "v": [n], "gamma": []},
+            {"v": [n]},
+        )
+        emit(
+            f"residual_{n}_{m}.hlo.txt",
+            lower_residual(n, m),
+            {"p": [m, n, n], "g": [m, n], "v": [n], "gamma": []},
+            {"tv": [n], "pi": [n], "res": []},
+        )
+    for n in sorted({n for n, _ in shapes}):
+        emit(
+            f"policy_eval_{n}.hlo.txt",
+            lower_policy_eval(n),
+            {"p_pi": [n, n], "g_pi": [n], "v": [n], "gamma": []},
+            {"v": [n]},
+        )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest with {len(manifest['entries'])} entries")
+
+
+if __name__ == "__main__":
+    main()

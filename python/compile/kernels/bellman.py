@@ -1,0 +1,176 @@
+"""Layer-1 Pallas kernels: the dense Bellman backup hot-spot.
+
+The paper's solver spends its time applying `B = G + gamma * P V` and
+reducing over actions; for the dense-block accelerator path this is the
+compute kernel, written in Pallas and embedded in the Layer-2 jax graphs so
+it lowers into the same AOT HLO artifact the Rust runtime executes.
+
+TPU design notes (DESIGN.md §7 — the original targets CPU clusters, so this
+is an adaptation, not a port):
+
+- grid over actions; grid step `a` computes `q_a = G[a] + gamma * P[a] @ v`
+  as an (S, S) x (S,) contraction. On a real TPU the BlockSpec below tiles
+  `P[a]` HBM->VMEM in (block_s, S) slabs feeding the MXU, with `v` resident
+  in VMEM across all grid steps and the running min/argmin accumulated in
+  the output VMEM block (sequential-grid accumulation pattern).
+- min/argmin accumulate across grid steps with the `@pl.when` init-else-
+  update idiom; ties resolve to the smallest action id, matching ref.py
+  and the Rust solver.
+- `interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls; interpret mode lowers to plain HLO so the artifact runs on
+  the Rust side. Real-TPU lowering would only change `interpret` and the
+  block sizes.
+
+VMEM budget (16 MiB/core): the f32 working set per grid step is one
+(block_s, S) slab of P + v (S) + q/tv/pi (block_s each). For the shipped
+artifact shapes (S <= 512) a full-rows slab fits: S=512 -> 512*512*4 = 1 MiB
+slab + 2 KiB v — comfortably under budget with double buffering; block_s
+would shrink first for larger S (see DESIGN.md §8 for the roofline table).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bellman_kernel(gamma_ref, p_ref, g_ref, v_ref, tv_ref, pi_ref):
+    """Grid step: fold action `a`'s Q-values into the running min/argmin."""
+    a = pl.program_id(0)
+    gamma = gamma_ref[0]
+    # q = G[a] + gamma * P[a] @ v    (p_ref block is (1, S, S))
+    q = g_ref[0, :] + gamma * jnp.dot(p_ref[0], v_ref[...])
+
+    @pl.when(a == 0)
+    def _init():
+        tv_ref[...] = q
+        pi_ref[...] = jnp.zeros_like(pi_ref)
+
+    @pl.when(a != 0)
+    def _fold():
+        better = q < tv_ref[...]
+        tv_ref[...] = jnp.where(better, q, tv_ref[...])
+        pi_ref[...] = jnp.where(better, jnp.full_like(pi_ref, a), pi_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def bellman_min(p, g, v, gamma):
+    """Dense Bellman backup via the Pallas kernel.
+
+    Args:
+      p: (A, S, S) f32 transition tensor.
+      g: (A, S) f32 stage costs.
+      v: (S,) f32 value vector.
+      gamma: f32 scalar (traced — one artifact serves any discount).
+
+    Returns:
+      (tv, pi): (S,) f32 and (S,) int32.
+    """
+    n_actions, n_states, _ = p.shape
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _bellman_kernel,
+        grid=(n_actions,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda a: (0,)),                      # gamma
+            pl.BlockSpec((1, n_states, n_states), lambda a: (a, 0, 0)),  # P[a]
+            pl.BlockSpec((1, n_states), lambda a: (a, 0)),           # G[a]
+            pl.BlockSpec((n_states,), lambda a: (0,)),               # v
+        ],
+        out_specs=[
+            pl.BlockSpec((n_states,), lambda a: (0,)),               # tv
+            pl.BlockSpec((n_states,), lambda a: (0,)),               # pi
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_states,), jnp.float32),
+            jax.ShapeDtypeStruct((n_states,), jnp.int32),
+        ],
+        interpret=True,
+    )(gamma_arr, p, g, v)
+
+
+def _policy_eval_kernel(gamma_ref, p_ref, g_ref, v_ref, out_ref):
+    """V' = g_pi + gamma * P_pi @ v (single fused sweep)."""
+    out_ref[...] = g_ref[...] + gamma_ref[0] * jnp.dot(p_ref[...], v_ref[...])
+
+
+@jax.jit
+def policy_eval_step(p_pi, g_pi, v, gamma):
+    """One fixed-policy evaluation sweep via Pallas.
+
+    Args:
+      p_pi: (S, S) f32 policy transition matrix.
+      g_pi: (S,) f32 policy stage costs.
+      v: (S,) f32.
+      gamma: f32 scalar.
+    """
+    (n_states, _) = p_pi.shape
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _policy_eval_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n_states, n_states), lambda i: (0, 0)),
+            pl.BlockSpec((n_states,), lambda i: (0,)),
+            pl.BlockSpec((n_states,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n_states,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_states,), jnp.float32),
+        interpret=True,
+    )(gamma_arr, p_pi, g_pi, v)
+
+
+def _bellman_batch_kernel(gamma_ref, p_ref, g_ref, v_ref, tv_ref):
+    """Grid step: fold action `a` into the running min for a BATCH of value
+    vectors. q has shape (S, B): an (S, S) x (S, B) matmul — the MXU-shaped
+    variant (batch plays the role of the systolic array's second dimension;
+    on TPU, B would be padded to a multiple of 128).
+    """
+    a = pl.program_id(0)
+    gamma = gamma_ref[0]
+    # (index the Ref first, then add the batch axis on the loaded array —
+    # Pallas Ref indexing does not support jnp.newaxis)
+    q = g_ref[0, :][:, None] + gamma * jnp.dot(p_ref[0], v_ref[...])
+
+    @pl.when(a == 0)
+    def _init():
+        tv_ref[...] = q
+
+    @pl.when(a != 0)
+    def _fold():
+        tv_ref[...] = jnp.minimum(q, tv_ref[...])
+
+
+@jax.jit
+def bellman_min_batch(p, g, v_batch, gamma):
+    """Batched Bellman backup: TV for B value vectors in one pass.
+
+    Args:
+      p: (A, S, S) f32.
+      g: (A, S) f32.
+      v_batch: (S, B) f32 — B value vectors as columns.
+      gamma: f32 scalar.
+
+    Returns:
+      (S, B) f32 minimized backups (no argmin in the batched variant —
+      it serves multi-query evaluation, e.g. bounding runs from several
+      initial vectors or perturbation analyses).
+    """
+    n_actions, n_states, _ = p.shape
+    batch = v_batch.shape[1]
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape((1,))
+    return pl.pallas_call(
+        _bellman_batch_kernel,
+        grid=(n_actions,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda a: (0,)),
+            pl.BlockSpec((1, n_states, n_states), lambda a: (a, 0, 0)),
+            pl.BlockSpec((1, n_states), lambda a: (a, 0)),
+            pl.BlockSpec((n_states, batch), lambda a: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_states, batch), lambda a: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_states, batch), jnp.float32),
+        interpret=True,
+    )(gamma_arr, p, g, v_batch)

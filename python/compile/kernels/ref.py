@@ -1,0 +1,52 @@
+"""Pure-jnp reference oracle for the Pallas Bellman kernels.
+
+This is the correctness anchor of Layer 1 (DESIGN.md §2): every Pallas
+kernel in `bellman.py` must match these definitions to float tolerance, and
+pytest + hypothesis sweep shapes/dtypes against them. The definitions also
+mirror the Rust implementation (`rust/src/mdp/mod.rs::bellman_backup`) so
+the three layers agree on semantics:
+
+    TV(s)  = min_a [ G(s, a) + gamma * sum_s' P(a, s, s') V(s') ]
+    PI(s)  = argmin_a [ ... ]                       (first minimum wins)
+    V'(s)  = g(s) + gamma * sum_s' P_pi(s, s') V(s')   (policy eval sweep)
+"""
+
+import jax.numpy as jnp
+
+
+def bellman_min(p, g, v, gamma):
+    """Dense Bellman backup.
+
+    Args:
+      p: (A, S, S) row-stochastic transition tensor.
+      g: (A, S) stage costs (action-major layout to match the kernel grid).
+      v: (S,) value vector.
+      gamma: scalar discount.
+
+    Returns:
+      (tv, pi): (S,) minimized backup and (S,) int32 argmin policy.
+    """
+    # q[a, s] = g[a, s] + gamma * (P[a] @ v)[s]
+    q = g + gamma * jnp.einsum("ast,t->as", p, v)
+    tv = jnp.min(q, axis=0)
+    pi = jnp.argmin(q, axis=0).astype(jnp.int32)
+    return tv, pi
+
+
+def policy_eval_step(p_pi, g_pi, v, gamma):
+    """One fixed-policy evaluation sweep: V' = g_pi + gamma * P_pi V."""
+    return g_pi + gamma * (p_pi @ v)
+
+
+def vi_sweeps(p, g, v, gamma, k):
+    """k fused value-iteration sweeps (the L2 scan graph's semantics)."""
+    tv = v
+    for _ in range(k):
+        tv, _ = bellman_min(p, g, tv, gamma)
+    return tv
+
+
+def bellman_residual(p, g, v, gamma):
+    """Sup-norm Bellman residual ||TV - V||_inf."""
+    tv, _ = bellman_min(p, g, v, gamma)
+    return jnp.max(jnp.abs(tv - v))

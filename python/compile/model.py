@@ -1,0 +1,54 @@
+"""Layer-2 jax compute graphs for the dense-block accelerator.
+
+These are the functions that get AOT-lowered (by `aot.py`) into the HLO
+artifacts the Rust runtime executes. Each graph embeds the Layer-1 Pallas
+kernels from `kernels/bellman.py`, so kernel and orchestration lower into a
+single fused module — Python never runs at solve time.
+
+Graphs:
+  - `bellman_min_graph`:   one Bellman backup (TV + argmin policy).
+  - `vi_sweeps_graph`:     k fused value-iteration sweeps via `lax.scan`
+                           (amortizes PJRT dispatch: one execute() per k
+                           sweeps instead of k round-trips).
+  - `policy_eval_graph`:   one fixed-policy evaluation sweep.
+  - `residual_graph`:      Bellman backup + sup-norm residual in one pass
+                           (saves the Rust side a second device round-trip).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bellman as kernels
+
+
+def bellman_min_graph(p, g, v, gamma):
+    """(P, G, V, gamma) -> (TV, PI)."""
+    tv, pi = kernels.bellman_min(p, g, v, gamma)
+    return tv, pi
+
+
+def vi_sweeps_graph(p, g, v, gamma, k):
+    """(P, G, V, gamma) -> V after k Bellman sweeps (k is static).
+
+    Uses `lax.scan` so the lowered module contains a single rolled loop
+    body — compile time and code size stay flat in k.
+    """
+
+    def body(carry, _):
+        tv, _ = kernels.bellman_min(p, g, carry, gamma)
+        return tv, ()
+
+    out, _ = jax.lax.scan(body, v, xs=None, length=k)
+    return (out,)
+
+
+def policy_eval_graph(p_pi, g_pi, v, gamma):
+    """(P_pi, g_pi, V, gamma) -> V' (one T_pi sweep)."""
+    return (kernels.policy_eval_step(p_pi, g_pi, v, gamma),)
+
+
+def residual_graph(p, g, v, gamma):
+    """(P, G, V, gamma) -> (TV, PI, ||TV - V||_inf)."""
+    tv, pi = kernels.bellman_min(p, g, v, gamma)
+    res = jnp.max(jnp.abs(tv - v))
+    return tv, pi, res

@@ -1,0 +1,195 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the core correctness signal of the compile path: if these pass, the
+HLO artifacts the Rust runtime executes compute exactly what ref.py (and,
+transitively, the Rust solver) define.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bellman, ref
+
+
+def make_mdp(seed, n, m):
+    """Random dense row-stochastic MDP block (numpy, f32)."""
+    rng = np.random.default_rng(seed)
+    p = rng.random((m, n, n), dtype=np.float32) + 1e-3
+    p /= p.sum(axis=2, keepdims=True)
+    g = rng.random((m, n), dtype=np.float32)
+    v = rng.standard_normal(n).astype(np.float32)
+    return jnp.asarray(p), jnp.asarray(g), jnp.asarray(v)
+
+
+class TestBellmanMin:
+    @pytest.mark.parametrize("n,m", [(4, 2), (16, 4), (64, 4), (128, 8)])
+    def test_matches_ref(self, n, m):
+        p, g, v = make_mdp(n * 100 + m, n, m)
+        tv_k, pi_k = bellman.bellman_min(p, g, v, 0.95)
+        tv_r, pi_r = ref.bellman_min(p, g, v, 0.95)
+        np.testing.assert_allclose(tv_k, tv_r, rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(pi_k), np.asarray(pi_r))
+
+    def test_single_action_is_policy_eval(self):
+        p, g, v = make_mdp(7, 12, 1)
+        tv, pi = bellman.bellman_min(p, g, v, 0.9)
+        expected = ref.policy_eval_step(p[0], g[0], v, 0.9)
+        np.testing.assert_allclose(tv, expected, rtol=1e-5)
+        assert np.all(np.asarray(pi) == 0)
+
+    def test_gamma_zero_reduces_to_cost_min(self):
+        p, g, v = make_mdp(9, 10, 3)
+        tv, pi = bellman.bellman_min(p, g, v, 0.0)
+        np.testing.assert_allclose(tv, jnp.min(g, axis=0), rtol=1e-6)
+        np.testing.assert_array_equal(
+            np.asarray(pi), np.asarray(jnp.argmin(g, axis=0))
+        )
+
+    def test_tie_breaks_to_lowest_action(self):
+        # identical actions -> argmin must be 0 everywhere (matches rust)
+        n, m = 8, 3
+        p = jnp.tile(jnp.eye(n, dtype=jnp.float32)[None], (m, 1, 1))
+        g = jnp.ones((m, n), jnp.float32)
+        v = jnp.zeros((n,), jnp.float32)
+        _, pi = bellman.bellman_min(p, g, v, 0.9)
+        assert np.all(np.asarray(pi) == 0)
+
+    def test_contraction_property(self):
+        p, g, _ = make_mdp(11, 20, 4)
+        u = jnp.asarray(np.random.default_rng(1).standard_normal(20), jnp.float32)
+        w = jnp.asarray(np.random.default_rng(2).standard_normal(20), jnp.float32)
+        gamma = 0.9
+        tu, _ = bellman.bellman_min(p, g, u, gamma)
+        tw, _ = bellman.bellman_min(p, g, w, gamma)
+        lhs = float(jnp.max(jnp.abs(tu - tw)))
+        rhs = gamma * float(jnp.max(jnp.abs(u - w)))
+        assert lhs <= rhs + 1e-5
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=48),
+        m=st.integers(min_value=1, max_value=8),
+        gamma=st.floats(min_value=0.0, max_value=0.999),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_shapes_and_discounts(self, n, m, gamma, seed):
+        p, g, v = make_mdp(seed, n, m)
+        tv_k, pi_k = bellman.bellman_min(p, g, v, gamma)
+        tv_r, pi_r = ref.bellman_min(p, g, v, gamma)
+        np.testing.assert_allclose(tv_k, tv_r, rtol=1e-4, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(pi_k), np.asarray(pi_r))
+
+
+class TestPolicyEval:
+    @pytest.mark.parametrize("n", [4, 32, 128])
+    def test_matches_ref(self, n):
+        rng = np.random.default_rng(n)
+        p = rng.random((n, n), dtype=np.float32)
+        p /= p.sum(axis=1, keepdims=True)
+        g = rng.random(n, dtype=np.float32)
+        v = rng.standard_normal(n).astype(np.float32)
+        out = bellman.policy_eval_step(
+            jnp.asarray(p), jnp.asarray(g), jnp.asarray(v), 0.9
+        )
+        expected = ref.policy_eval_step(p, g, v, 0.9)
+        np.testing.assert_allclose(out, expected, rtol=1e-5, atol=1e-6)
+
+    def test_fixed_point_of_identity_chain(self):
+        # P = I, g = 0: V' = gamma * V
+        n = 16
+        p = jnp.eye(n, dtype=jnp.float32)
+        g = jnp.zeros((n,), jnp.float32)
+        v = jnp.arange(n, dtype=jnp.float32)
+        out = bellman.policy_eval_step(p, g, v, 0.5)
+        np.testing.assert_allclose(out, 0.5 * v, rtol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=40),
+        gamma=st.floats(min_value=0.0, max_value=0.999),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis(self, n, gamma, seed):
+        rng = np.random.default_rng(seed)
+        p = rng.random((n, n), dtype=np.float32)
+        p /= p.sum(axis=1, keepdims=True)
+        g = rng.random(n, dtype=np.float32)
+        v = rng.standard_normal(n).astype(np.float32)
+        out = bellman.policy_eval_step(
+            jnp.asarray(p), jnp.asarray(g), jnp.asarray(v), gamma
+        )
+        expected = ref.policy_eval_step(p, g, v, gamma)
+        np.testing.assert_allclose(out, expected, rtol=1e-4, atol=1e-5)
+
+
+class TestRefSelfConsistency:
+    def test_ref_vi_sweeps_composes(self):
+        p, g, v = make_mdp(3, 10, 2)
+        once = ref.vi_sweeps(p, g, v, 0.9, 1)
+        tv, _ = ref.bellman_min(p, g, v, 0.9)
+        np.testing.assert_allclose(once, tv, rtol=1e-6)
+        thrice = ref.vi_sweeps(p, g, v, 0.9, 3)
+        manual = v
+        for _ in range(3):
+            manual, _ = ref.bellman_min(p, g, manual, 0.9)
+        np.testing.assert_allclose(thrice, manual, rtol=1e-6)
+
+    def test_residual_zero_at_fixed_point(self):
+        # run VI to near-convergence, residual must be small
+        p, g, v = make_mdp(5, 12, 3)
+        x = v
+        for _ in range(600):
+            x, _ = ref.bellman_min(p, g, x, 0.8)
+        assert float(ref.bellman_residual(p, g, x, 0.8)) < 1e-4
+
+    def test_float64_cross_check(self):
+        # f32 kernel against f64 reference: bounds the kernel's rounding
+        p, g, v = make_mdp(13, 32, 4)
+        tv_k, _ = bellman.bellman_min(p, g, v, 0.99)
+        p64, g64, v64 = (
+            np.asarray(p, np.float64),
+            np.asarray(g, np.float64),
+            np.asarray(v, np.float64),
+        )
+        q = g64 + 0.99 * np.einsum("ast,t->as", p64, v64)
+        tv64 = q.min(axis=0)
+        np.testing.assert_allclose(np.asarray(tv_k, np.float64), tv64, atol=1e-4)
+
+
+class TestBellmanBatch:
+    @pytest.mark.parametrize("n,m,b", [(8, 2, 1), (32, 4, 4), (64, 4, 16)])
+    def test_batch_columns_match_single(self, n, m, b):
+        p, g, _ = make_mdp(n + m + b, n, m)
+        rng = np.random.default_rng(b)
+        vb = rng.standard_normal((n, b)).astype(np.float32)
+        out = bellman.bellman_min_batch(p, g, jnp.asarray(vb), 0.95)
+        for j in range(b):
+            tv_j, _ = ref.bellman_min(p, g, vb[:, j], 0.95)
+            np.testing.assert_allclose(out[:, j], tv_j, rtol=1e-4, atol=1e-5)
+
+    def test_batch_of_one_equals_scalar_kernel(self):
+        p, g, v = make_mdp(17, 12, 3)
+        out = bellman.bellman_min_batch(p, g, v[:, None], 0.9)
+        tv, _ = bellman.bellman_min(p, g, v, 0.9)
+        np.testing.assert_allclose(out[:, 0], tv, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=32),
+        m=st.integers(min_value=1, max_value=6),
+        b=st.integers(min_value=1, max_value=8),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_batched(self, n, m, b, seed):
+        p, g, _ = make_mdp(seed, n, m)
+        rng = np.random.default_rng(seed % 1000)
+        vb = rng.standard_normal((n, b)).astype(np.float32)
+        out = bellman.bellman_min_batch(p, g, jnp.asarray(vb), 0.9)
+        q = np.asarray(g)[:, :, None] + 0.9 * np.einsum(
+            "ast,tb->asb", np.asarray(p), vb
+        )
+        expected = q.min(axis=0)
+        np.testing.assert_allclose(out, expected, rtol=1e-4, atol=1e-5)

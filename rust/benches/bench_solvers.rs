@@ -1,0 +1,63 @@
+//! E1 — Method comparison (DESIGN.md §6): VI vs mPI vs iPI(GMRES /
+//! BiCGStab / TFQMR) across the three benchmark families of the iPI
+//! companion paper. Reports outer iterations, total SpMVs (the papers'
+//! hardware-independent cost unit) and wall time to a fixed tolerance.
+//!
+//! Expected shape (paper claims C1/C2): the Krylov iPI variants dominate
+//! mPI/VI in SpMV count, most dramatically on the high-γ Garnet instance.
+
+use madupite::models::{garnet::GarnetSpec, gridworld::GridSpec, sis::SisSpec, ModelGenerator};
+use madupite::solver::{solve_serial, Method, SolveOptions};
+use madupite::util::benchkit::Suite;
+
+fn run_case(suite: &mut Suite, label: &str, mdp: &madupite::mdp::Mdp, method: Method) {
+    let opts = SolveOptions {
+        method: method.clone(),
+        atol: 1e-8,
+        max_outer: 500_000,
+        ..Default::default()
+    };
+    suite.case(&format!("{label}/{}", method.name()), || {
+        let r = solve_serial(mdp, &opts);
+        assert!(r.converged, "{label}/{} did not converge", method.name());
+        vec![
+            ("outer".to_string(), r.outer_iterations as f64),
+            ("spmvs".to_string(), r.total_spmvs as f64),
+            ("residual".to_string(), r.residual),
+        ]
+    });
+}
+
+fn main() {
+    let mut suite = Suite::new("E1 method comparison");
+    let methods = || {
+        vec![
+            Method::Vi,
+            Method::Mpi { sweeps: 5 },
+            Method::Mpi { sweeps: 20 },
+            Method::ipi_gmres(),
+            Method::ipi_bicgstab(),
+            Method::ipi_tfqmr(),
+        ]
+    };
+
+    // maze 200×200, γ = 0.99 — navigation family
+    let maze = GridSpec::maze(200, 200, 11).build_serial(0.99);
+    for m in methods() {
+        run_case(&mut suite, "maze200", &maze, m);
+    }
+
+    // SIS population 10k, γ = 0.95 — epidemic family
+    let sis = SisSpec::standard(10_000, 4).build_serial(0.95);
+    for m in methods() {
+        run_case(&mut suite, "sis10k", &sis, m);
+    }
+
+    // Garnet n = 20k, b = 5, γ = 0.999 — the hard high-discount family
+    let garnet = GarnetSpec::new(20_000, 4, 5, 13).build_serial(0.999);
+    for m in methods() {
+        run_case(&mut suite, "garnet20k", &garnet, m);
+    }
+
+    suite.finish();
+}

@@ -1,0 +1,32 @@
+//! Comparator toolboxes (paper claim C4).
+//!
+//! The paper positions madupite against two existing solvers; E5 reproduces
+//! that comparison, so both are reimplemented here faithfully **including
+//! their design flaws**:
+//!
+//! - [`mdpsolver_like`]: mimics `mdpsolver` (Reenberg Andersen & Fink
+//!   Andersen 2024) — C++ with values and indices in nested `std::vector`s
+//!   "independently of their sparsity degree ... precluding the use of
+//!   available optimized linear algebra routines" (paper, Statement of
+//!   need), and *modified policy iteration only*.
+//! - [`pymdp_like`]: mimics `pymdptoolbox` (Chadès et al. 2014) — dense
+//!   per-action transition matrices and plain value iteration, no
+//!   parallelism.
+//!
+//! Both are serial by construction (neither original distributes), so E5
+//! compares them against `madupite-rs` on one rank — structure, not
+//! hardware, is what the experiment isolates.
+
+pub mod mdpsolver_like;
+pub mod pymdp_like;
+
+/// Common result shape for the baselines.
+#[derive(Clone, Debug)]
+pub struct BaselineResult {
+    pub value: Vec<f64>,
+    pub policy: Vec<usize>,
+    pub iterations: usize,
+    pub converged: bool,
+    /// Bytes used by the transition storage (for the memory comparison).
+    pub storage_bytes: usize,
+}

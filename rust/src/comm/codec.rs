@@ -1,0 +1,110 @@
+//! Little-endian byte codecs for message payloads.
+//!
+//! The comm layer moves `Vec<u8>`; these helpers encode/decode the slice
+//! types the solver exchanges (f64 value-vector segments, usize index lists,
+//! mixed headers). Manual codec keeps the wire format explicit and
+//! dependency-free (no bincode offline).
+
+/// Encode an f64 slice (little-endian, densely packed).
+pub fn encode_f64s(xs: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Decode an f64 slice. Panics on ragged input (internal protocol error).
+pub fn decode_f64s(bytes: &[u8]) -> Vec<f64> {
+    assert!(bytes.len() % 8 == 0, "ragged f64 payload: {}", bytes.len());
+    bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Decode f64s into an existing buffer (hot-path variant, no allocation).
+pub fn decode_f64s_into(bytes: &[u8], out: &mut [f64]) {
+    assert_eq!(bytes.len(), out.len() * 8, "payload/buffer size mismatch");
+    for (c, o) in bytes.chunks_exact(8).zip(out.iter_mut()) {
+        *o = f64::from_le_bytes(c.try_into().unwrap());
+    }
+}
+
+/// Encode a usize slice as u64 little-endian.
+pub fn encode_usizes(xs: &[usize]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for &x in xs {
+        out.extend_from_slice(&(x as u64).to_le_bytes());
+    }
+    out
+}
+
+/// Decode a usize slice.
+pub fn decode_usizes(bytes: &[u8]) -> Vec<usize> {
+    assert!(bytes.len() % 8 == 0, "ragged usize payload");
+    bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+        .collect()
+}
+
+/// Encode one f64 (for scalar reductions).
+pub fn encode_f64(x: f64) -> Vec<u8> {
+    x.to_le_bytes().to_vec()
+}
+
+/// Decode one f64.
+pub fn decode_f64(bytes: &[u8]) -> f64 {
+    f64::from_le_bytes(bytes[..8].try_into().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_roundtrip() {
+        let xs = vec![0.0, -1.5, f64::MAX, f64::MIN_POSITIVE, 3.141592653589793];
+        assert_eq!(decode_f64s(&encode_f64s(&xs)), xs);
+    }
+
+    #[test]
+    fn f64_roundtrip_preserves_nan_bits() {
+        let xs = vec![f64::NAN];
+        let back = decode_f64s(&encode_f64s(&xs));
+        assert!(back[0].is_nan());
+    }
+
+    #[test]
+    fn usize_roundtrip() {
+        let xs = vec![0usize, 1, 42, usize::MAX >> 1];
+        assert_eq!(decode_usizes(&encode_usizes(&xs)), xs);
+    }
+
+    #[test]
+    fn decode_into_matches() {
+        let xs = vec![1.0, 2.0, 3.0];
+        let bytes = encode_f64s(&xs);
+        let mut out = vec![0.0; 3];
+        decode_f64s_into(&bytes, &mut out);
+        assert_eq!(out, xs);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        assert_eq!(decode_f64(&encode_f64(2.5)), 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_payload_panics() {
+        decode_f64s(&[0u8; 7]);
+    }
+
+    #[test]
+    fn empty_slices() {
+        assert_eq!(decode_f64s(&encode_f64s(&[])), Vec::<f64>::new());
+        assert_eq!(decode_usizes(&encode_usizes(&[])), Vec::<usize>::new());
+    }
+}

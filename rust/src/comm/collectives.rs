@@ -1,0 +1,328 @@
+//! MPI-style collectives over the rendezvous board.
+//!
+//! All collectives are implemented against the shared board in
+//! [`super::Comm::rendezvous`]: every rank deposits its contribution, a
+//! barrier publishes the board, every rank reads what it needs, a second
+//! barrier releases the epoch. This matches MPI semantics (all ranks must
+//! call the same collective in the same order) and lets [`CommStats`]
+//! account bytes exactly as an MPI implementation would transfer them.
+
+use super::codec;
+use super::stats::Op;
+use super::Comm;
+
+/// Reduction operators for [`Comm::allreduce_f64`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reduce {
+    Sum,
+    Min,
+    Max,
+}
+
+impl Comm {
+    /// Broadcast `root`'s payload to all ranks.
+    pub fn broadcast(&self, root: usize, mine: Vec<u8>) -> Vec<u8> {
+        let contribution = if self.rank() == root { Some(mine) } else { None };
+        let out = self.rendezvous(contribution, |board| {
+            board[root].clone().expect("broadcast root deposited")
+        });
+        if self.rank() != root {
+            self.stats().count(self.rank(), Op::Broadcast, out.len());
+        }
+        out
+    }
+
+    /// Broadcast a single f64.
+    pub fn broadcast_f64(&self, root: usize, x: f64) -> f64 {
+        codec::decode_f64(&self.broadcast(root, codec::encode_f64(x)))
+    }
+
+    /// Broadcast a usize list.
+    pub fn broadcast_usizes(&self, root: usize, xs: &[usize]) -> Vec<usize> {
+        codec::decode_usizes(&self.broadcast(root, codec::encode_usizes(xs)))
+    }
+
+    /// All-reduce a scalar with the given operator.
+    pub fn allreduce_f64(&self, x: f64, op: Reduce) -> f64 {
+        let out = self.rendezvous(Some(codec::encode_f64(x)), |board| {
+            let vals = board
+                .iter()
+                .map(|b| codec::decode_f64(b.as_ref().expect("allreduce deposit")));
+            match op {
+                Reduce::Sum => vals.sum(),
+                Reduce::Min => vals.fold(f64::INFINITY, f64::min),
+                Reduce::Max => vals.fold(f64::NEG_INFINITY, f64::max),
+            }
+        });
+        self.stats().count(self.rank(), Op::Allreduce, 8);
+        out
+    }
+
+    /// Elementwise all-reduce of an f64 vector.
+    pub fn allreduce_f64s(&self, xs: &[f64], op: Reduce) -> Vec<f64> {
+        let n = xs.len();
+        let out = self.rendezvous(Some(codec::encode_f64s(xs)), |board| {
+            let mut acc = vec![
+                match op {
+                    Reduce::Sum => 0.0,
+                    Reduce::Min => f64::INFINITY,
+                    Reduce::Max => f64::NEG_INFINITY,
+                };
+                n
+            ];
+            for b in board {
+                let v = codec::decode_f64s(b.as_ref().expect("allreduce deposit"));
+                assert_eq!(v.len(), n, "allreduce length mismatch");
+                for (a, x) in acc.iter_mut().zip(v) {
+                    *a = match op {
+                        Reduce::Sum => *a + x,
+                        Reduce::Min => a.min(x),
+                        Reduce::Max => a.max(x),
+                    };
+                }
+            }
+            acc
+        });
+        self.stats().count(self.rank(), Op::Allreduce, 8 * n);
+        out
+    }
+
+    /// Dot product of distributed vectors: local partial in, global sum out.
+    /// (Convenience wrapper — the inner KSP solvers call this a lot.)
+    pub fn sum(&self, partial: f64) -> f64 {
+        self.allreduce_f64(partial, Reduce::Sum)
+    }
+
+    /// Global max (used for ∞-norms / Bellman residuals).
+    pub fn max(&self, partial: f64) -> f64 {
+        self.allreduce_f64(partial, Reduce::Max)
+    }
+
+    /// All-gather variable-length byte payloads; returns all ranks' payloads
+    /// in rank order.
+    pub fn allgatherv(&self, mine: Vec<u8>) -> Vec<Vec<u8>> {
+        let out = self.rendezvous(Some(mine), |board| {
+            board
+                .iter()
+                .map(|b| b.as_ref().expect("allgather deposit").clone())
+                .collect::<Vec<_>>()
+        });
+        let recv: usize = out
+            .iter()
+            .enumerate()
+            .filter(|(r, _)| *r != self.rank())
+            .map(|(_, b)| b.len())
+            .sum();
+        self.stats().count(self.rank(), Op::Allgather, recv);
+        out
+    }
+
+    /// All-gather f64 segments and concatenate in rank order (the
+    /// VecScatter-to-all used to assemble a full copy of a distributed
+    /// vector when a rank needs remote entries).
+    pub fn allgather_f64s(&self, mine: &[f64]) -> Vec<f64> {
+        let parts = self.allgatherv(codec::encode_f64s(mine));
+        let mut out = Vec::with_capacity(parts.iter().map(|p| p.len() / 8).sum());
+        for p in parts {
+            out.extend(codec::decode_f64s(&p));
+        }
+        out
+    }
+
+    /// Root scatters one payload per rank; each rank receives its own.
+    pub fn scatterv(&self, root: usize, parts: Option<Vec<Vec<u8>>>) -> Vec<u8> {
+        let contribution = if self.rank() == root {
+            let parts = parts.expect("scatterv root must supply parts");
+            assert_eq!(parts.len(), self.size(), "scatterv arity");
+            // Flatten with a length header: [n][len0][len1]... then bytes.
+            let mut buf = Vec::new();
+            buf.extend_from_slice(&(parts.len() as u64).to_le_bytes());
+            for p in &parts {
+                buf.extend_from_slice(&(p.len() as u64).to_le_bytes());
+            }
+            for p in &parts {
+                buf.extend_from_slice(p);
+            }
+            Some(buf)
+        } else {
+            None
+        };
+        let rank = self.rank();
+        let out = self.rendezvous(contribution, |board| {
+            let buf = board[root].as_ref().expect("scatterv root deposited");
+            let n = u64::from_le_bytes(buf[0..8].try_into().unwrap()) as usize;
+            let mut lens = Vec::with_capacity(n);
+            for i in 0..n {
+                let off = 8 + i * 8;
+                lens.push(u64::from_le_bytes(buf[off..off + 8].try_into().unwrap()) as usize);
+            }
+            let mut off = 8 + n * 8;
+            for l in lens.iter().take(rank) {
+                off += l;
+            }
+            buf[off..off + lens[rank]].to_vec()
+        });
+        if self.rank() != root {
+            self.stats().count(self.rank(), Op::Scatter, out.len());
+        }
+        out
+    }
+
+    /// All-to-all variable payloads: `send[j]` goes to rank j; returns
+    /// `recv[i]` = payload from rank i. Used by the ghost-exchange plan.
+    pub fn alltoallv(&self, send: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+        assert_eq!(send.len(), self.size(), "alltoallv arity");
+        let rank = self.rank();
+        // Flatten: header of size lens, then concatenated payloads.
+        let mut buf = Vec::new();
+        for p in &send {
+            buf.extend_from_slice(&(p.len() as u64).to_le_bytes());
+        }
+        for p in &send {
+            buf.extend_from_slice(p);
+        }
+        let size = self.size();
+        let out = self.rendezvous(Some(buf), |board| {
+            let mut recv = Vec::with_capacity(size);
+            for src in 0..size {
+                let b = board[src].as_ref().expect("alltoallv deposit");
+                let mut lens = Vec::with_capacity(size);
+                for i in 0..size {
+                    lens.push(
+                        u64::from_le_bytes(b[i * 8..(i + 1) * 8].try_into().unwrap()) as usize,
+                    );
+                }
+                let mut off = size * 8;
+                for l in lens.iter().take(rank) {
+                    off += l;
+                }
+                recv.push(b[off..off + lens[rank]].to_vec());
+            }
+            recv
+        });
+        let recv_bytes: usize = out
+            .iter()
+            .enumerate()
+            .filter(|(r, _)| *r != rank)
+            .map(|(_, b)| b.len())
+            .sum();
+        self.stats().count(rank, Op::Alltoall, recv_bytes);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::World;
+
+    #[test]
+    fn broadcast_from_each_root() {
+        for root in 0..3 {
+            let out = World::run(3, move |comm: Comm| {
+                let mine = if comm.rank() == root {
+                    vec![9u8, 8, 7]
+                } else {
+                    vec![]
+                };
+                comm.broadcast(root, mine)
+            });
+            assert!(out.iter().all(|v| v == &vec![9u8, 8, 7]), "root={root}");
+        }
+    }
+
+    #[test]
+    fn allreduce_sum_min_max() {
+        let out = World::run(4, |comm: Comm| {
+            let x = (comm.rank() + 1) as f64;
+            (
+                comm.allreduce_f64(x, Reduce::Sum),
+                comm.allreduce_f64(x, Reduce::Min),
+                comm.allreduce_f64(x, Reduce::Max),
+            )
+        });
+        for (s, mn, mx) in out {
+            assert_eq!(s, 10.0);
+            assert_eq!(mn, 1.0);
+            assert_eq!(mx, 4.0);
+        }
+    }
+
+    #[test]
+    fn allreduce_vector_elementwise() {
+        let out = World::run(2, |comm: Comm| {
+            let xs = vec![comm.rank() as f64, 10.0 * (comm.rank() + 1) as f64];
+            comm.allreduce_f64s(&xs, Reduce::Sum)
+        });
+        for v in out {
+            assert_eq!(v, vec![1.0, 30.0]);
+        }
+    }
+
+    #[test]
+    fn allgather_concatenates_in_rank_order() {
+        let out = World::run(3, |comm: Comm| {
+            let mine = vec![comm.rank() as f64; comm.rank() + 1];
+            comm.allgather_f64s(&mine)
+        });
+        for v in out {
+            assert_eq!(v, vec![0.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn scatterv_delivers_per_rank_parts() {
+        let out = World::run(3, |comm: Comm| {
+            let parts = if comm.rank() == 0 {
+                Some(vec![vec![0u8], vec![1u8, 1], vec![2u8, 2, 2]])
+            } else {
+                None
+            };
+            comm.scatterv(0, parts)
+        });
+        assert_eq!(out[0], vec![0u8]);
+        assert_eq!(out[1], vec![1u8, 1]);
+        assert_eq!(out[2], vec![2u8, 2, 2]);
+    }
+
+    #[test]
+    fn alltoallv_transposes() {
+        let out = World::run(3, |comm: Comm| {
+            // send[j] = [rank, j]
+            let send: Vec<Vec<u8>> = (0..3).map(|j| vec![comm.rank() as u8, j as u8]).collect();
+            comm.alltoallv(send)
+        });
+        for (me, recv) in out.iter().enumerate() {
+            for (src, payload) in recv.iter().enumerate() {
+                assert_eq!(payload, &vec![src as u8, me as u8]);
+            }
+        }
+    }
+
+    #[test]
+    fn collectives_sequence_consistent() {
+        // Mixing collectives back-to-back must not cross epochs.
+        let out = World::run(4, |comm: Comm| {
+            let a = comm.sum(1.0);
+            let b = comm.max(comm.rank() as f64);
+            let c = comm.allgather_f64s(&[comm.rank() as f64]);
+            (a, b, c)
+        });
+        for (a, b, c) in out {
+            assert_eq!(a, 4.0);
+            assert_eq!(b, 3.0);
+            assert_eq!(c, vec![0.0, 1.0, 2.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn bytes_accounted_for_allreduce() {
+        let out = World::run(2, |comm: Comm| {
+            let _ = comm.sum(1.0);
+            comm.barrier();
+            comm.stats().snapshot().total_bytes()
+        });
+        // 2 ranks × 8 bytes each
+        assert_eq!(out[0], 16);
+    }
+}

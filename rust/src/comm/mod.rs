@@ -1,0 +1,295 @@
+//! Simulated MPI: SPMD world, point-to-point messaging, collectives.
+//!
+//! madupite distributes memory and compute with MPI through PETSc. This
+//! container has a single CPU and no MPI, so the distributed runtime is
+//! reproduced as an SPMD **thread world**: `World::run(n_ranks, f)` spawns
+//! one OS thread per rank and hands each a [`Comm`] handle with the MPI
+//! surface the solver needs — `send`/`recv`, `barrier`, `broadcast`,
+//! `allreduce`, `allgather(v)`, `scatterv`, `alltoallv`. The programming
+//! model, communication pattern and per-rank message/byte counts are
+//! identical to the MPI build; only physical parallel speedup is absent
+//! (documented in DESIGN.md §3).
+//!
+//! Message payloads are `Vec<u8>`; typed helpers encode `f64`/`usize`
+//! slices little-endian (see [`codec`]). Every transfer is counted in
+//! [`CommStats`] so the scaling experiments (E2) can report communication
+//! volume exactly.
+
+pub mod codec;
+pub mod collectives;
+pub mod stats;
+
+pub use stats::CommStats;
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Barrier, Mutex};
+
+/// A tagged point-to-point message.
+struct Msg {
+    from: usize,
+    tag: u64,
+    bytes: Vec<u8>,
+}
+
+/// Shared state of a world of `size` ranks.
+struct WorldShared {
+    size: usize,
+    /// mailbox\[r\] = receiver owned by rank r (wrapped for Sync handoff).
+    senders: Vec<Sender<Msg>>,
+    barrier: Barrier,
+    /// Rendezvous slots for collectives: one `Vec<Option<Vec<u8>>>` board
+    /// per collective epoch, guarded by a mutex + the barrier.
+    board: Mutex<Vec<Option<Vec<u8>>>>,
+    stats: CommStats,
+}
+
+/// Per-rank communicator handle (the `MPI_Comm` equivalent).
+pub struct Comm {
+    rank: usize,
+    shared: Arc<WorldShared>,
+    inbox: Receiver<Msg>,
+    /// Out-of-order messages parked by `recv` while waiting for a tag.
+    parked: Vec<Msg>,
+}
+
+impl Comm {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.shared.size
+    }
+
+    pub fn is_root(&self) -> bool {
+        self.rank == 0
+    }
+
+    /// Global statistics (shared across ranks).
+    pub fn stats(&self) -> &CommStats {
+        &self.shared.stats
+    }
+
+    /// Non-blocking-ish send (buffered channel; never deadlocks on send).
+    pub fn send(&self, to: usize, tag: u64, bytes: Vec<u8>) {
+        assert!(to < self.size(), "send to rank {to} of {}", self.size());
+        self.shared.stats.count_p2p(self.rank, bytes.len());
+        self.shared.senders[to]
+            .send(Msg {
+                from: self.rank,
+                tag,
+                bytes,
+            })
+            .expect("world torn down during send");
+    }
+
+    /// Blocking receive of a message with matching `from` and `tag`.
+    pub fn recv(&mut self, from: usize, tag: u64) -> Vec<u8> {
+        // Check parked messages first. `remove` (not `swap_remove`)
+        // preserves arrival order so per-(source, tag) delivery stays FIFO
+        // like MPI; parked lists are short, O(n) removal is irrelevant.
+        if let Some(i) = self
+            .parked
+            .iter()
+            .position(|m| m.from == from && m.tag == tag)
+        {
+            return self.parked.remove(i).bytes;
+        }
+        loop {
+            let msg = self
+                .inbox
+                .recv()
+                .expect("world torn down during recv");
+            if msg.from == from && msg.tag == tag {
+                return msg.bytes;
+            }
+            self.parked.push(msg);
+        }
+    }
+
+    /// Synchronize all ranks.
+    pub fn barrier(&self) {
+        self.shared.barrier.wait();
+    }
+
+    /// Internal: run one board-based rendezvous. Each rank deposits
+    /// `contribution` (every rank deposits every epoch, `None` when it has
+    /// nothing — overwriting its slot from the previous epoch); a barrier
+    /// publishes the board; every rank reads through `read`; a trailing
+    /// barrier prevents a fast rank from starting the next epoch (and
+    /// overwriting its slot) before slow ranks finished reading.
+    fn rendezvous<R>(
+        &self,
+        contribution: Option<Vec<u8>>,
+        read: impl FnOnce(&[Option<Vec<u8>>]) -> R,
+    ) -> R {
+        {
+            let mut board = self.shared.board.lock().unwrap();
+            board[self.rank] = contribution;
+        }
+        self.shared.barrier.wait();
+        let out = {
+            let board = self.shared.board.lock().unwrap();
+            read(&board)
+        };
+        self.shared.barrier.wait();
+        out
+    }
+}
+
+/// SPMD world entry point: run `f(comm)` on `size` rank-threads, return the
+/// per-rank results in rank order. Panics in any rank propagate.
+pub struct World;
+
+impl World {
+    pub fn run<T, F>(size: usize, f: F) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: Fn(Comm) -> T + Send + Sync + 'static,
+    {
+        assert!(size >= 1, "world size must be >= 1");
+        let mut senders = Vec::with_capacity(size);
+        let mut receivers = Vec::with_capacity(size);
+        for _ in 0..size {
+            let (tx, rx) = std::sync::mpsc::channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let shared = Arc::new(WorldShared {
+            size,
+            senders,
+            barrier: Barrier::new(size),
+            board: Mutex::new(vec![None; size]),
+            stats: CommStats::new(size),
+        });
+        let f = Arc::new(f);
+        let mut handles = Vec::with_capacity(size);
+        for (rank, inbox) in receivers.into_iter().enumerate() {
+            let shared = Arc::clone(&shared);
+            let f = Arc::clone(&f);
+            let builder = std::thread::Builder::new()
+                .name(format!("rank{rank}"))
+                // GMRES restarts on big problems keep modest stacks, but the
+                // maze generator recursion wants headroom.
+                .stack_size(8 * 1024 * 1024);
+            handles.push(
+                builder
+                    .spawn(move || {
+                        let comm = Comm {
+                            rank,
+                            shared,
+                            inbox,
+                            parked: Vec::new(),
+                        };
+                        f(comm)
+                    })
+                    .expect("failed to spawn rank thread"),
+            );
+        }
+        let mut out = Vec::with_capacity(size);
+        for (rank, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(v) => out.push(v),
+                Err(e) => std::panic::panic_any(format!(
+                    "rank {rank} panicked: {:?}",
+                    e.downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                )),
+            }
+        }
+        out
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_world() {
+        let out = World::run(1, |comm: Comm| {
+            assert_eq!(comm.rank(), 0);
+            assert_eq!(comm.size(), 1);
+            42usize
+        });
+        assert_eq!(out, vec![42]);
+    }
+
+    #[test]
+    fn ranks_get_distinct_ids() {
+        let out = World::run(4, |comm: Comm| comm.rank());
+        assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn p2p_ring() {
+        // Each rank sends its rank id to the next rank; receives from prev.
+        let out = World::run(4, |mut comm: Comm| {
+            let next = (comm.rank() + 1) % comm.size();
+            let prev = (comm.rank() + comm.size() - 1) % comm.size();
+            comm.send(next, 7, vec![comm.rank() as u8]);
+            let got = comm.recv(prev, 7);
+            got[0] as usize
+        });
+        assert_eq!(out, vec![3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn recv_filters_by_tag() {
+        let out = World::run(2, |mut comm: Comm| {
+            if comm.rank() == 0 {
+                // Send tag 2 first, then tag 1; receiver asks for 1 first.
+                comm.send(1, 2, vec![20]);
+                comm.send(1, 1, vec![10]);
+                0
+            } else {
+                let a = comm.recv(0, 1)[0];
+                let b = comm.recv(0, 2)[0];
+                assert_eq!((a, b), (10, 20));
+                1
+            }
+        });
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn barrier_synchronizes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static PHASE: AtomicUsize = AtomicUsize::new(0);
+        PHASE.store(0, Ordering::SeqCst);
+        World::run(4, |comm: Comm| {
+            PHASE.fetch_add(1, Ordering::SeqCst);
+            comm.barrier();
+            // After the barrier every rank must observe all 4 increments.
+            assert_eq!(PHASE.load(Ordering::SeqCst), 4);
+        });
+    }
+
+    #[test]
+    fn p2p_bytes_counted() {
+        let out = World::run(2, |mut comm: Comm| {
+            if comm.rank() == 0 {
+                comm.send(1, 0, vec![0u8; 100]);
+            } else {
+                let _ = comm.recv(0, 0);
+            }
+            comm.barrier();
+            comm.stats().total_bytes()
+        });
+        assert_eq!(out[0], 100);
+        assert_eq!(out[1], 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "rank")]
+    fn rank_panic_propagates() {
+        World::run(2, |comm: Comm| {
+            if comm.rank() == 1 {
+                panic!("deliberate");
+            }
+            // rank 0 must not deadlock waiting on a barrier here
+        });
+    }
+}

@@ -1,0 +1,250 @@
+//! Communication statistics (message and byte counters).
+//!
+//! The scaling experiments (E2 in DESIGN.md §6) report communication volume
+//! per rank and per collective class, since wall-clock scaling is not
+//! observable on a single-CPU container. Counters are atomics shared by the
+//! whole world; `snapshot()` freezes them for reporting.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Collective classes tracked separately.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    P2p,
+    Broadcast,
+    Allreduce,
+    Allgather,
+    Scatter,
+    Alltoall,
+}
+
+const NOPS: usize = 6;
+
+impl Op {
+    fn idx(self) -> usize {
+        match self {
+            Op::P2p => 0,
+            Op::Broadcast => 1,
+            Op::Allreduce => 2,
+            Op::Allgather => 3,
+            Op::Scatter => 4,
+            Op::Alltoall => 5,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::P2p => "p2p",
+            Op::Broadcast => "broadcast",
+            Op::Allreduce => "allreduce",
+            Op::Allgather => "allgather",
+            Op::Scatter => "scatter",
+            Op::Alltoall => "alltoall",
+        }
+    }
+
+    pub fn all() -> [Op; NOPS] {
+        [
+            Op::P2p,
+            Op::Broadcast,
+            Op::Allreduce,
+            Op::Allgather,
+            Op::Scatter,
+            Op::Alltoall,
+        ]
+    }
+}
+
+/// Shared counters: per rank × per op, messages and bytes.
+pub struct CommStats {
+    size: usize,
+    /// msgs[rank * NOPS + op]
+    msgs: Vec<AtomicU64>,
+    bytes: Vec<AtomicU64>,
+}
+
+impl CommStats {
+    pub fn new(size: usize) -> Self {
+        let n = size * NOPS;
+        CommStats {
+            size,
+            msgs: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            bytes: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn count(&self, rank: usize, op: Op, nbytes: usize) {
+        let i = rank * NOPS + op.idx();
+        self.msgs[i].fetch_add(1, Ordering::Relaxed);
+        self.bytes[i].fetch_add(nbytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn count_p2p(&self, rank: usize, nbytes: usize) {
+        self.count(rank, Op::P2p, nbytes);
+    }
+
+    /// Total bytes across all ranks and ops.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Total messages across all ranks and ops.
+    pub fn total_msgs(&self) -> u64 {
+        self.msgs.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Freeze current values.
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            size: self.size,
+            msgs: self.msgs.iter().map(|a| a.load(Ordering::Relaxed)).collect(),
+            bytes: self
+                .bytes
+                .iter()
+                .map(|a| a.load(Ordering::Relaxed))
+                .collect(),
+        }
+    }
+
+    /// Reset all counters (between bench phases).
+    pub fn reset(&self) {
+        for a in &self.msgs {
+            a.store(0, Ordering::Relaxed);
+        }
+        for a in &self.bytes {
+            a.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Debug, Clone, Default)]
+pub struct StatsSnapshot {
+    pub size: usize,
+    msgs: Vec<u64>,
+    bytes: Vec<u64>,
+}
+
+impl StatsSnapshot {
+    pub fn msgs(&self, rank: usize, op: Op) -> u64 {
+        self.msgs[rank * NOPS + op.idx()]
+    }
+
+    pub fn bytes(&self, rank: usize, op: Op) -> u64 {
+        self.bytes[rank * NOPS + op.idx()]
+    }
+
+    pub fn rank_bytes(&self, rank: usize) -> u64 {
+        Op::all().iter().map(|&op| self.bytes(rank, op)).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.iter().sum()
+    }
+
+    pub fn total_msgs(&self) -> u64 {
+        self.msgs.iter().sum()
+    }
+
+    /// Largest/smallest per-rank byte volume ratio (load-balance measure;
+    /// 1.0 = perfectly balanced).
+    pub fn imbalance(&self) -> f64 {
+        let per: Vec<u64> = (0..self.size).map(|r| self.rank_bytes(r)).collect();
+        let max = per.iter().copied().max().unwrap_or(0);
+        let min = per.iter().copied().min().unwrap_or(0);
+        if min == 0 {
+            if max == 0 {
+                1.0
+            } else {
+                f64::INFINITY
+            }
+        } else {
+            max as f64 / min as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut ranks = Vec::new();
+        for r in 0..self.size {
+            let mut ops = Vec::new();
+            for op in Op::all() {
+                if self.msgs(r, op) > 0 {
+                    ops.push((
+                        op.name(),
+                        Json::obj(vec![
+                            ("msgs", Json::int(self.msgs(r, op) as i64)),
+                            ("bytes", Json::int(self.bytes(r, op) as i64)),
+                        ]),
+                    ));
+                }
+            }
+            ranks.push(Json::obj(ops));
+        }
+        Json::obj(vec![
+            ("total_bytes", Json::int(self.total_bytes() as i64)),
+            ("total_msgs", Json::int(self.total_msgs() as i64)),
+            ("per_rank", Json::Arr(ranks)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let s = CommStats::new(2);
+        s.count(0, Op::Allreduce, 8);
+        s.count(0, Op::Allreduce, 8);
+        s.count(1, Op::P2p, 100);
+        let snap = s.snapshot();
+        assert_eq!(snap.msgs(0, Op::Allreduce), 2);
+        assert_eq!(snap.bytes(0, Op::Allreduce), 16);
+        assert_eq!(snap.bytes(1, Op::P2p), 100);
+        assert_eq!(snap.total_bytes(), 116);
+        assert_eq!(snap.total_msgs(), 3);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let s = CommStats::new(1);
+        s.count(0, Op::Broadcast, 42);
+        s.reset();
+        assert_eq!(s.total_bytes(), 0);
+        assert_eq!(s.total_msgs(), 0);
+    }
+
+    #[test]
+    fn imbalance_measure() {
+        let s = CommStats::new(2);
+        s.count(0, Op::P2p, 100);
+        s.count(1, Op::P2p, 50);
+        assert_eq!(s.snapshot().imbalance(), 2.0);
+    }
+
+    #[test]
+    fn imbalance_empty_world_is_one() {
+        let s = CommStats::new(3);
+        assert_eq!(s.snapshot().imbalance(), 1.0);
+    }
+
+    #[test]
+    fn json_shape() {
+        let s = CommStats::new(1);
+        s.count(0, Op::Allgather, 10);
+        let j = s.snapshot().to_json();
+        assert_eq!(j.get("total_bytes").unwrap().as_f64(), Some(10.0));
+        let per = j.get("per_rank").unwrap().as_arr().unwrap();
+        assert_eq!(
+            per[0]
+                .get("allgather")
+                .unwrap()
+                .get("bytes")
+                .unwrap()
+                .as_f64(),
+            Some(10.0)
+        );
+    }
+}

@@ -1,0 +1,305 @@
+//! Restarted GMRES(m) — the workhorse inner solver of inexact GMRES policy
+//! iteration (Gargiani et al., 2023).
+//!
+//! Left-preconditioned, modified Gram–Schmidt Arnoldi, Givens-rotation QR of
+//! the Hessenberg matrix, residual norm tracked for free from the rotations.
+//! All inner products are distributed reductions; each Arnoldi step costs
+//! one SpMV + one ghost exchange, matching the cost model the iPI paper
+//! counts.
+
+use super::{KspStats, LinOp, Precond, Tolerance};
+use crate::comm::Comm;
+use crate::linalg::dist::{dist_dot, dist_norm2};
+
+/// Solve `A x = b` with restarted GMRES(m). `x` carries the warm start.
+pub fn solve(
+    comm: &Comm,
+    a: &LinOp,
+    pc: &Precond,
+    b: &[f64],
+    x: &mut [f64],
+    tol: &Tolerance,
+    restart: usize,
+) -> KspStats {
+    let nl = a.local_len();
+    assert_eq!(b.len(), nl);
+    assert_eq!(x.len(), nl);
+    let m = restart.max(1);
+    let mut buf = a.p.make_buffer();
+
+    let mut stats = KspStats::default();
+    let mut r = vec![0.0; nl];
+    let mut z = vec![0.0; nl];
+    let mut w = vec![0.0; nl];
+
+    // Krylov basis (m+1 vectors of local length).
+    let mut v: Vec<Vec<f64>> = (0..=m).map(|_| vec![0.0; nl]).collect();
+    // Hessenberg (column-major packed: h[j] has j+2 entries).
+    let mut h: Vec<Vec<f64>> = (0..m).map(|j| vec![0.0; j + 2]).collect();
+    let (mut cs, mut sn) = (vec![0.0; m], vec![0.0; m]);
+    let mut g = vec![0.0; m + 1];
+
+    // Initial (preconditioned) residual.
+    let raw0 = a.residual(comm, b, x, &mut r, &mut buf);
+    stats.spmvs += 1;
+    pc.apply(&r, &mut z);
+    let mut beta = dist_norm2(comm, &z);
+    stats.initial_residual = raw0;
+    // Threshold in the preconditioned norm; for PC=None they coincide.
+    let target = tol.threshold(if pc.is_identity() { raw0 } else { beta });
+
+    if beta <= target {
+        stats.final_residual = raw0;
+        stats.converged = true;
+        return stats;
+    }
+
+    'outer: loop {
+        // v0 = z / beta
+        for (vi, zi) in v[0].iter_mut().zip(&z) {
+            *vi = zi / beta;
+        }
+        g.iter_mut().for_each(|gi| *gi = 0.0);
+        g[0] = beta;
+        let mut k_used = 0;
+
+        for j in 0..m {
+            // w = M⁻¹ A v_j
+            a.apply(comm, &v[j], &mut w, &mut buf);
+            stats.spmvs += 1;
+            let mut mw = vec![0.0; nl];
+            pc.apply(&w, &mut mw);
+            // modified Gram–Schmidt
+            for i in 0..=j {
+                let hij = dist_dot(comm, &mw, &v[i]);
+                h[j][i] = hij;
+                for (wk, vk) in mw.iter_mut().zip(&v[i]) {
+                    *wk -= hij * vk;
+                }
+            }
+            let hlast = dist_norm2(comm, &mw);
+            h[j][j + 1] = hlast;
+            if hlast > 1e-300 {
+                for (vk, wk) in v[j + 1].iter_mut().zip(&mw) {
+                    *vk = wk / hlast;
+                }
+            }
+            // apply accumulated Givens rotations to the new column
+            for i in 0..j {
+                let t = cs[i] * h[j][i] + sn[i] * h[j][i + 1];
+                h[j][i + 1] = -sn[i] * h[j][i] + cs[i] * h[j][i + 1];
+                h[j][i] = t;
+            }
+            // new rotation to annihilate h[j][j+1]
+            let (c, s) = givens(h[j][j], h[j][j + 1]);
+            cs[j] = c;
+            sn[j] = s;
+            h[j][j] = c * h[j][j] + s * h[j][j + 1];
+            h[j][j + 1] = 0.0;
+            let gj = g[j];
+            g[j] = c * gj;
+            g[j + 1] = -s * gj;
+
+            stats.iterations += 1;
+            k_used = j + 1;
+            let rnorm_est = g[j + 1].abs();
+            if rnorm_est <= target || hlast <= 1e-300 {
+                break;
+            }
+            if stats.iterations >= tol.max_iters {
+                break;
+            }
+        }
+
+        // back-substitute y from the k_used×k_used triangular system
+        let mut y = vec![0.0; k_used];
+        for i in (0..k_used).rev() {
+            let mut acc = g[i];
+            for j2 in i + 1..k_used {
+                acc -= h[j2][i] * y[j2];
+            }
+            y[i] = acc / h[i][i];
+        }
+        // x += V y
+        for (j2, yj) in y.iter().enumerate() {
+            for (xi, vi) in x.iter_mut().zip(&v[j2]) {
+                *xi += yj * vi;
+            }
+        }
+
+        // true residual for the restart / convergence decision
+        let raw = a.residual(comm, b, x, &mut r, &mut buf);
+        stats.spmvs += 1;
+        pc.apply(&r, &mut z);
+        beta = dist_norm2(comm, &z);
+        let check = if pc.is_identity() { raw } else { beta };
+        stats.final_residual = raw;
+        if check <= target {
+            stats.converged = true;
+            break 'outer;
+        }
+        if stats.iterations >= tol.max_iters {
+            break 'outer;
+        }
+    }
+    stats
+}
+
+/// Stable Givens rotation coefficients.
+fn givens(a: f64, b: f64) -> (f64, f64) {
+    if b == 0.0 {
+        (1.0, 0.0)
+    } else if a.abs() < b.abs() {
+        let t = a / b;
+        let s = 1.0 / (1.0 + t * t).sqrt();
+        (s * t, s)
+    } else {
+        let t = b / a;
+        let c = 1.0 / (1.0 + t * t).sqrt();
+        (c, c * t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::World;
+    use crate::ksp::precond::PcType;
+    use crate::ksp::testmat::random_policy_system;
+    use crate::util::prop;
+
+    fn run_gmres(n: usize, size: usize, gamma: f64, restart: usize, pc_type: PcType) -> Vec<f64> {
+        let out = World::run(size, move |comm| {
+            let (p, b, part) = random_policy_system(&comm, n, 42);
+            let a = LinOp::new(&p, gamma);
+            let pc = Precond::build(pc_type, &a);
+            let nl = part.local_len(comm.rank());
+            let mut x = vec![0.0; nl];
+            let tol = Tolerance {
+                atol: 1e-11,
+                rtol: 0.0,
+                max_iters: 5_000,
+            };
+            let stats = solve(&comm, &a, &pc, &b, &mut x, &tol, restart);
+            assert!(
+                stats.converged,
+                "gmres not converged: final={}",
+                stats.final_residual
+            );
+            x
+        });
+        out.into_iter().flatten().collect()
+    }
+
+    #[test]
+    fn solves_serial() {
+        let x = run_gmres(30, 1, 0.9, 30, PcType::None);
+        assert_eq!(x.len(), 30);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn distributed_matches_serial() {
+        let xs = run_gmres(40, 1, 0.95, 20, PcType::None);
+        let xd = run_gmres(40, 3, 0.95, 20, PcType::None);
+        prop::close_slices(&xs, &xd, 1e-8).unwrap();
+    }
+
+    #[test]
+    fn restart_smaller_than_dimension_still_converges() {
+        let x = run_gmres(50, 2, 0.99, 5, PcType::None);
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn preconditioned_variants_agree() {
+        let x0 = run_gmres(35, 1, 0.95, 30, PcType::None);
+        let xj = run_gmres(35, 1, 0.95, 30, PcType::Jacobi);
+        let xs = run_gmres(35, 1, 0.95, 30, PcType::Sor);
+        prop::close_slices(&x0, &xj, 1e-7).unwrap();
+        prop::close_slices(&x0, &xs, 1e-7).unwrap();
+    }
+
+    #[test]
+    fn gmres_exact_in_n_iterations() {
+        // Full GMRES (restart >= n) solves exactly within n steps.
+        World::run(1, |comm| {
+            let (p, b, _) = random_policy_system(&comm, 10, 77);
+            let a = LinOp::new(&p, 0.9999);
+            // atol leaves headroom for κ(A) ≈ 1/(1−γ) = 1e4 in f64.
+            let tol = Tolerance {
+                atol: 1e-10,
+                rtol: 0.0,
+                max_iters: 10,
+            };
+            let mut x = vec![0.0; 10];
+            let stats = solve(&comm, &a, &Precond::None, &b, &mut x, &tol, 10);
+            assert!(stats.converged, "final={}", stats.final_residual);
+            assert!(stats.iterations <= 10);
+        });
+    }
+
+    #[test]
+    fn gmres_beats_richardson_on_high_gamma() {
+        // The iPI headline: Krylov >> fixed-point when γ → 1.
+        World::run(1, |comm| {
+            let (p, b, _) = random_policy_system(&comm, 60, 31);
+            let a = LinOp::new(&p, 0.999);
+            let tol = Tolerance {
+                atol: 1e-9,
+                rtol: 0.0,
+                max_iters: 100_000,
+            };
+            let mut xg = vec![0.0; 60];
+            let sg = solve(&comm, &a, &Precond::None, &b, &mut xg, &tol, 30);
+            let mut xr = vec![0.0; 60];
+            let sr = crate::ksp::richardson::solve(
+                &comm,
+                &a,
+                &Precond::None,
+                &b,
+                &mut xr,
+                &tol,
+                1.0,
+            );
+            assert!(sg.converged && sr.converged);
+            assert!(
+                sg.spmvs * 5 < sr.spmvs,
+                "gmres {} vs richardson {} spmvs",
+                sg.spmvs,
+                sr.spmvs
+            );
+        });
+    }
+
+    #[test]
+    fn zero_rhs_immediate_convergence() {
+        World::run(1, |comm| {
+            let (p, _, _) = random_policy_system(&comm, 8, 3);
+            let a = LinOp::new(&p, 0.9);
+            let b = vec![0.0; 8];
+            let mut x = vec![0.0; 8];
+            let stats = solve(
+                &comm,
+                &a,
+                &Precond::None,
+                &b,
+                &mut x,
+                &Tolerance::default(),
+                30,
+            );
+            assert!(stats.converged);
+            assert_eq!(stats.iterations, 0);
+        });
+    }
+
+    #[test]
+    fn givens_annihilates() {
+        let (c, s) = givens(3.0, 4.0);
+        let r = c * 3.0 + s * 4.0;
+        let zero = -s * 3.0 + c * 4.0;
+        assert!((r - 5.0).abs() < 1e-12);
+        assert!(zero.abs() < 1e-12);
+        assert_eq!(givens(1.0, 0.0), (1.0, 0.0));
+    }
+}

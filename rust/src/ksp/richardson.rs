@@ -1,0 +1,184 @@
+//! (Preconditioned) Richardson iteration.
+//!
+//! `x ← x + ω M⁻¹ (b − A x)`. With `A = I − γ P_π`, `M = I`, `ω = 1` this
+//! is precisely the classical policy-evaluation sweep
+//! `x ← g_π + γ P_π x`, which is how VI and modified PI arise as iPI
+//! special cases (DESIGN.md §5.2). Converges for any ρ(I − ωM⁻¹A) < 1; for
+//! the MDP operator the unpreconditioned rate is γ.
+
+use super::{KspStats, LinOp, Precond, Tolerance};
+use crate::comm::Comm;
+
+/// Solve `A x = b` by Richardson iteration. `x` carries the warm start.
+pub fn solve(
+    comm: &Comm,
+    a: &LinOp,
+    pc: &Precond,
+    b: &[f64],
+    x: &mut [f64],
+    tol: &Tolerance,
+    omega: f64,
+) -> KspStats {
+    let nl = a.local_len();
+    assert_eq!(b.len(), nl);
+    assert_eq!(x.len(), nl);
+    let mut buf = a.p.make_buffer();
+    let mut r = vec![0.0; nl];
+    let mut z = vec![0.0; nl];
+
+    let mut stats = KspStats::default();
+    let r0 = a.residual(comm, b, x, &mut r, &mut buf);
+    stats.spmvs += 1;
+    stats.initial_residual = r0;
+    let target = tol.threshold(r0);
+    let mut rnorm = r0;
+
+    while rnorm > target && stats.iterations < tol.max_iters {
+        pc.apply(&r, &mut z);
+        for (xi, zi) in x.iter_mut().zip(&z) {
+            *xi += omega * zi;
+        }
+        rnorm = a.residual(comm, b, x, &mut r, &mut buf);
+        stats.spmvs += 1;
+        stats.iterations += 1;
+    }
+    stats.final_residual = rnorm;
+    stats.converged = rnorm <= target;
+    stats
+}
+
+/// Run exactly `sweeps` unpreconditioned ω=1 Richardson sweeps with **no**
+/// convergence test (the modified-policy-iteration inner step — mdpsolver's
+/// only mode). Cheaper than `solve` because it skips residual norms: each
+/// sweep is `x ← b + γ P x` directly.
+pub fn fixed_sweeps(comm: &Comm, a: &LinOp, b: &[f64], x: &mut [f64], sweeps: usize) -> KspStats {
+    let nl = a.local_len();
+    let mut buf = a.p.make_buffer();
+    let mut px = vec![0.0; nl];
+    for _ in 0..sweeps {
+        a.p.spmv(comm, x, &mut px, &mut buf);
+        for i in 0..nl {
+            x[i] = b[i] + a.gamma * px[i];
+        }
+    }
+    KspStats {
+        iterations: sweeps,
+        spmvs: sweeps,
+        initial_residual: f64::NAN,
+        final_residual: f64::NAN,
+        converged: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::World;
+    use crate::ksp::precond::PcType;
+    use crate::ksp::testmat::random_policy_system;
+    use crate::linalg::dist::dist_norm_inf;
+    use crate::util::prop;
+
+    fn run_richardson(n: usize, size: usize, gamma: f64, pc_type: PcType) -> f64 {
+        let out = World::run(size, move |comm| {
+            let (p, b, part) = random_policy_system(&comm, n, 99);
+            let a = LinOp::new(&p, gamma);
+            let pc = Precond::build(pc_type, &a);
+            let nl = part.local_len(comm.rank());
+            let mut x = vec![0.0; nl];
+            let tol = Tolerance {
+                atol: 1e-10,
+                rtol: 0.0,
+                max_iters: 100_000,
+            };
+            let stats = solve(&comm, &a, &pc, &b, &mut x, &tol, 1.0);
+            assert!(stats.converged, "not converged: {stats:?}");
+            // verify residual independently
+            let mut buf = p.make_buffer();
+            let mut r = vec![0.0; nl];
+            let rn = a.residual(&comm, &b, &x, &mut r, &mut buf);
+            let _ = dist_norm_inf(&comm, &r);
+            rn
+        });
+        out.into_iter().fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn converges_serial() {
+        assert!(run_richardson(30, 1, 0.9, PcType::None) < 1e-9);
+    }
+
+    #[test]
+    fn converges_distributed_matches() {
+        assert!(run_richardson(30, 3, 0.9, PcType::None) < 1e-9);
+    }
+
+    #[test]
+    fn converges_with_jacobi() {
+        assert!(run_richardson(30, 2, 0.95, PcType::Jacobi) < 1e-9);
+    }
+
+    #[test]
+    fn converges_with_sor() {
+        assert!(run_richardson(30, 1, 0.95, PcType::Sor) < 1e-9);
+    }
+
+    #[test]
+    fn fixed_sweeps_equals_manual_iteration() {
+        World::run(1, |comm| {
+            let (p, b, _) = random_policy_system(&comm, 12, 5);
+            let gamma = 0.8;
+            let a = LinOp::new(&p, gamma);
+            let mut x = vec![0.0; 12];
+            fixed_sweeps(&comm, &a, &b, &mut x, 3);
+            // manual: x3 = b + γP(b + γP(b + γP·0))
+            let mut buf = p.make_buffer();
+            let mut manual = vec![0.0; 12];
+            for _ in 0..3 {
+                let mut px = vec![0.0; 12];
+                p.spmv(&comm, &manual, &mut px, &mut buf);
+                for i in 0..12 {
+                    manual[i] = b[i] + gamma * px[i];
+                }
+            }
+            prop::close_slices(&x, &manual, 1e-14).unwrap();
+        });
+    }
+
+    #[test]
+    fn warm_start_reduces_iterations() {
+        World::run(1, |comm| {
+            let (p, b, _) = random_policy_system(&comm, 20, 17);
+            let a = LinOp::new(&p, 0.9);
+            let pc = Precond::None;
+            let tol = Tolerance {
+                atol: 1e-10,
+                rtol: 0.0,
+                max_iters: 100_000,
+            };
+            let mut x_cold = vec![0.0; 20];
+            let cold = solve(&comm, &a, &pc, &b, &mut x_cold, &tol, 1.0);
+            // warm start at the solution: zero iterations needed
+            let mut x_warm = x_cold.clone();
+            let warm = solve(&comm, &a, &pc, &b, &mut x_warm, &tol, 1.0);
+            assert!(warm.iterations < cold.iterations.max(1));
+        });
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        World::run(1, |comm| {
+            let (p, b, _) = random_policy_system(&comm, 20, 21);
+            let a = LinOp::new(&p, 0.999);
+            let tol = Tolerance {
+                atol: 1e-14,
+                rtol: 0.0,
+                max_iters: 3,
+            };
+            let mut x = vec![0.0; 20];
+            let stats = solve(&comm, &a, &Precond::None, &b, &mut x, &tol, 1.0);
+            assert_eq!(stats.iterations, 3);
+            assert!(!stats.converged);
+        });
+    }
+}

@@ -1,0 +1,33 @@
+//! # madupite-rs
+//!
+//! A distributed high-performance solver for large-scale Markov Decision
+//! Processes — a from-scratch reproduction of **madupite** (Gargiani,
+//! Pawlowsky, Sieber, Hapla, Lygeros; JOSS 2024 / CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! - **Layer 3 (this crate)**: the distributed solver — simulated-MPI SPMD
+//!   world ([`comm`]), row-partitioned sparse linear algebra ([`linalg`]),
+//!   Krylov inner solvers ([`ksp`]), the inexact-policy-iteration outer
+//!   solver family ([`solver`]), benchmark model generators ([`models`]),
+//!   baselines ([`baseline`]) and the PJRT dense-block accelerator
+//!   ([`runtime`]).
+//! - **Layer 2**: JAX compute graphs (`python/compile/model.py`) AOT-lowered
+//!   to HLO text artifacts loaded by [`runtime`].
+//! - **Layer 1**: Pallas Bellman kernels (`python/compile/kernels/`)
+//!   embedded in the L2 graphs.
+//!
+//! See `DESIGN.md` for the architecture and the experiment index, and
+//! `EXPERIMENTS.md` for measured results.
+
+pub mod baseline;
+pub mod comm;
+pub mod ksp;
+pub mod linalg;
+pub mod mdp;
+pub mod models;
+pub mod runtime;
+pub mod solver;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

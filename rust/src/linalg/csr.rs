@@ -1,0 +1,455 @@
+//! Serial CSR sparse matrix (the PETSc `SeqAIJ` equivalent).
+//!
+//! Storage: `indptr` (row offsets, len `nrows+1`), `indices` (column ids),
+//! `values`. Column indices within a row are kept **sorted and unique** —
+//! the builder enforces this, and the property tests in `util::prop` assert
+//! it stays true under every constructor. madupite stores the whole MDP as
+//! one stacked `(n·m) × n` CSR of this type (plus the distributed variant in
+//! [`super::dist`]).
+
+use std::fmt;
+
+/// Compressed sparse row matrix, f64 values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    nrows: usize,
+    ncols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl Csr {
+    /// Empty matrix with no nonzeros.
+    pub fn zeros(nrows: usize, ncols: usize) -> Csr {
+        Csr {
+            nrows,
+            ncols,
+            indptr: vec![0; nrows + 1],
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Csr {
+        Csr {
+            nrows: n,
+            ncols: n,
+            indptr: (0..=n).collect(),
+            indices: (0..n).collect(),
+            values: vec![1.0; n],
+        }
+    }
+
+    /// Build from raw parts, validating the CSR invariants.
+    pub fn from_parts(
+        nrows: usize,
+        ncols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        values: Vec<f64>,
+    ) -> Result<Csr, String> {
+        if indptr.len() != nrows + 1 {
+            return Err(format!("indptr len {} != nrows+1 {}", indptr.len(), nrows + 1));
+        }
+        if indptr[0] != 0 || *indptr.last().unwrap() != indices.len() {
+            return Err("indptr bounds invalid".to_string());
+        }
+        if indices.len() != values.len() {
+            return Err("indices/values length mismatch".to_string());
+        }
+        for w in indptr.windows(2) {
+            if w[0] > w[1] {
+                return Err("indptr not monotone".to_string());
+            }
+        }
+        for r in 0..nrows {
+            let row = &indices[indptr[r]..indptr[r + 1]];
+            for w in row.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {r}: columns not sorted-unique"));
+                }
+            }
+            if let Some(&last) = row.last() {
+                if last >= ncols {
+                    return Err(format!("row {r}: column {last} >= ncols {ncols}"));
+                }
+            }
+        }
+        Ok(Csr {
+            nrows,
+            ncols,
+            indptr,
+            indices,
+            values,
+        })
+    }
+
+    /// Build from (row, col, value) triplets; duplicate entries are summed.
+    pub fn from_triplets(
+        nrows: usize,
+        ncols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> Csr {
+        let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); nrows];
+        for &(r, c, v) in triplets {
+            assert!(r < nrows && c < ncols, "triplet ({r},{c}) out of bounds");
+            rows[r].push((c, v));
+        }
+        Self::from_row_lists(ncols, rows)
+    }
+
+    /// Build from per-row (col, value) lists; duplicates summed, zeros kept
+    /// only if explicitly inserted as the *sum* (exact 0 sums are dropped).
+    pub fn from_row_lists(ncols: usize, mut rows: Vec<Vec<(usize, f64)>>) -> Csr {
+        let nrows = rows.len();
+        let mut indptr = Vec::with_capacity(nrows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for row in rows.iter_mut() {
+            row.sort_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < row.len() {
+                let c = row[i].0;
+                assert!(c < ncols, "column {c} out of bounds ({ncols})");
+                let mut v = row[i].1;
+                let mut j = i + 1;
+                while j < row.len() && row[j].0 == c {
+                    v += row[j].1;
+                    j += 1;
+                }
+                if v != 0.0 {
+                    indices.push(c);
+                    values.push(v);
+                }
+                i = j;
+            }
+            indptr.push(indices.len());
+        }
+        Csr {
+            nrows,
+            ncols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    pub fn indices(&self) -> &[usize] {
+        &self.indices
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn values_mut(&mut self) -> &mut [f64] {
+        &mut self.values
+    }
+
+    /// (columns, values) of row `r`.
+    pub fn row(&self, r: usize) -> (&[usize], &[f64]) {
+        let (a, b) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// Entry lookup (binary search within the row).
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let (cols, vals) = self.row(r);
+        match cols.binary_search(&c) {
+            Ok(k) => vals[k],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// y ← A·x
+    ///
+    /// Hot path of every solver iteration. The gather `x[col]` uses an
+    /// unchecked read: column indices are validated `< ncols` by every
+    /// constructor (`from_parts` rejects violations, the builders assert),
+    /// and `values_mut` cannot alter indices — see EXPERIMENTS.md §Perf.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols, "spmv: x len");
+        assert_eq!(y.len(), self.nrows, "spmv: y len");
+        for (r, yr) in y.iter_mut().enumerate() {
+            let (a, b) = (self.indptr[r], self.indptr[r + 1]);
+            let mut acc = 0.0;
+            for (&c, &v) in self.indices[a..b].iter().zip(&self.values[a..b]) {
+                debug_assert!(c < self.ncols);
+                // SAFETY: c < ncols == x.len(), enforced at construction.
+                acc += v * unsafe { *x.get_unchecked(c) };
+            }
+            *yr = acc;
+        }
+    }
+
+    /// y ← A·x (allocating convenience).
+    pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.nrows];
+        self.spmv(x, &mut y);
+        y
+    }
+
+    /// y ← α·A·x + β·y
+    pub fn spmv_acc(&self, alpha: f64, x: &[f64], beta: f64, y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for r in 0..self.nrows {
+            let (a, b) = (self.indptr[r], self.indptr[r + 1]);
+            let mut acc = 0.0;
+            for k in a..b {
+                acc += self.values[k] * x[self.indices[k]];
+            }
+            y[r] = alpha * acc + beta * y[r];
+        }
+    }
+
+    /// Extract a sub-matrix of the given rows (keeps all columns).
+    pub fn select_rows(&self, rows: &[usize]) -> Csr {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for &r in rows {
+            let (cols, vals) = self.row(r);
+            indices.extend_from_slice(cols);
+            values.extend_from_slice(vals);
+            indptr.push(indices.len());
+        }
+        Csr {
+            nrows: rows.len(),
+            ncols: self.ncols,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Dense row sums (for stochasticity checks).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.nrows)
+            .map(|r| self.row(r).1.iter().sum())
+            .collect()
+    }
+
+    /// Check every row sums to 1 within `tol` and all values are in [0,1].
+    /// (Transition-matrix validation, madupite does the same on assembly.)
+    pub fn is_row_stochastic(&self, tol: f64) -> bool {
+        self.values.iter().all(|&v| (-tol..=1.0 + tol).contains(&v))
+            && self
+                .row_sums()
+                .iter()
+                .all(|&s| (s - 1.0).abs() <= tol)
+    }
+
+    /// Convert to dense (row-major) — tests and exact PI on small systems.
+    pub fn to_dense(&self) -> super::DenseMat {
+        let mut m = super::DenseMat::zeros(self.nrows, self.ncols);
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                m[(r, c)] = v;
+            }
+        }
+        m
+    }
+
+    /// Frobenius-ish sanity: all values finite.
+    pub fn all_finite(&self) -> bool {
+        self.values.iter().all(|v| v.is_finite())
+    }
+
+    /// Bytes of storage (memory accounting for EXPERIMENTS.md).
+    pub fn storage_bytes(&self) -> usize {
+        self.indptr.len() * 8 + self.indices.len() * 8 + self.values.len() * 8
+    }
+}
+
+impl fmt::Display for Csr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Csr {}x{} nnz={} ({:.3} per row)",
+            self.nrows,
+            self.ncols,
+            self.nnz(),
+            self.nnz() as f64 / self.nrows.max(1) as f64
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prng::Xoshiro256pp;
+    use crate::util::prop;
+
+    fn small() -> Csr {
+        // [[1, 0, 2], [0, 3, 0]]
+        Csr::from_triplets(2, 3, &[(0, 0, 1.0), (0, 2, 2.0), (1, 1, 3.0)])
+    }
+
+    #[test]
+    fn build_and_access() {
+        let m = small();
+        assert_eq!(m.nrows(), 2);
+        assert_eq!(m.ncols(), 3);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(0, 1), 0.0);
+        assert_eq!(m.get(0, 2), 2.0);
+        assert_eq!(m.get(1, 1), 3.0);
+    }
+
+    #[test]
+    fn duplicates_summed() {
+        let m = Csr::from_triplets(1, 2, &[(0, 1, 1.0), (0, 1, 2.5)]);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.get(0, 1), 3.5);
+    }
+
+    #[test]
+    fn zero_sums_dropped() {
+        let m = Csr::from_triplets(1, 2, &[(0, 1, 1.0), (0, 1, -1.0)]);
+        assert_eq!(m.nnz(), 0);
+    }
+
+    #[test]
+    fn spmv_matches_manual() {
+        let m = small();
+        let y = m.mul_vec(&[1.0, 10.0, 100.0]);
+        assert_eq!(y, vec![201.0, 30.0]);
+    }
+
+    #[test]
+    fn spmv_acc_alpha_beta() {
+        let m = small();
+        let mut y = vec![1.0, 1.0];
+        m.spmv_acc(2.0, &[1.0, 10.0, 100.0], -1.0, &mut y);
+        assert_eq!(y, vec![401.0, 59.0]);
+    }
+
+    #[test]
+    fn eye_spmv_is_identity() {
+        let m = Csr::eye(4);
+        let x = vec![1.0, -2.0, 3.0, 0.5];
+        assert_eq!(m.mul_vec(&x), x);
+    }
+
+    #[test]
+    fn select_rows_subset() {
+        let m = small();
+        let s = m.select_rows(&[1]);
+        assert_eq!(s.nrows(), 1);
+        assert_eq!(s.get(0, 1), 3.0);
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(Csr::from_parts(1, 2, vec![0, 1], vec![0], vec![1.0]).is_ok());
+        // bad: column out of bounds
+        assert!(Csr::from_parts(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err());
+        // bad: unsorted columns
+        assert!(
+            Csr::from_parts(1, 3, vec![0, 2], vec![2, 0], vec![1.0, 1.0]).is_err()
+        );
+        // bad: indptr not monotone
+        assert!(
+            Csr::from_parts(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0]).is_err()
+        );
+        // bad: indptr end mismatch
+        assert!(Csr::from_parts(1, 2, vec![0, 2], vec![0], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn row_stochastic_check() {
+        let p = Csr::from_triplets(2, 2, &[(0, 0, 0.5), (0, 1, 0.5), (1, 1, 1.0)]);
+        assert!(p.is_row_stochastic(1e-12));
+        let q = Csr::from_triplets(1, 2, &[(0, 0, 0.6), (0, 1, 0.6)]);
+        assert!(!q.is_row_stochastic(1e-12));
+    }
+
+    #[test]
+    fn to_dense_matches() {
+        let m = small();
+        let d = m.to_dense();
+        for r in 0..2 {
+            for c in 0..3 {
+                assert_eq!(d[(r, c)], m.get(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_triplets_spmv() {
+        prop::forall("csr spmv == dense matvec", |rng: &mut Xoshiro256pp| {
+            let nrows = 1 + rng.index(12);
+            let ncols = 1 + rng.index(12);
+            let nnz = rng.index(nrows * ncols + 1);
+            let trips: Vec<(usize, usize, f64)> = (0..nnz)
+                .map(|_| {
+                    (
+                        rng.index(nrows),
+                        rng.index(ncols),
+                        rng.range_f64(-2.0, 2.0),
+                    )
+                })
+                .collect();
+            let m = Csr::from_triplets(nrows, ncols, &trips);
+            // invariant: sorted unique columns per row
+            for r in 0..nrows {
+                let (cols, _) = m.row(r);
+                for w in cols.windows(2) {
+                    prop_assert!(w[0] < w[1], "row {r} not sorted-unique");
+                }
+            }
+            // spmv vs dense
+            let x: Vec<f64> = (0..ncols).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let y = m.mul_vec(&x);
+            let d = m.to_dense();
+            let yd = d.mul_vec(&x);
+            prop::close_slices(&y, &yd, 1e-12)
+        });
+    }
+
+    #[test]
+    fn prop_from_parts_accepts_builder_output() {
+        prop::forall("builder output passes validation", |rng| {
+            let nrows = 1 + rng.index(8);
+            let ncols = 1 + rng.index(8);
+            let nnz = rng.index(nrows * ncols + 1);
+            let trips: Vec<(usize, usize, f64)> = (0..nnz)
+                .map(|_| (rng.index(nrows), rng.index(ncols), 1.0))
+                .collect();
+            let m = Csr::from_triplets(nrows, ncols, &trips);
+            let ok = Csr::from_parts(
+                m.nrows(),
+                m.ncols(),
+                m.indptr().to_vec(),
+                m.indices().to_vec(),
+                m.values().to_vec(),
+            );
+            prop_assert!(ok.is_ok(), "validation rejected builder output");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,267 @@
+//! Small dense matrices + LU factorization (partial pivoting).
+//!
+//! Used for exact policy evaluation on small systems (the `Method::ExactPi`
+//! preset and the `ksp::Direct` inner solver), for GMRES's Hessenberg
+//! least-squares, and as the reference in linalg tests. Row-major storage.
+
+use std::ops::{Index, IndexMut};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMat {
+    nrows: usize,
+    ncols: usize,
+    data: Vec<f64>,
+}
+
+impl DenseMat {
+    pub fn zeros(nrows: usize, ncols: usize) -> DenseMat {
+        DenseMat {
+            nrows,
+            ncols,
+            data: vec![0.0; nrows * ncols],
+        }
+    }
+
+    pub fn eye(n: usize) -> DenseMat {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> DenseMat {
+        let nrows = rows.len();
+        let ncols = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut m = Self::zeros(nrows, ncols);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), ncols, "ragged rows");
+            m.data[i * ncols..(i + 1) * ncols].copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.ncols..(r + 1) * self.ncols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.ncols..(r + 1) * self.ncols]
+    }
+
+    /// y ← A·x
+    pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        (0..self.nrows)
+            .map(|r| super::dot(self.row(r), x))
+            .collect()
+    }
+
+    /// C ← A·B
+    pub fn mul_mat(&self, b: &DenseMat) -> DenseMat {
+        assert_eq!(self.ncols, b.nrows);
+        let mut c = DenseMat::zeros(self.nrows, b.ncols);
+        for i in 0..self.nrows {
+            for k in 0..self.ncols {
+                let aik = self[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..b.ncols {
+                    c[(i, j)] += aik * b[(k, j)];
+                }
+            }
+        }
+        c
+    }
+
+    /// In-place LU factorization with partial pivoting.
+    /// Returns the pivot permutation, or Err if singular to working precision.
+    pub fn lu_factor(&mut self) -> Result<Vec<usize>, String> {
+        assert_eq!(self.nrows, self.ncols, "LU requires square matrix");
+        let n = self.nrows;
+        let mut piv: Vec<usize> = (0..n).collect();
+        for k in 0..n {
+            // pivot search
+            let (mut pmax, mut prow) = (self[(k, k)].abs(), k);
+            for r in k + 1..n {
+                let v = self[(r, k)].abs();
+                if v > pmax {
+                    pmax = v;
+                    prow = r;
+                }
+            }
+            if pmax < 1e-300 {
+                return Err(format!("singular at column {k}"));
+            }
+            if prow != k {
+                piv.swap(k, prow);
+                for c in 0..n {
+                    let tmp = self[(k, c)];
+                    self[(k, c)] = self[(prow, c)];
+                    self[(prow, c)] = tmp;
+                }
+            }
+            let pivot = self[(k, k)];
+            for r in k + 1..n {
+                let l = self[(r, k)] / pivot;
+                self[(r, k)] = l;
+                if l != 0.0 {
+                    for c in k + 1..n {
+                        let v = self[(k, c)];
+                        self[(r, c)] -= l * v;
+                    }
+                }
+            }
+        }
+        Ok(piv)
+    }
+
+    /// Solve `self·x = b` using a factorization from [`Self::lu_factor`].
+    pub fn lu_solve(&self, piv: &[usize], b: &[f64]) -> Vec<f64> {
+        let n = self.nrows;
+        assert_eq!(b.len(), n);
+        // apply permutation
+        let mut x: Vec<f64> = piv.iter().map(|&p| b[p]).collect();
+        // forward substitution (L has unit diagonal)
+        for i in 1..n {
+            let mut acc = x[i];
+            for j in 0..i {
+                acc -= self[(i, j)] * x[j];
+            }
+            x[i] = acc;
+        }
+        // back substitution
+        for i in (0..n).rev() {
+            let mut acc = x[i];
+            for j in i + 1..n {
+                acc -= self[(i, j)] * x[j];
+            }
+            x[i] = acc / self[(i, i)];
+        }
+        x
+    }
+
+    /// One-shot dense solve (copies the matrix).
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>, String> {
+        let mut lu = self.clone();
+        let piv = lu.lu_factor()?;
+        Ok(lu.lu_solve(&piv, b))
+    }
+}
+
+impl Index<(usize, usize)> for DenseMat {
+    type Output = f64;
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        debug_assert!(r < self.nrows && c < self.ncols);
+        &self.data[r * self.ncols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for DenseMat {
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        debug_assert!(r < self.nrows && c < self.ncols);
+        &mut self.data[r * self.ncols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    #[test]
+    fn matvec() {
+        let a = DenseMat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(a.mul_vec(&[1.0, 1.0]), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = DenseMat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let i = DenseMat::eye(2);
+        assert_eq!(a.mul_mat(&i), a);
+        assert_eq!(i.mul_mat(&a), a);
+    }
+
+    #[test]
+    fn solve_2x2() {
+        let a = DenseMat::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let x = a.solve(&[5.0, 10.0]).unwrap();
+        // 2x + y = 5, x + 3y = 10 → x = 1, y = 3
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_needs_pivoting() {
+        // zero on the diagonal forces a row swap
+        let a = DenseMat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let x = a.solve(&[2.0, 3.0]).unwrap();
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = DenseMat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(a.solve(&[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn prop_solve_recovers_known_x() {
+        prop::forall("LU solves random diag-dominant systems", |rng| {
+            let n = 1 + rng.index(10);
+            let mut a = DenseMat::zeros(n, n);
+            for r in 0..n {
+                let mut offsum = 0.0;
+                for c in 0..n {
+                    if c != r {
+                        let v = rng.range_f64(-1.0, 1.0);
+                        a[(r, c)] = v;
+                        offsum += v.abs();
+                    }
+                }
+                a[(r, r)] = offsum + 1.0 + rng.next_f64(); // strictly dominant
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+            let b = a.mul_vec(&x_true);
+            let x = a.solve(&b).map_err(|e| e.to_string())?;
+            prop::close_slices(&x, &x_true, 1e-9)
+        });
+    }
+
+    #[test]
+    fn prop_lu_reusable_for_multiple_rhs() {
+        prop::forall("factor once, solve twice", |rng| {
+            let n = 2 + rng.index(6);
+            let mut a = DenseMat::eye(n);
+            for r in 0..n {
+                for c in 0..n {
+                    if r != c {
+                        a[(r, c)] = rng.range_f64(-0.1, 0.1);
+                    }
+                }
+            }
+            let orig = a.clone();
+            let piv = a.lu_factor().map_err(|e| e)?;
+            for _ in 0..2 {
+                let xt: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+                let b = orig.mul_vec(&xt);
+                let x = a.lu_solve(&piv, &b);
+                prop::close_slices(&x, &xt, 1e-9)?;
+            }
+            prop_assert!(true, "unreachable");
+            Ok(())
+        });
+    }
+}

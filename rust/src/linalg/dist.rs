@@ -1,0 +1,459 @@
+//! Row-partitioned distributed CSR + ghost exchange (PETSc `MPIAIJ`).
+//!
+//! A [`DistCsr`] lives inside an SPMD world: each rank holds a contiguous
+//! block of matrix rows with **global** column indices, while the vector it
+//! multiplies is partitioned over columns by a [`Partition`]. At
+//! construction the matrix discovers which remote vector entries ("ghosts")
+//! its rows touch, exchanges request lists once (`alltoallv`), and compiles
+//! a reusable **ghost plan** — exactly PETSc's `VecScatter` built during
+//! `MatAssembly`. Each SpMV then moves only the needed entries, and the
+//! comm layer counts the bytes, which is what experiment E2 reports.
+//!
+//! Column indices are remapped at construction: owned columns to
+//! `[0, nlocal)`, ghosts to `[nlocal, nlocal + nghost)` — the same
+//! diagonal/off-diagonal split PETSc uses, giving branch-free SpMV over a
+//! concatenated `[owned | ghost]` buffer.
+
+use super::Csr;
+use crate::comm::{codec, Comm};
+
+/// Contiguous block partition of `n` items over `size` ranks
+/// (PETSc's `PetscSplitOwnership`: remainder spread over leading ranks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Partition {
+    n: usize,
+    size: usize,
+}
+
+impl Partition {
+    pub fn new(n: usize, size: usize) -> Partition {
+        assert!(size >= 1);
+        Partition { n, size }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// First global index owned by `rank`.
+    pub fn lo(&self, rank: usize) -> usize {
+        (rank * self.n) / self.size
+    }
+
+    /// One past the last global index owned by `rank`.
+    pub fn hi(&self, rank: usize) -> usize {
+        ((rank + 1) * self.n) / self.size
+    }
+
+    pub fn local_len(&self, rank: usize) -> usize {
+        self.hi(rank) - self.lo(rank)
+    }
+
+    /// Which rank owns global index `i`.
+    pub fn owner(&self, i: usize) -> usize {
+        debug_assert!(i < self.n);
+        // Initial guess from the inverse of lo(), then local correction.
+        let mut r = ((i as u128 * self.size as u128) / self.n as u128) as usize;
+        r = r.min(self.size - 1);
+        while i < self.lo(r) {
+            r -= 1;
+        }
+        while i >= self.hi(r) {
+            r += 1;
+        }
+        r
+    }
+
+    /// All (lo, hi) ranges in rank order.
+    pub fn ranges(&self) -> Vec<(usize, usize)> {
+        (0..self.size).map(|r| (self.lo(r), self.hi(r))).collect()
+    }
+}
+
+/// Reusable ghost-value buffer handed to [`DistCsr::spmv`]; holds the
+/// concatenated `[owned | ghost]` x-vector so the hot loop never allocates.
+#[derive(Debug)]
+pub struct GhostBuf {
+    xbuf: Vec<f64>,
+    nlocal: usize,
+}
+
+/// Distributed CSR matrix: local row block, global columns ghost-remapped.
+pub struct DistCsr {
+    rank: usize,
+    /// Vector (column-space) partition.
+    col_part: Partition,
+    /// Local rows with remapped columns; ncols = nlocal + nghost.
+    local: Csr,
+    /// Sorted global ids of ghost columns.
+    ghost_ids: Vec<usize>,
+    /// For each rank r: slice `ghost_range[r]` of `ghost_ids` owned by r.
+    ghost_range: Vec<(usize, usize)>,
+    /// For each rank r: local offsets (into the owned x-block) this rank
+    /// must send to r on every exchange.
+    send_plan: Vec<Vec<usize>>,
+}
+
+impl DistCsr {
+    /// Assemble from local rows with *global* column indices.
+    ///
+    /// Collective: every rank must call this with its own rows and the same
+    /// `col_part`. `local_rows[i]` are the (global_col, value) entries of the
+    /// i-th locally owned row.
+    pub fn assemble(
+        comm: &Comm,
+        col_part: Partition,
+        local_rows: Vec<Vec<(usize, f64)>>,
+    ) -> DistCsr {
+        let rank = comm.rank();
+        let size = comm.size();
+        assert_eq!(col_part.size(), size, "partition/world size mismatch");
+        let (clo, chi) = (col_part.lo(rank), col_part.hi(rank));
+        let nlocal = chi - clo;
+
+        // 1. Discover ghost columns.
+        let mut ghost_ids: Vec<usize> = Vec::new();
+        for row in &local_rows {
+            for &(c, _) in row {
+                assert!(c < col_part.n(), "column {c} out of range");
+                if !(clo..chi).contains(&c) {
+                    ghost_ids.push(c);
+                }
+            }
+        }
+        ghost_ids.sort_unstable();
+        ghost_ids.dedup();
+
+        // 2. Group ghosts by owner (contiguous in sorted order).
+        let mut ghost_range = vec![(0usize, 0usize); size];
+        {
+            let mut start = 0;
+            for r in 0..size {
+                let (rlo, rhi) = (col_part.lo(r), col_part.hi(r));
+                let mut end = start;
+                while end < ghost_ids.len() && ghost_ids[end] < rhi {
+                    debug_assert!(ghost_ids[end] >= rlo || r == rank);
+                    end += 1;
+                }
+                ghost_range[r] = (start, end);
+                start = end;
+            }
+            debug_assert_eq!(start, ghost_ids.len());
+        }
+
+        // 3. Exchange request lists: tell each owner which of its entries we
+        //    need; receive which of ours others need (the send plan).
+        let requests: Vec<Vec<u8>> = (0..size)
+            .map(|r| {
+                let (a, b) = ghost_range[r];
+                codec::encode_usizes(&ghost_ids[a..b])
+            })
+            .collect();
+        let received = comm.alltoallv(requests);
+        let send_plan: Vec<Vec<usize>> = received
+            .into_iter()
+            .map(|bytes| {
+                codec::decode_usizes(&bytes)
+                    .into_iter()
+                    .map(|g| {
+                        debug_assert!((clo..chi).contains(&g));
+                        g - clo
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // 4. Remap column indices: owned → [0, nlocal), ghost → nlocal + pos.
+        let remapped: Vec<Vec<(usize, f64)>> = local_rows
+            .into_iter()
+            .map(|row| {
+                row.into_iter()
+                    .map(|(c, v)| {
+                        let lc = if (clo..chi).contains(&c) {
+                            c - clo
+                        } else {
+                            nlocal + ghost_ids.binary_search(&c).unwrap()
+                        };
+                        (lc, v)
+                    })
+                    .collect()
+            })
+            .collect();
+        let local = Csr::from_row_lists(nlocal + ghost_ids.len(), remapped);
+
+        DistCsr {
+            rank,
+            col_part,
+            local,
+            ghost_ids,
+            ghost_range,
+            send_plan,
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn local_nrows(&self) -> usize {
+        self.local.nrows()
+    }
+
+    pub fn nghost(&self) -> usize {
+        self.ghost_ids.len()
+    }
+
+    pub fn nnz_local(&self) -> usize {
+        self.local.nnz()
+    }
+
+    pub fn col_partition(&self) -> Partition {
+        self.col_part
+    }
+
+    /// The remapped local block (for kernels that iterate rows directly).
+    pub fn local(&self) -> &Csr {
+        &self.local
+    }
+
+    /// Translate a remapped local column index back to its global id.
+    /// (Used by gather-based direct solves and the IO writer.)
+    pub fn global_col(&self, local_col: usize) -> usize {
+        let nlocal = self.col_part.local_len(self.rank);
+        if local_col < nlocal {
+            self.col_part.lo(self.rank) + local_col
+        } else {
+            self.ghost_ids[local_col - nlocal]
+        }
+    }
+
+    /// Allocate the x-buffer for [`Self::spmv`].
+    pub fn make_buffer(&self) -> GhostBuf {
+        let nlocal = self.col_part.local_len(self.rank);
+        GhostBuf {
+            xbuf: vec![0.0; nlocal + self.ghost_ids.len()],
+            nlocal,
+        }
+    }
+
+    /// Refresh ghost values in `buf` from the distributed vector `x_local`.
+    /// Collective. Separated from `spmv` so several SpMVs against the same
+    /// x (e.g. the m action-blocks of a Bellman backup) pay one exchange.
+    pub fn update_ghosts(&self, comm: &Comm, x_local: &[f64], buf: &mut GhostBuf) {
+        assert_eq!(x_local.len(), buf.nlocal, "x_local length");
+        buf.xbuf[..buf.nlocal].copy_from_slice(x_local);
+        if comm.size() == 1 {
+            return;
+        }
+        let send: Vec<Vec<u8>> = self
+            .send_plan
+            .iter()
+            .map(|idxs| {
+                let vals: Vec<f64> = idxs.iter().map(|&i| x_local[i]).collect();
+                codec::encode_f64s(&vals)
+            })
+            .collect();
+        let recv = comm.alltoallv(send);
+        for (r, bytes) in recv.into_iter().enumerate() {
+            let (a, b) = self.ghost_range[r];
+            codec::decode_f64s_into(&bytes, &mut buf.xbuf[buf.nlocal + a..buf.nlocal + b]);
+        }
+    }
+
+    /// y_local ← A_local · x  (ghosts must be current in `buf`).
+    pub fn spmv_local(&self, buf: &GhostBuf, y_local: &mut [f64]) {
+        self.local.spmv(&buf.xbuf, y_local);
+    }
+
+    /// Full distributed SpMV: ghost exchange + local kernel. Collective.
+    pub fn spmv(&self, comm: &Comm, x_local: &[f64], y_local: &mut [f64], buf: &mut GhostBuf) {
+        if self.ghost_ids.is_empty() && comm.size() == 1 {
+            // serial fast path: no ghosts → the remapped local block reads
+            // x_local directly, skipping the xbuf memcpy (≈8 MB/iteration
+            // at 10⁶ states — EXPERIMENTS.md §Perf)
+            self.local.spmv(x_local, y_local);
+            return;
+        }
+        self.update_ghosts(comm, x_local, buf);
+        self.spmv_local(buf, y_local);
+    }
+}
+
+/// Distributed dot product over block-partitioned vectors. Collective.
+pub fn dist_dot(comm: &Comm, a: &[f64], b: &[f64]) -> f64 {
+    comm.sum(super::dot(a, b))
+}
+
+/// Distributed 2-norm. Collective.
+pub fn dist_norm2(comm: &Comm, a: &[f64]) -> f64 {
+    comm.sum(super::dot(a, a)).sqrt()
+}
+
+/// Distributed ∞-norm. Collective.
+pub fn dist_norm_inf(comm: &Comm, a: &[f64]) -> f64 {
+    comm.max(super::norm_inf(a))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::World;
+    use crate::prop_assert;
+    use crate::util::prng::Xoshiro256pp;
+    use crate::util::prop;
+    use std::sync::Arc;
+
+    #[test]
+    fn partition_covers_disjoint() {
+        for n in [0usize, 1, 7, 100, 101] {
+            for size in [1usize, 2, 3, 8] {
+                let p = Partition::new(n, size);
+                let mut total = 0;
+                for r in 0..size {
+                    assert!(p.lo(r) <= p.hi(r));
+                    total += p.local_len(r);
+                    if r > 0 {
+                        assert_eq!(p.hi(r - 1), p.lo(r));
+                    }
+                }
+                assert_eq!(total, n);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_owner_correct() {
+        let p = Partition::new(103, 7);
+        for i in 0..103 {
+            let r = p.owner(i);
+            assert!(p.lo(r) <= i && i < p.hi(r), "i={i} r={r}");
+        }
+    }
+
+    #[test]
+    fn partition_balanced() {
+        let p = Partition::new(1_000_003, 8);
+        let lens: Vec<usize> = (0..8).map(|r| p.local_len(r)).collect();
+        let max = *lens.iter().max().unwrap();
+        let min = *lens.iter().min().unwrap();
+        assert!(max - min <= 1, "imbalanced: {lens:?}");
+    }
+
+    /// Build a random global CSR, distribute it, and compare distributed
+    /// SpMV against the serial product for several world sizes.
+    fn check_dist_spmv(seed: u64, n: usize, size: usize) {
+        let mut rng = Xoshiro256pp::new(seed);
+        // global matrix: ~4 entries per row
+        let mut rows: Vec<Vec<(usize, f64)>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let k = 1 + rng.index(4);
+            rows.push(
+                (0..k)
+                    .map(|_| (rng.index(n), rng.range_f64(-1.0, 1.0)))
+                    .collect(),
+            );
+        }
+        let global = Csr::from_row_lists(n, rows.clone());
+        let x: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let y_serial = global.mul_vec(&x);
+
+        let rows = Arc::new(rows);
+        let x = Arc::new(x);
+        let part = Partition::new(n, size);
+        let out = World::run(size, move |comm| {
+            let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+            let my_rows: Vec<Vec<(usize, f64)>> = rows[lo..hi].to_vec();
+            let a = DistCsr::assemble(&comm, part, my_rows);
+            let mut buf = a.make_buffer();
+            let mut y = vec![0.0; hi - lo];
+            a.spmv(&comm, &x[lo..hi], &mut y, &mut buf);
+            y
+        });
+        let y_dist: Vec<f64> = out.into_iter().flatten().collect();
+        prop::close_slices(&y_dist, &y_serial, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn dist_spmv_matches_serial_various_sizes() {
+        for size in [1, 2, 3, 5] {
+            check_dist_spmv(100 + size as u64, 37, size);
+        }
+    }
+
+    #[test]
+    fn dist_spmv_large() {
+        check_dist_spmv(7, 500, 4);
+    }
+
+    #[test]
+    fn ghost_reuse_multiple_spmv() {
+        // Two products against the same x must allow one exchange.
+        let n = 20;
+        let part = Partition::new(n, 2);
+        let out = World::run(2, move |comm| {
+            let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+            // A = shift-by-one permutation (wraps): needs ghosts at edges.
+            let rows: Vec<Vec<(usize, f64)>> =
+                (lo..hi).map(|i| vec![((i + 1) % n, 1.0)]).collect();
+            let a = DistCsr::assemble(&comm, part, rows);
+            let x: Vec<f64> = (lo..hi).map(|i| i as f64).collect();
+            let mut buf = a.make_buffer();
+            a.update_ghosts(&comm, &x, &mut buf);
+            let mut y1 = vec![0.0; hi - lo];
+            let mut y2 = vec![0.0; hi - lo];
+            a.spmv_local(&buf, &mut y1);
+            a.spmv_local(&buf, &mut y2);
+            assert_eq!(y1, y2);
+            y1
+        });
+        let y: Vec<f64> = out.into_iter().flatten().collect();
+        let expect: Vec<f64> = (0..n).map(|i| ((i + 1) % n) as f64).collect();
+        assert_eq!(y, expect);
+    }
+
+    #[test]
+    fn dist_reductions() {
+        let part = Partition::new(10, 2);
+        let out = World::run(2, move |comm| {
+            let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+            let a: Vec<f64> = (lo..hi).map(|i| i as f64).collect();
+            let b = vec![1.0; hi - lo];
+            (
+                dist_dot(&comm, &a, &b),
+                dist_norm_inf(&comm, &a),
+                dist_norm2(&comm, &b),
+            )
+        });
+        for (d, ninf, n2) in out {
+            assert_eq!(d, 45.0);
+            assert_eq!(ninf, 9.0);
+            assert!((n2 - (10.0f64).sqrt()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn prop_dist_spmv_random() {
+        prop::forall("distributed spmv == serial", |rng| {
+            let n = 5 + rng.index(40);
+            let size = 1 + rng.index(4);
+            let seed = rng.next_u64();
+            check_dist_spmv(seed, n, size);
+            prop_assert!(true, "");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn no_ghosts_when_serial() {
+        let part = Partition::new(10, 1);
+        World::run(1, move |comm| {
+            let rows: Vec<Vec<(usize, f64)>> = (0..10).map(|i| vec![(i, 2.0)]).collect();
+            let a = DistCsr::assemble(&comm, part, rows);
+            assert_eq!(a.nghost(), 0);
+        });
+    }
+}

@@ -1,0 +1,80 @@
+//! Sparse/dense linear algebra substrate (the PETSc `Mat`/`Vec` equivalent).
+//!
+//! - [`csr`]: serial CSR matrices + SpMV kernels (PETSc `SeqAIJ`).
+//! - [`dense`]: small dense matrices + LU with partial pivoting (exact
+//!   policy evaluation, tests).
+//! - [`dist`]: row-partitioned distributed CSR with precomputed
+//!   ghost-exchange plans (PETSc `MPIAIJ` + `VecScatter`).
+
+pub mod csr;
+pub mod dense;
+pub mod dist;
+
+pub use csr::Csr;
+pub use dense::DenseMat;
+pub use dist::{DistCsr, Partition};
+
+/// ∞-norm of a slice.
+pub fn norm_inf(xs: &[f64]) -> f64 {
+    xs.iter().fold(0.0, |m, &x| m.max(x.abs()))
+}
+
+/// 2-norm of a slice.
+pub fn norm2(xs: &[f64]) -> f64 {
+    dot(xs, xs).sqrt()
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// y ← a·x + y
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// y ← x + b·y  (BLAS `aypx`)
+pub fn aypx(b: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = xi + b * *yi;
+    }
+}
+
+/// x ← a·x
+pub fn scale(a: f64, x: &mut [f64]) {
+    for xi in x {
+        *xi *= a;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norms_and_dot() {
+        assert_eq!(norm_inf(&[1.0, -3.0, 2.0]), 3.0);
+        assert_eq!(norm2(&[3.0, 4.0]), 5.0);
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert_eq!(norm_inf(&[]), 0.0);
+    }
+
+    #[test]
+    fn blas1_ops() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[10.0, 20.0], &mut y);
+        assert_eq!(y, vec![21.0, 41.0]);
+        let mut y2 = vec![1.0, 2.0];
+        aypx(3.0, &[10.0, 10.0], &mut y2);
+        assert_eq!(y2, vec![13.0, 16.0]);
+        let mut x = vec![2.0, -4.0];
+        scale(0.5, &mut x);
+        assert_eq!(x, vec![1.0, -2.0]);
+    }
+}

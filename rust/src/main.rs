@@ -1,0 +1,246 @@
+//! madupite CLI — solve, generate and inspect large-scale MDPs.
+//!
+//! Usage (PETSc/madupite-style options database):
+//!
+//! ```text
+//! madupite solve    -model maze -rows 200 -cols 200 -gamma 0.99
+//!                   -method ipi -ksp_type gmres -alpha 1e-4 -atol 1e-8
+//!                   -ranks 4 [-json out.json] [-verbose]
+//! madupite solve    -file model.mdpb -method mpi -sweeps 20
+//! madupite generate -model sis -population 10000 -gamma 0.95 -file out.mdpb
+//! madupite info     -file model.mdpb
+//! madupite artifacts [-dir artifacts]
+//! ```
+//!
+//! `-model` ∈ {maze, grid, sis, traffic, garnet, inventory, queueing}.
+//! `-method` ∈ {vi, mpi, pi, ipi}; `-ksp_type` ∈ {richardson, gmres,
+//! bicgstab, tfqmr}; `-pc_type` ∈ {none, jacobi, sor}.
+
+use madupite::comm::World;
+use madupite::ksp::precond::PcType;
+use madupite::ksp::KspType;
+use madupite::mdp::{io, Mdp};
+use madupite::models::{
+    garnet::GarnetSpec, gridworld::GridSpec, inventory::InventorySpec, queueing::QueueSpec,
+    replacement::ReplacementSpec, sis::SisSpec, traffic::TrafficSpec, ModelGenerator,
+};
+use madupite::solver::{gather_result, solve_dist, Method, SolveOptions};
+use madupite::util::args::Options;
+use std::sync::Arc;
+
+fn main() {
+    let opts = Options::from_env();
+    let cmd = opts.positional().first().cloned().unwrap_or_default();
+    let code = match cmd.as_str() {
+        "solve" => cmd_solve(&opts),
+        "generate" => cmd_generate(&opts),
+        "info" => cmd_info(&opts),
+        "artifacts" => cmd_artifacts(&opts),
+        "" | "help" | "-h" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}' (try `madupite help`)")),
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e}");
+        1
+    });
+    let unused = opts.unused_keys();
+    if !unused.is_empty() {
+        eprintln!("warning: unused options: {unused:?}");
+    }
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "madupite-rs {} — distributed solver for large-scale MDPs\n\n\
+         commands:\n\
+         \x20 solve     -model <name> | -file <path>, -method vi|mpi|pi|ipi, -ranks N\n\
+         \x20 generate  -model <name> -file <out.mdpb>\n\
+         \x20 info      -file <path.mdpb>\n\
+         \x20 artifacts [-dir artifacts]  (list + smoke-compile PJRT artifacts)\n\n\
+         common options: -gamma G -atol T -alpha A -adaptive_forcing\n\
+         \x20               -ksp_type K -pc_type P -objective min|max\n\
+         model options:  -rows/-cols/-seed (maze, grid), -population (sis),\n\
+         \x20               -capacity (traffic, inventory, queueing),\n\
+         \x20               -num_states (replacement, garnet),\n\
+         \x20               -num_actions/-branching (garnet)",
+        madupite::VERSION
+    );
+}
+
+fn err_str<E: std::fmt::Display>(e: E) -> String {
+    e.to_string()
+}
+
+/// Build the generator named by `-model` from its options.
+fn make_generator(opts: &Options) -> Result<Arc<dyn ModelGenerator + Send + Sync>, String> {
+    let model = opts.get_str("model", "maze");
+    let seed = opts.get_u64("seed", 42).map_err(err_str)?;
+    Ok(match model.as_str() {
+        "maze" => Arc::new(GridSpec::maze(
+            opts.get_usize("rows", 64).map_err(err_str)?,
+            opts.get_usize("cols", 64).map_err(err_str)?,
+            seed,
+        )),
+        "grid" => Arc::new(GridSpec::open(
+            opts.get_usize("rows", 64).map_err(err_str)?,
+            opts.get_usize("cols", 64).map_err(err_str)?,
+        )),
+        "sis" => Arc::new(SisSpec::standard(
+            opts.get_usize("population", 1000).map_err(err_str)?,
+            opts.get_usize("num_actions", 4).map_err(err_str)?,
+        )),
+        "traffic" => Arc::new(TrafficSpec::standard(
+            opts.get_usize("capacity", 12).map_err(err_str)?,
+        )),
+        "garnet" => Arc::new(GarnetSpec::new(
+            opts.get_usize("num_states", 1000).map_err(err_str)?,
+            opts.get_usize("num_actions", 4).map_err(err_str)?,
+            opts.get_usize("branching", 5).map_err(err_str)?,
+            seed,
+        )),
+        "inventory" => Arc::new(InventorySpec::standard(
+            opts.get_usize("capacity", 50).map_err(err_str)?,
+        )),
+        "queueing" => Arc::new(QueueSpec::standard(
+            opts.get_usize("capacity", 50).map_err(err_str)?,
+        )),
+        "replacement" => Arc::new(ReplacementSpec::standard(
+            opts.get_usize("num_states", 50).map_err(err_str)?,
+        )),
+        other => return Err(format!("unknown model '{other}'")),
+    })
+}
+
+fn parse_method(opts: &Options) -> Result<Method, String> {
+    let method = opts
+        .get_choice("method", &["vi", "mpi", "pi", "ipi"], "ipi")
+        .map_err(err_str)?;
+    Ok(match method.as_str() {
+        "vi" => Method::Vi,
+        "mpi" => Method::Mpi {
+            sweeps: opts.get_usize("sweeps", 20).map_err(err_str)?,
+        },
+        "pi" => Method::ExactPi,
+        _ => {
+            let ksp = KspType::parse(&opts.get_str("ksp_type", "gmres"))?;
+            let pc = PcType::parse(&opts.get_str("pc_type", "none"))?;
+            Method::Ipi { ksp, pc }
+        }
+    })
+}
+
+fn parse_solve_options(opts: &Options) -> Result<SolveOptions, String> {
+    Ok(SolveOptions {
+        method: parse_method(opts)?,
+        atol: opts.get_f64("atol", 1e-8).map_err(err_str)?,
+        max_outer: opts.get_usize("max_iter_pi", 1000).map_err(err_str)?,
+        alpha: opts.get_f64("alpha", 1e-4).map_err(err_str)?,
+        adaptive_forcing: opts.get_bool("adaptive_forcing", false).map_err(err_str)?,
+        max_inner: opts.get_usize("max_iter_ksp", 10_000).map_err(err_str)?,
+        v0: None,
+        verbose: opts.get_bool("verbose", false).map_err(err_str)?,
+    })
+}
+
+fn cmd_solve(opts: &Options) -> Result<(), String> {
+    let ranks = opts.get_usize("ranks", 1).map_err(err_str)?;
+    let solve_opts = parse_solve_options(opts)?;
+    let gamma = opts.get_f64("gamma", 0.99).map_err(err_str)?;
+    let file = opts.get("file").map(|s| s.to_string());
+    let t0 = std::time::Instant::now();
+
+    let result = if let Some(path) = file {
+        let path = Arc::new(path);
+        let so = solve_opts.clone();
+        let mut results = World::run(ranks, move |comm| {
+            let mdp = io::load_dist(&comm, path.as_str())
+                .unwrap_or_else(|e| panic!("loading {path}: {e}"));
+            let local = solve_dist(&comm, &mdp, &so);
+            gather_result(&comm, local)
+        });
+        results.swap_remove(0)
+    } else {
+        let generator = make_generator(opts)?;
+        let objective = madupite::mdp::Objective::parse(&opts.get_str("objective", "min"))?;
+        let so = solve_opts.clone();
+        let mut results = World::run(ranks, move |comm| {
+            let mdp = generator.build_dist(&comm, gamma).with_objective(objective);
+            let local = solve_dist(&comm, &mdp, &so);
+            gather_result(&comm, local)
+        });
+        results.swap_remove(0)
+    };
+
+    println!(
+        "method={} states={} converged={} outer={} spmvs={} residual={:.3e} \
+         err_bound={:.3e} time={:.3}s comm={}B",
+        solve_opts.method.name(),
+        result.value.len(),
+        result.converged,
+        result.outer_iterations,
+        result.total_spmvs,
+        result.residual,
+        result.error_bound(),
+        t0.elapsed().as_secs_f64(),
+        result.comm_bytes,
+    );
+    if let Some(json_path) = opts.get("json") {
+        let j = result.to_json(&solve_opts.method.name());
+        std::fs::write(json_path, j.to_string_pretty()).map_err(err_str)?;
+        println!("wrote {json_path}");
+    }
+    Ok(())
+}
+
+fn cmd_generate(opts: &Options) -> Result<(), String> {
+    let generator = make_generator(opts)?;
+    let gamma = opts.get_f64("gamma", 0.99).map_err(err_str)?;
+    let file = opts
+        .get("file")
+        .ok_or("generate requires -file <out.mdpb>")?
+        .to_string();
+    let mdp: Mdp = generator.build_serial(gamma);
+    io::save(&mdp, &file).map_err(err_str)?;
+    println!(
+        "wrote {file}: {} states × {} actions, nnz={}, gamma={}",
+        mdp.n_states(),
+        mdp.n_actions(),
+        mdp.transitions().nnz(),
+        mdp.gamma()
+    );
+    Ok(())
+}
+
+fn cmd_info(opts: &Options) -> Result<(), String> {
+    let file = opts.get("file").ok_or("info requires -file <path>")?;
+    let mut f = std::fs::File::open(file).map_err(err_str)?;
+    let h = io::read_header(&mut f).map_err(err_str)?;
+    println!(
+        "{file}: n_states={} n_actions={} gamma={} nnz={} ({:.2} per row)",
+        h.n_states,
+        h.n_actions,
+        h.gamma,
+        h.nnz,
+        h.nnz as f64 / (h.n_states * h.n_actions) as f64
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(opts: &Options) -> Result<(), String> {
+    let dir = opts.get_str("dir", "artifacts");
+    let mut engine = madupite::runtime::Engine::load(&dir).map_err(err_str)?;
+    println!("platform: {}", engine.platform());
+    for file in engine.available() {
+        print!("  {file} ... ");
+        match engine.executable(&file) {
+            Ok(_) => println!("compiles"),
+            Err(e) => println!("FAILED: {e}"),
+        }
+    }
+    Ok(())
+}

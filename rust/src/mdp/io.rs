@@ -1,0 +1,323 @@
+//! Binary MDP file format (offline data path, paper claim C5).
+//!
+//! madupite loads MDPs from PETSc binary files so that transition data
+//! collected offline (e.g. from simulations) can be solved later, possibly
+//! on a different number of ranks. This module defines the equivalent
+//! self-describing little-endian format:
+//!
+//! ```text
+//! offset  field
+//! 0       magic  b"MDPB"
+//! 4       version u32 (= 1)
+//! 8       n_states u64
+//! 16      n_actions u64
+//! 24      gamma f64
+//! 32      nnz u64
+//! 40      indptr  (n·m + 1) × u64
+//! ...     indices nnz × u64
+//! ...     values  nnz × f64
+//! ...     costs   (n·m) × f64
+//! ```
+//!
+//! Because `indptr` precedes the payload, a rank can compute exactly the
+//! byte range of its row block and read only that slice —
+//! [`load_dist`] does a rank-local partial read, which is how the format
+//! supports loading a gigantic MDP that no single rank could hold.
+
+use super::{DistMdp, Mdp};
+use crate::comm::Comm;
+use crate::linalg::dist::{DistCsr, Partition};
+use crate::linalg::Csr;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"MDPB";
+const VERSION: u32 = 1;
+const HEADER_LEN: u64 = 40;
+
+/// Write a serial MDP to `path`.
+pub fn save(mdp: &Mdp, path: impl AsRef<Path>) -> std::io::Result<()> {
+    let f = File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(mdp.n_states() as u64).to_le_bytes())?;
+    w.write_all(&(mdp.n_actions() as u64).to_le_bytes())?;
+    w.write_all(&mdp.gamma().to_le_bytes())?;
+    let t = mdp.transitions();
+    w.write_all(&(t.nnz() as u64).to_le_bytes())?;
+    for &p in t.indptr() {
+        w.write_all(&(p as u64).to_le_bytes())?;
+    }
+    for &i in t.indices() {
+        w.write_all(&(i as u64).to_le_bytes())?;
+    }
+    for &v in t.values() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for &c in mdp.costs() {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    w.flush()
+}
+
+/// Parsed header.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Header {
+    pub n_states: usize,
+    pub n_actions: usize,
+    pub gamma: f64,
+    pub nnz: usize,
+}
+
+impl Header {
+    fn indptr_off(&self) -> u64 {
+        HEADER_LEN
+    }
+    fn indices_off(&self) -> u64 {
+        self.indptr_off() + 8 * (self.n_states as u64 * self.n_actions as u64 + 1)
+    }
+    fn values_off(&self) -> u64 {
+        self.indices_off() + 8 * self.nnz as u64
+    }
+    fn costs_off(&self) -> u64 {
+        self.values_off() + 8 * self.nnz as u64
+    }
+}
+
+/// Read and validate the header.
+pub fn read_header(r: &mut impl Read) -> std::io::Result<Header> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(bad("bad magic (not an MDPB file)"));
+    }
+    let version = read_u32(r)?;
+    if version != VERSION {
+        return Err(bad(&format!("unsupported version {version}")));
+    }
+    let n_states = read_u64(r)? as usize;
+    let n_actions = read_u64(r)? as usize;
+    let gamma = read_f64(r)?;
+    let nnz = read_u64(r)? as usize;
+    if n_actions == 0 || n_states == 0 {
+        return Err(bad("empty MDP"));
+    }
+    if !(0.0..1.0).contains(&gamma) {
+        return Err(bad(&format!("gamma {gamma} out of range")));
+    }
+    Ok(Header {
+        n_states,
+        n_actions,
+        gamma,
+        nnz,
+    })
+}
+
+/// Load a full (serial) MDP.
+pub fn load(path: impl AsRef<Path>) -> std::io::Result<Mdp> {
+    let f = File::open(path)?;
+    let mut r = BufReader::new(f);
+    let h = read_header(&mut r)?;
+    let nm = h.n_states * h.n_actions;
+    let indptr = read_u64s(&mut r, nm + 1)?;
+    let indices = read_u64s(&mut r, h.nnz)?;
+    let values = read_f64s(&mut r, h.nnz)?;
+    let costs = read_f64s(&mut r, nm)?;
+    let t = Csr::from_parts(nm, h.n_states, indptr, indices, values)
+        .map_err(|e| bad(&format!("invalid CSR: {e}")))?;
+    Mdp::new(h.n_states, h.n_actions, t, costs, h.gamma).map_err(|e| bad(&e))
+}
+
+/// Distributed load: each rank reads only its slice of the file.
+/// Collective.
+pub fn load_dist(comm: &Comm, path: impl AsRef<Path>) -> std::io::Result<DistMdp> {
+    let mut f = File::open(path)?;
+    let h = read_header(&mut f)?;
+    let part = Partition::new(h.n_states, comm.size());
+    let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+    let m = h.n_actions;
+    let (row_lo, row_hi) = (lo * m, hi * m);
+
+    // indptr slice for local rows (+1 for the end offset)
+    f.seek(SeekFrom::Start(h.indptr_off() + 8 * row_lo as u64))?;
+    let indptr = read_u64s(&mut f, row_hi - row_lo + 1)?;
+    let (nz_lo, nz_hi) = (indptr[0], indptr[row_hi - row_lo]);
+
+    // indices + values slices
+    f.seek(SeekFrom::Start(h.indices_off() + 8 * nz_lo as u64))?;
+    let indices = read_u64s(&mut f, nz_hi - nz_lo)?;
+    f.seek(SeekFrom::Start(h.values_off() + 8 * nz_lo as u64))?;
+    let values = read_f64s(&mut f, nz_hi - nz_lo)?;
+
+    // costs slice
+    f.seek(SeekFrom::Start(h.costs_off() + 8 * row_lo as u64))?;
+    let costs = read_f64s(&mut f, row_hi - row_lo)?;
+
+    // build per-row global-column lists
+    let mut rows = Vec::with_capacity(row_hi - row_lo);
+    for r in 0..(row_hi - row_lo) {
+        let (a, b) = (indptr[r] - nz_lo, indptr[r + 1] - nz_lo);
+        rows.push(
+            indices[a..b]
+                .iter()
+                .copied()
+                .zip(values[a..b].iter().copied())
+                .collect::<Vec<_>>(),
+        );
+    }
+    let trans = DistCsr::assemble(comm, part, rows);
+    Ok(DistMdp {
+        part,
+        n_actions: h.n_actions,
+        gamma: h.gamma,
+        objective: crate::mdp::Objective::Min,
+        trans,
+        costs,
+    })
+}
+
+fn bad(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f64(r: &mut impl Read) -> std::io::Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+fn read_u64s(r: &mut impl Read, n: usize) -> std::io::Result<Vec<usize>> {
+    let mut bytes = vec![0u8; n * 8];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+        .collect())
+}
+
+fn read_f64s(r: &mut impl Read, n: usize) -> std::io::Result<Vec<f64>> {
+    let mut bytes = vec![0u8; n * 8];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::World;
+    use crate::mdp::fixtures::random_mdp;
+    use crate::util::prop;
+    use std::sync::Arc;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("madupite-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_serial() {
+        let mdp = random_mdp(3, 15, 3, 0.92);
+        let path = tmpfile("roundtrip.mdpb");
+        save(&mdp, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.n_states(), 15);
+        assert_eq!(loaded.n_actions(), 3);
+        assert_eq!(loaded.gamma(), 0.92);
+        assert_eq!(loaded.transitions(), mdp.transitions());
+        prop::close_slices(loaded.costs(), mdp.costs(), 0.0).unwrap();
+    }
+
+    #[test]
+    fn header_offsets_consistent() {
+        let h = Header {
+            n_states: 10,
+            n_actions: 2,
+            gamma: 0.9,
+            nnz: 33,
+        };
+        assert_eq!(h.indptr_off(), 40);
+        assert_eq!(h.indices_off(), 40 + 8 * 21);
+        assert_eq!(h.values_off(), h.indices_off() + 8 * 33);
+        assert_eq!(h.costs_off(), h.values_off() + 8 * 33);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmpfile("garbage.mdpb");
+        std::fs::write(&path, b"not an mdp file at all........").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let path = tmpfile("badver.mdpb");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"MDPB");
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 32]);
+        std::fs::write(&path, bytes).unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn dist_load_matches_serial_bellman() {
+        let mdp = Arc::new(random_mdp(11, 29, 3, 0.9));
+        let path = tmpfile("dist.mdpb");
+        save(&mdp, &path).unwrap();
+        for size in [1usize, 2, 4] {
+            let path2 = path.clone();
+            let out = World::run(size, move |comm| {
+                let d = load_dist(&comm, &path2).unwrap();
+                let part = d.partition();
+                let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+                let v: Vec<f64> = (lo..hi).map(|i| (i as f64) * 0.1).collect();
+                let mut tv = vec![0.0; hi - lo];
+                let mut pol = vec![0usize; hi - lo];
+                let mut buf = d.make_buffer();
+                let mut q = Vec::new();
+                d.bellman_backup(&comm, &v, &mut tv, &mut pol, &mut buf, &mut q);
+                tv
+            });
+            let v_full: Vec<f64> = (0..29).map(|i| (i as f64) * 0.1).collect();
+            let (tv_serial, _) = mdp.bellman(&v_full);
+            let tv_dist: Vec<f64> = out.into_iter().flatten().collect();
+            prop::close_slices(&tv_dist, &tv_serial, 1e-12).unwrap();
+        }
+    }
+
+    #[test]
+    fn dist_load_costs_sliced_correctly() {
+        let mdp = Arc::new(random_mdp(13, 10, 2, 0.8));
+        let path = tmpfile("costs.mdpb");
+        save(&mdp, &path).unwrap();
+        let mdp2 = Arc::clone(&mdp);
+        World::run(3, move |comm| {
+            let d = load_dist(&comm, &path).unwrap();
+            let part = d.partition();
+            let lo = part.lo(comm.rank());
+            for (i, &c) in d.local_costs().iter().enumerate() {
+                let s = lo + i / 2;
+                let a = i % 2;
+                assert_eq!(c, mdp2.cost(s, a));
+            }
+        });
+    }
+}

@@ -1,0 +1,644 @@
+//! Core MDP data structures (serial and distributed).
+//!
+//! Storage follows madupite exactly: the transition kernel is a single
+//! stacked CSR of shape `(n·m) × n` — row `s·m + a` holds the distribution
+//! `P(·|s,a)` — and stage costs are a dense `n × m` table. The distributed
+//! variant partitions **states** contiguously across ranks; a rank owns the
+//! `m` transition rows and the cost row of each of its states plus the
+//! matching block of every value vector.
+//!
+//! Construction mirrors madupite's two paths (paper claim C5):
+//! - **online/filler**: user functions `(s, a) → [(s', p)...]` and
+//!   `(s, a) → cost`, evaluated rank-locally in parallel;
+//! - **offline**: binary files written/loaded by [`io`], including
+//!   rank-sliced distributed loading.
+
+pub mod io;
+
+use crate::comm::Comm;
+use crate::linalg::dist::{DistCsr, GhostBuf, Partition};
+use crate::linalg::Csr;
+
+/// Optimization sense (madupite's `-mode MINCOST|MAXREWARD`).
+///
+/// With [`Objective::Max`] the `costs` table is interpreted as *rewards*
+/// and every greedy step maximizes; the contraction analysis is identical.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Objective {
+    #[default]
+    Min,
+    Max,
+}
+
+impl Objective {
+    /// true when `candidate` improves on `incumbent` for this sense.
+    #[inline]
+    pub fn better(&self, candidate: f64, incumbent: f64) -> bool {
+        match self {
+            Objective::Min => candidate < incumbent,
+            Objective::Max => candidate > incumbent,
+        }
+    }
+
+    /// The identity element of the improvement fold.
+    #[inline]
+    pub fn worst(&self) -> f64 {
+        match self {
+            Objective::Min => f64::INFINITY,
+            Objective::Max => f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn parse(name: &str) -> Result<Objective, String> {
+        match name {
+            "min" | "mincost" => Ok(Objective::Min),
+            "max" | "maxreward" => Ok(Objective::Max),
+            other => Err(format!("unknown objective '{other}'")),
+        }
+    }
+}
+
+/// A complete (serial) infinite-horizon discounted MDP.
+#[derive(Clone, Debug)]
+pub struct Mdp {
+    n_states: usize,
+    n_actions: usize,
+    /// Stacked transition CSR: row `s·m + a` = P(·|s,a).
+    transitions: Csr,
+    /// Stage costs, `costs[s·m + a]`.
+    costs: Vec<f64>,
+    /// Discount factor γ ∈ (0, 1).
+    gamma: f64,
+    /// Optimization sense (min-cost by default).
+    objective: Objective,
+}
+
+impl Mdp {
+    /// Assemble from parts, validating shapes and stochasticity.
+    pub fn new(
+        n_states: usize,
+        n_actions: usize,
+        transitions: Csr,
+        costs: Vec<f64>,
+        gamma: f64,
+    ) -> Result<Mdp, String> {
+        if transitions.nrows() != n_states * n_actions {
+            return Err(format!(
+                "transition rows {} != n·m = {}",
+                transitions.nrows(),
+                n_states * n_actions
+            ));
+        }
+        if transitions.ncols() != n_states {
+            return Err("transition cols != n_states".into());
+        }
+        if costs.len() != n_states * n_actions {
+            return Err("cost table size != n·m".into());
+        }
+        if !(0.0..1.0).contains(&gamma) {
+            return Err(format!("gamma {gamma} outside [0,1)"));
+        }
+        if !transitions.is_row_stochastic(1e-8) {
+            return Err("transition matrix is not row-stochastic".into());
+        }
+        if !costs.iter().all(|c| c.is_finite()) {
+            return Err("non-finite stage cost".into());
+        }
+        Ok(Mdp {
+            n_states,
+            n_actions,
+            transitions,
+            costs,
+            gamma,
+            objective: Objective::Min,
+        })
+    }
+
+    /// Switch the optimization sense (builder style).
+    pub fn with_objective(mut self, objective: Objective) -> Mdp {
+        self.objective = objective;
+        self
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    /// Build by evaluating filler functions over all (state, action) pairs
+    /// (madupite's "online simulation" creation path).
+    pub fn from_fillers(
+        n_states: usize,
+        n_actions: usize,
+        gamma: f64,
+        prob: impl Fn(usize, usize) -> Vec<(usize, f64)>,
+        cost: impl Fn(usize, usize) -> f64,
+    ) -> Mdp {
+        let mut rows = Vec::with_capacity(n_states * n_actions);
+        let mut costs = Vec::with_capacity(n_states * n_actions);
+        for s in 0..n_states {
+            for a in 0..n_actions {
+                rows.push(prob(s, a));
+                costs.push(cost(s, a));
+            }
+        }
+        let transitions = Csr::from_row_lists(n_states, rows);
+        Mdp::new(n_states, n_actions, transitions, costs, gamma)
+            .expect("filler produced an invalid MDP")
+    }
+
+    pub fn n_states(&self) -> usize {
+        self.n_states
+    }
+
+    pub fn n_actions(&self) -> usize {
+        self.n_actions
+    }
+
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+
+    pub fn transitions(&self) -> &Csr {
+        &self.transitions
+    }
+
+    pub fn costs(&self) -> &[f64] {
+        &self.costs
+    }
+
+    pub fn cost(&self, s: usize, a: usize) -> f64 {
+        self.costs[s * self.n_actions + a]
+    }
+
+    /// Q-factor backup for one (s, a): `g(s,a) + γ Σ P(s'|s,a) V(s')`.
+    pub fn q_value(&self, s: usize, a: usize, v: &[f64]) -> f64 {
+        let (cols, vals) = self.transitions.row(s * self.n_actions + a);
+        let mut exp = 0.0;
+        for (&c, &p) in cols.iter().zip(vals) {
+            exp += p * v[c];
+        }
+        self.cost(s, a) + self.gamma * exp
+    }
+
+    /// One Bellman backup: returns (TV, greedy policy).
+    pub fn bellman(&self, v: &[f64]) -> (Vec<f64>, Vec<usize>) {
+        assert_eq!(v.len(), self.n_states);
+        let mut tv = vec![0.0; self.n_states];
+        let mut pol = vec![0usize; self.n_states];
+        for s in 0..self.n_states {
+            let mut best = self.objective.worst();
+            let mut best_a = 0;
+            for a in 0..self.n_actions {
+                let q = self.q_value(s, a, v);
+                if self.objective.better(q, best) {
+                    best = q;
+                    best_a = a;
+                }
+            }
+            tv[s] = best;
+            pol[s] = best_a;
+        }
+        (tv, pol)
+    }
+
+    /// Extract `P_π` (n×n CSR) and `g_π` for a fixed policy.
+    pub fn policy_system(&self, policy: &[usize]) -> (Csr, Vec<f64>) {
+        assert_eq!(policy.len(), self.n_states);
+        let rows: Vec<usize> = policy
+            .iter()
+            .enumerate()
+            .map(|(s, &a)| {
+                assert!(a < self.n_actions, "policy action out of range");
+                s * self.n_actions + a
+            })
+            .collect();
+        let p_pi = self.transitions.select_rows(&rows);
+        let g_pi = policy
+            .iter()
+            .enumerate()
+            .map(|(s, &a)| self.cost(s, a))
+            .collect();
+        (p_pi, g_pi)
+    }
+
+    /// Evaluate a fixed policy exactly (dense solve — small MDPs only).
+    pub fn evaluate_policy_exact(&self, policy: &[usize]) -> Vec<f64> {
+        let (p_pi, g_pi) = self.policy_system(policy);
+        let mut a = p_pi.to_dense();
+        // A = I - γ P_π
+        for r in 0..self.n_states {
+            for c in 0..self.n_states {
+                a[(r, c)] = if r == c { 1.0 } else { 0.0 } - self.gamma * a[(r, c)];
+            }
+        }
+        a.solve(&g_pi).expect("policy system singular")
+    }
+
+    /// ∞-norm Bellman residual ‖TV − V‖∞.
+    pub fn bellman_residual(&self, v: &[f64]) -> f64 {
+        let (tv, _) = self.bellman(v);
+        tv.iter()
+            .zip(v)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Total memory of the MDP data (bytes) — reported in E5.
+    pub fn storage_bytes(&self) -> usize {
+        self.transitions.storage_bytes() + self.costs.len() * 8
+    }
+}
+
+/// The rank-local block of a distributed MDP.
+pub struct DistMdp {
+    part: Partition,
+    n_actions: usize,
+    gamma: f64,
+    objective: Objective,
+    /// Local stacked transition rows (`m · local_states` of them),
+    /// ghost-remapped over the state partition.
+    trans: DistCsr,
+    /// Local stage costs, `costs[(s − lo)·m + a]`.
+    costs: Vec<f64>,
+}
+
+impl DistMdp {
+    /// Build rank-locally from filler functions. Collective.
+    pub fn from_fillers(
+        comm: &Comm,
+        n_states: usize,
+        n_actions: usize,
+        gamma: f64,
+        prob: impl Fn(usize, usize) -> Vec<(usize, f64)>,
+        cost: impl Fn(usize, usize) -> f64,
+    ) -> DistMdp {
+        let part = Partition::new(n_states, comm.size());
+        let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+        let mut rows = Vec::with_capacity((hi - lo) * n_actions);
+        let mut costs = Vec::with_capacity((hi - lo) * n_actions);
+        for s in lo..hi {
+            for a in 0..n_actions {
+                let row = prob(s, a);
+                debug_assert!(
+                    (row.iter().map(|(_, p)| p).sum::<f64>() - 1.0).abs() < 1e-8,
+                    "filler row (s={s}, a={a}) not stochastic"
+                );
+                rows.push(row);
+                costs.push(cost(s, a));
+            }
+        }
+        let trans = DistCsr::assemble(comm, part, rows);
+        DistMdp {
+            part,
+            n_actions,
+            gamma,
+            objective: Objective::Min,
+            trans,
+            costs,
+        }
+    }
+
+    /// Switch the optimization sense (builder style).
+    pub fn with_objective(mut self, objective: Objective) -> DistMdp {
+        self.objective = objective;
+        self
+    }
+
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    /// Distribute a serial MDP (each rank slices its block). Collective.
+    pub fn from_serial(comm: &Comm, mdp: &Mdp) -> DistMdp {
+        DistMdp::from_fillers(
+            comm,
+            mdp.n_states(),
+            mdp.n_actions(),
+            mdp.gamma(),
+            |s, a| {
+                let (cols, vals) = mdp.transitions().row(s * mdp.n_actions() + a);
+                cols.iter().copied().zip(vals.iter().copied()).collect()
+            },
+            |s, a| mdp.cost(s, a),
+        )
+        .with_objective(mdp.objective())
+    }
+
+    pub fn partition(&self) -> Partition {
+        self.part
+    }
+
+    pub fn n_states(&self) -> usize {
+        self.part.n()
+    }
+
+    pub fn n_actions(&self) -> usize {
+        self.n_actions
+    }
+
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+
+    pub fn local_states(&self) -> usize {
+        self.costs.len() / self.n_actions.max(1)
+    }
+
+    pub fn transitions(&self) -> &DistCsr {
+        &self.trans
+    }
+
+    pub fn local_costs(&self) -> &[f64] {
+        &self.costs
+    }
+
+    /// Buffer for Bellman backups (sized for the stacked transition SpMV).
+    pub fn make_buffer(&self) -> GhostBuf {
+        self.trans.make_buffer()
+    }
+
+    /// One distributed Bellman backup against the local value block:
+    /// fills `tv` (local TV) and `policy` (local greedy actions); returns
+    /// the **global** ∞-norm residual ‖TV − V‖∞. Collective.
+    ///
+    /// Cost: one ghost exchange + `m` local SpMV rows per state + one
+    /// scalar allreduce — the per-iteration unit the experiments count.
+    pub fn bellman_backup(
+        &self,
+        comm: &Comm,
+        v_local: &[f64],
+        tv: &mut [f64],
+        policy: &mut [usize],
+        buf: &mut GhostBuf,
+        q_scratch: &mut Vec<f64>,
+    ) -> f64 {
+        let nl = self.local_states();
+        assert_eq!(v_local.len(), nl);
+        assert_eq!(tv.len(), nl);
+        assert_eq!(policy.len(), nl);
+        // q = P_stacked · v  (one exchange, m·nl local rows)
+        q_scratch.resize(nl * self.n_actions, 0.0);
+        self.trans.spmv(comm, v_local, q_scratch, buf);
+        let mut local_res = 0.0f64;
+        for s in 0..nl {
+            let mut best = self.objective.worst();
+            let mut best_a = 0usize;
+            let base = s * self.n_actions;
+            for a in 0..self.n_actions {
+                let q = self.costs[base + a] + self.gamma * q_scratch[base + a];
+                if self.objective.better(q, best) {
+                    best = q;
+                    best_a = a;
+                }
+            }
+            tv[s] = best;
+            policy[s] = best_a;
+            local_res = local_res.max((best - v_local[s]).abs());
+        }
+        comm.max(local_res)
+    }
+
+    /// Extract the distributed policy system `(P_π, g_π)` for the current
+    /// local policy. Collective (builds a fresh ghost plan).
+    pub fn policy_system(&self, comm: &Comm, policy: &[usize]) -> (DistCsr, Vec<f64>) {
+        let nl = self.local_states();
+        assert_eq!(policy.len(), nl);
+        let local = self.trans.local();
+        let mut rows = Vec::with_capacity(nl);
+        let mut g = Vec::with_capacity(nl);
+        for s in 0..nl {
+            let a = policy[s];
+            debug_assert!(a < self.n_actions);
+            let (cols, vals) = local.row(s * self.n_actions + a);
+            // translate remapped columns back to global ids
+            let row: Vec<(usize, f64)> = cols
+                .iter()
+                .map(|&c| self.trans.global_col(c))
+                .zip(vals.iter().copied())
+                .collect();
+            rows.push(row);
+            g.push(self.costs[s * self.n_actions + a]);
+        }
+        let p_pi = DistCsr::assemble(comm, self.part, rows);
+        (p_pi, g)
+    }
+
+    /// Local storage bytes (matrix block + costs).
+    pub fn storage_bytes(&self) -> usize {
+        self.trans.local().storage_bytes() + self.costs.len() * 8
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod fixtures {
+    //! Shared MDP fixtures for tests across modules.
+    use super::*;
+    use crate::util::prng::Xoshiro256pp;
+
+    /// Two-state analytic MDP (DESIGN §9): from state 0, action 0 stays
+    /// (cost 1), action 1 jumps to the absorbing state 1 (cost c); state 1
+    /// self-loops with cost 0. V*(1)=0 and V*(0) = min(1/(1−γ), c).
+    pub fn two_state(gamma: f64, c: f64) -> Mdp {
+        Mdp::from_fillers(
+            2,
+            2,
+            gamma,
+            |s, a| match (s, a) {
+                (0, 0) => vec![(0, 1.0)],
+                (0, 1) => vec![(1, 1.0)],
+                (1, _) => vec![(1, 1.0)],
+                _ => unreachable!(),
+            },
+            |s, a| match (s, a) {
+                (0, 0) => 1.0,
+                (0, 1) => c,
+                (1, _) => 0.0,
+                _ => unreachable!(),
+            },
+        )
+    }
+
+    /// Random sparse MDP, deterministic in `seed`.
+    pub fn random_mdp(seed: u64, n: usize, m: usize, gamma: f64) -> Mdp {
+        Mdp::from_fillers(
+            n,
+            m,
+            gamma,
+            move |s, a| {
+                let mut rng = Xoshiro256pp::new(seed ^ ((s * 131 + a) as u64));
+                let k = 1 + rng.index(3.min(n));
+                let targets: Vec<usize> = (0..k).map(|_| rng.index(n)).collect();
+                let probs = rng.prob_vector(k);
+                targets.into_iter().zip(probs).collect()
+            },
+            move |s, a| {
+                let mut rng = Xoshiro256pp::new(seed ^ 0xC0 ^ ((s * 131 + a) as u64));
+                rng.next_f64()
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::fixtures::{random_mdp, two_state};
+    use super::*;
+    use crate::comm::World;
+    use crate::util::prop;
+    use std::sync::Arc;
+
+    #[test]
+    fn validation_rejects_bad_inputs() {
+        let t = Csr::from_triplets(2, 2, &[(0, 0, 1.0), (1, 1, 1.0)]);
+        // wrong row count for n=2, m=2 (needs 4 rows)
+        assert!(Mdp::new(2, 2, t.clone(), vec![0.0; 4], 0.9).is_err());
+        // gamma out of range
+        let t4 = Csr::from_triplets(
+            4,
+            2,
+            &[(0, 0, 1.0), (1, 1, 1.0), (2, 0, 1.0), (3, 1, 1.0)],
+        );
+        assert!(Mdp::new(2, 2, t4.clone(), vec![0.0; 4], 1.0).is_err());
+        assert!(Mdp::new(2, 2, t4.clone(), vec![0.0; 4], 0.9).is_ok());
+        // non-stochastic
+        let bad = Csr::from_triplets(
+            4,
+            2,
+            &[(0, 0, 0.7), (1, 1, 1.0), (2, 0, 1.0), (3, 1, 1.0)],
+        );
+        assert!(Mdp::new(2, 2, bad, vec![0.0; 4], 0.9).is_err());
+        // non-finite cost
+        assert!(Mdp::new(2, 2, t4, vec![0.0, f64::NAN, 0.0, 0.0], 0.9).is_err());
+    }
+
+    #[test]
+    fn bellman_two_state_analytic() {
+        // γ=0.5 → 1/(1−γ)=2; with c=1.5 the jump is optimal.
+        let mdp = two_state(0.5, 1.5);
+        let (tv, pol) = mdp.bellman(&[1.5, 0.0]);
+        prop::close_slices(&tv, &[1.5, 0.0], 1e-12).unwrap();
+        assert_eq!(pol, vec![1, 0]);
+        // with c=3 staying forever is optimal: V*(0)=2
+        let mdp2 = two_state(0.5, 3.0);
+        let (tv2, pol2) = mdp2.bellman(&[2.0, 0.0]);
+        prop::close_slices(&tv2, &[2.0, 0.0], 1e-12).unwrap();
+        assert_eq!(pol2[0], 0);
+    }
+
+    #[test]
+    fn q_value_definition() {
+        let mdp = two_state(0.9, 2.0);
+        let v = vec![10.0, 20.0];
+        assert!((mdp.q_value(0, 0, &v) - (1.0 + 0.9 * 10.0)).abs() < 1e-12);
+        assert!((mdp.q_value(0, 1, &v) - (2.0 + 0.9 * 20.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_system_extraction() {
+        let mdp = two_state(0.9, 2.0);
+        let (p, g) = mdp.policy_system(&[1, 0]);
+        assert_eq!(p.nrows(), 2);
+        assert_eq!(p.get(0, 1), 1.0); // action 1 from state 0 → state 1
+        assert_eq!(g, vec![2.0, 0.0]);
+    }
+
+    #[test]
+    fn exact_policy_evaluation_geometric_series() {
+        let mdp = two_state(0.5, 2.0);
+        // policy "always stay": V(0) = 1/(1−γ) = 2
+        let v = mdp.evaluate_policy_exact(&[0, 0]);
+        prop::close_slices(&v, &[2.0, 0.0], 1e-12).unwrap();
+    }
+
+    #[test]
+    fn bellman_is_contraction() {
+        prop::forall("T is a γ-contraction in ∞-norm", |rng| {
+            let n = 2 + rng.index(10);
+            let m = 1 + rng.index(4);
+            let gamma = rng.range_f64(0.1, 0.99);
+            let mdp = random_mdp(rng.next_u64(), n, m, gamma);
+            let u: Vec<f64> = (0..n).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+            let w: Vec<f64> = (0..n).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+            let (tu, _) = mdp.bellman(&u);
+            let (tw, _) = mdp.bellman(&w);
+            let lhs = tu
+                .iter()
+                .zip(&tw)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            let rhs = u
+                .iter()
+                .zip(&w)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            crate::prop_assert!(
+                lhs <= gamma * rhs + 1e-10,
+                "‖Tu−Tw‖={lhs} > γ‖u−w‖={}",
+                gamma * rhs
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dist_bellman_matches_serial() {
+        for size in [1usize, 2, 3] {
+            let mdp = Arc::new(random_mdp(77, 23, 3, 0.9));
+            let mdp2 = Arc::clone(&mdp);
+            let out = World::run(size, move |comm| {
+                let d = DistMdp::from_serial(&comm, &mdp2);
+                let part = d.partition();
+                let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+                let v: Vec<f64> = (lo..hi).map(|i| (i as f64).sin()).collect();
+                let mut tv = vec![0.0; hi - lo];
+                let mut pol = vec![0usize; hi - lo];
+                let mut buf = d.make_buffer();
+                let mut q = Vec::new();
+                let res = d.bellman_backup(&comm, &v, &mut tv, &mut pol, &mut buf, &mut q);
+                (tv, pol, res)
+            });
+            let v_full: Vec<f64> = (0..23).map(|i| (i as f64).sin()).collect();
+            let (tv_serial, pol_serial) = mdp.bellman(&v_full);
+            let res_serial = mdp.bellman_residual(&v_full);
+            let tv_dist: Vec<f64> = out.iter().flat_map(|(tv, _, _)| tv.clone()).collect();
+            let pol_dist: Vec<usize> = out.iter().flat_map(|(_, p, _)| p.clone()).collect();
+            prop::close_slices(&tv_dist, &tv_serial, 1e-12).unwrap();
+            assert_eq!(pol_dist, pol_serial, "size={size}");
+            for (_, _, r) in &out {
+                assert!((r - res_serial).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn dist_policy_system_matches_serial() {
+        let mdp = Arc::new(random_mdp(5, 17, 2, 0.95));
+        let mdp2 = Arc::clone(&mdp);
+        let out = World::run(3, move |comm| {
+            let d = DistMdp::from_serial(&comm, &mdp2);
+            let part = d.partition();
+            let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+            let pol: Vec<usize> = (lo..hi).map(|s| s % 2).collect();
+            let (p_pi, g_pi) = d.policy_system(&comm, &pol);
+            let x: Vec<f64> = (lo..hi).map(|i| i as f64).collect();
+            let mut buf = p_pi.make_buffer();
+            let mut y = vec![0.0; hi - lo];
+            p_pi.spmv(&comm, &x, &mut y, &mut buf);
+            (y, g_pi)
+        });
+        let pol_full: Vec<usize> = (0..17).map(|s| s % 2).collect();
+        let (p_serial, g_serial) = mdp.policy_system(&pol_full);
+        let x_full: Vec<f64> = (0..17).map(|i| i as f64).collect();
+        let y_serial = p_serial.mul_vec(&x_full);
+        let y_dist: Vec<f64> = out.iter().flat_map(|(y, _)| y.clone()).collect();
+        let g_dist: Vec<f64> = out.iter().flat_map(|(_, g)| g.clone()).collect();
+        prop::close_slices(&y_dist, &y_serial, 1e-12).unwrap();
+        prop::close_slices(&g_dist, &g_serial, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn storage_accounting_positive() {
+        let mdp = random_mdp(1, 10, 2, 0.9);
+        assert!(mdp.storage_bytes() > 10 * 2 * 8);
+    }
+}

@@ -1,0 +1,382 @@
+//! Gridworld / maze navigation MDPs.
+//!
+//! The navigation benchmark of the iPI companion paper: an agent moves on a
+//! `rows × cols` grid with walls, four actions (N/E/S/W), a slip
+//! probability (perpendicular drift), unit step cost and an absorbing
+//! zero-cost goal. Mazes are carved deterministically from a seed with
+//! recursive division, so a 1M-state maze can be generated rank-locally
+//! without communication — this is the E2 strong-scaling workload.
+
+use super::ModelGenerator;
+use crate::util::prng::Xoshiro256pp;
+
+/// Actions: 0=N, 1=E, 2=S, 3=W.
+const DR: [isize; 4] = [-1, 0, 1, 0];
+const DC: [isize; 4] = [0, 1, 0, -1];
+
+/// Grid specification. Build with [`GridSpec::open`] or [`GridSpec::maze`].
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    pub rows: usize,
+    pub cols: usize,
+    /// `walls[r*cols + c]` — wall cells are self-looping high-cost states.
+    pub walls: Vec<bool>,
+    /// Goal cell (absorbing, zero cost).
+    pub goal: (usize, usize),
+    /// Probability mass that drifts to each perpendicular direction.
+    pub slip: f64,
+}
+
+impl GridSpec {
+    /// Open room without interior walls; goal in the far corner.
+    pub fn open(rows: usize, cols: usize) -> GridSpec {
+        assert!(rows >= 2 && cols >= 2);
+        GridSpec {
+            rows,
+            cols,
+            walls: vec![false; rows * cols],
+            goal: (rows - 1, cols - 1),
+            slip: 0.1,
+        }
+    }
+
+    /// Recursive-division maze, deterministic in `seed`.
+    pub fn maze(rows: usize, cols: usize, seed: u64) -> GridSpec {
+        let mut spec = GridSpec::open(rows, cols);
+        let mut rng = Xoshiro256pp::new(seed);
+        divide(&mut spec.walls, cols, 0, 0, rows, cols, &mut rng, 0);
+        // goal must be free: carve it and its neighborhood
+        let (gr, gc) = (rows - 1, cols - 1);
+        spec.walls[gr * cols + gc] = false;
+        if gr > 0 {
+            spec.walls[(gr - 1) * cols + gc] = false;
+        }
+        if gc > 0 {
+            spec.walls[gr * cols + gc - 1] = false;
+        }
+        // start corner free as well
+        spec.walls[0] = false;
+        spec.goal = (gr, gc);
+        spec
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    fn is_wall(&self, r: isize, c: isize) -> bool {
+        if r < 0 || c < 0 || r as usize >= self.rows || c as usize >= self.cols {
+            return true; // out of bounds behaves like a wall
+        }
+        self.walls[r as usize * self.cols + c as usize]
+    }
+
+    fn goal_state(&self) -> usize {
+        self.goal.0 * self.cols + self.goal.1
+    }
+
+    /// Successor cell when moving from (r,c) in direction d (stay on wall).
+    fn step(&self, r: usize, c: usize, d: usize) -> usize {
+        let (nr, nc) = (r as isize + DR[d], c as isize + DC[d]);
+        if self.is_wall(nr, nc) {
+            r * self.cols + c
+        } else {
+            nr as usize * self.cols + nc as usize
+        }
+    }
+}
+
+/// Iterative recursive-division (explicit stack to bound memory on big
+/// mazes): splits a chamber with a wall + door, recurses on both halves.
+///
+/// Connectivity invariant: walls live on **even global** coordinates and
+/// doors on **odd global** coordinates, so a perpendicular wall added later
+/// (even coordinate) can never cover a door cell (odd coordinate) — the
+/// maze stays fully connected regardless of subdivision order.
+#[allow(clippy::too_many_arguments)]
+fn divide(
+    walls: &mut [bool],
+    stride: usize,
+    top: usize,
+    left: usize,
+    height: usize,
+    width: usize,
+    rng: &mut Xoshiro256pp,
+    _depth: usize,
+) {
+    /// Pick a random value of the given parity in [lo, hi] (inclusive).
+    fn pick(rng: &mut Xoshiro256pp, lo: usize, hi: usize, odd: bool) -> Option<usize> {
+        if hi < lo {
+            return None;
+        }
+        let first = if (lo % 2 == 1) == odd { lo } else { lo + 1 };
+        if first > hi {
+            return None;
+        }
+        let count = (hi - first) / 2 + 1;
+        Some(first + 2 * rng.index(count))
+    }
+
+    let mut stack = vec![(top, left, height, width)];
+    while let Some((top, left, height, width)) = stack.pop() {
+        if height < 3 || width < 3 {
+            continue;
+        }
+        let prefer_horizontal = if width < height {
+            true
+        } else if height < width {
+            false
+        } else {
+            rng.next_below(2) == 0
+        };
+        // wall on an even global coordinate strictly inside the chamber,
+        // door on an odd global coordinate spanning the chamber
+        let try_h = |rng: &mut Xoshiro256pp| {
+            let wy = pick(rng, top + 1, top + height - 2, false)?;
+            let door = pick(rng, left, left + width - 1, true)?;
+            Some((wy, door))
+        };
+        let try_v = |rng: &mut Xoshiro256pp| {
+            let wx = pick(rng, left + 1, left + width - 2, false)?;
+            let door = pick(rng, top, top + height - 1, true)?;
+            Some((wx, door))
+        };
+        let (horizontal, cut) = if prefer_horizontal {
+            match try_h(rng) {
+                Some(c) => (true, Some(c)),
+                None => (false, try_v(rng)),
+            }
+        } else {
+            match try_v(rng) {
+                Some(c) => (false, Some(c)),
+                None => (true, try_h(rng)),
+            }
+        };
+        let Some((w_coord, door)) = cut else { continue };
+        if horizontal {
+            for x in left..left + width {
+                if x != door {
+                    walls[w_coord * stride + x] = true;
+                }
+            }
+            stack.push((top, left, w_coord - top, width));
+            stack.push((w_coord + 1, left, top + height - w_coord - 1, width));
+        } else {
+            for y in top..top + height {
+                if y != door {
+                    walls[y * stride + w_coord] = true;
+                }
+            }
+            stack.push((top, left, height, w_coord - left));
+            stack.push((top, w_coord + 1, height, left + width - w_coord - 1));
+        }
+    }
+}
+
+impl ModelGenerator for GridSpec {
+    fn n_states(&self) -> usize {
+        self.n_cells()
+    }
+
+    fn n_actions(&self) -> usize {
+        4
+    }
+
+    fn prob_row(&self, s: usize, a: usize) -> Vec<(usize, f64)> {
+        let (r, c) = (s / self.cols, s % self.cols);
+        if s == self.goal_state() || self.walls[s] {
+            return vec![(s, 1.0)]; // absorbing (goal or unreachable wall)
+        }
+        let main = self.step(r, c, a);
+        let perp1 = self.step(r, c, (a + 1) % 4);
+        let perp2 = self.step(r, c, (a + 3) % 4);
+        let mut row: Vec<(usize, f64)> = vec![
+            (main, 1.0 - self.slip),
+            (perp1, self.slip / 2.0),
+            (perp2, self.slip / 2.0),
+        ];
+        // merge duplicates (e.g. bounced off walls to the same cell)
+        row.sort_by_key(|&(t, _)| t);
+        let mut merged: Vec<(usize, f64)> = Vec::with_capacity(3);
+        for (t, p) in row {
+            if p == 0.0 {
+                continue;
+            }
+            match merged.last_mut() {
+                Some((lt, lp)) if *lt == t => *lp += p,
+                _ => merged.push((t, p)),
+            }
+        }
+        merged
+    }
+
+    fn cost(&self, s: usize, _a: usize) -> f64 {
+        if s == self.goal_state() {
+            0.0
+        } else if self.walls[s] {
+            0.0 // unreachable filler states
+        } else {
+            1.0
+        }
+    }
+}
+
+/// Convenience: build a maze MDP in one call (used by docs and examples).
+pub fn build_gridworld(spec: &GridSpec, gamma: f64) -> crate::mdp::Mdp {
+    spec.build_serial(gamma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::check_generator;
+    use crate::solver::{solve_serial, Method, SolveOptions};
+
+    #[test]
+    fn open_grid_valid() {
+        check_generator(&GridSpec::open(5, 7));
+    }
+
+    #[test]
+    fn maze_valid() {
+        check_generator(&GridSpec::maze(15, 15, 42));
+    }
+
+    #[test]
+    fn maze_deterministic_in_seed() {
+        let a = GridSpec::maze(21, 21, 7);
+        let b = GridSpec::maze(21, 21, 7);
+        let c = GridSpec::maze(21, 21, 8);
+        assert_eq!(a.walls, b.walls);
+        assert_ne!(a.walls, c.walls);
+    }
+
+    #[test]
+    fn maze_has_walls_and_free_space() {
+        let m = GridSpec::maze(31, 31, 3);
+        let wall_count = m.walls.iter().filter(|&&w| w).count();
+        assert!(wall_count > 10, "no walls carved");
+        assert!(wall_count < m.n_cells() / 2, "too many walls");
+    }
+
+    #[test]
+    fn goal_is_absorbing_and_free() {
+        let m = GridSpec::maze(15, 15, 1);
+        let g = m.goal_state();
+        assert!(!m.walls[g]);
+        assert_eq!(m.prob_row(g, 2), vec![(g, 1.0)]);
+        assert_eq!(m.cost(g, 0), 0.0);
+    }
+
+    #[test]
+    fn slip_mass_distributed() {
+        let m = GridSpec::open(5, 5);
+        // interior cell, no walls around
+        let s = 2 * 5 + 2;
+        let row = m.prob_row(s, 0);
+        let main: f64 = row
+            .iter()
+            .filter(|&&(t, _)| t == 1 * 5 + 2)
+            .map(|&(_, p)| p)
+            .sum();
+        assert!((main - 0.9).abs() < 1e-12);
+        assert_eq!(row.len(), 3);
+    }
+
+    #[test]
+    fn bounce_off_boundary_stays() {
+        let m = GridSpec::open(4, 4);
+        // top-left corner, move north → bounce to stay
+        let row = m.prob_row(0, 0);
+        let stay: f64 = row
+            .iter()
+            .filter(|&&(t, _)| t == 0)
+            .map(|&(_, p)| p)
+            .sum();
+        // main (north, bounced) + west slip (bounced) = 0.9 + 0.05
+        assert!((stay - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimal_value_increases_with_distance() {
+        // On an open grid, V* at the goal is 0 and grows with distance.
+        let m = GridSpec::open(6, 6);
+        let mdp = m.build_serial(0.95);
+        let r = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::ipi_gmres(),
+                atol: 1e-9,
+                ..Default::default()
+            },
+        );
+        let g = m.goal_state();
+        assert!(r.value[g].abs() < 1e-8);
+        // the start corner (0,0) is farthest → largest value
+        let vmax = r.value.iter().cloned().fold(f64::MIN, f64::max);
+        assert!((r.value[0] - vmax).abs() < 1e-6, "corner not the worst");
+        // neighbor of goal cheaper than corner
+        assert!(r.value[g - 1] < r.value[0]);
+    }
+
+    /// BFS over free cells from (0,0).
+    fn reachable(m: &GridSpec) -> Vec<bool> {
+        let mut seen = vec![false; m.n_cells()];
+        let mut queue = std::collections::VecDeque::new();
+        seen[0] = true;
+        queue.push_back(0usize);
+        while let Some(s) = queue.pop_front() {
+            let (r, c) = (s / m.cols, s % m.cols);
+            for d in 0..4 {
+                let t = m.step(r, c, d);
+                if !seen[t] && !m.walls[t] {
+                    seen[t] = true;
+                    queue.push_back(t);
+                }
+            }
+        }
+        seen
+    }
+
+    #[test]
+    fn maze_fully_connected_all_seeds() {
+        // The even-wall/odd-door invariant must make every free cell
+        // reachable from the start, for many seeds and odd/even sizes.
+        for seed in 0..10u64 {
+            for (rows, cols) in [(15, 15), (16, 16), (21, 33), (32, 32)] {
+                let m = GridSpec::maze(rows, cols, seed);
+                let seen = reachable(&m);
+                for s in 0..m.n_cells() {
+                    if !m.walls[s] {
+                        assert!(
+                            seen[s],
+                            "free cell {s} unreachable (seed={seed}, {rows}x{cols})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn maze_solvable_start_reaches_goal() {
+        let m = GridSpec::maze(15, 15, 9);
+        let mdp = m.build_serial(0.99);
+        let r = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::ipi_gmres(),
+                atol: 1e-8,
+                ..Default::default()
+            },
+        );
+        assert!(r.converged);
+        // start value finite and below the "never reach goal" plateau 1/(1−γ)
+        let plateau = 1.0 / (1.0 - 0.99);
+        assert!(
+            r.value[0] < plateau * 0.9,
+            "start unreachable: V[0]={} plateau={plateau}",
+            r.value[0]
+        );
+    }
+}

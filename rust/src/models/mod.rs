@@ -1,0 +1,85 @@
+//! Benchmark MDP generators.
+//!
+//! These are the workloads the paper's motivation cites (White 1985;
+//! Steimle & Denton 2017; Xu et al. 2016) and the companion iPI paper
+//! benchmarks on: grid/maze navigation, SIS epidemic control, traffic
+//! signal control, plus the standard synthetic families (Garnet, inventory
+//! control, queueing admission). Every generator is a deterministic
+//! function of its spec (+ seed), exposes madupite-style *filler* functions
+//! `(s, a) → row / cost`, and can build either a serial [`Mdp`] or a
+//! rank-local [`DistMdp`] without ever materializing the global model on
+//! one rank.
+
+pub mod garnet;
+pub mod gridworld;
+pub mod inventory;
+pub mod queueing;
+pub mod replacement;
+pub mod sis;
+pub mod traffic;
+
+use crate::comm::Comm;
+use crate::mdp::{DistMdp, Mdp};
+
+/// Anything that can generate MDP rows state-by-state.
+///
+/// `prob_row(s, a)` returns the sparse distribution over successor states;
+/// `cost(s, a)` the stage cost. Implementations must be pure functions of
+/// `(spec, s, a)` so that distributed construction is reproducible and
+/// rank-independent.
+pub trait ModelGenerator: Sync {
+    fn n_states(&self) -> usize;
+    fn n_actions(&self) -> usize;
+    fn prob_row(&self, s: usize, a: usize) -> Vec<(usize, f64)>;
+    fn cost(&self, s: usize, a: usize) -> f64;
+
+    /// Build the full serial MDP.
+    fn build_serial(&self, gamma: f64) -> Mdp {
+        Mdp::from_fillers(
+            self.n_states(),
+            self.n_actions(),
+            gamma,
+            |s, a| self.prob_row(s, a),
+            |s, a| self.cost(s, a),
+        )
+    }
+
+    /// Build the rank-local block of the distributed MDP. Collective.
+    fn build_dist(&self, comm: &Comm, gamma: f64) -> DistMdp {
+        DistMdp::from_fillers(
+            comm,
+            self.n_states(),
+            self.n_actions(),
+            gamma,
+            |s, a| self.prob_row(s, a),
+            |s, a| self.cost(s, a),
+        )
+    }
+}
+
+/// Shared validation helper used by the per-model tests: every row of every
+/// action must be a probability distribution.
+#[cfg(test)]
+pub(crate) fn check_generator(g: &dyn ModelGenerator) {
+    assert!(g.n_states() > 0 && g.n_actions() > 0);
+    for s in 0..g.n_states() {
+        for a in 0..g.n_actions() {
+            let row = g.prob_row(s, a);
+            assert!(!row.is_empty(), "empty row at (s={s}, a={a})");
+            let mut sum = 0.0;
+            for &(c, p) in &row {
+                assert!(c < g.n_states(), "target {c} out of range at ({s},{a})");
+                assert!(
+                    (0.0..=1.0 + 1e-12).contains(&p),
+                    "bad probability {p} at ({s},{a})"
+                );
+                sum += p;
+            }
+            assert!(
+                (sum - 1.0).abs() < 1e-9,
+                "row ({s},{a}) sums to {sum}, not 1"
+            );
+            assert!(g.cost(s, a).is_finite(), "non-finite cost at ({s},{a})");
+        }
+    }
+}

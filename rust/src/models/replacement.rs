@@ -1,0 +1,199 @@
+//! Machine-replacement MDP (Feinberg & Shwartz 2002's classic operations
+//! example; also the standard "structured optimal policy" testbed).
+//!
+//! A machine deteriorates through condition states `0` (new) …
+//! `n_conditions − 1` (failed). Each period: **keep** (action 0) — pay an
+//! operating cost increasing in wear, and the machine degrades
+//! stochastically; or **replace** (action 1) — pay a fixed replacement
+//! cost and restart from condition 0. The optimal policy is a *control
+//! limit*: replace iff condition ≥ threshold — asserted by the tests, and
+//! a good target for `Objective::Max` reward-mode coverage (profit form).
+
+use super::ModelGenerator;
+
+/// Machine-replacement specification.
+#[derive(Clone, Debug)]
+pub struct ReplacementSpec {
+    /// Number of condition states (0 = new, last = failed).
+    pub n_conditions: usize,
+    /// Per-period probability of degrading one condition step.
+    pub wear_prob: f64,
+    /// Probability of a sudden two-step degradation (shock).
+    pub shock_prob: f64,
+    /// Operating cost at condition c: `base + slope · c²/(n−1)²` (convex).
+    pub operating_base: f64,
+    pub operating_slope: f64,
+    /// Cost of replacing the machine (paid once, restart at condition 0).
+    pub replacement_cost: f64,
+}
+
+impl ReplacementSpec {
+    pub fn standard(n_conditions: usize) -> ReplacementSpec {
+        assert!(n_conditions >= 3);
+        ReplacementSpec {
+            n_conditions,
+            wear_prob: 0.3,
+            shock_prob: 0.05,
+            operating_base: 0.2,
+            operating_slope: 4.0,
+            replacement_cost: 6.0,
+        }
+    }
+
+    fn failed(&self) -> usize {
+        self.n_conditions - 1
+    }
+
+    /// Convex operating cost in the wear level.
+    pub fn operating_cost(&self, c: usize) -> f64 {
+        let frac = c as f64 / (self.n_conditions - 1) as f64;
+        self.operating_base + self.operating_slope * frac * frac
+    }
+}
+
+impl ModelGenerator for ReplacementSpec {
+    fn n_states(&self) -> usize {
+        self.n_conditions
+    }
+
+    fn n_actions(&self) -> usize {
+        2
+    }
+
+    fn prob_row(&self, c: usize, a: usize) -> Vec<(usize, f64)> {
+        if a == 1 {
+            // replace: next period starts from a new machine
+            return vec![(0, 1.0)];
+        }
+        if c == self.failed() {
+            // a failed machine stays failed until replaced
+            return vec![(c, 1.0)];
+        }
+        let one = (c + 1).min(self.failed());
+        let two = (c + 2).min(self.failed());
+        let mut row: Vec<(usize, f64)> = Vec::with_capacity(3);
+        let stay = 1.0 - self.wear_prob - self.shock_prob;
+        row.push((c, stay));
+        if one == two {
+            row.push((one, self.wear_prob + self.shock_prob));
+        } else {
+            row.push((one, self.wear_prob));
+            row.push((two, self.shock_prob));
+        }
+        row
+    }
+
+    fn cost(&self, c: usize, a: usize) -> f64 {
+        if a == 1 {
+            self.replacement_cost
+        } else if c == self.failed() {
+            // running a failed machine: maximal operating cost plus outage
+            self.operating_cost(c) + 2.0
+        } else {
+            self.operating_cost(c)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mdp::Objective;
+    use crate::models::check_generator;
+    use crate::solver::{solve_serial, Method, SolveOptions};
+
+    #[test]
+    fn generator_valid() {
+        check_generator(&ReplacementSpec::standard(12));
+    }
+
+    #[test]
+    fn replace_resets_to_new() {
+        let r = ReplacementSpec::standard(8);
+        for c in 0..8 {
+            assert_eq!(r.prob_row(c, 1), vec![(0, 1.0)]);
+        }
+    }
+
+    #[test]
+    fn failed_machine_absorbs_under_keep() {
+        let r = ReplacementSpec::standard(8);
+        assert_eq!(r.prob_row(7, 0), vec![(7, 1.0)]);
+        assert!(r.cost(7, 0) > r.cost(6, 0));
+    }
+
+    #[test]
+    fn operating_cost_convex_increasing() {
+        let r = ReplacementSpec::standard(10);
+        for c in 1..10 {
+            assert!(r.operating_cost(c) > r.operating_cost(c - 1));
+        }
+        // convexity: second difference nonnegative
+        for c in 2..10 {
+            let d2 = r.operating_cost(c) - 2.0 * r.operating_cost(c - 1)
+                + r.operating_cost(c - 2);
+            assert!(d2 >= -1e-12);
+        }
+    }
+
+    #[test]
+    fn optimal_policy_is_control_limit() {
+        let spec = ReplacementSpec::standard(20);
+        let mdp = spec.build_serial(0.95);
+        let r = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::ipi_gmres(),
+                atol: 1e-10,
+                ..Default::default()
+            },
+        );
+        assert!(r.converged);
+        // keep when new
+        assert_eq!(r.policy[0], 0);
+        // failed machine must be replaced
+        assert_eq!(r.policy[19], 1);
+        // monotone threshold structure: once replace, always replace
+        let first = r.policy.iter().position(|&a| a == 1).unwrap();
+        for c in first..20 {
+            assert_eq!(r.policy[c], 1, "not a control limit: {:?}", r.policy);
+        }
+        // value increasing in wear
+        for c in 1..20 {
+            assert!(r.value[c] >= r.value[c - 1] - 1e-9);
+        }
+    }
+
+    #[test]
+    fn max_reward_mode_mirrors_min_cost() {
+        // Negate costs and maximize: identical policy, negated values —
+        // exercises Objective::Max end-to-end through every method.
+        let spec = ReplacementSpec::standard(15);
+        let min_mdp = spec.build_serial(0.9);
+        let max_mdp = crate::mdp::Mdp::new(
+            15,
+            2,
+            min_mdp.transitions().clone(),
+            min_mdp.costs().iter().map(|c| -c).collect(),
+            0.9,
+        )
+        .unwrap()
+        .with_objective(Objective::Max);
+
+        for method in [Method::Vi, Method::Mpi { sweeps: 10 }, Method::ipi_gmres()] {
+            let opts = SolveOptions {
+                method,
+                atol: 1e-10,
+                max_outer: 100_000,
+                ..Default::default()
+            };
+            let rmin = solve_serial(&min_mdp, &opts);
+            let rmax = solve_serial(&max_mdp, &opts);
+            assert!(rmin.converged && rmax.converged);
+            assert_eq!(rmin.policy, rmax.policy);
+            for (a, b) in rmin.value.iter().zip(&rmax.value) {
+                assert!((a + b).abs() < 1e-7, "{a} vs {b}");
+            }
+        }
+    }
+}

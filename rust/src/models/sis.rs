@@ -1,0 +1,175 @@
+//! SIS epidemic-control MDP (Steimle & Denton 2017 motivation; the
+//! epidemiology benchmark family of the iPI companion paper).
+//!
+//! Stochastic SIS (susceptible–infected–susceptible) birth–death chain on a
+//! population of `N` individuals: the state is the number of infected
+//! `i ∈ {0..N}`, and the decision maker picks one of `m` intervention
+//! levels each period. Level `a` scales the contact rate by `1/(1+a)` at a
+//! quadratic economic cost. Infections and recoveries happen one at a time
+//! (birth–death), giving a tridiagonal transition matrix — sparse,
+//! diagonally structured, and with strongly state-dependent mixing: a good
+//! stress test for inner-solver choice (claim C2).
+
+use super::ModelGenerator;
+
+/// SIS model specification.
+#[derive(Clone, Debug)]
+pub struct SisSpec {
+    /// Population size (states = 0..=N infected).
+    pub population: usize,
+    /// Number of intervention levels (actions).
+    pub n_interventions: usize,
+    /// Base infection pressure β₀.
+    pub beta: f64,
+    /// Recovery rate μ.
+    pub mu: f64,
+    /// Weight of the infection burden in the stage cost.
+    pub infection_weight: f64,
+    /// Weight of the intervention cost.
+    pub intervention_weight: f64,
+}
+
+impl SisSpec {
+    /// Canonical benchmark configuration for a given population.
+    pub fn standard(population: usize, n_interventions: usize) -> SisSpec {
+        SisSpec {
+            population,
+            n_interventions,
+            beta: 0.6,
+            mu: 0.25,
+            infection_weight: 1.0,
+            intervention_weight: 0.3,
+        }
+    }
+
+    /// Contact-rate multiplier for intervention level `a`.
+    fn contact_scale(&self, a: usize) -> f64 {
+        1.0 / (1.0 + a as f64)
+    }
+
+    /// Birth (new-infection) probability from state `i` under action `a`.
+    fn p_up(&self, i: usize, a: usize) -> f64 {
+        let n = self.population as f64;
+        let i = i as f64;
+        (self.beta * self.contact_scale(a) * i * (n - i) / (n * n)).min(0.49)
+    }
+
+    /// Death (recovery) probability from state `i`.
+    fn p_down(&self, i: usize) -> f64 {
+        let n = self.population as f64;
+        (self.mu * i as f64 / n).min(0.49)
+    }
+}
+
+impl ModelGenerator for SisSpec {
+    fn n_states(&self) -> usize {
+        self.population + 1
+    }
+
+    fn n_actions(&self) -> usize {
+        self.n_interventions
+    }
+
+    fn prob_row(&self, i: usize, a: usize) -> Vec<(usize, f64)> {
+        if i == 0 {
+            return vec![(0, 1.0)]; // disease-free absorbing state
+        }
+        let up = if i < self.population { self.p_up(i, a) } else { 0.0 };
+        let down = self.p_down(i);
+        let stay = 1.0 - up - down;
+        let mut row = Vec::with_capacity(3);
+        if down > 0.0 {
+            row.push((i - 1, down));
+        }
+        row.push((i, stay));
+        if up > 0.0 {
+            row.push((i + 1, up));
+        }
+        row
+    }
+
+    fn cost(&self, i: usize, a: usize) -> f64 {
+        if i == 0 {
+            return 0.0; // no infection, no intervention needed
+        }
+        let frac = i as f64 / self.population as f64;
+        let act = if self.n_interventions > 1 {
+            a as f64 / (self.n_interventions - 1) as f64
+        } else {
+            0.0
+        };
+        self.infection_weight * frac + self.intervention_weight * act * act
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::check_generator;
+    use crate::models::ModelGenerator;
+    use crate::solver::{solve_serial, Method, SolveOptions};
+
+    #[test]
+    fn generator_valid() {
+        check_generator(&SisSpec::standard(50, 4));
+    }
+
+    #[test]
+    fn tridiagonal_structure() {
+        let s = SisSpec::standard(30, 3);
+        for i in 1..30 {
+            for a in 0..3 {
+                let row = s.prob_row(i, a);
+                assert!(row.len() <= 3);
+                for &(t, _) in &row {
+                    assert!((t as isize - i as isize).abs() <= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn disease_free_absorbing() {
+        let s = SisSpec::standard(20, 3);
+        assert_eq!(s.prob_row(0, 0), vec![(0, 1.0)]);
+        assert_eq!(s.cost(0, 2), 0.0);
+    }
+
+    #[test]
+    fn intervention_reduces_infection_pressure() {
+        let s = SisSpec::standard(100, 5);
+        // stronger intervention → lower up-probability at mid-epidemic
+        let p0 = s.p_up(50, 0);
+        let p4 = s.p_up(50, 4);
+        assert!(p4 < p0 / 3.0, "p0={p0} p4={p4}");
+    }
+
+    #[test]
+    fn cost_monotone_in_infections() {
+        let s = SisSpec::standard(40, 3);
+        assert!(s.cost(10, 0) < s.cost(30, 0));
+        // same infections, intervention costs extra
+        assert!(s.cost(10, 0) < s.cost(10, 2));
+    }
+
+    #[test]
+    fn optimal_policy_intervenes_during_epidemic() {
+        let spec = SisSpec::standard(60, 4);
+        let mdp = spec.build_serial(0.97);
+        let r = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::ipi_gmres(),
+                atol: 1e-9,
+                ..Default::default()
+            },
+        );
+        assert!(r.converged);
+        // value is 0 at the disease-free state and increasing in infections
+        assert!(r.value[0].abs() < 1e-8);
+        assert!(r.value[30] > r.value[5]);
+        // at significant prevalence the policy should use some intervention
+        let active: usize = (20..50).map(|i| r.policy[i]).max().unwrap();
+        assert!(active > 0, "policy never intervenes");
+    }
+}

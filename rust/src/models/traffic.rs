@@ -1,0 +1,185 @@
+//! Traffic-signal control MDP (Xu et al. 2016 motivation).
+//!
+//! A two-approach intersection: state = (queue₁, queue₂, active phase),
+//! queues saturate at capacity `K`. Each period the controller either keeps
+//! the current green phase or switches (losing the period to amber).
+//! Arrivals are independent Bernoulli per approach; the green approach
+//! discharges up to `saturation` vehicles per period. Cost = total queue
+//! (+ a small switching penalty), so the optimal controller trades cycle
+//! losses against queue balance.
+
+use super::ModelGenerator;
+
+/// Intersection specification.
+#[derive(Clone, Debug)]
+pub struct TrafficSpec {
+    /// Queue capacity per approach (queues live in 0..=K).
+    pub capacity: usize,
+    /// Bernoulli arrival probability, approach 1 / approach 2.
+    pub arrival1: f64,
+    pub arrival2: f64,
+    /// Vehicles discharged per green period.
+    pub saturation: usize,
+    /// Extra cost charged on a phase switch.
+    pub switch_penalty: f64,
+}
+
+impl TrafficSpec {
+    pub fn standard(capacity: usize) -> TrafficSpec {
+        TrafficSpec {
+            capacity,
+            arrival1: 0.45,
+            arrival2: 0.30,
+            saturation: 1,
+            switch_penalty: 0.5,
+        }
+    }
+
+    fn qdim(&self) -> usize {
+        self.capacity + 1
+    }
+
+    /// state = ((q1 · qdim) + q2) · 2 + phase
+    pub fn encode(&self, q1: usize, q2: usize, phase: usize) -> usize {
+        ((q1 * self.qdim()) + q2) * 2 + phase
+    }
+
+    pub fn decode(&self, s: usize) -> (usize, usize, usize) {
+        let phase = s % 2;
+        let q = s / 2;
+        (q / self.qdim(), q % self.qdim(), phase)
+    }
+}
+
+/// Actions: 0 = keep current phase, 1 = switch.
+impl ModelGenerator for TrafficSpec {
+    fn n_states(&self) -> usize {
+        self.qdim() * self.qdim() * 2
+    }
+
+    fn n_actions(&self) -> usize {
+        2
+    }
+
+    fn prob_row(&self, s: usize, a: usize) -> Vec<(usize, f64)> {
+        let (q1, q2, phase) = self.decode(s);
+        let new_phase = if a == 1 { 1 - phase } else { phase };
+        // a switch period is amber: nothing discharges
+        let (dep1, dep2) = if a == 1 {
+            (0usize, 0usize)
+        } else if new_phase == 0 {
+            (self.saturation, 0)
+        } else {
+            (0, self.saturation)
+        };
+        let base1 = q1.saturating_sub(dep1);
+        let base2 = q2.saturating_sub(dep2);
+        let mut row: Vec<(usize, f64)> = Vec::with_capacity(4);
+        for (a1, p1) in [(0usize, 1.0 - self.arrival1), (1, self.arrival1)] {
+            for (a2, p2) in [(0usize, 1.0 - self.arrival2), (1, self.arrival2)] {
+                let n1 = (base1 + a1).min(self.capacity);
+                let n2 = (base2 + a2).min(self.capacity);
+                let t = self.encode(n1, n2, new_phase);
+                let p = p1 * p2;
+                match row.iter_mut().find(|(tt, _)| *tt == t) {
+                    Some((_, pp)) => *pp += p,
+                    None => row.push((t, p)),
+                }
+            }
+        }
+        row.sort_by_key(|&(t, _)| t);
+        row
+    }
+
+    fn cost(&self, s: usize, a: usize) -> f64 {
+        let (q1, q2, _) = self.decode(s);
+        (q1 + q2) as f64 + if a == 1 { self.switch_penalty } else { 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::check_generator;
+    use crate::models::ModelGenerator;
+    use crate::solver::{solve_serial, Method, SolveOptions};
+
+    #[test]
+    fn generator_valid() {
+        check_generator(&TrafficSpec::standard(6));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = TrafficSpec::standard(5);
+        for q1 in 0..=5 {
+            for q2 in 0..=5 {
+                for ph in 0..2 {
+                    assert_eq!(t.decode(t.encode(q1, q2, ph)), (q1, q2, ph));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn green_discharges_queue() {
+        let t = TrafficSpec::standard(5);
+        // q1=3, phase 0 green, keep → base1 = 2 (before arrivals)
+        let s = t.encode(3, 0, 0);
+        let row = t.prob_row(s, 0);
+        // no-arrival outcome: (2, 0, 0)
+        let target = t.encode(2, 0, 0);
+        let p: f64 = row.iter().filter(|&&(x, _)| x == target).map(|&(_, p)| p).sum();
+        assert!((p - (1.0 - 0.45) * (1.0 - 0.30)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn switch_period_is_amber() {
+        let t = TrafficSpec::standard(5);
+        let s = t.encode(3, 3, 0);
+        let row = t.prob_row(s, 1);
+        // nothing discharged: all targets have q1 >= 3 and phase flipped
+        for &(tgt, _) in &row {
+            let (q1, _, ph) = t.decode(tgt);
+            assert!(q1 >= 3);
+            assert_eq!(ph, 1);
+        }
+    }
+
+    #[test]
+    fn queues_saturate_at_capacity() {
+        let t = TrafficSpec::standard(3);
+        let s = t.encode(3, 3, 0);
+        for a in 0..2 {
+            for &(tgt, _) in &t.prob_row(s, a) {
+                let (q1, q2, _) = t.decode(tgt);
+                assert!(q1 <= 3 && q2 <= 3);
+            }
+        }
+    }
+
+    #[test]
+    fn controller_eventually_serves_both_queues() {
+        let spec = TrafficSpec::standard(8);
+        let mdp = spec.build_serial(0.95);
+        let r = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::ipi_gmres(),
+                atol: 1e-8,
+                ..Default::default()
+            },
+        );
+        assert!(r.converged);
+        // if approach 2 is congested and 1 empty while 1 is green, switch
+        let s = spec.encode(0, 8, 0);
+        assert_eq!(r.policy[s], 1, "should switch to serve congested queue");
+        // if the green queue is congested and the red empty, keep
+        let s2 = spec.encode(8, 0, 0);
+        assert_eq!(r.policy[s2], 0, "should keep serving congested queue");
+        // empty intersection has lower value than fully congested
+        assert!(
+            r.value[spec.encode(0, 0, 0)] < r.value[spec.encode(8, 8, 0)]
+        );
+    }
+}

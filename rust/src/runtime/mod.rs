@@ -1,0 +1,389 @@
+//! PJRT runtime: load AOT HLO artifacts and execute them from Rust.
+//!
+//! This is the bridge between Layer 3 (this crate) and the build-time
+//! Layers 1/2: `python/compile/aot.py` lowers the jax/Pallas graphs to HLO
+//! **text** under `artifacts/`; [`Engine`] compiles each artifact once on
+//! the PJRT CPU client and [`DenseBellman`] exposes typed entry points the
+//! solver and examples call. Python never runs at solve time.
+//!
+//! Artifact discovery goes through `artifacts/manifest.json` (written by
+//! aot.py), so the Rust side never hard-codes shapes.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact cache over one PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Json,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and read the manifest in `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("reading {} (run `make artifacts`)", manifest_path.display())
+        })?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifact file names listed in the manifest.
+    pub fn available(&self) -> Vec<String> {
+        self.manifest
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .map(|entries| {
+                entries
+                    .iter()
+                    .filter_map(|e| e.get("file").and_then(|f| f.as_str()).map(String::from))
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
+
+    /// Fused sweep count the `vi_*` artifacts were lowered with.
+    pub fn sweeps(&self) -> usize {
+        self.manifest
+            .get("sweeps")
+            .and_then(|s| s.as_f64())
+            .unwrap_or(10.0) as usize
+    }
+
+    /// Compile (once) and return the executable for an artifact file.
+    pub fn executable(&mut self, file: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(file) {
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("loading HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {file}"))?;
+            self.compiled.insert(file.to_string(), exe);
+        }
+        Ok(&self.compiled[file])
+    }
+
+    /// Execute an artifact on literal inputs; returns the flattened tuple
+    /// elements (aot.py lowers everything with `return_tuple=True`).
+    pub fn run(&mut self, file: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(file)?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Typed driver for the dense Bellman artifacts of one block shape.
+///
+/// The dense-block accelerator path (DESIGN.md §2): for dense transition
+/// blocks (e.g. SIS models, aggregated macro-states) the Bellman backup and
+/// fused k-sweep VI run as a single PJRT execution instead of the sparse
+/// CSR path.
+pub struct DenseBellman {
+    pub n_states: usize,
+    pub n_actions: usize,
+    pub sweeps: usize,
+    bellman_file: String,
+    vi_file: String,
+    residual_file: String,
+}
+
+impl DenseBellman {
+    /// Select the artifact set for an `(n, m)` dense block.
+    pub fn new(engine: &Engine, n_states: usize, n_actions: usize) -> Result<DenseBellman> {
+        let sweeps = engine.sweeps();
+        let bellman_file = format!("bellman_{n_states}_{n_actions}.hlo.txt");
+        let vi_file = format!("vi_{n_states}_{n_actions}_k{sweeps}.hlo.txt");
+        let residual_file = format!("residual_{n_states}_{n_actions}.hlo.txt");
+        let avail = engine.available();
+        for f in [&bellman_file, &vi_file, &residual_file] {
+            if !avail.iter().any(|a| a == f) {
+                return Err(anyhow!(
+                    "artifact {f} not in manifest; available: {avail:?} \
+                     (re-run `make artifacts` with --shapes {n_states}x{n_actions})"
+                ));
+            }
+        }
+        Ok(DenseBellman {
+            n_states,
+            n_actions,
+            sweeps,
+            bellman_file,
+            vi_file,
+            residual_file,
+        })
+    }
+
+    fn literals(&self, p: &[f32], g: &[f32], v: &[f32], gamma: f32) -> Result<Vec<xla::Literal>> {
+        let (n, m) = (self.n_states, self.n_actions);
+        anyhow::ensure!(p.len() == m * n * n, "P must be (A,S,S) flattened");
+        anyhow::ensure!(g.len() == m * n, "G must be (A,S) flattened");
+        anyhow::ensure!(v.len() == n, "V must be (S,)");
+        Ok(vec![
+            xla::Literal::vec1(p).reshape(&[m as i64, n as i64, n as i64])?,
+            xla::Literal::vec1(g).reshape(&[m as i64, n as i64])?,
+            xla::Literal::vec1(v),
+            xla::Literal::scalar(gamma),
+        ])
+    }
+
+    /// One Bellman backup: returns (TV, greedy policy).
+    pub fn bellman(
+        &self,
+        engine: &mut Engine,
+        p: &[f32],
+        g: &[f32],
+        v: &[f32],
+        gamma: f32,
+    ) -> Result<(Vec<f32>, Vec<i32>)> {
+        let inputs = self.literals(p, g, v, gamma)?;
+        let out = engine.run(&self.bellman_file, &inputs)?;
+        anyhow::ensure!(out.len() == 2, "bellman artifact must return (tv, pi)");
+        Ok((out[0].to_vec::<f32>()?, out[1].to_vec::<i32>()?))
+    }
+
+    /// `sweeps` fused value-iteration sweeps (one device round-trip).
+    pub fn vi_sweeps(
+        &self,
+        engine: &mut Engine,
+        p: &[f32],
+        g: &[f32],
+        v: &[f32],
+        gamma: f32,
+    ) -> Result<Vec<f32>> {
+        let inputs = self.literals(p, g, v, gamma)?;
+        let out = engine.run(&self.vi_file, &inputs)?;
+        anyhow::ensure!(out.len() == 1, "vi artifact must return (v,)");
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Backup + residual in one execution: (TV, policy, ‖TV − V‖∞).
+    pub fn residual(
+        &self,
+        engine: &mut Engine,
+        p: &[f32],
+        g: &[f32],
+        v: &[f32],
+        gamma: f32,
+    ) -> Result<(Vec<f32>, Vec<i32>, f32)> {
+        let inputs = self.literals(p, g, v, gamma)?;
+        let out = engine.run(&self.residual_file, &inputs)?;
+        anyhow::ensure!(out.len() == 3, "residual artifact must return 3 values");
+        let res = out[2].to_vec::<f32>()?;
+        Ok((out[0].to_vec::<f32>()?, out[1].to_vec::<i32>()?, res[0]))
+    }
+
+    /// Solve the dense block to tolerance by chaining fused VI sweeps;
+    /// returns (V, policy, sweep_count).
+    pub fn solve_vi(
+        &self,
+        engine: &mut Engine,
+        p: &[f32],
+        g: &[f32],
+        gamma: f32,
+        atol: f32,
+        max_sweeps: usize,
+    ) -> Result<(Vec<f32>, Vec<i32>, usize)> {
+        let mut v = vec![0.0f32; self.n_states];
+        let mut done = 0;
+        while done < max_sweeps {
+            v = self.vi_sweeps(engine, p, g, &v, gamma)?;
+            done += self.sweeps;
+            let (_, pi, res) = self.residual(engine, p, g, &v, gamma)?;
+            if res < atol {
+                return Ok((v, pi, done));
+            }
+        }
+        let (_, pi, _) = self.residual(engine, p, g, &v, gamma)?;
+        Ok((v, pi, done))
+    }
+}
+
+/// Reference implementation of the dense Bellman backup in Rust (f32),
+/// used to validate artifacts and as the native comparator in bench E6.
+pub fn bellman_dense_native(
+    n: usize,
+    m: usize,
+    p: &[f32],
+    g: &[f32],
+    v: &[f32],
+    gamma: f32,
+) -> (Vec<f32>, Vec<i32>) {
+    assert_eq!(p.len(), m * n * n);
+    assert_eq!(g.len(), m * n);
+    assert_eq!(v.len(), n);
+    let mut tv = vec![f32::INFINITY; n];
+    let mut pi = vec![0i32; n];
+    for a in 0..m {
+        for s in 0..n {
+            let row = &p[a * n * n + s * n..a * n * n + (s + 1) * n];
+            let mut exp = 0.0f32;
+            for (pj, vj) in row.iter().zip(v) {
+                exp += pj * vj;
+            }
+            let q = g[a * n + s] + gamma * exp;
+            if q < tv[s] {
+                tv[s] = q;
+                pi[s] = a as i32;
+            }
+        }
+    }
+    (tv, pi)
+}
+
+/// Random dense row-stochastic block (f32), deterministic in seed. Shared
+/// by the runtime tests, the dense-accelerator example and bench E6.
+pub fn random_block(seed: u64, n: usize, m: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    use crate::util::prng::Xoshiro256pp;
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut p = vec![0.0f32; m * n * n];
+    for a in 0..m {
+        for s in 0..n {
+            let row = &mut p[a * n * n + s * n..a * n * n + (s + 1) * n];
+            let mut sum = 0.0f32;
+            for x in row.iter_mut() {
+                *x = (rng.next_f64() as f32) + 1e-3;
+                sum += *x;
+            }
+            for x in row.iter_mut() {
+                *x /= sum;
+            }
+        }
+    }
+    let g: Vec<f32> = (0..m * n).map(|_| rng.next_f64() as f32).collect();
+    let v: Vec<f32> = (0..n).map(|_| (rng.next_f64() as f32) - 0.5).collect();
+    (p, g, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        // Tests are skipped when artifacts have not been built (CI stages
+        // that run cargo test before make artifacts).
+        Engine::load("artifacts").ok()
+    }
+
+    #[test]
+    fn native_bellman_minimizes() {
+        let (p, g, v) = random_block(1, 16, 3);
+        let (tv, pi) = bellman_dense_native(16, 3, &p, &g, &v, 0.9);
+        for s in 0..16 {
+            for a in 0..3 {
+                let row = &p[a * 256 + s * 16..a * 256 + (s + 1) * 16];
+                let exp: f32 = row.iter().zip(&v).map(|(x, y)| x * y).sum();
+                let q = g[a * 16 + s] + 0.9 * exp;
+                assert!(q >= tv[s] - 1e-5);
+            }
+            let a = pi[s] as usize;
+            let row = &p[a * 256 + s * 16..a * 256 + (s + 1) * 16];
+            let exp: f32 = row.iter().zip(&v).map(|(x, y)| x * y).sum();
+            assert!((g[a * 16 + s] + 0.9 * exp - tv[s]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn random_block_rows_stochastic() {
+        let (p, _, _) = random_block(3, 8, 2);
+        for a in 0..2 {
+            for s in 0..8 {
+                let sum: f32 = p[a * 64 + s * 8..a * 64 + (s + 1) * 8].iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_bellman_matches_native() {
+        let Some(mut eng) = engine() else { return };
+        let db = DenseBellman::new(&eng, 64, 4).unwrap();
+        let (p, g, v) = random_block(7, 64, 4);
+        let (tv, pi) = db.bellman(&mut eng, &p, &g, &v, 0.95).unwrap();
+        let (tv_n, pi_n) = bellman_dense_native(64, 4, &p, &g, &v, 0.95);
+        for (a, b) in tv.iter().zip(&tv_n) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        assert_eq!(pi, pi_n);
+    }
+
+    #[test]
+    fn pjrt_vi_sweeps_match_native_iteration() {
+        let Some(mut eng) = engine() else { return };
+        let db = DenseBellman::new(&eng, 64, 4).unwrap();
+        let (p, g, v) = random_block(9, 64, 4);
+        let gamma = 0.9f32;
+        let v1 = db.vi_sweeps(&mut eng, &p, &g, &v, gamma).unwrap();
+        let mut vn = v.clone();
+        for _ in 0..db.sweeps {
+            let (tv, _) = bellman_dense_native(64, 4, &p, &g, &vn, gamma);
+            vn = tv;
+        }
+        for (a, b) in v1.iter().zip(&vn) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pjrt_residual_consistent() {
+        let Some(mut eng) = engine() else { return };
+        let db = DenseBellman::new(&eng, 64, 4).unwrap();
+        let (p, g, v) = random_block(11, 64, 4);
+        let (tv, _, res) = db.residual(&mut eng, &p, &g, &v, 0.9).unwrap();
+        let manual = tv
+            .iter()
+            .zip(&v)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!((res - manual).abs() < 1e-5);
+    }
+
+    #[test]
+    fn pjrt_solve_vi_reaches_tolerance() {
+        let Some(mut eng) = engine() else { return };
+        let db = DenseBellman::new(&eng, 64, 4).unwrap();
+        let (p, g, _) = random_block(13, 64, 4);
+        let (v, pi, sweeps) = db.solve_vi(&mut eng, &p, &g, 0.8, 1e-4, 1_000).unwrap();
+        assert!(sweeps <= 1_000);
+        let (tv, pi2) = bellman_dense_native(64, 4, &p, &g, &v, 0.8);
+        let res = tv
+            .iter()
+            .zip(&v)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(res < 2e-4, "residual {res}");
+        assert_eq!(pi, pi2);
+    }
+
+    #[test]
+    fn missing_shape_rejected() {
+        let Some(eng) = engine() else { return };
+        assert!(DenseBellman::new(&eng, 999, 7).is_err());
+    }
+
+    #[test]
+    fn engine_lists_artifacts() {
+        let Some(eng) = engine() else { return };
+        let avail = eng.available();
+        assert!(avail.iter().any(|f| f.starts_with("bellman_64_4")));
+        assert!(!eng.platform().is_empty());
+    }
+}

@@ -1,0 +1,662 @@
+//! Inexact policy iteration — the outer solver family (the paper's core).
+//!
+//! madupite's central algorithm is iPI (Gargiani et al. 2024, Alg. 3):
+//! alternate a greedy policy improvement with an *inexact* policy
+//! evaluation whose accuracy is tied to the current Bellman residual
+//! through a forcing term α. The classical methods fall out as presets
+//! (paper claim C1):
+//!
+//! | preset        | evaluation step                                  |
+//! |---------------|--------------------------------------------------|
+//! | [`Method::Vi`]        | none — `V ← TV`                          |
+//! | [`Method::Mpi`]       | `k` fixed Richardson sweeps of `T_π`     |
+//! | [`Method::ExactPi`]   | direct dense solve of `(I−γP_π)V = g_π`  |
+//! | [`Method::Ipi`]       | Krylov solve to `‖res‖ ≤ α·‖TV − V‖∞`   |
+//!
+//! The solver is fully distributed: every step works on the rank-local
+//! blocks and communicates only through [`crate::comm`] collectives and the
+//! ghost plans baked into the matrices.
+
+use crate::comm::{Comm, World};
+use crate::ksp::precond::PcType;
+use crate::ksp::{self, KspType, LinOp, Precond, Tolerance};
+use crate::mdp::{DistMdp, Mdp};
+use crate::util::json::Json;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Outer solution method (madupite's `-mode` / `-ksp_type` combination).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Method {
+    /// Value iteration.
+    Vi,
+    /// Modified policy iteration with a fixed number of `T_π` sweeps.
+    Mpi { sweeps: usize },
+    /// Exact policy iteration (gathered dense LU — small MDPs only).
+    ExactPi,
+    /// Inexact policy iteration with the given inner solver.
+    Ipi { ksp: KspType, pc: PcType },
+}
+
+impl Method {
+    /// iPI with GMRES(30), no preconditioner — madupite's workhorse setup.
+    pub fn ipi_gmres() -> Method {
+        Method::Ipi {
+            ksp: KspType::Gmres { restart: 30 },
+            pc: PcType::None,
+        }
+    }
+
+    pub fn ipi_bicgstab() -> Method {
+        Method::Ipi {
+            ksp: KspType::BiCgStab,
+            pc: PcType::None,
+        }
+    }
+
+    pub fn ipi_tfqmr() -> Method {
+        Method::Ipi {
+            ksp: KspType::Tfqmr,
+            pc: PcType::None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Method::Vi => "vi".to_string(),
+            Method::Mpi { sweeps } => format!("mpi({sweeps})"),
+            Method::ExactPi => "pi-exact".to_string(),
+            Method::Ipi { ksp, pc } => {
+                if *pc == PcType::None {
+                    format!("ipi({})", ksp.name())
+                } else {
+                    format!("ipi({}+{})", ksp.name(), pc.name())
+                }
+            }
+        }
+    }
+}
+
+/// Solver options (madupite's options database, DESIGN §4).
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    pub method: Method,
+    /// Outer stop: ‖TV − V‖∞ < `atol`.
+    pub atol: f64,
+    /// Outer iteration cap (`-max_iter_pi`).
+    pub max_outer: usize,
+    /// Forcing term α: inner solve targets `α · ‖TV − V‖∞` (`-alpha`).
+    pub alpha: f64,
+    /// Eisenstat–Walker-style adaptive forcing: α_k scales with the square
+    /// of the outer residual contraction, clamped to [α, 0.1]. Spends inner
+    /// iterations only when the outer iteration is actually converging —
+    /// the "adaptive inexactness" extension of the iPI paper.
+    pub adaptive_forcing: bool,
+    /// Inner iteration cap (`-max_iter_ksp`).
+    pub max_inner: usize,
+    /// Initial value vector (defaults to zeros).
+    pub v0: Option<Vec<f64>>,
+    pub verbose: bool,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            method: Method::ipi_gmres(),
+            atol: 1e-8,
+            max_outer: 1_000,
+            alpha: 1e-4,
+            adaptive_forcing: false,
+            max_inner: 10_000,
+            v0: None,
+            verbose: false,
+        }
+    }
+}
+
+/// Per-outer-iteration record (the convergence trace the experiments plot).
+#[derive(Clone, Debug)]
+pub struct IterRecord {
+    pub outer: usize,
+    /// ‖TV − V‖∞ *before* this iteration's evaluation step.
+    pub residual: f64,
+    pub inner_iterations: usize,
+    pub spmvs: usize,
+    pub elapsed_s: f64,
+}
+
+/// Result of a solve (global quantities gathered on every rank).
+#[derive(Clone, Debug)]
+pub struct SolveResult {
+    pub value: Vec<f64>,
+    pub policy: Vec<usize>,
+    pub outer_iterations: usize,
+    /// Total operator applications across outer + inner work.
+    pub total_spmvs: usize,
+    pub total_inner_iterations: usize,
+    pub residual: f64,
+    pub converged: bool,
+    pub wall_time_s: f64,
+    pub trace: Vec<IterRecord>,
+    /// Total communication volume (bytes) during the solve.
+    pub comm_bytes: u64,
+    /// Discount factor of the solved MDP (for the certificate below).
+    pub gamma: f64,
+}
+
+impl SolveResult {
+    /// Certified sup-norm suboptimality bound from the contraction
+    /// argument: `‖V − V*‖∞ ≤ ‖TV − V‖∞ / (1 − γ)` (the returned iterate
+    /// is the *pre-backup* V, so the bound uses 1/(1−γ), not γ/(1−γ)).
+    pub fn error_bound(&self) -> f64 {
+        self.residual / (1.0 - self.gamma)
+    }
+}
+
+impl SolveResult {
+    /// JSON report (EXPERIMENTS.md tables are generated from these).
+    pub fn to_json(&self, label: &str) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(label)),
+            ("outer_iterations", Json::int(self.outer_iterations as i64)),
+            ("total_spmvs", Json::int(self.total_spmvs as i64)),
+            (
+                "total_inner_iterations",
+                Json::int(self.total_inner_iterations as i64),
+            ),
+            ("residual", Json::num(self.residual)),
+            ("converged", Json::Bool(self.converged)),
+            ("wall_time_s", Json::num(self.wall_time_s)),
+            ("comm_bytes", Json::int(self.comm_bytes as i64)),
+            ("error_bound", Json::num(self.error_bound())),
+            (
+                "residual_trace",
+                Json::nums(&self.trace.iter().map(|r| r.residual).collect::<Vec<_>>()),
+            ),
+        ])
+    }
+}
+
+/// Rank-local result (before gathering).
+pub struct LocalSolveResult {
+    pub value: Vec<f64>,
+    pub policy: Vec<usize>,
+    pub gamma: f64,
+    pub outer_iterations: usize,
+    pub total_spmvs: usize,
+    pub total_inner_iterations: usize,
+    pub residual: f64,
+    pub converged: bool,
+    pub wall_time_s: f64,
+    pub trace: Vec<IterRecord>,
+}
+
+/// Solve a distributed MDP in-world. Collective; every rank receives its
+/// local blocks of V* and π*.
+pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolveResult {
+    let start = Instant::now();
+    let nl = mdp.local_states();
+    let part = mdp.partition();
+    let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+
+    let mut v: Vec<f64> = match &opts.v0 {
+        Some(v0) => {
+            assert_eq!(v0.len(), mdp.n_states(), "v0 must be the global vector");
+            v0[lo..hi].to_vec()
+        }
+        None => vec![0.0; nl],
+    };
+    let mut tv = vec![0.0; nl];
+    let mut policy = vec![0usize; nl];
+    let mut buf = mdp.make_buffer();
+    let mut q_scratch = Vec::new();
+
+    let mut trace: Vec<IterRecord> = Vec::new();
+    let mut total_spmvs = 0usize;
+    let mut total_inner = 0usize;
+    let mut residual = f64::INFINITY;
+    let mut converged = false;
+    // Policy-system cache: rebuilding P_π (ghost plan + CSR assembly) is a
+    // large fixed cost per outer iteration; when the greedy policy did not
+    // change we reuse the previous system (common near convergence and in
+    // wavefront-style problems like mazes).
+    let mut prev_policy: Vec<usize> = Vec::new();
+    let mut cached_system: Option<(crate::linalg::dist::DistCsr, Vec<f64>)> = None;
+    let mut prev_residual = f64::INFINITY;
+
+    for outer in 0..opts.max_outer {
+        // -- policy improvement + residual ---------------------------------
+        residual = mdp.bellman_backup(comm, &v, &mut tv, &mut policy, &mut buf, &mut q_scratch);
+        total_spmvs += 1;
+        if opts.verbose && comm.is_root() {
+            eprintln!(
+                "[{}] outer {:4}  residual {:.3e}",
+                opts.method.name(),
+                outer,
+                residual
+            );
+        }
+        if residual < opts.atol {
+            converged = true;
+            trace.push(IterRecord {
+                outer,
+                residual,
+                inner_iterations: 0,
+                spmvs: 1,
+                elapsed_s: start.elapsed().as_secs_f64(),
+            });
+            break;
+        }
+
+        // -- (inexact) policy evaluation ------------------------------------
+        // Refresh the cached policy system when the greedy policy changed
+        // on any rank (collective decision so every rank rebuilds together).
+        if !matches!(opts.method, Method::Vi) {
+            let changed_local = prev_policy != policy;
+            let changed = comm.max(if changed_local { 1.0 } else { 0.0 }) > 0.0;
+            if changed || cached_system.is_none() {
+                cached_system = Some(mdp.policy_system(comm, &policy));
+                prev_policy.clear();
+                prev_policy.extend_from_slice(&policy);
+            }
+        }
+        let (inner_iters, inner_spmvs) = match &opts.method {
+            Method::Vi => {
+                v.copy_from_slice(&tv);
+                (0, 0)
+            }
+            Method::Mpi { sweeps } => {
+                let (p_pi, g_pi) = cached_system.as_ref().unwrap();
+                let a = LinOp::new(p_pi, mdp.gamma());
+                // start the sweeps from TV (the Puterman mPI definition)
+                v.copy_from_slice(&tv);
+                let stats = ksp::richardson::fixed_sweeps(comm, &a, g_pi, &mut v, *sweeps);
+                (stats.iterations, stats.spmvs)
+            }
+            Method::ExactPi => {
+                let (p_pi, g_pi) = cached_system.as_ref().unwrap();
+                let a = LinOp::new(p_pi, mdp.gamma());
+                let stats = ksp::direct::solve(comm, &a, g_pi, &mut v);
+                (stats.iterations, stats.spmvs)
+            }
+            Method::Ipi { ksp: ktype, pc } => {
+                let (p_pi, g_pi) = cached_system.as_ref().unwrap();
+                let a = LinOp::new(p_pi, mdp.gamma());
+                let precond = Precond::build(*pc, &a);
+                // Eisenstat–Walker choice 2 (safeguarded): contraction-
+                // driven forcing, floored by the configured α.
+                let alpha_k = if opts.adaptive_forcing && prev_residual.is_finite() {
+                    let ratio = (residual / prev_residual).powi(2);
+                    ratio.clamp(opts.alpha, 0.1)
+                } else {
+                    opts.alpha
+                };
+                let tol = Tolerance {
+                    atol: alpha_k * residual,
+                    rtol: 0.0,
+                    max_iters: opts.max_inner,
+                };
+                // warm start from TV (one backup ahead of V)
+                v.copy_from_slice(&tv);
+                let stats = ksp::solve(ktype, &precond, comm, &a, g_pi, &mut v, &tol);
+                (stats.iterations, stats.spmvs)
+            }
+        };
+        total_spmvs += inner_spmvs;
+        total_inner += inner_iters;
+        prev_residual = residual;
+        trace.push(IterRecord {
+            outer,
+            residual,
+            inner_iterations: inner_iters,
+            spmvs: inner_spmvs + 1,
+            elapsed_s: start.elapsed().as_secs_f64(),
+        });
+    }
+
+    // final residual check if we ran out of iterations without breaking
+    if !converged {
+        residual =
+            mdp.bellman_backup(comm, &v, &mut tv, &mut policy, &mut buf, &mut q_scratch);
+        total_spmvs += 1;
+        converged = residual < opts.atol;
+    }
+
+    LocalSolveResult {
+        value: v,
+        policy,
+        gamma: mdp.gamma(),
+        outer_iterations: trace.len(),
+        total_spmvs,
+        total_inner_iterations: total_inner,
+        residual,
+        converged,
+        wall_time_s: start.elapsed().as_secs_f64(),
+        trace,
+    }
+}
+
+/// Gather a [`LocalSolveResult`] into the global [`SolveResult`] (every rank
+/// returns the same global object). Collective.
+pub fn gather_result(comm: &Comm, local: LocalSolveResult) -> SolveResult {
+    let value = comm.allgather_f64s(&local.value);
+    let policy_f: Vec<f64> = local.policy.iter().map(|&a| a as f64).collect();
+    let policy: Vec<usize> = comm
+        .allgather_f64s(&policy_f)
+        .into_iter()
+        .map(|a| a as usize)
+        .collect();
+    let comm_bytes = comm.stats().total_bytes();
+    SolveResult {
+        value,
+        policy,
+        outer_iterations: local.outer_iterations,
+        total_spmvs: local.total_spmvs,
+        total_inner_iterations: local.total_inner_iterations,
+        residual: local.residual,
+        converged: local.converged,
+        wall_time_s: local.wall_time_s,
+        trace: local.trace,
+        comm_bytes,
+        gamma: local.gamma,
+    }
+}
+
+/// Solve a serial [`Mdp`] on a world of `ranks` threads and return the
+/// gathered global result (convenience driver used by examples/benches).
+pub fn solve_world(mdp: Arc<Mdp>, ranks: usize, opts: &SolveOptions) -> SolveResult {
+    let opts = opts.clone();
+    let mut results = World::run(ranks, move |comm| {
+        let d = DistMdp::from_serial(&comm, &mdp);
+        let local = solve_dist(&comm, &d, &opts);
+        gather_result(&comm, local)
+    });
+    results.swap_remove(0)
+}
+
+/// Fully serial convenience wrapper (world of one rank).
+pub fn solve_serial(mdp: &Mdp, opts: &SolveOptions) -> SolveResult {
+    solve_world(Arc::new(mdp.clone()), 1, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mdp::fixtures::{random_mdp, two_state};
+    use crate::util::prop;
+
+    fn methods_under_test() -> Vec<Method> {
+        vec![
+            Method::Vi,
+            Method::Mpi { sweeps: 10 },
+            Method::ExactPi,
+            Method::ipi_gmres(),
+            Method::ipi_bicgstab(),
+            Method::ipi_tfqmr(),
+            Method::Ipi {
+                ksp: KspType::Richardson { omega: 1.0 },
+                pc: PcType::Jacobi,
+            },
+        ]
+    }
+
+    #[test]
+    fn all_methods_solve_two_state() {
+        // analytic: γ=0.5, c=1.5 → V* = [1.5, 0], π* = [1, ·]
+        for method in methods_under_test() {
+            let mdp = two_state(0.5, 1.5);
+            let opts = SolveOptions {
+                method: method.clone(),
+                atol: 1e-10,
+                ..Default::default()
+            };
+            let r = solve_serial(&mdp, &opts);
+            assert!(r.converged, "{} did not converge", method.name());
+            prop::close_slices(&r.value, &[1.5, 0.0], 1e-8)
+                .unwrap_or_else(|e| panic!("{}: {e}", method.name()));
+            assert_eq!(r.policy[0], 1, "{}", method.name());
+        }
+    }
+
+    #[test]
+    fn all_methods_agree_on_random_mdp() {
+        let mdp = random_mdp(21, 40, 3, 0.95);
+        let mut reference: Option<Vec<f64>> = None;
+        for method in methods_under_test() {
+            let opts = SolveOptions {
+                method: method.clone(),
+                atol: 1e-9,
+                ..Default::default()
+            };
+            let r = solve_serial(&mdp, &opts);
+            assert!(r.converged, "{} did not converge", method.name());
+            match &reference {
+                None => reference = Some(r.value),
+                Some(v) => prop::close_slices(v, &r.value, 1e-6)
+                    .unwrap_or_else(|e| panic!("{} disagrees: {e}", method.name())),
+            }
+        }
+    }
+
+    #[test]
+    fn distributed_equals_serial() {
+        let mdp = Arc::new(random_mdp(33, 50, 4, 0.97));
+        let opts = SolveOptions {
+            method: Method::ipi_gmres(),
+            atol: 1e-9,
+            ..Default::default()
+        };
+        let serial = solve_world(Arc::clone(&mdp), 1, &opts);
+        for ranks in [2usize, 3, 4] {
+            let dist = solve_world(Arc::clone(&mdp), ranks, &opts);
+            prop::close_slices(&serial.value, &dist.value, 1e-7)
+                .unwrap_or_else(|e| panic!("ranks={ranks}: {e}"));
+            assert!(dist.converged);
+        }
+    }
+
+    #[test]
+    fn solution_is_bellman_fixed_point() {
+        let mdp = random_mdp(9, 30, 3, 0.9);
+        let r = solve_serial(
+            &mdp,
+            &SolveOptions {
+                atol: 1e-10,
+                ..Default::default()
+            },
+        );
+        assert!(mdp.bellman_residual(&r.value) < 1e-9);
+        // greedy policy of V* must reproduce the returned policy
+        let (_, pol) = mdp.bellman(&r.value);
+        assert_eq!(pol, r.policy);
+    }
+
+    #[test]
+    fn residual_trace_decreases_overall() {
+        let mdp = random_mdp(41, 60, 3, 0.99);
+        let r = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::ipi_gmres(),
+                atol: 1e-9,
+                ..Default::default()
+            },
+        );
+        assert!(r.trace.len() >= 2);
+        let first = r.trace.first().unwrap().residual;
+        let last = r.trace.last().unwrap().residual;
+        assert!(last < first * 1e-3, "first={first} last={last}");
+    }
+
+    #[test]
+    fn vi_needs_more_iterations_than_ipi_at_high_gamma() {
+        let mdp = random_mdp(55, 50, 3, 0.999);
+        let vi = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::Vi,
+                atol: 1e-6,
+                max_outer: 100_000,
+                ..Default::default()
+            },
+        );
+        let ipi = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::ipi_gmres(),
+                atol: 1e-6,
+                ..Default::default()
+            },
+        );
+        assert!(vi.converged && ipi.converged);
+        assert!(
+            ipi.outer_iterations * 10 < vi.outer_iterations,
+            "vi={} ipi={}",
+            vi.outer_iterations,
+            ipi.outer_iterations
+        );
+    }
+
+    #[test]
+    fn max_outer_respected_when_tolerance_unreachable() {
+        let mdp = random_mdp(3, 20, 2, 0.99);
+        let r = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::Vi,
+                atol: 1e-300,
+                max_outer: 5,
+                ..Default::default()
+            },
+        );
+        assert_eq!(r.outer_iterations, 5);
+        assert!(!r.converged);
+    }
+
+    #[test]
+    fn warm_start_v0_accelerates() {
+        let mdp = random_mdp(15, 30, 2, 0.95);
+        let opts = SolveOptions {
+            method: Method::Vi,
+            atol: 1e-8,
+            ..Default::default()
+        };
+        let cold = solve_serial(&mdp, &opts);
+        let warm = solve_serial(
+            &mdp,
+            &SolveOptions {
+                v0: Some(cold.value.clone()),
+                ..opts
+            },
+        );
+        assert!(warm.outer_iterations <= 1);
+    }
+
+    #[test]
+    fn adaptive_forcing_converges_and_saves_inner_work() {
+        // wavefront-style workload where fixed tight forcing wastes inner
+        // iterations: adaptive must converge to the same V* with fewer spmvs
+        let mdp = crate::models::gridworld::GridSpec::maze(40, 40, 3);
+        use crate::models::ModelGenerator;
+        let mdp = mdp.build_serial(0.99);
+        let fixed = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::ipi_gmres(),
+                atol: 1e-8,
+                alpha: 1e-6,
+                max_outer: 100_000,
+                ..Default::default()
+            },
+        );
+        let adaptive = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::ipi_gmres(),
+                atol: 1e-8,
+                alpha: 1e-6,
+                adaptive_forcing: true,
+                max_outer: 100_000,
+                ..Default::default()
+            },
+        );
+        assert!(fixed.converged && adaptive.converged);
+        prop::close_slices(&fixed.value, &adaptive.value, 1e-6).unwrap();
+        assert!(
+            adaptive.total_spmvs < fixed.total_spmvs,
+            "adaptive {} vs fixed {}",
+            adaptive.total_spmvs,
+            fixed.total_spmvs
+        );
+    }
+
+    #[test]
+    fn error_bound_certificate_holds() {
+        // compare the certified bound against the true distance to V*
+        let mdp = random_mdp(3, 25, 3, 0.9);
+        let exact = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::ExactPi,
+                atol: 1e-12,
+                ..Default::default()
+            },
+        );
+        let coarse = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::Vi,
+                atol: 1e-3,
+                ..Default::default()
+            },
+        );
+        let true_err = coarse
+            .value
+            .iter()
+            .zip(&exact.value)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(
+            true_err <= coarse.error_bound() + 1e-12,
+            "true {} > bound {}",
+            true_err,
+            coarse.error_bound()
+        );
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mdp = two_state(0.5, 1.5);
+        let r = solve_serial(&mdp, &SolveOptions::default());
+        let j = r.to_json("test");
+        assert_eq!(j.get("label").unwrap().as_str(), Some("test"));
+        assert!(j.get("residual_trace").unwrap().as_arr().unwrap().len() >= 1);
+        assert_eq!(j.get("converged").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn alpha_tradeoff_more_outer_fewer_inner() {
+        // loose forcing term → more outer iterations, fewer inner per outer
+        let mdp = random_mdp(61, 50, 3, 0.99);
+        let tight = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::ipi_gmres(),
+                alpha: 1e-8,
+                atol: 1e-8,
+                ..Default::default()
+            },
+        );
+        let loose = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::ipi_gmres(),
+                alpha: 0.5,
+                atol: 1e-8,
+                ..Default::default()
+            },
+        );
+        assert!(tight.converged && loose.converged);
+        assert!(loose.outer_iterations >= tight.outer_iterations);
+    }
+}

@@ -1,0 +1,299 @@
+//! Options database + CLI argument parsing (madupite/PETSc style).
+//!
+//! madupite inherits PETSc's options-database idiom: every solver knob is a
+//! `-key value` pair that can come from the command line or an options file
+//! (`-ksp_type gmres -alpha 1e-4 -max_iter_pi 200 ...`). With no `clap`
+//! available offline, this module implements that database directly — which
+//! is in fact closer to the original system's UX than a derive-macro CLI.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parse/lookup error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OptError(pub String);
+
+impl fmt::Display for OptError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "option error: {}", self.0)
+    }
+}
+impl std::error::Error for OptError {}
+
+/// An ordered options database: `-key value` pairs plus positional args.
+///
+/// Flags (keys with no value, e.g. `-verbose`) store an empty string.
+#[derive(Debug, Clone, Default)]
+pub struct Options {
+    map: BTreeMap<String, String>,
+    positional: Vec<String>,
+    /// Keys that were queried at least once — `report_unused` uses this to
+    /// flag typos, mirroring PETSc's `-options_left`.
+    used: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Options {
+    /// Parse from an argv-style iterator (excluding the program name).
+    ///
+    /// Grammar: tokens starting with `-` followed by a non-numeric char are
+    /// keys; a key consumes the next token as its value unless that token is
+    /// itself a key (then the key is a boolean flag). Other tokens are
+    /// positional. `--` passes everything after it as positional.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Options {
+        let mut opts = Options::default();
+        let mut it = args.into_iter().peekable();
+        let mut raw = false;
+        while let Some(tok) = it.next() {
+            if raw {
+                opts.positional.push(tok);
+                continue;
+            }
+            if tok == "--" {
+                raw = true;
+            } else if is_key(&tok) {
+                let key = tok.trim_start_matches('-').to_string();
+                match it.peek() {
+                    Some(next) if !is_key(next) => {
+                        let v = it.next().unwrap();
+                        opts.map.insert(key, v);
+                    }
+                    _ => {
+                        opts.map.insert(key, String::new());
+                    }
+                }
+            } else {
+                opts.positional.push(tok);
+            }
+        }
+        opts
+    }
+
+    /// Parse from process args (skipping argv[0]).
+    pub fn from_env() -> Options {
+        Options::parse(std::env::args().skip(1))
+    }
+
+    /// Parse an options file: `key value` or `-key value` per line,
+    /// `#` comments. Later CLI options override file options via `merge`.
+    pub fn parse_file(text: &str) -> Options {
+        let mut tokens = Vec::new();
+        for line in text.lines() {
+            let line = line.split('#').next().unwrap_or("");
+            for tok in line.split_whitespace() {
+                let mut t = tok.to_string();
+                if !t.starts_with('-') && tokens.len() % 2 == 0 {
+                    // allow bare `key value` lines
+                    t = format!("-{t}");
+                }
+                tokens.push(t);
+            }
+        }
+        Options::parse(tokens)
+    }
+
+    /// Overlay `other` on top of `self` (other wins).
+    pub fn merge(mut self, other: Options) -> Options {
+        for (k, v) in other.map {
+            self.map.insert(k, v);
+        }
+        self.positional.extend(other.positional);
+        self
+    }
+
+    /// Insert programmatically.
+    pub fn set(&mut self, key: &str, value: impl Into<String>) {
+        self.map.insert(key.to_string(), value.into());
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.touch(key);
+        self.map.contains_key(key)
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.touch(key);
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).map(|s| s.to_string()).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, OptError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .map_err(|_| OptError(format!("-{key}: expected float, got '{s}'"))),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, OptError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => parse_usize_with_suffix(s)
+                .ok_or_else(|| OptError(format!("-{key}: expected integer, got '{s}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, OptError> {
+        Ok(self.get_usize(key, default as usize)? as u64)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool, OptError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("") | Some("true") | Some("1") | Some("yes") | Some("on") => Ok(true),
+            Some("false") | Some("0") | Some("no") | Some("off") => Ok(false),
+            Some(s) => Err(OptError(format!("-{key}: expected bool, got '{s}'"))),
+        }
+    }
+
+    /// Enumerated choice with validation.
+    pub fn get_choice(&self, key: &str, choices: &[&str], default: &str) -> Result<String, OptError> {
+        let v = self.get_str(key, default);
+        if choices.contains(&v.as_str()) {
+            Ok(v)
+        } else {
+            Err(OptError(format!(
+                "-{key}: '{v}' is not one of {choices:?}"
+            )))
+        }
+    }
+
+    fn touch(&self, key: &str) {
+        self.used.borrow_mut().insert(key.to_string());
+    }
+
+    /// Keys present but never queried (PETSc `-options_left` equivalent).
+    pub fn unused_keys(&self) -> Vec<String> {
+        let used = self.used.borrow();
+        self.map
+            .keys()
+            .filter(|k| !used.contains(*k))
+            .cloned()
+            .collect()
+    }
+}
+
+fn is_key(tok: &str) -> bool {
+    let mut ch = tok.chars();
+    match (ch.next(), ch.next()) {
+        (Some('-'), Some(c)) => !(c.is_ascii_digit() || c == '.'),
+        _ => false,
+    }
+}
+
+/// Accept `4k`, `2m`, `1g` suffixes (powers of 10^3) for sizes like state
+/// counts: `-num_states 1m`.
+fn parse_usize_with_suffix(s: &str) -> Option<usize> {
+    if let Ok(v) = s.parse::<usize>() {
+        return Some(v);
+    }
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1_000),
+        'm' | 'M' => (&s[..s.len() - 1], 1_000_000),
+        'g' | 'G' => (&s[..s.len() - 1], 1_000_000_000),
+        _ => return None,
+    };
+    let base: f64 = num.parse().ok()?;
+    Some((base * mult as f64) as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Options {
+        Options::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_pairs() {
+        let o = parse(&["-ksp_type", "gmres", "-alpha", "1e-4"]);
+        assert_eq!(o.get("ksp_type"), Some("gmres"));
+        assert_eq!(o.get_f64("alpha", 0.0).unwrap(), 1e-4);
+    }
+
+    #[test]
+    fn flags_without_value() {
+        let o = parse(&["-verbose", "-ksp_type", "gmres"]);
+        assert!(o.has("verbose"));
+        assert!(o.get_bool("verbose", false).unwrap());
+        assert_eq!(o.get("ksp_type"), Some("gmres"));
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_keys() {
+        let o = parse(&["-shift", "-0.5", "-n", "-3"]);
+        assert_eq!(o.get_f64("shift", 0.0).unwrap(), -0.5);
+        assert_eq!(o.get("n"), Some("-3"));
+    }
+
+    #[test]
+    fn positional_and_double_dash() {
+        let o = parse(&["solve", "-tol", "1e-8", "--", "-raw"]);
+        assert_eq!(o.positional(), &["solve".to_string(), "-raw".to_string()]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let o = parse(&["-x", "abc"]);
+        assert_eq!(o.get_f64("missing", 2.5).unwrap(), 2.5);
+        assert!(o.get_f64("x", 0.0).is_err());
+        assert!(o.get_choice("x", &["a", "b"], "a").is_err());
+    }
+
+    #[test]
+    fn choice_validation() {
+        let o = parse(&["-ksp_type", "tfqmr"]);
+        let v = o
+            .get_choice("ksp_type", &["richardson", "gmres", "tfqmr"], "gmres")
+            .unwrap();
+        assert_eq!(v, "tfqmr");
+        assert_eq!(
+            o.get_choice("missing", &["a", "b"], "b").unwrap(),
+            "b".to_string()
+        );
+    }
+
+    #[test]
+    fn size_suffixes() {
+        let o = parse(&["-num_states", "2m", "-rows", "4k", "-big", "1g"]);
+        assert_eq!(o.get_usize("num_states", 0).unwrap(), 2_000_000);
+        assert_eq!(o.get_usize("rows", 0).unwrap(), 4_000);
+        assert_eq!(o.get_usize("big", 0).unwrap(), 1_000_000_000);
+    }
+
+    #[test]
+    fn file_parsing_and_merge() {
+        let file = Options::parse_file("ksp_type gmres # comment\n-alpha 1e-3\n");
+        assert_eq!(file.get("ksp_type"), Some("gmres"));
+        let cli = parse(&["-alpha", "1e-6"]);
+        let merged = file.merge(cli);
+        assert_eq!(merged.get_f64("alpha", 0.0).unwrap(), 1e-6);
+        assert_eq!(merged.get("ksp_type"), Some("gmres"));
+    }
+
+    #[test]
+    fn unused_keys_reported() {
+        let o = parse(&["-used", "1", "-typo_key", "2"]);
+        let _ = o.get("used");
+        assert_eq!(o.unused_keys(), vec!["typo_key".to_string()]);
+    }
+
+    #[test]
+    fn bool_parsing_variants() {
+        let o = parse(&["-a", "true", "-b", "0", "-c", "yes", "-d", "off"]);
+        assert!(o.get_bool("a", false).unwrap());
+        assert!(!o.get_bool("b", true).unwrap());
+        assert!(o.get_bool("c", false).unwrap());
+        assert!(!o.get_bool("d", true).unwrap());
+        assert!(o.get_bool("missing", true).unwrap());
+    }
+}

@@ -1,0 +1,367 @@
+//! Micro/macro benchmark harness (criterion substitute).
+//!
+//! The offline build environment has no `criterion`, so the bench targets in
+//! `rust/benches/` use this small harness instead: warmup, fixed-count or
+//! time-budgeted repetition, median/mean/stddev/min, aligned-table printing,
+//! and JSON export so EXPERIMENTS.md tables can be regenerated verbatim.
+
+use crate::util::json::Json;
+use std::time::{Duration, Instant};
+
+/// Statistics for one measured case.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    /// Per-iteration wall times, seconds.
+    pub samples: Vec<f64>,
+    /// Optional scalar metrics attached by the workload (e.g. iterations,
+    /// SpMV count, comm bytes) — reported alongside the timing columns.
+    pub metrics: Vec<(String, f64)>,
+}
+
+impl Stats {
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.is_empty() {
+            return f64::NAN;
+        }
+        let n = s.len();
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(self.name.clone())),
+            ("median_s", Json::num(self.median())),
+            ("mean_s", Json::num(self.mean())),
+            ("stddev_s", Json::num(self.stddev())),
+            ("min_s", Json::num(self.min())),
+            ("samples", Json::int(self.samples.len() as i64)),
+        ];
+        for (k, v) in &self.metrics {
+            pairs.push((k.as_str(), Json::num(*v)));
+        }
+        // keys borrowed from metrics — rebuild with owned keys
+        Json::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+}
+
+/// A benchmark suite: collects cases, prints a table, writes JSON.
+pub struct Suite {
+    pub title: String,
+    pub results: Vec<Stats>,
+    /// Max samples per case.
+    pub max_samples: usize,
+    /// Time budget per case (stop sampling when exceeded).
+    pub budget: Duration,
+    /// Warmup runs per case.
+    pub warmup: usize,
+}
+
+impl Suite {
+    pub fn new(title: &str) -> Self {
+        // Environment knobs let CI shrink the suites:
+        // MADUPITE_BENCH_SAMPLES / MADUPITE_BENCH_BUDGET_MS.
+        let max_samples = std::env::var("MADUPITE_BENCH_SAMPLES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(5);
+        let budget_ms = std::env::var("MADUPITE_BENCH_BUDGET_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(10_000u64);
+        Suite {
+            title: title.to_string(),
+            results: Vec::new(),
+            max_samples,
+            budget: Duration::from_millis(budget_ms),
+            warmup: 1,
+        }
+    }
+
+    /// Measure `f` repeatedly. `f` returns optional metrics recorded with the
+    /// case (the metrics of the last run win).
+    pub fn case<F>(&mut self, name: &str, mut f: F) -> &Stats
+    where
+        F: FnMut() -> Vec<(String, f64)>,
+    {
+        for _ in 0..self.warmup {
+            let _ = f();
+        }
+        let mut samples = Vec::new();
+        let mut metrics = Vec::new();
+        let start = Instant::now();
+        for _ in 0..self.max_samples {
+            let t0 = Instant::now();
+            metrics = f();
+            samples.push(t0.elapsed().as_secs_f64());
+            if start.elapsed() > self.budget {
+                break;
+            }
+        }
+        self.results.push(Stats {
+            name: name.to_string(),
+            samples,
+            metrics,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Render an aligned text table of all cases.
+    pub fn table(&self) -> String {
+        let mut metric_keys: Vec<String> = Vec::new();
+        for r in &self.results {
+            for (k, _) in &r.metrics {
+                if !metric_keys.contains(k) {
+                    metric_keys.push(k.clone());
+                }
+            }
+        }
+        let mut header = vec![
+            "case".to_string(),
+            "median".to_string(),
+            "mean".to_string(),
+            "stddev".to_string(),
+            "min".to_string(),
+            "n".to_string(),
+        ];
+        header.extend(metric_keys.iter().cloned());
+        let mut rows = vec![header];
+        for r in &self.results {
+            let mut row = vec![
+                r.name.clone(),
+                fmt_time(r.median()),
+                fmt_time(r.mean()),
+                fmt_time(r.stddev()),
+                fmt_time(r.min()),
+                format!("{}", r.samples.len()),
+            ];
+            for k in &metric_keys {
+                let v = r.metrics.iter().find(|(mk, _)| mk == k).map(|(_, v)| *v);
+                row.push(v.map(fmt_metric).unwrap_or_default());
+            }
+            rows.push(row);
+        }
+        render_table(&self.title, &rows)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "cases",
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Print the table and write `target/bench-json/<slug>.json`.
+    pub fn finish(&self) {
+        println!("{}", self.table());
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '-' })
+            .collect();
+        let dir = std::path::Path::new("target/bench-json");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(format!("{slug}.json"));
+            let _ = std::fs::write(&path, self.to_json().to_string_pretty());
+            println!("[benchkit] wrote {}", path.display());
+        }
+    }
+}
+
+/// Human-scaled time formatting.
+pub fn fmt_time(s: f64) -> String {
+    if !s.is_finite() {
+        return "-".to_string();
+    }
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+fn fmt_metric(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        let i = v as i64;
+        if i.abs() >= 10_000 {
+            // thousands separators for big counters
+            let mut s = String::new();
+            let digits = i.abs().to_string();
+            for (idx, c) in digits.chars().enumerate() {
+                if idx > 0 && (digits.len() - idx) % 3 == 0 {
+                    s.push('_');
+                }
+                s.push(c);
+            }
+            if i < 0 {
+                format!("-{s}")
+            } else {
+                s
+            }
+        } else {
+            format!("{i}")
+        }
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// Render rows as an aligned table with a title rule.
+pub fn render_table(title: &str, rows: &[Vec<String>]) -> String {
+    let cols = rows.iter().map(|r| r.len()).max().unwrap_or(0);
+    let mut widths = vec![0usize; cols];
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.chars().count());
+        }
+    }
+    let total: usize = widths.iter().sum::<usize>() + 3 * cols.saturating_sub(1);
+    let mut out = String::new();
+    out.push_str(&format!("\n== {title} ==\n"));
+    for (ri, row) in rows.iter().enumerate() {
+        for (i, cell) in row.iter().enumerate() {
+            let pad = widths[i] - cell.chars().count();
+            out.push_str(cell);
+            for _ in 0..pad {
+                out.push(' ');
+            }
+            if i + 1 < cols {
+                out.push_str(" | ");
+            }
+        }
+        out.push('\n');
+        if ri == 0 {
+            for _ in 0..total {
+                out.push('-');
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_median_mean() {
+        let s = Stats {
+            name: "x".into(),
+            samples: vec![3.0, 1.0, 2.0],
+            metrics: vec![],
+        };
+        assert_eq!(s.median(), 2.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+    }
+
+    #[test]
+    fn stats_median_even() {
+        let s = Stats {
+            name: "x".into(),
+            samples: vec![1.0, 2.0, 3.0, 10.0],
+            metrics: vec![],
+        };
+        assert_eq!(s.median(), 2.5);
+    }
+
+    #[test]
+    fn stddev_zero_for_single() {
+        let s = Stats {
+            name: "x".into(),
+            samples: vec![5.0],
+            metrics: vec![],
+        };
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn suite_runs_cases() {
+        std::env::set_var("MADUPITE_BENCH_SAMPLES", "3");
+        let mut suite = Suite::new("test suite");
+        suite.case("noop", || vec![("iters".to_string(), 7.0)]);
+        assert_eq!(suite.results.len(), 1);
+        assert!(suite.results[0].samples.len() >= 1);
+        assert_eq!(suite.results[0].metrics[0].1, 7.0);
+        let table = suite.table();
+        assert!(table.contains("noop"));
+        assert!(table.contains("iters"));
+        std::env::remove_var("MADUPITE_BENCH_SAMPLES");
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert_eq!(fmt_time(2.5), "2.500 s");
+        assert_eq!(fmt_time(0.0025), "2.500 ms");
+        assert_eq!(fmt_time(2.5e-6), "2.500 µs");
+        assert_eq!(fmt_time(5e-9), "5 ns");
+    }
+
+    #[test]
+    fn metric_thousands_separator() {
+        assert_eq!(fmt_metric(1234567.0), "1_234_567");
+        assert_eq!(fmt_metric(123.0), "123");
+        assert_eq!(fmt_metric(0.5), "0.5000");
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let s = Stats {
+            name: "case".into(),
+            samples: vec![1.0, 2.0],
+            metrics: vec![("spmvs".to_string(), 10.0)],
+        };
+        let j = s.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("case"));
+        assert_eq!(j.get("spmvs").unwrap().as_f64(), Some(10.0));
+    }
+
+    #[test]
+    fn table_alignment_no_panic_ragged() {
+        let rows = vec![
+            vec!["a".to_string(), "b".to_string()],
+            vec!["long-cell".to_string()],
+        ];
+        let t = render_table("t", &rows);
+        assert!(t.contains("long-cell"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Self-contained utility substrates.
+//!
+//! The offline build environment ships only the `xla` crate closure, so the
+//! usual ecosystem crates (`rand`, `serde_json`, `clap`, `criterion`,
+//! `proptest`) are reimplemented here at the scale this project needs.
+
+pub mod args;
+pub mod benchkit;
+pub mod json;
+pub mod prng;
+pub mod prop;

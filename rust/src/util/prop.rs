@@ -1,0 +1,119 @@
+//! Mini property-based testing kit (proptest substitute).
+//!
+//! Offline build → no `proptest`/`quickcheck`. This module provides the
+//! subset the test suite needs: seeded generators built on
+//! [`crate::util::prng::Xoshiro256pp`], a `forall` driver that runs N cases
+//! and reports the failing seed + case index (re-run with
+//! `MADUPITE_PROP_SEED=<seed>` to reproduce), and helpers for the domain
+//! types (probability vectors, sparse rows, random MDP shapes).
+//!
+//! No shrinking: cases are kept small by construction instead, which in
+//! practice localizes failures well enough for this codebase.
+
+use crate::util::prng::Xoshiro256pp;
+
+/// Number of cases per property (override with MADUPITE_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("MADUPITE_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("MADUPITE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop` for `default_cases()` seeded cases. Each case gets its own
+/// deterministic RNG. Panics with the reproducing seed on failure.
+pub fn forall<F>(name: &str, mut prop: F)
+where
+    F: FnMut(&mut Xoshiro256pp) -> Result<(), String>,
+{
+    let cases = default_cases();
+    let seed0 = base_seed();
+    for case in 0..cases {
+        let seed = seed0 ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Xoshiro256pp::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases}: {msg}\n\
+                 reproduce with MADUPITE_PROP_SEED={seed0} (case seed {seed})"
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Check two f64 slices are elementwise close.
+pub fn close_slices(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = 1.0_f64.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Max |a-b| over slices (for diagnostics).
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall("trivial", |rng| {
+            let x = rng.next_f64();
+            prop_assert!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must-fail'")]
+    fn forall_reports_failure() {
+        forall("must-fail", |rng| {
+            let x = rng.next_f64();
+            prop_assert!(x < 0.5, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn close_slices_tolerance() {
+        assert!(close_slices(&[1.0, 2.0], &[1.0 + 1e-12, 2.0], 1e-9).is_ok());
+        assert!(close_slices(&[1.0], &[1.1], 1e-9).is_err());
+        assert!(close_slices(&[1.0], &[1.0, 2.0], 1e-9).is_err());
+        // relative scaling: big numbers allowed bigger absolute deviation
+        assert!(close_slices(&[1e12], &[1e12 + 1.0], 1e-9).is_ok());
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        assert_eq!(max_abs_diff(&[1.0, 5.0], &[1.5, 4.0]), 1.0);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,312 @@
+//! Edge cases and failure injection across the public API.
+
+use madupite::comm::{Comm, World};
+use madupite::ksp::KspType;
+use madupite::linalg::dist::Partition;
+use madupite::linalg::Csr;
+use madupite::mdp::{io, Mdp};
+use madupite::models::{garnet::GarnetSpec, gridworld::GridSpec, ModelGenerator};
+use madupite::solver::{solve_serial, Method, SolveOptions};
+use madupite::util::json::Json;
+use madupite::util::prng::Xoshiro256pp;
+
+fn tmpfile(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("madupite-edge");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+// ---------------------------------------------------------------- MDP edges
+
+/// Single-state, single-action MDP: V* = g/(1−γ) exactly.
+#[test]
+fn degenerate_single_state() {
+    let mdp = Mdp::from_fillers(1, 1, 0.5, |_, _| vec![(0, 1.0)], |_, _| 3.0);
+    for method in [Method::Vi, Method::ExactPi, Method::ipi_gmres()] {
+        let r = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method,
+                atol: 1e-12,
+                max_outer: 10_000,
+                ..Default::default()
+            },
+        );
+        assert!(r.converged);
+        assert!((r.value[0] - 6.0).abs() < 1e-7, "V={}", r.value[0]);
+    }
+}
+
+/// γ = 0 reduces the MDP to one-step cost minimization.
+#[test]
+fn gamma_zero_is_myopic() {
+    let mdp = GarnetSpec::new(30, 4, 3, 9).build_serial(0.0);
+    let r = solve_serial(&mdp, &SolveOptions::default());
+    assert!(r.converged);
+    // one productive iteration + one verifying backup that certifies
+    // convergence
+    assert!(r.outer_iterations <= 2, "{}", r.outer_iterations);
+    for s in 0..30 {
+        let min_cost = (0..4).map(|a| mdp.cost(s, a)).fold(f64::INFINITY, f64::min);
+        assert!((r.value[s] - min_cost).abs() < 1e-12);
+    }
+}
+
+/// All-identical actions: every policy is optimal; solver must not cycle.
+#[test]
+fn identical_actions_tie_break() {
+    let mdp = Mdp::from_fillers(
+        10,
+        3,
+        0.9,
+        |s, _| vec![((s + 1) % 10, 1.0)],
+        |_, _| 1.0,
+    );
+    let r = solve_serial(&mdp, &SolveOptions::default());
+    assert!(r.converged);
+    // V = 1/(1−γ) = 10 everywhere, policy all zeros by first-wins tie-break
+    for s in 0..10 {
+        assert!((r.value[s] - 10.0).abs() < 1e-6);
+        assert_eq!(r.policy[s], 0);
+    }
+}
+
+/// Costs may be negative (rewards); discounted sum still converges.
+#[test]
+fn negative_costs_supported() {
+    let mdp = Mdp::from_fillers(
+        2,
+        2,
+        0.5,
+        |_, _| vec![(0, 0.5), (1, 0.5)],
+        |s, a| if (s, a) == (0, 1) { -2.0 } else { 1.0 },
+    );
+    let r = solve_serial(
+        &mdp,
+        &SolveOptions {
+            atol: 1e-10,
+            ..Default::default()
+        },
+    );
+    assert!(r.converged);
+    assert_eq!(r.policy[0], 1);
+    assert!(r.value[0] < 0.0);
+}
+
+/// Very high discount (0.99999) with exact PI stays stable.
+#[test]
+fn extreme_discount_exact_pi() {
+    let mdp = GarnetSpec::new(25, 3, 3, 4).build_serial(0.99999);
+    let r = solve_serial(
+        &mdp,
+        &SolveOptions {
+            method: Method::ExactPi,
+            atol: 1e-6,
+            ..Default::default()
+        },
+    );
+    assert!(r.converged);
+    assert!(r.outer_iterations < 60, "PI should terminate in few steps");
+    assert!(r.value.iter().all(|v| v.is_finite()));
+}
+
+// ------------------------------------------------------------ IO failure injection
+
+#[test]
+fn truncated_file_rejected_cleanly() {
+    let mdp = GarnetSpec::new(20, 2, 3, 1).build_serial(0.9);
+    let path = tmpfile("trunc.mdpb");
+    io::save(&mdp, &path).unwrap();
+    let full = std::fs::read(&path).unwrap();
+    // cut the file at several points: header, indptr, payload
+    for cut in [3usize, 20, 60, full.len() - 9] {
+        let p = tmpfile(&format!("trunc_{cut}.mdpb"));
+        std::fs::write(&p, &full[..cut]).unwrap();
+        assert!(io::load(&p).is_err(), "cut at {cut} must fail");
+    }
+}
+
+#[test]
+fn corrupted_gamma_rejected() {
+    let mdp = GarnetSpec::new(10, 2, 2, 1).build_serial(0.9);
+    let path = tmpfile("badgamma.mdpb");
+    io::save(&mdp, &path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[24..32].copy_from_slice(&2.5f64.to_le_bytes()); // gamma = 2.5
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(io::load(&path).is_err());
+}
+
+#[test]
+fn nonstochastic_file_rejected() {
+    let mdp = GarnetSpec::new(10, 2, 2, 1).build_serial(0.9);
+    let path = tmpfile("nonstoch.mdpb");
+    io::save(&mdp, &path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    // values start after header + indptr + indices
+    let nm = 20usize;
+    let nnz = mdp.transitions().nnz();
+    let values_off = 40 + 8 * (nm + 1) + 8 * nnz;
+    bytes[values_off..values_off + 8].copy_from_slice(&9.0f64.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(io::load(&path).is_err());
+}
+
+// ------------------------------------------------------------ comm stress
+
+/// Many interleaved collectives under contention (4 ranks × 200 epochs).
+#[test]
+fn collective_storm_consistent() {
+    let out = World::run(4, |comm: Comm| {
+        let mut acc = 0.0;
+        for i in 0..200 {
+            let x = (comm.rank() + i) as f64;
+            acc += comm.sum(x);
+            if i % 3 == 0 {
+                let v = comm.allgather_f64s(&[comm.rank() as f64]);
+                assert_eq!(v, vec![0.0, 1.0, 2.0, 3.0]);
+            }
+            if i % 7 == 0 {
+                comm.barrier();
+            }
+        }
+        acc
+    });
+    // sum over ranks of (rank + i) for each i: Σ_i (6 + 4i)
+    let expect: f64 = (0..200).map(|i| 6.0 + 4.0 * i as f64).sum();
+    for v in out {
+        assert_eq!(v, expect);
+    }
+}
+
+/// Tag-heavy p2p traffic delivered in-order per (source, tag).
+#[test]
+fn p2p_ordering_per_tag() {
+    World::run(2, |mut comm: Comm| {
+        if comm.rank() == 0 {
+            for i in 0..50u64 {
+                comm.send(1, i % 5, vec![i as u8]);
+            }
+        } else {
+            // receive per tag: order within a tag must be preserved
+            for tag in 0..5u64 {
+                let mut last = -1i32;
+                for _ in 0..10 {
+                    let b = comm.recv(0, tag);
+                    assert!((b[0] as i32) > last);
+                    last = b[0] as i32;
+                }
+            }
+        }
+    });
+}
+
+/// Partition handles n < size (some ranks own zero states).
+#[test]
+fn more_ranks_than_states() {
+    let part = Partition::new(3, 5);
+    let total: usize = (0..5).map(|r| part.local_len(r)).sum();
+    assert_eq!(total, 3);
+    // solving still works with empty ranks
+    let spec = std::sync::Arc::new(GarnetSpec::new(3, 2, 2, 8));
+    let out = World::run(5, move |comm| {
+        let mdp = spec.build_dist(&comm, 0.9);
+        let local = madupite::solver::solve_dist(&comm, &mdp, &SolveOptions::default());
+        madupite::solver::gather_result(&comm, local)
+    });
+    assert!(out[0].converged);
+    assert_eq!(out[0].value.len(), 3);
+}
+
+// ------------------------------------------------------------ ksp edges
+
+/// Inner solvers handle b = 0 → x = 0 without iterating.
+#[test]
+fn zero_cost_policy_evaluates_to_zero() {
+    let mdp = Mdp::from_fillers(8, 1, 0.9, |s, _| vec![((s + 1) % 8, 1.0)], |_, _| 0.0);
+    for ksp in [
+        KspType::Richardson { omega: 1.0 },
+        KspType::Gmres { restart: 10 },
+        KspType::BiCgStab,
+        KspType::Tfqmr,
+    ] {
+        let r = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::Ipi {
+                    ksp,
+                    pc: madupite::ksp::precond::PcType::None,
+                },
+                atol: 1e-10,
+                ..Default::default()
+            },
+        );
+        assert!(r.converged);
+        assert!(r.value.iter().all(|v| v.abs() < 1e-9));
+    }
+}
+
+// ------------------------------------------------------------ json fuzz-lite
+
+#[test]
+fn json_random_roundtrip() {
+    let mut rng = Xoshiro256pp::new(123);
+    for _ in 0..200 {
+        let v = random_json(&mut rng, 3);
+        let s = v.to_string();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
+        assert_eq!(back, v, "{s}");
+        let pretty = v.to_string_pretty();
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+    }
+}
+
+fn random_json(rng: &mut Xoshiro256pp, depth: usize) -> Json {
+    match if depth == 0 { rng.index(4) } else { rng.index(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_f64() < 0.5),
+        2 => Json::Num((rng.next_f64() * 1e6).round() / 1e3),
+        3 => Json::Str(
+            (0..rng.index(12))
+                .map(|_| char::from(32 + rng.index(90) as u8))
+                .collect(),
+        ),
+        4 => Json::Arr((0..rng.index(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.index(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+// ------------------------------------------------------------ maze robustness
+
+/// Tiny mazes (below the divider's minimum chamber) are valid MDPs.
+#[test]
+fn tiny_mazes_valid() {
+    for (r, c) in [(2usize, 2usize), (2, 5), (3, 3), (4, 2)] {
+        let spec = GridSpec::maze(r, c, 1);
+        let mdp = spec.build_serial(0.9);
+        let res = solve_serial(&mdp, &SolveOptions::default());
+        assert!(res.converged, "{r}x{c}");
+    }
+}
+
+/// CLI rejects unknown models/methods with an error, not a panic.
+#[test]
+fn cli_rejects_bad_input() {
+    let exe = env!("CARGO_BIN_EXE_madupite");
+    let out = std::process::Command::new(exe)
+        .args(["solve", "-model", "doesnotexist"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown model"));
+
+    let out = std::process::Command::new(exe)
+        .args(["solve", "-model", "maze", "-rows", "8", "-cols", "8", "-method", "bogus"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}

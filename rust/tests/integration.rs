@@ -1,0 +1,355 @@
+//! Cross-module integration tests: solver × models × io × comm × runtime.
+//!
+//! Unit tests live inside each module; these exercise full user-visible
+//! flows — generate → save → distributed load → solve → validate — plus
+//! the cross-layer consistency checks DESIGN.md §9 calls out.
+
+use madupite::comm::World;
+use madupite::ksp::precond::PcType;
+use madupite::ksp::KspType;
+use madupite::mdp::{io, DistMdp, Mdp};
+use madupite::models::{
+    garnet::GarnetSpec, gridworld::GridSpec, inventory::InventorySpec, queueing::QueueSpec,
+    sis::SisSpec, traffic::TrafficSpec, ModelGenerator,
+};
+use madupite::solver::{gather_result, solve_dist, solve_serial, solve_world, Method, SolveOptions};
+use std::sync::Arc;
+
+fn tmpfile(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("madupite-integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert!(
+            (a[i] - b[i]).abs() <= tol * (1.0 + a[i].abs().max(b[i].abs())),
+            "{what}: element {i}: {} vs {}",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+/// Every model family × every method agrees on V* (the C1 generality
+/// claim end-to-end).
+#[test]
+fn all_models_all_methods_agree() {
+    let models: Vec<(&str, Box<dyn ModelGenerator>, f64)> = vec![
+        ("maze", Box::new(GridSpec::maze(9, 9, 3)), 0.95),
+        ("sis", Box::new(SisSpec::standard(40, 3)), 0.95),
+        ("traffic", Box::new(TrafficSpec::standard(4)), 0.95),
+        ("garnet", Box::new(GarnetSpec::new(50, 3, 4, 7)), 0.95),
+        ("inventory", Box::new(InventorySpec::standard(10)), 0.95),
+        ("queueing", Box::new(QueueSpec::standard(10)), 0.95),
+    ];
+    let methods = [
+        Method::Vi,
+        Method::Mpi { sweeps: 15 },
+        Method::ExactPi,
+        Method::ipi_gmres(),
+        Method::ipi_bicgstab(),
+        Method::ipi_tfqmr(),
+    ];
+    for (name, gen, gamma) in &models {
+        let mdp = gen.build_serial(*gamma);
+        let mut reference: Option<Vec<f64>> = None;
+        for method in &methods {
+            let r = solve_serial(
+                &mdp,
+                &SolveOptions {
+                    method: method.clone(),
+                    atol: 1e-9,
+                    max_outer: 100_000,
+                    ..Default::default()
+                },
+            );
+            assert!(r.converged, "{name}/{} did not converge", method.name());
+            match &reference {
+                None => reference = Some(r.value),
+                Some(v) => close(v, &r.value, 1e-6, &format!("{name}/{}", method.name())),
+            }
+        }
+    }
+}
+
+/// generate → save → load (serial) → load_dist (several world sizes) →
+/// solve: all paths give the same V*.
+#[test]
+fn file_roundtrip_preserves_solution() {
+    let spec = GarnetSpec::new(80, 3, 5, 99);
+    let mdp = spec.build_serial(0.95);
+    let path = tmpfile("garnet80.mdpb");
+    io::save(&mdp, &path).unwrap();
+
+    let opts = SolveOptions {
+        method: Method::ipi_gmres(),
+        atol: 1e-9,
+        ..Default::default()
+    };
+    let direct = solve_serial(&mdp, &opts);
+    let loaded = solve_serial(&io::load(&path).unwrap(), &opts);
+    close(&direct.value, &loaded.value, 1e-9, "serial load");
+
+    for ranks in [2usize, 3] {
+        let path2 = path.clone();
+        let opts2 = opts.clone();
+        let mut out = World::run(ranks, move |comm| {
+            let dm = io::load_dist(&comm, &path2).unwrap();
+            let local = solve_dist(&comm, &dm, &opts2);
+            gather_result(&comm, local)
+        });
+        let r = out.swap_remove(0);
+        close(&direct.value, &r.value, 1e-7, &format!("dist load ranks={ranks}"));
+        assert_eq!(direct.policy, r.policy);
+    }
+}
+
+/// Distributed solve must be invariant in the number of ranks (C3).
+#[test]
+fn rank_count_invariance() {
+    let spec = Arc::new(GridSpec::maze(17, 23, 5));
+    let opts = SolveOptions {
+        method: Method::ipi_gmres(),
+        atol: 1e-9,
+        max_outer: 100_000,
+        ..Default::default()
+    };
+    let mut reference: Option<Vec<f64>> = None;
+    for ranks in [1usize, 2, 4, 5] {
+        let spec2 = Arc::clone(&spec);
+        let opts2 = opts.clone();
+        let mut out = World::run(ranks, move |comm| {
+            let dm = spec2.build_dist(&comm, 0.95);
+            let local = solve_dist(&comm, &dm, &opts2);
+            gather_result(&comm, local)
+        });
+        let r = out.swap_remove(0);
+        assert!(r.converged);
+        match &reference {
+            None => reference = Some(r.value),
+            Some(v) => close(v, &r.value, 1e-7, &format!("ranks={ranks}")),
+        }
+    }
+}
+
+/// Filler-built DistMdp equals serial-then-distributed (C5: online path).
+#[test]
+fn online_and_offline_construction_agree() {
+    let spec = Arc::new(SisSpec::standard(60, 4));
+    let serial = Arc::new(spec.build_serial(0.9));
+    let spec2 = Arc::clone(&spec);
+    let serial2 = Arc::clone(&serial);
+    World::run(3, move |comm| {
+        let online = spec2.build_dist(&comm, 0.9);
+        let offline = DistMdp::from_serial(&comm, &serial2);
+        assert_eq!(online.local_states(), offline.local_states());
+        assert_eq!(online.local_costs(), offline.local_costs());
+        assert_eq!(
+            online.transitions().nnz_local(),
+            offline.transitions().nnz_local()
+        );
+    });
+}
+
+/// The returned policy must be greedy for the returned value function and
+/// ε-optimal: exact evaluation of the policy must be within tolerance of V*.
+#[test]
+fn policy_quality_certificate() {
+    let spec = InventorySpec::standard(20);
+    let mdp = spec.build_serial(0.9);
+    let r = solve_serial(
+        &mdp,
+        &SolveOptions {
+            method: Method::ipi_bicgstab(),
+            atol: 1e-10,
+            ..Default::default()
+        },
+    );
+    assert!(r.converged);
+    let v_pi = mdp.evaluate_policy_exact(&r.policy);
+    close(&r.value, &v_pi, 1e-6, "V vs exact V^π");
+    let (_, greedy) = mdp.bellman(&r.value);
+    assert_eq!(greedy, r.policy);
+}
+
+/// CLI smoke: generate a file, inspect it, solve from it.
+#[test]
+fn cli_generate_info_solve() {
+    let exe = env!("CARGO_BIN_EXE_madupite");
+    let path = tmpfile("cli_garnet.mdpb");
+    let out = std::process::Command::new(exe)
+        .args([
+            "generate", "-model", "garnet", "-num_states", "60", "-branching", "4",
+            "-gamma", "0.9", "-file", path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = std::process::Command::new(exe)
+        .args(["info", "-file", path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("n_states=60"), "{text}");
+
+    let json_path = tmpfile("cli_result.json");
+    let out = std::process::Command::new(exe)
+        .args([
+            "solve", "-file", path.to_str().unwrap(), "-method", "ipi",
+            "-ksp_type", "bicgstab", "-ranks", "2", "-atol", "1e-8",
+            "-json", json_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("converged=true"), "{text}");
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    assert!(json.contains("residual_trace"));
+}
+
+/// CLI solve directly from a generator spec across methods.
+#[test]
+fn cli_solve_model_methods() {
+    let exe = env!("CARGO_BIN_EXE_madupite");
+    for method in ["vi", "mpi", "ipi"] {
+        let out = std::process::Command::new(exe)
+            .args([
+                "solve", "-model", "maze", "-rows", "12", "-cols", "12",
+                "-gamma", "0.9", "-method", method, "-atol", "1e-7",
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "method={method}");
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("converged=true"), "method={method}: {text}");
+    }
+}
+
+/// Runtime cross-layer check: PJRT artifact result equals the sparse
+/// solver on the same dense block (skipped when artifacts are missing).
+#[test]
+fn pjrt_artifact_agrees_with_sparse_solver() {
+    let Ok(mut engine) = madupite::runtime::Engine::load("artifacts") else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let db = madupite::runtime::DenseBellman::new(&engine, 64, 4).unwrap();
+    let (p, g, _) = madupite::runtime::random_block(5, 64, 4);
+    let gamma = 0.9f32;
+    let (v_pjrt, _, _) = db.solve_vi(&mut engine, &p, &g, gamma, 1e-5, 5_000).unwrap();
+
+    // same block through the sparse path
+    let mut rows = Vec::new();
+    let mut costs = Vec::new();
+    for s in 0..64 {
+        for a in 0..4 {
+            let raw: Vec<f64> = (0..64).map(|t| p[a * 64 * 64 + s * 64 + t] as f64).collect();
+            let sum: f64 = raw.iter().sum();
+            rows.push(
+                raw.into_iter()
+                    .enumerate()
+                    .map(|(t, x)| (t, x / sum))
+                    .collect::<Vec<_>>(),
+            );
+            costs.push(g[a * 64 + s] as f64);
+        }
+    }
+    let mdp = Mdp::new(
+        64,
+        4,
+        madupite::linalg::Csr::from_row_lists(64, rows),
+        costs,
+        gamma as f64,
+    )
+    .unwrap();
+    let r = solve_serial(
+        &mdp,
+        &SolveOptions {
+            atol: 1e-9,
+            ..Default::default()
+        },
+    );
+    for (a, b) in v_pjrt.iter().zip(&r.value) {
+        assert!((*a as f64 - b).abs() < 1e-3, "{a} vs {b}");
+    }
+}
+
+/// Preconditioner variants agree through the full solver.
+#[test]
+fn preconditioners_end_to_end() {
+    let mdp = GarnetSpec::new(70, 3, 5, 31).build_serial(0.99);
+    let mut reference: Option<Vec<f64>> = None;
+    for pc in [PcType::None, PcType::Jacobi, PcType::Sor] {
+        let r = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::Ipi {
+                    ksp: KspType::Gmres { restart: 30 },
+                    pc,
+                },
+                atol: 1e-9,
+                ..Default::default()
+            },
+        );
+        assert!(r.converged, "pc={pc:?}");
+        match &reference {
+            None => reference = Some(r.value),
+            Some(v) => close(v, &r.value, 1e-6, &format!("pc={pc:?}")),
+        }
+    }
+}
+
+/// Baselines and madupite agree on a shared workload (E5 sanity).
+#[test]
+fn baselines_agree_with_solver() {
+    let mdp = GarnetSpec::new(40, 3, 4, 17).build_serial(0.9);
+    let ours = solve_serial(
+        &mdp,
+        &SolveOptions {
+            atol: 1e-10,
+            ..Default::default()
+        },
+    );
+    let nested = madupite::baseline::mdpsolver_like::NestedVecMdp::from_mdp(&mdp)
+        .solve_mpi(1e-10, 20, 100_000);
+    let dense = madupite::baseline::pymdp_like::DenseMdp::from_mdp(&mdp).solve_vi(1e-9, 100_000);
+    assert!(nested.converged && dense.converged);
+    close(&ours.value, &nested.value, 1e-6, "vs mdpsolver-like");
+    // pymdp's span rule stops when V is within a near-constant offset of V*
+    // (ε-optimal policy, biased value) — so compare the *policy*, and the
+    // policy's exact evaluation, not the raw iterate.
+    let mismatches = ours
+        .policy
+        .iter()
+        .zip(&dense.policy)
+        .filter(|(a, b)| a != b)
+        .count();
+    assert!(mismatches <= 1, "pymdp-like policy differs in {mismatches} states");
+    let v_dense_pi = mdp.evaluate_policy_exact(&dense.policy);
+    close(&ours.value, &v_dense_pi, 1e-4, "vs pymdp-like policy value");
+}
+
+/// Large sparse workload solved distributed with every Krylov method.
+#[test]
+fn krylov_methods_large_distributed() {
+    let spec = Arc::new(GarnetSpec::new(2_000, 4, 5, 77));
+    for method in [Method::ipi_gmres(), Method::ipi_bicgstab(), Method::ipi_tfqmr()] {
+        let r = solve_world(
+            Arc::new(spec.build_serial(0.99)),
+            3,
+            &SolveOptions {
+                method: method.clone(),
+                atol: 1e-8,
+                ..Default::default()
+            },
+        );
+        assert!(r.converged, "{}", method.name());
+        assert!(r.residual < 1e-8);
+    }
+}
