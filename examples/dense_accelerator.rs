@@ -1,64 +1,90 @@
-//! Dense-block accelerator: run the Bellman backup through the full
-//! three-layer stack — the Pallas kernel (L1) embedded in the jax graph
-//! (L2), AOT-compiled to HLO and executed from Rust via PJRT — and validate
-//! it against both the native Rust dense kernel and the sparse solver.
+//! Dense-block accelerator: run Bellman backups and policy evaluation on a
+//! dense `(A,S,S)` transition block, and validate that the dense path and
+//! the sparse solver agree.
 //!
-//! Requires `make artifacts` to have produced `artifacts/*.hlo.txt`.
+//! Three backends meet here (DESIGN.md §4):
+//!
+//! 1. the native Rust dense kernel (`bellman_dense_native`) — the reference
+//!    the AOT artifacts are validated against;
+//! 2. the shared KSP stack over `ksp::DenseOp` — dense policy evaluation
+//!    through exactly the same Krylov code the sparse solver uses, thanks
+//!    to the `Apply` operator trait;
+//! 3. the PJRT-executed Pallas/HLO artifacts (L1/L2), when an XLA client is
+//!    linked and `make artifacts` has produced `artifacts/*.hlo.txt` —
+//!    reported as unavailable in the zero-dependency build.
 //!
 //! Run: `cargo run --release --example dense_accelerator`
 
-use madupite::mdp::Mdp;
-use madupite::runtime::{bellman_dense_native, random_block, DenseBellman, Engine};
-use madupite::solver::{solve_serial, Method, SolveOptions};
+use madupite::ksp::{self, Apply, DenseOp, Precond, Tolerance};
 use madupite::linalg::Csr;
+use madupite::mdp::Mdp;
+use madupite::runtime::{bellman_dense_native, dense_policy_matrix, random_block, Engine};
+use madupite::solver::{solve_serial, Method, SolveOptions};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
-    let mut engine = Engine::load("artifacts")?;
-    println!("PJRT platform: {}", engine.platform());
-    println!("artifacts: {:?}\n", engine.available());
-
+fn main() {
     let (n, m) = (64usize, 4usize);
-    let db = DenseBellman::new(&engine, n, m)?;
     let (p, g, _) = random_block(2024, n, m);
     let gamma = 0.95f32;
 
-    // --- 1. single backup: PJRT vs native rust ---------------------------
-    let v0 = vec![0.0f32; n];
+    // --- 1. native dense VI to the fixed point ----------------------------
     let t = Instant::now();
-    let (tv_pjrt, pi_pjrt) = db.bellman(&mut engine, &p, &g, &v0, gamma)?;
-    let pjrt_first = t.elapsed();
-    let t = Instant::now();
-    let (tv_native, pi_native) = bellman_dense_native(n, m, &p, &g, &v0, gamma);
-    let native_time = t.elapsed();
-    let max_diff = tv_pjrt
-        .iter()
-        .zip(&tv_native)
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0f32, f32::max);
-    assert!(max_diff < 1e-4, "PJRT vs native diverged: {max_diff}");
-    assert_eq!(pi_pjrt, pi_native);
-    println!(
-        "single backup   : PJRT(first, incl. compile) {:?} | native {:?} | max|Δ| = {:.1e}",
-        pjrt_first, native_time, max_diff
-    );
-    let t = Instant::now();
-    let _ = db.bellman(&mut engine, &p, &g, &v0, gamma)?;
-    println!("single backup   : PJRT(cached executable) {:?}", t.elapsed());
+    let mut v = vec![0.0f32; n];
+    let mut sweeps = 0usize;
+    let pi = loop {
+        let (tv, tpi) = bellman_dense_native(n, m, &p, &g, &v, gamma);
+        let res = tv
+            .iter()
+            .zip(&v)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        v = tv;
+        sweeps += 1;
+        if res < 1e-5 || sweeps >= 10_000 {
+            break tpi;
+        }
+    };
+    println!("native dense VI : {sweeps} sweeps in {:?}", t.elapsed());
 
-    // --- 2. fused k-sweep VI: one dispatch per k sweeps -------------------
+    // --- 2. evaluate the greedy policy through DenseOp + GMRES ------------
+    // The dense block flows through the *same* KSP stack as the sparse
+    // solver: DenseOp implements the Apply operator trait.
+    let policy: Vec<usize> = pi.iter().map(|&a| a as usize).collect();
+    let p_pi = dense_policy_matrix(n, m, &p, &policy);
+    let g_pi: Vec<f64> = policy
+        .iter()
+        .enumerate()
+        .map(|(s, &a)| g[a * n + s] as f64)
+        .collect();
     let t = Instant::now();
-    let (v_star, pi_star, sweeps) = db.solve_vi(&mut engine, &p, &g, gamma, 1e-5, 10_000)?;
-    println!(
-        "fused VI solve  : {} sweeps in {:?} ({} dispatches)",
-        sweeps,
-        t.elapsed(),
-        sweeps / db.sweeps * 2
-    );
+    let v_ksp = madupite::comm::World::run(1, move |comm| {
+        let op = DenseOp::new(&p_pi, gamma as f64);
+        let mut x = vec![0.0f64; n];
+        let tol = Tolerance {
+            atol: 1e-10,
+            rtol: 0.0,
+            max_iters: 10_000,
+        };
+        let stats = ksp::gmres::solve(&comm, &op, &Precond::None, &g_pi, &mut x, &tol, 30);
+        assert!(stats.converged, "DenseOp GMRES did not converge");
+        let mut buf = op.make_buffer();
+        let mut r = vec![0.0f64; n];
+        let res = op.residual(&comm, &g_pi, &x, &mut r, &mut buf);
+        assert!(res < 1e-8, "DenseOp residual {res}");
+        x
+    })
+    .swap_remove(0);
+    println!("DenseOp + GMRES : policy evaluation in {:?}", t.elapsed());
+    let max_diff = v_ksp
+        .iter()
+        .zip(&v)
+        .map(|(a, b)| (a - *b as f64).abs())
+        .fold(0.0f64, f64::max);
+    // V* equals V^π* for the greedy policy at the fixed point (f32 slack)
+    assert!(max_diff < 1e-2, "DenseOp vs native VI diverged: {max_diff}");
+    println!("                  max|V_ksp − V_vi| = {max_diff:.2e}");
 
     // --- 3. cross-validate against the sparse L3 solver -------------------
-    // Convert the dense block to the sparse Mdp representation and solve
-    // with iPI(GMRES); values must agree to f32 tolerance.
     let mut rows = Vec::with_capacity(n * m);
     let mut costs = Vec::with_capacity(n * m);
     for s in 0..n {
@@ -85,21 +111,27 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         },
     );
-    let max_diff = v_star
+    let max_diff = v
         .iter()
         .zip(&r.value)
         .map(|(a, b)| (*a as f64 - b).abs())
         .fold(0.0f64, f64::max);
-    let pol_match = pi_star
+    let pol_match = pi
         .iter()
         .zip(&r.policy)
         .filter(|(a, b)| **a as usize == **b)
         .count();
     println!(
-        "cross-validation: max|V_pjrt − V_sparse| = {:.2e}, policies agree on {}/{} states",
-        max_diff, pol_match, n
+        "cross-validation: max|V_dense − V_sparse| = {max_diff:.2e}, \
+         policies agree on {pol_match}/{n} states"
     );
-    assert!(max_diff < 1e-3, "layers disagree: {max_diff}");
-    println!("\nall three layers agree ✓");
-    Ok(())
+    assert!(max_diff < 1e-3, "backends disagree: {max_diff}");
+
+    // --- 4. PJRT artifacts, when available --------------------------------
+    match Engine::load("artifacts") {
+        Ok(engine) => println!("PJRT platform: {}", engine.platform()),
+        Err(e) => println!("\nPJRT path skipped: {e}"),
+    }
+
+    println!("\ndense backends agree ✓");
 }

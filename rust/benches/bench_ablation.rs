@@ -10,12 +10,22 @@
 //! 3. **Ghost-plan exchange vs full allgather** — communication volume of
 //!    the precomputed VecScatter-style plan against the naive "replicate V
 //!    everywhere" alternative, on the scaling maze.
+//! 4. **Matrix-free vs assembled policy evaluation** — the `-eval_backend`
+//!    knob: fused application off the stacked kernel vs materializing (and
+//!    caching) an explicit `P_π` CSR per policy change. Reports per-rank
+//!    resident transition bytes and per-outer-iteration setup time (both
+//!    must be lower matrix-free) alongside end-to-end solve cost.
 
 use madupite::comm::World;
-use madupite::models::{gridworld::GridSpec, ModelGenerator};
-use madupite::solver::{gather_result, solve_dist, solve_serial, Method, SolveOptions};
+use madupite::ksp::Apply;
+use madupite::mdp::MatFreePolicyOp;
+use madupite::models::{garnet::GarnetSpec, gridworld::GridSpec, ModelGenerator};
+use madupite::solver::{
+    gather_result, solve_dist, solve_serial, EvalBackend, Method, SolveOptions,
+};
 use madupite::util::benchkit::Suite;
 use std::sync::Arc;
+use std::time::Instant;
 
 fn main() {
     let mut suite = Suite::new("E7 ablations");
@@ -104,6 +114,90 @@ fn main() {
             let r = solve_serial(&garnet, &opts);
             assert!(r.converged);
             vec![("spmvs".to_string(), r.total_spmvs as f64)]
+        });
+    }
+
+    // --- 4. matrix-free vs assembled policy evaluation ----------------------
+    // (a) per-policy-change setup time and per-rank resident transition
+    // bytes, measured directly on one distributed world;
+    let eval_spec = Arc::new(GarnetSpec::new(100_000, 4, 5, 21));
+    {
+        let spec2 = Arc::clone(&eval_spec);
+        suite.case("eval-backend/setup+memory", move || {
+            let spec3 = Arc::clone(&spec2);
+            let mut out = World::run(2, move |comm| {
+                let mdp = spec3.build_dist(&comm, 0.99);
+                let nl = mdp.local_states();
+                let policy: Vec<usize> = (0..nl).map(|s| s % mdp.n_actions()).collect();
+
+                let t0 = Instant::now();
+                let (p_pi, _g) = mdp.policy_system(&comm, &policy);
+                let assembled_setup = t0.elapsed().as_secs_f64();
+                // resident = base kernel + the backend's extra state: the
+                // P_π CSR copy and its own ghost buffer (assembled) vs only
+                // the stacked matrix's ghost buffer (matrix-free).
+                let assembled_resident = mdp.storage_bytes()
+                    + p_pi.local().storage_bytes()
+                    + p_pi.make_buffer().x().len() * 8;
+
+                let t0 = Instant::now();
+                let op = MatFreePolicyOp::new(&mdp, &policy);
+                let _g = mdp.policy_costs(&policy);
+                let matfree_setup = t0.elapsed().as_secs_f64();
+                let matfree_resident = mdp.storage_bytes() + op.make_buffer().x().len() * 8;
+
+                if matfree_setup >= assembled_setup {
+                    // timing noise, not correctness — report, don't abort
+                    eprintln!(
+                        "WARNING: matfree setup {matfree_setup}s !< assembled \
+                         {assembled_setup}s (noisy sample?)"
+                    );
+                }
+                assert!(
+                    matfree_resident < assembled_resident,
+                    "matfree resident {matfree_resident}B !< assembled {assembled_resident}B"
+                );
+                (
+                    assembled_setup,
+                    matfree_setup,
+                    assembled_resident,
+                    matfree_resident,
+                )
+            });
+            let (asm_setup, mf_setup, asm_bytes, mf_bytes) = out.swap_remove(0);
+            vec![
+                ("asm_setup_ms".to_string(), asm_setup * 1e3),
+                ("mf_setup_ms".to_string(), mf_setup * 1e3),
+                ("asm_MiB".to_string(), asm_bytes as f64 / (1 << 20) as f64),
+                ("mf_MiB".to_string(), mf_bytes as f64 / (1 << 20) as f64),
+            ]
+        });
+    }
+    // (b) end-to-end solve cost under each backend (same solution, same
+    // outer trajectory; the difference is setup work and ghost volume).
+    for backend in [EvalBackend::MatFree, EvalBackend::Assembled] {
+        let spec2 = Arc::clone(&eval_spec);
+        suite.case(&format!("eval-backend/{}", backend.name()), move || {
+            let spec3 = Arc::clone(&spec2);
+            let opts = SolveOptions {
+                method: Method::ipi_gmres(),
+                eval_backend: backend,
+                atol: 1e-8,
+                max_outer: 100_000,
+                ..Default::default()
+            };
+            let mut out = World::run(2, move |comm| {
+                let mdp = spec3.build_dist(&comm, 0.99);
+                let local = solve_dist(&comm, &mdp, &opts);
+                gather_result(&comm, local)
+            });
+            let r = out.swap_remove(0);
+            assert!(r.converged);
+            vec![
+                ("outer".to_string(), r.outer_iterations as f64),
+                ("spmvs".to_string(), r.total_spmvs as f64),
+                ("comm_MiB".to_string(), r.comm_bytes as f64 / (1 << 20) as f64),
+            ]
         });
     }
 

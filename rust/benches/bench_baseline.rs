@@ -23,11 +23,13 @@ fn main() {
     for n in [1_000usize, 10_000, 50_000] {
         let mdp = GarnetSpec::new(n, 4, 5, 3).build_serial(0.99);
 
-        suite.case(&format!("garnet{n}/madupite-ipi"), || {
+        // label carries the Method::name() so tables line up with E1/E4
+        let method = Method::ipi_gmres();
+        suite.case(&format!("garnet{n}/madupite-{}", method.name()), || {
             let r = solve_serial(
                 &mdp,
                 &SolveOptions {
-                    method: Method::ipi_gmres(),
+                    method: method.clone(),
                     atol: 1e-8,
                     ..Default::default()
                 },
@@ -82,11 +84,12 @@ fn main() {
     // the *tailored* iPI configuration uses a loose forcing term — this is
     // claim C2 in action: one knob, not a different solver.
     let maze = GridSpec::maze(100, 100, 21).build_serial(0.99);
-    suite.case("maze100/madupite-ipi", || {
+    let method = Method::ipi_gmres();
+    suite.case(&format!("maze100/madupite-{}", method.name()), || {
         let r = solve_serial(
             &maze,
             &SolveOptions {
-                method: Method::ipi_gmres(),
+                method: method.clone(),
                 atol: 1e-8,
                 alpha: 1e-2,
                 max_outer: 100_000,

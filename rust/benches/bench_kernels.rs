@@ -4,12 +4,19 @@
 //! - CSR SpMV at several sizes → effective GB/s against the memory-traffic
 //!   roofline estimate (8B value + 8B col index per nnz + x/y traffic).
 //! - Stacked Bellman backup (the per-outer-iteration unit).
+//! - Policy operator `I − γ P_π`: fused matrix-free application off the
+//!   stacked kernel vs assembly + apply of an explicit `P_π` CSR — the
+//!   per-policy-change setup cost and memory the `MatFree` backend removes.
 //! - PJRT artifact execution (Pallas kernel via HLO) vs native dense Rust:
 //!   dispatch overhead + crossover block size, and artifact compile time.
 
+use madupite::comm::World;
+use madupite::ksp::{Apply, LinOp};
+use madupite::mdp::{DistMdp, MatFreePolicyOp};
 use madupite::models::{garnet::GarnetSpec, ModelGenerator};
 use madupite::runtime::{bellman_dense_native, random_block, DenseBellman, Engine};
 use madupite::util::benchkit::{fmt_time, Suite};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Random sparse MDP workload (Garnet) — deterministic in seed.
@@ -44,6 +51,84 @@ fn main() {
             let v = vec![0.0f64; n];
             let (tv, _) = mdp.bellman(&v);
             vec![("checksum".to_string(), tv[0])]
+        });
+    }
+
+    // --- policy operator: fused matrix-free vs assembled P_π ---------------
+    // Setup = what a policy change costs before the first inner iteration;
+    // apply = steady-state per-iteration cost of y ← (I − γ P_π) x.
+    for n in [100_000usize] {
+        let mdp = Arc::new(random_mdp_bench(21, n, 4, 0.99, 5));
+        let mdp2 = Arc::clone(&mdp);
+        suite.case(&format!("policy_op/n={n}"), move || {
+            let mdp3 = Arc::clone(&mdp2);
+            let mut out = World::run(1, move |comm| {
+                let d = DistMdp::from_serial(&comm, &mdp3);
+                let nl = d.local_states();
+                let policy: Vec<usize> = (0..nl).map(|s| s % d.n_actions()).collect();
+                let x: Vec<f64> = (0..nl).map(|i| (i as f64 * 0.01).sin()).collect();
+                let mut y = vec![0.0; nl];
+
+                // assembled: ghost plan + CSR copy, then apply
+                let t0 = Instant::now();
+                let (p_pi, _g) = d.policy_system(&comm, &policy);
+                let assembled_setup = t0.elapsed().as_secs_f64();
+                let asm = LinOp::new(&p_pi, d.gamma());
+                let mut buf = asm.make_buffer();
+                let t0 = Instant::now();
+                for _ in 0..10 {
+                    asm.apply(&comm, &x, &mut y, &mut buf);
+                }
+                let assembled_apply = t0.elapsed().as_secs_f64() / 10.0;
+                let assembled_bytes = p_pi.local().storage_bytes();
+                let y_assembled = y.clone();
+
+                // matrix-free: O(1) setup, apply off the stacked kernel
+                let t0 = Instant::now();
+                let mf = MatFreePolicyOp::new(&d, &policy);
+                let _g = d.policy_costs(&policy);
+                let matfree_setup = t0.elapsed().as_secs_f64();
+                let mut buf = mf.make_buffer();
+                let t0 = Instant::now();
+                for _ in 0..10 {
+                    mf.apply(&comm, &x, &mut y, &mut buf);
+                }
+                let matfree_apply = t0.elapsed().as_secs_f64() / 10.0;
+                let max_diff = y
+                    .iter()
+                    .zip(&y_assembled)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f64, f64::max);
+                assert!(
+                    max_diff < 1e-12,
+                    "matfree and assembled applies diverged: max|Δ| = {max_diff}"
+                );
+                if matfree_setup >= assembled_setup {
+                    // timing noise, not correctness — report, don't abort
+                    eprintln!(
+                        "WARNING: matrix-free setup {matfree_setup}s not below \
+                         assembled {assembled_setup}s (noisy sample?)"
+                    );
+                }
+                (
+                    assembled_setup,
+                    matfree_setup,
+                    assembled_apply,
+                    matfree_apply,
+                    assembled_bytes,
+                )
+            });
+            let (asm_setup, mf_setup, asm_apply, mf_apply, p_pi_bytes) = out.swap_remove(0);
+            vec![
+                ("asm_setup_ms".to_string(), asm_setup * 1e3),
+                ("mf_setup_ms".to_string(), mf_setup * 1e3),
+                ("asm_apply_ms".to_string(), asm_apply * 1e3),
+                ("mf_apply_ms".to_string(), mf_apply * 1e3),
+                (
+                    "p_pi_MiB".to_string(),
+                    p_pi_bytes as f64 / (1 << 20) as f64,
+                ),
+            ]
         });
     }
 

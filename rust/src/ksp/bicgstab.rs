@@ -5,23 +5,23 @@
 //! with GMRES on many MDP instances, occasionally better when the spectrum
 //! of `I − γ P_π` is well clustered.
 
-use super::{KspStats, LinOp, Precond, Tolerance};
+use super::{Apply, KspStats, Precond, Tolerance};
 use crate::comm::Comm;
 use crate::linalg::dist::{dist_dot, dist_norm2};
 
 /// Solve `A x = b` with preconditioned BiCGStab. `x` carries the warm start.
 pub fn solve(
     comm: &Comm,
-    a: &LinOp,
+    a: &dyn Apply,
     pc: &Precond,
     b: &[f64],
     x: &mut [f64],
     tol: &Tolerance,
 ) -> KspStats {
-    let nl = a.local_len();
+    let nl = a.local_rows();
     assert_eq!(b.len(), nl);
     assert_eq!(x.len(), nl);
-    let mut buf = a.p.make_buffer();
+    let mut buf = a.make_buffer();
     let mut stats = KspStats::default();
 
     let mut r = vec![0.0; nl];
@@ -109,6 +109,7 @@ mod tests {
     use crate::comm::World;
     use crate::ksp::precond::PcType;
     use crate::ksp::testmat::random_policy_system;
+    use crate::ksp::LinOp;
     use crate::util::prop;
 
     fn run(n: usize, size: usize, gamma: f64, pc_type: PcType) -> Vec<f64> {

@@ -6,32 +6,26 @@
 //! per rank — intended for small MDPs (exact PI baselines, tests), mirroring
 //! how one would use `-ksp_type preonly -pc_type lu` in madupite/PETSc.
 
-use super::{KspStats, LinOp};
+use super::{Apply, KspStats};
 use crate::comm::{codec, Comm};
 use crate::linalg::DenseMat;
 
 /// Solve `A x = b` exactly. `x` is overwritten with the local solution
 /// block. Collective.
-pub fn solve(comm: &Comm, a: &LinOp, b: &[f64], x: &mut [f64]) -> KspStats {
-    let part = a.p.col_partition();
+pub fn solve(comm: &Comm, a: &dyn Apply, b: &[f64], x: &mut [f64]) -> KspStats {
+    let part = a.partition();
     let n = part.n();
-    let nl = a.local_len();
+    let nl = a.local_rows();
     assert_eq!(b.len(), nl);
     assert_eq!(x.len(), nl);
 
-    // Serialize local rows of A as (global_row_count, then per row:
-    // ncols, cols..., vals...) — but fixed layout is easier: encode the
-    // local dense rows. n is small by contract.
-    let local = a.p.local();
+    // Densify the local rows of A (global columns, duplicates additive).
+    // n is small by contract.
     let lo = part.lo(comm.rank());
     let mut dense_rows = vec![0.0; nl * n];
-    for i in 0..nl {
-        // identity part
-        dense_rows[i * n + (lo + i)] += 1.0;
-        let (cols, vals) = local.row(i);
-        for (&c, &v) in cols.iter().zip(vals) {
-            let gc = a.p.global_col(c);
-            dense_rows[i * n + gc] -= a.gamma * v;
+    for (i, row) in a.materialize_rows().into_iter().enumerate() {
+        for (gc, v) in row {
+            dense_rows[i * n + gc] += v;
         }
     }
 

@@ -15,9 +15,16 @@
 //! - [`tfqmr`]: transpose-free QMR (Freund).
 //! - [`direct`]: gathered dense LU (exact policy iteration on small MDPs).
 //!
+//! All solvers are generic over the [`Apply`] operator trait (PETSc's shell
+//! `Mat`): they never see a concrete matrix, only `y ← A x`, which is what
+//! lets the same Krylov stack run over an assembled `P_π` CSR ([`LinOp`]),
+//! the fused matrix-free policy operator
+//! ([`crate::mdp::matfree::MatFreePolicyOp`]) and the dense accelerator
+//! block ([`DenseOp`]) — the backend-selection matrix is DESIGN.md §4.
+//!
 //! All iterative solvers run distributed: vectors are block-partitioned,
 //! inner products reduce through [`crate::comm`], and the operator applies
-//! through the ghost plan of [`DistCsr`].
+//! through its ghost plan (or rank-locally for serial dense blocks).
 
 pub mod bicgstab;
 pub mod direct;
@@ -27,48 +34,47 @@ pub mod richardson;
 pub mod tfqmr;
 
 use crate::comm::Comm;
-use crate::linalg::dist::{dist_norm2, DistCsr, GhostBuf};
+use crate::linalg::dist::{dist_norm2, DistCsr, GhostBuf, Partition};
+use crate::linalg::{Csr, DenseMat};
 pub use precond::Precond;
 
-/// The linear operator `A = I − γ P_π` applied matrix-free on top of the
-/// distributed policy-transition matrix.
-pub struct LinOp<'a> {
-    pub p: &'a DistCsr,
-    pub gamma: f64,
-}
+/// A distributed square linear operator `A` with the shape of a policy
+/// system `I − γ P_π` (PETSc's matrix-free shell `Mat` + the hooks the KSP
+/// stack needs). Rows and the vector space share one block [`Partition`].
+///
+/// Implementations: [`LinOp`] (assembled CSR),
+/// [`crate::mdp::matfree::MatFreePolicyOp`] (fused matrix-free policy
+/// evaluation straight off the stacked transition kernel), [`DenseOp`]
+/// (dense accelerator block).
+pub trait Apply {
+    /// Number of locally owned rows (= local length of every vector).
+    fn local_rows(&self) -> usize;
 
-impl<'a> LinOp<'a> {
-    pub fn new(p: &'a DistCsr, gamma: f64) -> Self {
-        assert_eq!(
-            p.local_nrows(),
-            p.col_partition().local_len(p_rank(p)),
-            "LinOp requires a square (state × state) policy matrix"
-        );
-        LinOp { p, gamma }
-    }
+    /// The global row/column partition (the operator is square).
+    fn partition(&self) -> Partition;
 
-    pub fn local_len(&self) -> usize {
-        self.p.local_nrows()
-    }
+    /// Allocate the `[owned | ghost]` buffer [`Self::apply`] needs.
+    fn make_buffer(&self) -> GhostBuf;
 
-    /// y ← (I − γ P) x. Collective.
-    pub fn apply(&self, comm: &Comm, x: &[f64], y: &mut [f64], buf: &mut GhostBuf) {
-        self.p.spmv(comm, x, y, buf);
-        for (yi, xi) in y.iter_mut().zip(x) {
-            *yi = xi - self.gamma * *yi;
-        }
-    }
+    /// y ← A x. Collective across the world.
+    fn apply(&self, comm: &Comm, x: &[f64], y: &mut [f64], buf: &mut GhostBuf);
 
-    /// Local diagonal of A (for Jacobi preconditioning).
-    pub fn diagonal(&self) -> Vec<f64> {
-        let local = self.p.local();
-        (0..local.nrows())
-            .map(|i| 1.0 - self.gamma * local.get(i, i))
-            .collect()
-    }
+    /// Local diagonal of A (Jacobi-style preconditioning). `out` has
+    /// [`Self::local_rows`] entries.
+    fn diag(&self, out: &mut [f64]);
+
+    /// The rank-local block of A in CSR form — columns restricted to the
+    /// owned range `[0, local_rows)`, off-rank couplings dropped. This is
+    /// the block-Jacobi view local preconditioners (SOR) sweep over.
+    fn local_block(&self) -> Csr;
+
+    /// Local rows of A as `(global_col, value)` lists, duplicates additive
+    /// — the gathered direct solver densifies these. O(local nnz); only
+    /// sensible for small systems.
+    fn materialize_rows(&self) -> Vec<Vec<(usize, f64)>>;
 
     /// r ← b − A·x. Returns global ‖r‖₂. Collective.
-    pub fn residual(
+    fn residual(
         &self,
         comm: &Comm,
         b: &[f64],
@@ -84,12 +90,157 @@ impl<'a> LinOp<'a> {
     }
 }
 
-// Internal: rank of the DistCsr's world via its partition bookkeeping.
-// (DistCsr stores rank privately; expose through local row count identity.)
-fn p_rank(p: &DistCsr) -> usize {
-    // The column partition + local row count identify the rank uniquely for
-    // square matrices; but DistCsr::rank is what we want. Provided below.
-    p.rank()
+/// The linear operator `A = I − γ P` over an **assembled** distributed
+/// policy-transition matrix (the `Assembled` evaluation backend).
+pub struct LinOp<'a> {
+    p: &'a DistCsr,
+    gamma: f64,
+}
+
+impl<'a> LinOp<'a> {
+    pub fn new(p: &'a DistCsr, gamma: f64) -> Self {
+        assert_eq!(
+            p.local_nrows(),
+            p.col_partition().local_len(p.rank()),
+            "LinOp requires a square (state × state) policy matrix"
+        );
+        LinOp { p, gamma }
+    }
+
+    /// Local diagonal of A as a vector (convenience over [`Apply::diag`]).
+    pub fn diagonal(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.local_rows()];
+        self.diag(&mut d);
+        d
+    }
+}
+
+impl Apply for LinOp<'_> {
+    fn local_rows(&self) -> usize {
+        self.p.local_nrows()
+    }
+
+    fn partition(&self) -> Partition {
+        self.p.col_partition()
+    }
+
+    fn make_buffer(&self) -> GhostBuf {
+        self.p.make_buffer()
+    }
+
+    fn apply(&self, comm: &Comm, x: &[f64], y: &mut [f64], buf: &mut GhostBuf) {
+        self.p.spmv(comm, x, y, buf);
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi = xi - self.gamma * *yi;
+        }
+    }
+
+    fn diag(&self, out: &mut [f64]) {
+        let local = self.p.local();
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = 1.0 - self.gamma * local.get(i, i);
+        }
+    }
+
+    fn local_block(&self) -> Csr {
+        let nl = self.local_rows();
+        let p_local = self.p.local();
+        let mut rows: Vec<Vec<(usize, f64)>> = Vec::with_capacity(nl);
+        for i in 0..nl {
+            let (cols, vals) = p_local.row(i);
+            let mut row: Vec<(usize, f64)> = vec![(i, 1.0)];
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c < nl {
+                    row.push((c, -self.gamma * v));
+                }
+            }
+            rows.push(row);
+        }
+        Csr::from_row_lists(nl, rows)
+    }
+
+    fn materialize_rows(&self) -> Vec<Vec<(usize, f64)>> {
+        let nl = self.local_rows();
+        let lo = self.p.col_partition().lo(self.p.rank());
+        let local = self.p.local();
+        (0..nl)
+            .map(|i| {
+                let (cols, vals) = local.row(i);
+                let mut row: Vec<(usize, f64)> = Vec::with_capacity(cols.len() + 1);
+                row.push((lo + i, 1.0));
+                for (&c, &v) in cols.iter().zip(vals) {
+                    row.push((self.p.global_col(c), -self.gamma * v));
+                }
+                row
+            })
+            .collect()
+    }
+}
+
+/// `A = I − γ P` over a **dense** rank-local transition block — the dense
+/// accelerator path (`examples/dense_accelerator.rs`, [`crate::runtime`])
+/// routed through the same KSP stack as the sparse solvers. Serial by
+/// construction: dense blocks are not partitioned across ranks.
+pub struct DenseOp<'a> {
+    p: &'a DenseMat,
+    gamma: f64,
+}
+
+impl<'a> DenseOp<'a> {
+    pub fn new(p: &'a DenseMat, gamma: f64) -> Self {
+        assert_eq!(p.nrows(), p.ncols(), "DenseOp requires a square matrix");
+        DenseOp { p, gamma }
+    }
+}
+
+impl Apply for DenseOp<'_> {
+    fn local_rows(&self) -> usize {
+        self.p.nrows()
+    }
+
+    fn partition(&self) -> Partition {
+        Partition::new(self.p.nrows(), 1)
+    }
+
+    fn make_buffer(&self) -> GhostBuf {
+        GhostBuf::new(self.p.nrows(), 0)
+    }
+
+    fn apply(&self, comm: &Comm, x: &[f64], y: &mut [f64], _buf: &mut GhostBuf) {
+        assert_eq!(comm.size(), 1, "DenseOp is a rank-local operator");
+        let n = self.p.nrows();
+        assert_eq!(x.len(), n);
+        assert_eq!(y.len(), n);
+        for (r, yr) in y.iter_mut().enumerate() {
+            *yr = x[r] - self.gamma * crate::linalg::dot(self.p.row(r), x);
+        }
+    }
+
+    fn diag(&self, out: &mut [f64]) {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = 1.0 - self.gamma * self.p[(i, i)];
+        }
+    }
+
+    fn local_block(&self) -> Csr {
+        Csr::from_row_lists(self.p.nrows(), self.materialize_rows())
+    }
+
+    fn materialize_rows(&self) -> Vec<Vec<(usize, f64)>> {
+        let n = self.p.nrows();
+        (0..n)
+            .map(|r| {
+                let mut row: Vec<(usize, f64)> = Vec::with_capacity(n + 1);
+                row.push((r, 1.0));
+                for (c, &v) in self.p.row(r).iter().enumerate() {
+                    if v != 0.0 {
+                        row.push((c, -self.gamma * v));
+                    }
+                }
+                row
+            })
+            .collect()
+    }
 }
 
 /// Inner solver selector (madupite's `-ksp_type`).
@@ -173,7 +324,7 @@ pub fn solve(
     method: &KspType,
     pc: &Precond,
     comm: &Comm,
-    a: &LinOp,
+    a: &dyn Apply,
     b: &[f64],
     x: &mut [f64],
     tol: &Tolerance,
@@ -231,6 +382,7 @@ pub(crate) mod testmat {
 mod tests {
     use super::*;
     use crate::comm::World;
+    use crate::util::prop;
 
     #[test]
     fn ksp_type_parse() {
@@ -259,7 +411,7 @@ mod tests {
         World::run(2, |comm| {
             let (p, b, part) = testmat::random_policy_system(&comm, 10, 3);
             let a = LinOp::new(&p, 0.0);
-            let mut buf = p.make_buffer();
+            let mut buf = a.make_buffer();
             let nl = part.local_len(comm.rank());
             let mut y = vec![0.0; nl];
             a.apply(&comm, &b, &mut y, &mut buf);
@@ -274,7 +426,7 @@ mod tests {
         World::run(1, |comm| {
             let (p, b, _) = testmat::random_policy_system(&comm, 8, 5);
             let a = LinOp::new(&p, 0.0);
-            let mut buf = p.make_buffer();
+            let mut buf = a.make_buffer();
             let mut r = vec![0.0; 8];
             let nrm = a.residual(&comm, &b, &b, &mut r, &mut buf);
             assert!(nrm < 1e-14);
@@ -284,13 +436,109 @@ mod tests {
     #[test]
     fn linop_diagonal() {
         World::run(1, |comm| {
-            let part = crate::linalg::dist::Partition::new(2, 1);
+            let part = Partition::new(2, 1);
             let rows = vec![vec![(0, 0.5), (1, 0.5)], vec![(1, 1.0)]];
             let p = DistCsr::assemble(&comm, part, rows);
             let a = LinOp::new(&p, 0.9);
             let d = a.diagonal();
             assert!((d[0] - (1.0 - 0.45)).abs() < 1e-15);
             assert!((d[1] - (1.0 - 0.9)).abs() < 1e-15);
+        });
+    }
+
+    #[test]
+    fn linop_materialize_rows_densifies_to_a() {
+        World::run(2, |comm| {
+            let (p, _, part) = testmat::random_policy_system(&comm, 12, 9);
+            let gamma = 0.8;
+            let a = LinOp::new(&p, gamma);
+            let lo = part.lo(comm.rank());
+            let rows = a.materialize_rows();
+            assert_eq!(rows.len(), a.local_rows());
+            // densify and compare against apply on unit vectors (serial
+            // reconstruction is overkill; check the diagonal instead)
+            let mut d = vec![0.0; a.local_rows()];
+            a.diag(&mut d);
+            for (i, row) in rows.iter().enumerate() {
+                let diag: f64 = row
+                    .iter()
+                    .filter(|&&(c, _)| c == lo + i)
+                    .map(|&(_, v)| v)
+                    .sum();
+                assert!((diag - d[i]).abs() < 1e-14, "row {i}: {diag} vs {}", d[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn dense_op_matches_linop() {
+        // The same transition matrix through DenseOp and assembled LinOp
+        // must give identical apply / diag / residual results.
+        World::run(1, |comm| {
+            let (p, b, _) = testmat::random_policy_system(&comm, 10, 21);
+            let gamma = 0.9;
+            let sparse = LinOp::new(&p, gamma);
+            // densify P (serial world → local columns are global columns)
+            let mut pd = DenseMat::zeros(10, 10);
+            let local = p.local();
+            for r in 0..10 {
+                let (cols, vals) = local.row(r);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    pd[(r, p.global_col(c))] = v;
+                }
+            }
+            let dense = DenseOp::new(&pd, gamma);
+            assert_eq!(dense.local_rows(), sparse.local_rows());
+
+            let x: Vec<f64> = (0..10).map(|i| (i as f64).cos()).collect();
+            let mut ys = vec![0.0; 10];
+            let mut yd = vec![0.0; 10];
+            let mut bs = sparse.make_buffer();
+            let mut bd = dense.make_buffer();
+            sparse.apply(&comm, &x, &mut ys, &mut bs);
+            dense.apply(&comm, &x, &mut yd, &mut bd);
+            prop::close_slices(&ys, &yd, 1e-14).unwrap();
+
+            let mut ds = vec![0.0; 10];
+            let mut dd = vec![0.0; 10];
+            sparse.diag(&mut ds);
+            dense.diag(&mut dd);
+            prop::close_slices(&ds, &dd, 1e-14).unwrap();
+
+            let mut r = vec![0.0; 10];
+            let rs = sparse.residual(&comm, &b, &x, &mut r, &mut bs);
+            let rd = dense.residual(&comm, &b, &x, &mut r, &mut bd);
+            assert!((rs - rd).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn dense_op_solves_through_gmres() {
+        World::run(1, |comm| {
+            let (p, b, _) = testmat::random_policy_system(&comm, 14, 33);
+            let gamma = 0.95;
+            let mut pd = DenseMat::zeros(14, 14);
+            let local = p.local();
+            for r in 0..14 {
+                let (cols, vals) = local.row(r);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    pd[(r, p.global_col(c))] = v;
+                }
+            }
+            let dense = DenseOp::new(&pd, gamma);
+            let mut x = vec![0.0; 14];
+            let tol = Tolerance {
+                atol: 1e-11,
+                rtol: 0.0,
+                max_iters: 1_000,
+            };
+            let stats = gmres::solve(&comm, &dense, &Precond::None, &b, &mut x, &tol, 14);
+            assert!(stats.converged, "final={}", stats.final_residual);
+            // verify against the sparse path
+            let sparse = LinOp::new(&p, gamma);
+            let mut xs = vec![0.0; 14];
+            gmres::solve(&comm, &sparse, &Precond::None, &b, &mut xs, &tol, 14);
+            prop::close_slices(&x, &xs, 1e-8).unwrap();
         });
     }
 

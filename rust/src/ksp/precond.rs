@@ -10,7 +10,7 @@
 //! All preconditioners are built once per policy-evaluation solve (the
 //! matrix `I − γ P_π` changes with the policy) and applied as `z ← M⁻¹ r`.
 
-use super::LinOp;
+use super::Apply;
 use crate::linalg::Csr;
 
 /// Preconditioner selector + state.
@@ -58,29 +58,23 @@ impl PcType {
 }
 
 impl Precond {
-    /// Build a preconditioner for the operator `a`.
-    pub fn build(pc: PcType, a: &LinOp) -> Precond {
+    /// Build a preconditioner for any [`Apply`] operator. Both variants go
+    /// through the trait — [`Apply::diag`] for Jacobi and
+    /// [`Apply::local_block`] for SOR — so matrix-free operators are
+    /// preconditionable without assembling the global system.
+    pub fn build(pc: PcType, a: &dyn Apply) -> Precond {
         match pc {
             PcType::None => Precond::None,
-            PcType::Jacobi => Precond::Jacobi {
-                inv_diag: a.diagonal().iter().map(|&d| safe_inv(d)).collect(),
-            },
-            PcType::Sor => {
-                let nl = a.local_len();
-                let p_local = a.p.local();
-                // Assemble the local block of A, dropping ghost columns.
-                let mut rows: Vec<Vec<(usize, f64)>> = Vec::with_capacity(nl);
-                for i in 0..nl {
-                    let (cols, vals) = p_local.row(i);
-                    let mut row: Vec<(usize, f64)> = vec![(i, 1.0)];
-                    for (&c, &v) in cols.iter().zip(vals) {
-                        if c < nl {
-                            row.push((c, -a.gamma * v));
-                        }
-                    }
-                    rows.push(row);
+            PcType::Jacobi => {
+                let mut d = vec![0.0; a.local_rows()];
+                a.diag(&mut d);
+                Precond::Jacobi {
+                    inv_diag: d.iter().map(|&di| safe_inv(di)).collect(),
                 }
-                let local_a = Csr::from_row_lists(nl, rows);
+            }
+            PcType::Sor => {
+                let local_a = a.local_block();
+                let nl = local_a.nrows();
                 let inv_diag = (0..nl).map(|i| safe_inv(local_a.get(i, i))).collect();
                 Precond::Sor {
                     local_a,

@@ -6,23 +6,23 @@
 //! special cases (DESIGN.md §5.2). Converges for any ρ(I − ωM⁻¹A) < 1; for
 //! the MDP operator the unpreconditioned rate is γ.
 
-use super::{KspStats, LinOp, Precond, Tolerance};
+use super::{Apply, KspStats, Precond, Tolerance};
 use crate::comm::Comm;
 
 /// Solve `A x = b` by Richardson iteration. `x` carries the warm start.
 pub fn solve(
     comm: &Comm,
-    a: &LinOp,
+    a: &dyn Apply,
     pc: &Precond,
     b: &[f64],
     x: &mut [f64],
     tol: &Tolerance,
     omega: f64,
 ) -> KspStats {
-    let nl = a.local_len();
+    let nl = a.local_rows();
     assert_eq!(b.len(), nl);
     assert_eq!(x.len(), nl);
-    let mut buf = a.p.make_buffer();
+    let mut buf = a.make_buffer();
     let mut r = vec![0.0; nl];
     let mut z = vec![0.0; nl];
 
@@ -50,15 +50,22 @@ pub fn solve(
 /// Run exactly `sweeps` unpreconditioned ω=1 Richardson sweeps with **no**
 /// convergence test (the modified-policy-iteration inner step — mdpsolver's
 /// only mode). Cheaper than `solve` because it skips residual norms: each
-/// sweep is `x ← b + γ P x` directly.
-pub fn fixed_sweeps(comm: &Comm, a: &LinOp, b: &[f64], x: &mut [f64], sweeps: usize) -> KspStats {
-    let nl = a.local_len();
-    let mut buf = a.p.make_buffer();
-    let mut px = vec![0.0; nl];
+/// sweep is `x ← b + γ P x`, recovered operator-agnostically from
+/// `A = I − γP` as `x ← b + (x − A x)`.
+pub fn fixed_sweeps(
+    comm: &Comm,
+    a: &dyn Apply,
+    b: &[f64],
+    x: &mut [f64],
+    sweeps: usize,
+) -> KspStats {
+    let nl = a.local_rows();
+    let mut buf = a.make_buffer();
+    let mut ax = vec![0.0; nl];
     for _ in 0..sweeps {
-        a.p.spmv(comm, x, &mut px, &mut buf);
+        a.apply(comm, x, &mut ax, &mut buf);
         for i in 0..nl {
-            x[i] = b[i] + a.gamma * px[i];
+            x[i] = b[i] + x[i] - ax[i];
         }
     }
     KspStats {
@@ -76,6 +83,7 @@ mod tests {
     use crate::comm::World;
     use crate::ksp::precond::PcType;
     use crate::ksp::testmat::random_policy_system;
+    use crate::ksp::LinOp;
     use crate::linalg::dist::dist_norm_inf;
     use crate::util::prop;
 

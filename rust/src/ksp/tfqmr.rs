@@ -6,7 +6,7 @@
 //! oscillate. Unpreconditioned (madupite exposes it the same way through
 //! PETSc; preconditioned TFQMR adds little for these systems).
 
-use super::{KspStats, LinOp, Tolerance};
+use super::{Apply, KspStats, Tolerance};
 use crate::comm::Comm;
 use crate::linalg::dist::{dist_dot, dist_norm2};
 
@@ -18,11 +18,11 @@ use crate::linalg::dist::{dist_dot, dist_norm2};
 /// current iterate when a cycle ends by breakdown or stagnation, up to the
 /// iteration budget. This mirrors how PETSc users wrap `-ksp_type tfqmr`
 /// in practice.
-pub fn solve(comm: &Comm, a: &LinOp, b: &[f64], x: &mut [f64], tol: &Tolerance) -> KspStats {
-    let nl = a.local_len();
+pub fn solve(comm: &Comm, a: &dyn Apply, b: &[f64], x: &mut [f64], tol: &Tolerance) -> KspStats {
+    let nl = a.local_rows();
     assert_eq!(b.len(), nl);
     assert_eq!(x.len(), nl);
-    let mut buf = a.p.make_buffer();
+    let mut buf = a.make_buffer();
     let mut stats = KspStats::default();
     let mut r = vec![0.0; nl];
 
@@ -49,7 +49,7 @@ pub fn solve(comm: &Comm, a: &LinOp, b: &[f64], x: &mut [f64], tol: &Tolerance) 
 #[allow(clippy::too_many_arguments)]
 fn cycle(
     comm: &Comm,
-    a: &LinOp,
+    a: &dyn Apply,
     b: &[f64],
     x: &mut [f64],
     target: f64,
@@ -58,7 +58,7 @@ fn cycle(
     r: &mut [f64],
     buf: &mut crate::linalg::dist::GhostBuf,
 ) -> f64 {
-    let nl = a.local_len();
+    let nl = a.local_rows();
     let r0norm = a.residual(comm, b, x, r, buf);
     stats.spmvs += 1;
     if r0norm <= target {
@@ -160,7 +160,7 @@ mod tests {
     use super::*;
     use crate::comm::World;
     use crate::ksp::testmat::random_policy_system;
-    use crate::ksp::Precond;
+    use crate::ksp::{LinOp, Precond};
     use crate::util::prop;
 
     fn run(n: usize, size: usize, gamma: f64) -> Vec<f64> {

@@ -82,6 +82,31 @@ pub struct GhostBuf {
     nlocal: usize,
 }
 
+impl GhostBuf {
+    /// Buffer for an operator with `nlocal` owned entries and `nghost`
+    /// ghost entries. Operators that own a [`DistCsr`] should prefer
+    /// [`DistCsr::make_buffer`]; this constructor serves matrix-free and
+    /// dense operators that size their buffers directly.
+    pub fn new(nlocal: usize, nghost: usize) -> GhostBuf {
+        GhostBuf {
+            xbuf: vec![0.0; nlocal + nghost],
+            nlocal,
+        }
+    }
+
+    /// The concatenated `[owned | ghost]` x-vector. Ghost entries are only
+    /// valid after [`DistCsr::update_ghosts`] for the matching matrix;
+    /// matrix-free kernels index it with the matrix's remapped columns.
+    pub fn x(&self) -> &[f64] {
+        &self.xbuf
+    }
+
+    /// Number of locally owned entries at the front of [`Self::x`].
+    pub fn nlocal(&self) -> usize {
+        self.nlocal
+    }
+}
+
 /// Distributed CSR matrix: local row block, global columns ghost-remapped.
 pub struct DistCsr {
     rank: usize,

@@ -24,7 +24,7 @@ use madupite::models::{
     garnet::GarnetSpec, gridworld::GridSpec, inventory::InventorySpec, queueing::QueueSpec,
     replacement::ReplacementSpec, sis::SisSpec, traffic::TrafficSpec, ModelGenerator,
 };
-use madupite::solver::{gather_result, solve_dist, Method, SolveOptions};
+use madupite::solver::{gather_result, solve_dist, EvalBackend, Method, SolveOptions};
 use madupite::util::args::Options;
 use std::sync::Arc;
 
@@ -64,6 +64,8 @@ fn print_help() {
          \x20 artifacts [-dir artifacts]  (list + smoke-compile PJRT artifacts)\n\n\
          common options: -gamma G -atol T -alpha A -adaptive_forcing\n\
          \x20               -ksp_type K -pc_type P -objective min|max\n\
+         \x20               -eval_backend matfree|assembled  (policy-evaluation\n\
+         \x20               operator: fused matrix-free vs cached P_pi CSR)\n\
          model options:  -rows/-cols/-seed (maze, grid), -population (sis),\n\
          \x20               -capacity (traffic, inventory, queueing),\n\
          \x20               -num_states (replacement, garnet),\n\
@@ -137,6 +139,7 @@ fn parse_method(opts: &Options) -> Result<Method, String> {
 fn parse_solve_options(opts: &Options) -> Result<SolveOptions, String> {
     Ok(SolveOptions {
         method: parse_method(opts)?,
+        eval_backend: EvalBackend::parse(&opts.get_str("eval_backend", "matfree"))?,
         atol: opts.get_f64("atol", 1e-8).map_err(err_str)?,
         max_outer: opts.get_usize("max_iter_pi", 1000).map_err(err_str)?,
         alpha: opts.get_f64("alpha", 1e-4).map_err(err_str)?,
@@ -177,9 +180,10 @@ fn cmd_solve(opts: &Options) -> Result<(), String> {
     };
 
     println!(
-        "method={} states={} converged={} outer={} spmvs={} residual={:.3e} \
+        "method={} backend={} states={} converged={} outer={} spmvs={} residual={:.3e} \
          err_bound={:.3e} time={:.3}s comm={}B",
         solve_opts.method.name(),
+        solve_opts.eval_backend.name(),
         result.value.len(),
         result.converged,
         result.outer_iterations,

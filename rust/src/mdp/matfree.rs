@@ -1,0 +1,277 @@
+//! Fused matrix-free policy-evaluation operator (`MatFree` backend).
+//!
+//! madupite keeps its Krylov layer matrix-type-agnostic through PETSc's
+//! shell `Mat`; this module is the payoff of that seam on our side: the
+//! policy system `A = I − γ P_π` applied **directly from the stacked
+//! `(n·m) × n` transition CSR** by indexing rows `s·m + π(s)`, with no
+//! `P_π` materialization at all.
+//!
+//! Versus the assembled backend ([`crate::ksp::LinOp`] over
+//! [`DistMdp::policy_system`]) this removes, per policy change:
+//!
+//! - the **memory** for a second copy of the selected transition rows
+//!   (≈ `nnz/m` entries — the difference between fitting a model per node
+//!   or not at scale), and
+//! - the **setup cost** of a fresh ghost plan + CSR assembly (a collective
+//!   `alltoallv` plus O(nnz/m) copying on every outer iteration in which
+//!   the greedy policy moved).
+//!
+//! The price is the ghost exchange: each apply refreshes the ghosts of the
+//! *stacked* matrix's plan (the union over all `m` actions), which can move
+//! more entries than the assembled `P_π`-only plan. The `bench_ablation`
+//! "eval-backend" cases measure exactly this trade; DESIGN.md §4 has the
+//! selection matrix.
+
+use super::DistMdp;
+use crate::comm::Comm;
+use crate::ksp::Apply;
+use crate::linalg::dist::{GhostBuf, Partition};
+use crate::linalg::Csr;
+
+/// `A = I − γ P_π` applied matrix-free off a [`DistMdp`]'s stacked kernel.
+///
+/// Borrows the MDP and the rank-local greedy policy; construction is O(1)
+/// and communication-free (the ghost plan of the stacked matrix is reused,
+/// which is also what [`DistMdp::bellman_backup`] exchanges through).
+pub struct MatFreePolicyOp<'a> {
+    mdp: &'a DistMdp,
+    policy: &'a [usize],
+}
+
+impl<'a> MatFreePolicyOp<'a> {
+    pub fn new(mdp: &'a DistMdp, policy: &'a [usize]) -> Self {
+        assert_eq!(
+            policy.len(),
+            mdp.local_states(),
+            "policy must cover the rank-local states"
+        );
+        debug_assert!(policy.iter().all(|&a| a < mdp.n_actions()));
+        MatFreePolicyOp { mdp, policy }
+    }
+
+    /// The stacked-CSR row index backing local state `s` under π.
+    #[inline]
+    fn row_of(&self, s: usize) -> usize {
+        s * self.mdp.n_actions() + self.policy[s]
+    }
+}
+
+impl Apply for MatFreePolicyOp<'_> {
+    fn local_rows(&self) -> usize {
+        self.mdp.local_states()
+    }
+
+    fn partition(&self) -> Partition {
+        self.mdp.partition()
+    }
+
+    fn make_buffer(&self) -> GhostBuf {
+        // Sized for the stacked matrix's ghost plan (superset of P_π's).
+        self.mdp.make_buffer()
+    }
+
+    fn apply(&self, comm: &Comm, x: &[f64], y: &mut [f64], buf: &mut GhostBuf) {
+        let nl = self.local_rows();
+        assert_eq!(x.len(), nl);
+        assert_eq!(y.len(), nl);
+        let trans = self.mdp.transitions();
+        trans.update_ghosts(comm, x, buf);
+        let local = trans.local();
+        let xb = buf.x();
+        let gamma = self.mdp.gamma();
+        for (s, ys) in y.iter_mut().enumerate() {
+            let (cols, vals) = local.row(self.row_of(s));
+            let mut px = 0.0;
+            for (&c, &v) in cols.iter().zip(vals) {
+                px += v * xb[c];
+            }
+            *ys = x[s] - gamma * px;
+        }
+    }
+
+    fn diag(&self, out: &mut [f64]) {
+        // Owned columns are remapped to [0, nlocal): the diagonal of local
+        // state s sits at local column s of its selected stacked row.
+        let local = self.mdp.transitions().local();
+        let gamma = self.mdp.gamma();
+        for (s, o) in out.iter_mut().enumerate() {
+            *o = 1.0 - gamma * local.get(self.row_of(s), s);
+        }
+    }
+
+    fn local_block(&self) -> Csr {
+        let nl = self.local_rows();
+        let local = self.mdp.transitions().local();
+        let gamma = self.mdp.gamma();
+        let mut rows: Vec<Vec<(usize, f64)>> = Vec::with_capacity(nl);
+        for s in 0..nl {
+            let (cols, vals) = local.row(self.row_of(s));
+            let mut row: Vec<(usize, f64)> = vec![(s, 1.0)];
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c < nl {
+                    row.push((c, -gamma * v));
+                }
+            }
+            rows.push(row);
+        }
+        Csr::from_row_lists(nl, rows)
+    }
+
+    fn materialize_rows(&self) -> Vec<Vec<(usize, f64)>> {
+        let nl = self.local_rows();
+        let trans = self.mdp.transitions();
+        let local = trans.local();
+        let lo = self.partition().lo(trans.rank());
+        let gamma = self.mdp.gamma();
+        (0..nl)
+            .map(|s| {
+                let (cols, vals) = local.row(self.row_of(s));
+                let mut row: Vec<(usize, f64)> = Vec::with_capacity(cols.len() + 1);
+                row.push((lo + s, 1.0));
+                for (&c, &v) in cols.iter().zip(vals) {
+                    row.push((trans.global_col(c), -gamma * v));
+                }
+                row
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::World;
+    use crate::ksp::{LinOp, Precond, Tolerance};
+    use crate::mdp::fixtures::random_mdp;
+    use crate::util::prng::Xoshiro256pp;
+    use crate::util::prop;
+    use std::sync::Arc;
+
+    /// Deterministic random local policy for the rank's state range.
+    fn random_local_policy(lo: usize, hi: usize, m: usize, seed: u64) -> Vec<usize> {
+        (lo..hi)
+            .map(|s| {
+                let mut rng = Xoshiro256pp::new(seed ^ (s as u64).wrapping_mul(0x5851));
+                rng.index(m)
+            })
+            .collect()
+    }
+
+    /// MatFreePolicyOp must agree with LinOp over the assembled P_π on
+    /// apply, diag and residual — for random policies, any world size.
+    #[test]
+    fn matches_assembled_linop() {
+        for (seed, size) in [(11u64, 1usize), (12, 2), (13, 3)] {
+            let mdp = Arc::new(random_mdp(seed, 29, 4, 0.93));
+            let out = World::run(size, move |comm| {
+                let d = DistMdp::from_serial(&comm, &mdp);
+                let part = d.partition();
+                let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+                let nl = hi - lo;
+                let policy = random_local_policy(lo, hi, 4, seed);
+                let x: Vec<f64> = (lo..hi).map(|i| (i as f64 * 0.7).sin()).collect();
+                let b: Vec<f64> = (lo..hi).map(|i| (i as f64 * 0.3).cos()).collect();
+
+                // assembled path
+                let (p_pi, _) = d.policy_system(&comm, &policy);
+                let asm = LinOp::new(&p_pi, d.gamma());
+                let mut buf_a = asm.make_buffer();
+                let mut y_a = vec![0.0; nl];
+                asm.apply(&comm, &x, &mut y_a, &mut buf_a);
+                let mut d_a = vec![0.0; nl];
+                asm.diag(&mut d_a);
+                let mut r = vec![0.0; nl];
+                let res_a = asm.residual(&comm, &b, &x, &mut r, &mut buf_a);
+
+                // matrix-free path
+                let mf = MatFreePolicyOp::new(&d, &policy);
+                assert_eq!(mf.local_rows(), nl);
+                let mut buf_m = mf.make_buffer();
+                let mut y_m = vec![0.0; nl];
+                mf.apply(&comm, &x, &mut y_m, &mut buf_m);
+                let mut d_m = vec![0.0; nl];
+                mf.diag(&mut d_m);
+                let res_m = mf.residual(&comm, &b, &x, &mut r, &mut buf_m);
+
+                prop::close_slices(&y_a, &y_m, 1e-13).unwrap();
+                prop::close_slices(&d_a, &d_m, 1e-13).unwrap();
+                assert!((res_a - res_m).abs() < 1e-12, "{res_a} vs {res_m}");
+            });
+            assert_eq!(out.len(), size);
+        }
+    }
+
+    /// Property: for random MDP shapes and random policies, the two
+    /// operators produce identical images.
+    #[test]
+    fn prop_apply_equals_assembled() {
+        prop::forall("matfree apply == assembled apply", |rng| {
+            let n = 3 + rng.index(20);
+            let m = 1 + rng.index(4);
+            let gamma = rng.range_f64(0.0, 0.99);
+            let seed = rng.next_u64();
+            let pol_seed = rng.next_u64();
+            let mdp = Arc::new(random_mdp(seed, n, m, gamma));
+            let out = World::run(1, move |comm| {
+                let d = DistMdp::from_serial(&comm, &mdp);
+                let policy = random_local_policy(0, n, m, pol_seed);
+                let x: Vec<f64> = (0..n).map(|i| ((i * 7 + 1) as f64).sin()).collect();
+                let (p_pi, _) = d.policy_system(&comm, &policy);
+                let asm = LinOp::new(&p_pi, d.gamma());
+                let mf = MatFreePolicyOp::new(&d, &policy);
+                let mut y_a = vec![0.0; n];
+                let mut y_m = vec![0.0; n];
+                let mut buf_a = asm.make_buffer();
+                let mut buf_m = mf.make_buffer();
+                asm.apply(&comm, &x, &mut y_a, &mut buf_a);
+                mf.apply(&comm, &x, &mut y_m, &mut buf_m);
+                (y_a, y_m)
+            });
+            let (y_a, y_m) = &out[0];
+            prop::close_slices(y_a, y_m, 1e-12)
+        });
+    }
+
+    /// The matrix-free operator drives every Krylov solver to the same
+    /// solution as the assembled one.
+    #[test]
+    fn krylov_solvers_run_matrix_free() {
+        let mdp = Arc::new(random_mdp(31, 24, 3, 0.95));
+        let out = World::run(2, move |comm| {
+            let d = DistMdp::from_serial(&comm, &mdp);
+            let part = d.partition();
+            let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+            let nl = hi - lo;
+            let policy = random_local_policy(lo, hi, 3, 5);
+            let g = d.policy_costs(&policy);
+            let (p_pi, g2) = d.policy_system(&comm, &policy);
+            prop::close_slices(&g, &g2, 0.0).unwrap();
+            let tol = Tolerance {
+                atol: 1e-11,
+                rtol: 0.0,
+                max_iters: 5_000,
+            };
+
+            let mf = MatFreePolicyOp::new(&d, &policy);
+            let asm = LinOp::new(&p_pi, d.gamma());
+            let mut sols: Vec<Vec<f64>> = Vec::new();
+            for op in [&mf as &dyn Apply, &asm as &dyn Apply] {
+                let mut x = vec![0.0; nl];
+                let s = crate::ksp::gmres::solve(&comm, op, &Precond::None, &g, &mut x, &tol, 20);
+                assert!(s.converged, "gmres not converged matrix-free");
+                sols.push(x.clone());
+                let mut xb = vec![0.0; nl];
+                let s = crate::ksp::bicgstab::solve(&comm, op, &Precond::None, &g, &mut xb, &tol);
+                assert!(s.converged, "bicgstab not converged");
+                sols.push(xb);
+            }
+            sols
+        });
+        for rank_sols in &out {
+            let reference = &rank_sols[0];
+            for s in &rank_sols[1..] {
+                prop::close_slices(reference, s, 1e-7).unwrap();
+            }
+        }
+    }
+}

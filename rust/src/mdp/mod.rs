@@ -14,6 +14,9 @@
 //!   rank-sliced distributed loading.
 
 pub mod io;
+pub mod matfree;
+
+pub use matfree::MatFreePolicyOp;
 
 use crate::comm::Comm;
 use crate::linalg::dist::{DistCsr, GhostBuf, Partition};
@@ -396,6 +399,21 @@ impl DistMdp {
             local_res = local_res.max((best - v_local[s]).abs());
         }
         comm.max(local_res)
+    }
+
+    /// Rank-local policy costs `g_π` (the RHS of the evaluation system) —
+    /// the matrix-free counterpart of [`Self::policy_system`]'s second
+    /// return: no matrix assembly, no communication.
+    pub fn policy_costs(&self, policy: &[usize]) -> Vec<f64> {
+        let nl = self.local_states();
+        assert_eq!(policy.len(), nl);
+        (0..nl)
+            .map(|s| {
+                let a = policy[s];
+                debug_assert!(a < self.n_actions);
+                self.costs[s * self.n_actions + a]
+            })
+            .collect()
     }
 
     /// Extract the distributed policy system `(P_π, g_π)` for the current

@@ -19,8 +19,8 @@
 
 use crate::comm::{Comm, World};
 use crate::ksp::precond::PcType;
-use crate::ksp::{self, KspType, LinOp, Precond, Tolerance};
-use crate::mdp::{DistMdp, Mdp};
+use crate::ksp::{self, Apply, KspType, LinOp, Precond, Tolerance};
+use crate::mdp::{DistMdp, MatFreePolicyOp, Mdp};
 use crate::util::json::Json;
 use std::sync::Arc;
 use std::time::Instant;
@@ -77,10 +77,45 @@ impl Method {
     }
 }
 
+/// How the policy-evaluation operator `I − γ P_π` is realized
+/// (`-eval_backend`, DESIGN.md §4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum EvalBackend {
+    /// Apply the operator straight off the stacked `(n·m)×n` transition
+    /// kernel by indexing rows `s·m + π(s)` — no `P_π` copy in memory, no
+    /// per-policy-change assembly ([`MatFreePolicyOp`]). The default.
+    #[default]
+    MatFree,
+    /// Materialize `P_π` as a distributed CSR (with its own tighter ghost
+    /// plan) and cache it across outer iterations while the greedy policy
+    /// is unchanged ([`LinOp`] over [`DistMdp::policy_system`]).
+    Assembled,
+}
+
+impl EvalBackend {
+    /// Parse the `-eval_backend` option string.
+    pub fn parse(name: &str) -> Result<EvalBackend, String> {
+        Ok(match name {
+            "matfree" | "matrix-free" | "mat_free" => EvalBackend::MatFree,
+            "assembled" | "explicit" => EvalBackend::Assembled,
+            other => return Err(format!("unknown eval_backend '{other}'")),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvalBackend::MatFree => "matfree",
+            EvalBackend::Assembled => "assembled",
+        }
+    }
+}
+
 /// Solver options (madupite's options database, DESIGN §4).
 #[derive(Clone, Debug)]
 pub struct SolveOptions {
     pub method: Method,
+    /// Operator realization for the evaluation step (`-eval_backend`).
+    pub eval_backend: EvalBackend,
     /// Outer stop: ‖TV − V‖∞ < `atol`.
     pub atol: f64,
     /// Outer iteration cap (`-max_iter_pi`).
@@ -103,6 +138,7 @@ impl Default for SolveOptions {
     fn default() -> Self {
         SolveOptions {
             method: Method::ipi_gmres(),
+            eval_backend: EvalBackend::MatFree,
             atol: 1e-8,
             max_outer: 1_000,
             alpha: 1e-4,
@@ -151,9 +187,7 @@ impl SolveResult {
     pub fn error_bound(&self) -> f64 {
         self.residual / (1.0 - self.gamma)
     }
-}
 
-impl SolveResult {
     /// JSON report (EXPERIMENTS.md tables are generated from these).
     pub fn to_json(&self, label: &str) -> Json {
         Json::obj(vec![
@@ -249,9 +283,11 @@ pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolve
         }
 
         // -- (inexact) policy evaluation ------------------------------------
-        // Refresh the cached policy system when the greedy policy changed
-        // on any rank (collective decision so every rank rebuilds together).
-        if !matches!(opts.method, Method::Vi) {
+        // The Assembled backend materializes + caches P_π; refresh it when
+        // the greedy policy changed on any rank (collective decision so
+        // every rank rebuilds together). MatFree needs no assembly at all.
+        let needs_eval = !matches!(opts.method, Method::Vi);
+        if needs_eval && opts.eval_backend == EvalBackend::Assembled {
             let changed_local = prev_policy != policy;
             let changed = comm.max(if changed_local { 1.0 } else { 0.0 }) > 0.0;
             if changed || cached_system.is_none() {
@@ -260,46 +296,61 @@ pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolve
                 prev_policy.extend_from_slice(&policy);
             }
         }
-        let (inner_iters, inner_spmvs) = match &opts.method {
-            Method::Vi => {
-                v.copy_from_slice(&tv);
-                (0, 0)
-            }
-            Method::Mpi { sweeps } => {
-                let (p_pi, g_pi) = cached_system.as_ref().unwrap();
-                let a = LinOp::new(p_pi, mdp.gamma());
-                // start the sweeps from TV (the Puterman mPI definition)
-                v.copy_from_slice(&tv);
-                let stats = ksp::richardson::fixed_sweeps(comm, &a, g_pi, &mut v, *sweeps);
-                (stats.iterations, stats.spmvs)
-            }
-            Method::ExactPi => {
-                let (p_pi, g_pi) = cached_system.as_ref().unwrap();
-                let a = LinOp::new(p_pi, mdp.gamma());
-                let stats = ksp::direct::solve(comm, &a, g_pi, &mut v);
-                (stats.iterations, stats.spmvs)
-            }
-            Method::Ipi { ksp: ktype, pc } => {
-                let (p_pi, g_pi) = cached_system.as_ref().unwrap();
-                let a = LinOp::new(p_pi, mdp.gamma());
-                let precond = Precond::build(*pc, &a);
-                // Eisenstat–Walker choice 2 (safeguarded): contraction-
-                // driven forcing, floored by the configured α.
-                let alpha_k = if opts.adaptive_forcing && prev_residual.is_finite() {
-                    let ratio = (residual / prev_residual).powi(2);
-                    ratio.clamp(opts.alpha, 0.1)
-                } else {
-                    opts.alpha
-                };
-                let tol = Tolerance {
-                    atol: alpha_k * residual,
-                    rtol: 0.0,
-                    max_iters: opts.max_inner,
-                };
-                // warm start from TV (one backup ahead of V)
-                v.copy_from_slice(&tv);
-                let stats = ksp::solve(ktype, &precond, comm, &a, g_pi, &mut v, &tol);
-                (stats.iterations, stats.spmvs)
+        let (inner_iters, inner_spmvs) = if !needs_eval {
+            v.copy_from_slice(&tv);
+            (0, 0)
+        } else {
+            // Realize the evaluation operator + RHS for the configured
+            // backend; every method below sees only `&dyn Apply`.
+            let mf_op: MatFreePolicyOp<'_>;
+            let mf_g: Vec<f64>;
+            let asm_op: LinOp<'_>;
+            let (a, g_pi): (&dyn Apply, &[f64]) = match opts.eval_backend {
+                EvalBackend::MatFree => {
+                    mf_g = mdp.policy_costs(&policy);
+                    mf_op = MatFreePolicyOp::new(mdp, &policy);
+                    (&mf_op, &mf_g)
+                }
+                EvalBackend::Assembled => {
+                    let (p_pi, g) = cached_system.as_ref().unwrap();
+                    asm_op = LinOp::new(p_pi, mdp.gamma());
+                    (&asm_op, g.as_slice())
+                }
+            };
+            match &opts.method {
+                Method::Vi => unreachable!("handled by needs_eval"),
+                Method::Mpi { sweeps } => {
+                    // start the sweeps from TV (the Puterman mPI definition)
+                    v.copy_from_slice(&tv);
+                    let stats = ksp::richardson::fixed_sweeps(comm, a, g_pi, &mut v, *sweeps);
+                    (stats.iterations, stats.spmvs)
+                }
+                Method::ExactPi => {
+                    let stats = ksp::direct::solve(comm, a, g_pi, &mut v);
+                    (stats.iterations, stats.spmvs)
+                }
+                Method::Ipi { ksp: ktype, pc } => {
+                    let precond = Precond::build(*pc, a);
+                    // Eisenstat–Walker choice 2 (safeguarded): contraction-
+                    // driven forcing, capped at 0.1 and floored by the
+                    // configured α. Written as min→max because
+                    // `f64::clamp(lo, hi)` panics whenever α > 0.1.
+                    let alpha_k = if opts.adaptive_forcing && prev_residual.is_finite() {
+                        let ratio = (residual / prev_residual).powi(2);
+                        ratio.min(0.1).max(opts.alpha)
+                    } else {
+                        opts.alpha
+                    };
+                    let tol = Tolerance {
+                        atol: alpha_k * residual,
+                        rtol: 0.0,
+                        max_iters: opts.max_inner,
+                    };
+                    // warm start from TV (one backup ahead of V)
+                    v.copy_from_slice(&tv);
+                    let stats = ksp::solve(ktype, &precond, comm, a, g_pi, &mut v, &tol);
+                    (stats.iterations, stats.spmvs)
+                }
             }
         };
         total_spmvs += inner_spmvs;
@@ -588,6 +639,67 @@ mod tests {
             adaptive.total_spmvs,
             fixed.total_spmvs
         );
+    }
+
+    #[test]
+    fn adaptive_forcing_alpha_above_cap_does_not_panic() {
+        // Regression: `ratio.clamp(alpha, 0.1)` panicked whenever the user
+        // set alpha > 0.1 (clamp requires lo <= hi). The safeguard must
+        // instead floor at alpha and still converge.
+        let mdp = random_mdp(19, 40, 3, 0.97);
+        for alpha in [0.11, 0.5, 0.9] {
+            let r = solve_serial(
+                &mdp,
+                &SolveOptions {
+                    method: Method::ipi_gmres(),
+                    atol: 1e-8,
+                    alpha,
+                    adaptive_forcing: true,
+                    max_outer: 100_000,
+                    ..Default::default()
+                },
+            );
+            assert!(r.converged, "alpha={alpha} did not converge");
+        }
+    }
+
+    #[test]
+    fn eval_backends_agree_all_methods() {
+        let mdp = random_mdp(23, 35, 3, 0.95);
+        for method in methods_under_test() {
+            let mut values: Vec<Vec<f64>> = Vec::new();
+            for backend in [EvalBackend::MatFree, EvalBackend::Assembled] {
+                let r = solve_serial(
+                    &mdp,
+                    &SolveOptions {
+                        method: method.clone(),
+                        eval_backend: backend,
+                        atol: 1e-9,
+                        ..Default::default()
+                    },
+                );
+                assert!(
+                    r.converged,
+                    "{}/{} did not converge",
+                    method.name(),
+                    backend.name()
+                );
+                values.push(r.value);
+            }
+            prop::close_slices(&values[0], &values[1], 1e-7)
+                .unwrap_or_else(|e| panic!("{} backends disagree: {e}", method.name()));
+        }
+    }
+
+    #[test]
+    fn eval_backend_parse() {
+        assert_eq!(EvalBackend::parse("matfree").unwrap(), EvalBackend::MatFree);
+        assert_eq!(
+            EvalBackend::parse("assembled").unwrap(),
+            EvalBackend::Assembled
+        );
+        assert!(EvalBackend::parse("gpu").is_err());
+        assert_eq!(EvalBackend::default().name(), "matfree");
     }
 
     #[test]

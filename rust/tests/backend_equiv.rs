@@ -1,0 +1,226 @@
+//! Evaluation-backend equivalence: the fused matrix-free policy operator
+//! and the assembled `P_π` CSR must be *indistinguishable* through the
+//! public API — same values, same policies, for every bundled model family
+//! and every outer method, serial and distributed.
+
+use madupite::comm::World;
+use madupite::ksp::precond::PcType;
+use madupite::ksp::{Apply, KspType, LinOp};
+use madupite::mdp::{DistMdp, MatFreePolicyOp};
+use madupite::models::{
+    garnet::GarnetSpec, gridworld::GridSpec, inventory::InventorySpec, queueing::QueueSpec,
+    replacement::ReplacementSpec, sis::SisSpec, traffic::TrafficSpec, ModelGenerator,
+};
+use madupite::solver::{
+    gather_result, solve_dist, solve_serial, EvalBackend, Method, SolveOptions,
+};
+use madupite::util::prng::Xoshiro256pp;
+use std::sync::Arc;
+
+fn close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert!(
+            (a[i] - b[i]).abs() <= tol * (1.0 + a[i].abs().max(b[i].abs())),
+            "{what}: element {i}: {} vs {}",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+fn models() -> Vec<(&'static str, Box<dyn ModelGenerator>, f64)> {
+    vec![
+        ("maze", Box::new(GridSpec::maze(8, 8, 3)), 0.95),
+        ("grid", Box::new(GridSpec::open(6, 7)), 0.9),
+        ("sis", Box::new(SisSpec::standard(30, 3)), 0.95),
+        ("traffic", Box::new(TrafficSpec::standard(4)), 0.95),
+        ("garnet", Box::new(GarnetSpec::new(40, 3, 4, 7)), 0.95),
+        ("inventory", Box::new(InventorySpec::standard(8)), 0.95),
+        ("queueing", Box::new(QueueSpec::standard(8)), 0.95),
+        ("replacement", Box::new(ReplacementSpec::standard(12)), 0.9),
+    ]
+}
+
+fn methods() -> Vec<Method> {
+    vec![
+        Method::Vi,
+        Method::Mpi { sweeps: 10 },
+        Method::ExactPi,
+        Method::ipi_gmres(),
+        Method::ipi_bicgstab(),
+        Method::ipi_tfqmr(),
+        Method::Ipi {
+            ksp: KspType::Richardson { omega: 1.0 },
+            pc: PcType::Jacobi,
+        },
+        Method::Ipi {
+            ksp: KspType::Gmres { restart: 15 },
+            pc: PcType::Sor,
+        },
+    ]
+}
+
+/// The headline property: per model × per method, the matrix-free and
+/// assembled backends produce identical values and policies within atol.
+#[test]
+fn backends_identical_per_model_per_method() {
+    let atol = 1e-9;
+    for (name, gen, gamma) in &models() {
+        let mdp = gen.build_serial(*gamma);
+        for method in &methods() {
+            let mut values: Vec<Vec<f64>> = Vec::new();
+            let mut policies: Vec<Vec<usize>> = Vec::new();
+            for backend in [EvalBackend::MatFree, EvalBackend::Assembled] {
+                let r = solve_serial(
+                    &mdp,
+                    &SolveOptions {
+                        method: method.clone(),
+                        eval_backend: backend,
+                        atol,
+                        max_outer: 100_000,
+                        ..Default::default()
+                    },
+                );
+                assert!(
+                    r.converged,
+                    "{name}/{}/{} did not converge",
+                    method.name(),
+                    backend.name()
+                );
+                assert!(
+                    r.residual < atol,
+                    "{name}/{}/{}: residual {}",
+                    method.name(),
+                    backend.name(),
+                    r.residual
+                );
+                values.push(r.value);
+                policies.push(r.policy);
+            }
+            close(
+                &values[0],
+                &values[1],
+                1e-7,
+                &format!("{name}/{}", method.name()),
+            );
+            assert_eq!(
+                policies[0],
+                policies[1],
+                "{name}/{}: greedy policies differ between backends",
+                method.name()
+            );
+        }
+    }
+}
+
+/// Backend invariance must also hold distributed (the matrix-free ghost
+/// exchange goes through the stacked plan, the assembled one through a
+/// fresh P_π plan — results must not care).
+#[test]
+fn backends_identical_distributed() {
+    let spec = Arc::new(GarnetSpec::new(120, 3, 5, 13));
+    let mut reference: Option<Vec<f64>> = None;
+    for ranks in [1usize, 3] {
+        for backend in [EvalBackend::MatFree, EvalBackend::Assembled] {
+            let spec2 = Arc::clone(&spec);
+            let opts = SolveOptions {
+                method: Method::ipi_gmres(),
+                eval_backend: backend,
+                atol: 1e-9,
+                ..Default::default()
+            };
+            let mut out = World::run(ranks, move |comm| {
+                let mdp = spec2.build_dist(&comm, 0.97);
+                let local = solve_dist(&comm, &mdp, &opts);
+                gather_result(&comm, local)
+            });
+            let r = out.swap_remove(0);
+            assert!(r.converged, "ranks={ranks} {}", backend.name());
+            match &reference {
+                None => reference = Some(r.value),
+                Some(v) => close(
+                    v,
+                    &r.value,
+                    1e-7,
+                    &format!("ranks={ranks}/{}", backend.name()),
+                ),
+            }
+        }
+    }
+}
+
+/// Raw operator equivalence across the public API: MatFreePolicyOp::apply
+/// must match LinOp::apply over the assembled P_π for random policies on
+/// every model family, serial and on 3 ranks.
+#[test]
+fn matfree_apply_equals_assembled_apply_random_policies() {
+    for (name, gen, gamma) in &models() {
+        let mdp = Arc::new(gen.build_serial(*gamma));
+        for (ranks, seed) in [(1usize, 5u64), (3, 6)] {
+            let mdp2 = Arc::clone(&mdp);
+            let name2 = name.to_string();
+            World::run(ranks, move |comm| {
+                let d = DistMdp::from_serial(&comm, &mdp2);
+                let part = d.partition();
+                let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+                let nl = hi - lo;
+                let m = d.n_actions();
+                let policy: Vec<usize> = (lo..hi)
+                    .map(|s| {
+                        let mut rng = Xoshiro256pp::new(seed ^ (s as u64).wrapping_mul(0x9E37));
+                        rng.index(m)
+                    })
+                    .collect();
+                let x: Vec<f64> = (lo..hi).map(|i| (i as f64 * 0.13).sin()).collect();
+
+                let (p_pi, g_asm) = d.policy_system(&comm, &policy);
+                let asm = LinOp::new(&p_pi, d.gamma());
+                let mf = MatFreePolicyOp::new(&d, &policy);
+
+                let mut y_asm = vec![0.0; nl];
+                let mut y_mf = vec![0.0; nl];
+                let mut buf_a = asm.make_buffer();
+                let mut buf_m = mf.make_buffer();
+                asm.apply(&comm, &x, &mut y_asm, &mut buf_a);
+                mf.apply(&comm, &x, &mut y_mf, &mut buf_m);
+                for i in 0..nl {
+                    assert!(
+                        (y_asm[i] - y_mf[i]).abs() < 1e-12,
+                        "{name2} ranks={}: apply[{i}]: {} vs {}",
+                        part.size(),
+                        y_asm[i],
+                        y_mf[i]
+                    );
+                }
+
+                // RHS agrees too
+                let g_mf = d.policy_costs(&policy);
+                assert_eq!(g_asm, g_mf, "{name2}: g_pi differs");
+            });
+        }
+    }
+}
+
+/// Regression (satellite fix): adaptive forcing with alpha > 0.1 used to
+/// panic inside `f64::clamp`; it must now solve normally through both
+/// backends.
+#[test]
+fn adaptive_forcing_large_alpha_regression() {
+    let mdp = GarnetSpec::new(60, 3, 4, 11).build_serial(0.98);
+    for backend in [EvalBackend::MatFree, EvalBackend::Assembled] {
+        let r = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::ipi_gmres(),
+                eval_backend: backend,
+                alpha: 0.5,
+                adaptive_forcing: true,
+                atol: 1e-8,
+                max_outer: 100_000,
+                ..Default::default()
+            },
+        );
+        assert!(r.converged, "{}", backend.name());
+    }
+}
