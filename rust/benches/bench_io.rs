@@ -1,0 +1,108 @@
+//! E8 — offline data pipeline throughput (DESIGN.md §6): the `.mdpb` v2
+//! read/write paths that feed every out-of-core workload.
+//!
+//! - **generate_stream**: `ModelGenerator::write_mdpb` — two generator
+//!   passes + chunked seek-writes, O(chunk) memory, at several world
+//!   sizes (bytes are identical for all of them by construction).
+//! - **save_serial**: in-memory `Mdp` → file through the same writer.
+//! - **load_serial** vs **load_dist**: full read vs rank-sliced partial
+//!   reads + ghost-plan assembly at several world sizes.
+//!
+//! Reported metric: effective MiB/s against the file size, the number the
+//! "solve MDPs whose data was collected offline" claim (C5) rests on.
+
+use madupite::comm::World;
+use madupite::mdp::{io, Objective};
+use madupite::models::{garnet::GarnetSpec, ModelGenerator};
+use madupite::util::benchkit::Suite;
+use std::sync::Arc;
+
+fn tmpfile(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("madupite-bench-io");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn main() {
+    let mut suite = Suite::new("E8 io pipeline");
+    let (n, m, b) = (100_000usize, 4usize, 5usize);
+    let gamma = 0.99;
+    let spec = Arc::new(GarnetSpec::new(n, m, b, 17));
+
+    // reference file + size (also the load workload below)
+    let ref_path = tmpfile("e8_ref.mdpb");
+    let mdp = spec.build_serial(gamma);
+    io::save(&mdp, &ref_path).unwrap();
+    let file_bytes = std::fs::metadata(&ref_path).unwrap().len() as f64;
+    let mib = file_bytes / (1u64 << 20) as f64;
+    println!(
+        "workload: garnet n={n} m={m} branching={b} → {:.1} MiB on disk",
+        mib
+    );
+
+    // --- streaming generation at several world sizes -----------------------
+    for ranks in [1usize, 2, 4] {
+        let spec2 = Arc::clone(&spec);
+        let path = tmpfile(&format!("e8_gen_r{ranks}.mdpb"));
+        suite.case(&format!("generate_stream/ranks={ranks}"), move || {
+            let spec3 = Arc::clone(&spec2);
+            let p = path.clone();
+            let results = World::run(ranks, move |comm| {
+                spec3
+                    .write_mdpb(&comm, gamma, Objective::Min, &p, io::DEFAULT_CHUNK_ROWS)
+                    .unwrap()
+            });
+            let nnz = results[0].nnz;
+            let bytes = std::fs::metadata(&path).unwrap().len() as f64;
+            vec![
+                ("file_MiB".to_string(), bytes / (1u64 << 20) as f64),
+                ("nnz".to_string(), nnz as f64),
+            ]
+        });
+    }
+
+    // --- in-memory save (the serial writer over an assembled Mdp) ----------
+    {
+        let path = tmpfile("e8_save.mdpb");
+        let mdp2 = mdp.clone();
+        suite.case("save_serial", move || {
+            io::save(&mdp2, &path).unwrap();
+            vec![("file_MiB".to_string(), mib)]
+        });
+    }
+
+    // --- serial load --------------------------------------------------------
+    {
+        let path = ref_path.clone();
+        suite.case("load_serial", move || {
+            let loaded = io::load(&path).unwrap();
+            vec![
+                ("file_MiB".to_string(), mib),
+                ("nnz".to_string(), loaded.transitions().nnz() as f64),
+            ]
+        });
+    }
+
+    // --- rank-sliced distributed load --------------------------------------
+    for ranks in [1usize, 2, 4] {
+        let path = ref_path.clone();
+        suite.case(&format!("load_dist/ranks={ranks}"), move || {
+            let p = path.clone();
+            let storage: usize = World::run(ranks, move |comm| {
+                let d = io::load_dist(&comm, &p).unwrap();
+                d.storage_bytes()
+            })
+            .into_iter()
+            .sum();
+            vec![
+                ("file_MiB".to_string(), mib),
+                (
+                    "storage_MiB".to_string(),
+                    storage as f64 / (1u64 << 20) as f64,
+                ),
+            ]
+        });
+    }
+
+    suite.finish();
+}

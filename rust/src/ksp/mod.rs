@@ -333,7 +333,7 @@ pub fn solve(
         KspType::Richardson { omega } => richardson::solve(comm, a, pc, b, x, tol, *omega),
         KspType::Gmres { restart } => gmres::solve(comm, a, pc, b, x, tol, *restart),
         KspType::BiCgStab => bicgstab::solve(comm, a, pc, b, x, tol),
-        KspType::Tfqmr => tfqmr::solve(comm, a, b, x, tol),
+        KspType::Tfqmr => tfqmr::solve(comm, a, pc, b, x, tol),
         KspType::Direct => direct::solve(comm, a, b, x),
     }
 }

@@ -1,16 +1,38 @@
-//! TFQMR — transpose-free quasi-minimal residual (Freund 1993).
+//! TFQMR — transpose-free quasi-minimal residual (Freund 1993),
+//! right-preconditioned.
 //!
 //! Like BiCGStab a short-recurrence two-SpMV-per-iteration method, but with
 //! a quasi-minimization that smooths the residual history — useful on the
 //! badly conditioned `γ → 1` instances where BiCGStab's residual can
-//! oscillate. Unpreconditioned (madupite exposes it the same way through
-//! PETSc; preconditioned TFQMR adds little for these systems).
+//! oscillate. The preconditioner is applied on the right (the Krylov
+//! recurrences run on `A M⁻¹`), so residual norms remain true residuals of
+//! the original system and the stopping tests need no translation; the
+//! iterate update applies `M⁻¹` to the direction vector
+//! (`x ← x + η M⁻¹ d`), keeping `x` in the unpreconditioned space.
 
-use super::{Apply, KspStats, Tolerance};
+use super::{Apply, KspStats, Precond, Tolerance};
 use crate::comm::Comm;
-use crate::linalg::dist::{dist_dot, dist_norm2};
+use crate::linalg::dist::{dist_dot, dist_norm2, GhostBuf};
 
-/// Solve `A x = b` with TFQMR. `x` carries the warm start.
+/// y ← A M⁻¹ x: one right-preconditioned operator application.
+fn apply_op(
+    comm: &Comm,
+    a: &dyn Apply,
+    pc: &Precond,
+    x: &[f64],
+    tmp: &mut [f64],
+    y: &mut [f64],
+    buf: &mut GhostBuf,
+) {
+    if pc.is_identity() {
+        a.apply(comm, x, y, buf);
+    } else {
+        pc.apply(x, tmp);
+        a.apply(comm, tmp, y, buf);
+    }
+}
+
+/// Solve `A x = b` with preconditioned TFQMR. `x` carries the warm start.
 ///
 /// The quasi-residual recurrence can desynchronize from the true residual
 /// in finite precision (stagnation around 1e-9 on ill-conditioned γ→1
@@ -18,7 +40,14 @@ use crate::linalg::dist::{dist_dot, dist_norm2};
 /// current iterate when a cycle ends by breakdown or stagnation, up to the
 /// iteration budget. This mirrors how PETSc users wrap `-ksp_type tfqmr`
 /// in practice.
-pub fn solve(comm: &Comm, a: &dyn Apply, b: &[f64], x: &mut [f64], tol: &Tolerance) -> KspStats {
+pub fn solve(
+    comm: &Comm,
+    a: &dyn Apply,
+    pc: &Precond,
+    b: &[f64],
+    x: &mut [f64],
+    tol: &Tolerance,
+) -> KspStats {
     let nl = a.local_rows();
     assert_eq!(b.len(), nl);
     assert_eq!(x.len(), nl);
@@ -34,7 +63,7 @@ pub fn solve(comm: &Comm, a: &dyn Apply, b: &[f64], x: &mut [f64], tol: &Toleran
 
     while rnorm > target && stats.iterations < tol.max_iters {
         let before = rnorm;
-        rnorm = cycle(comm, a, b, x, target, tol.max_iters, &mut stats, &mut r, &mut buf);
+        rnorm = cycle(comm, a, pc, b, x, target, tol.max_iters, &mut stats, &mut r, &mut buf);
         if rnorm > before * 0.9 {
             break; // stagnated: < 10% improvement over a whole cycle
         }
@@ -50,13 +79,14 @@ pub fn solve(comm: &Comm, a: &dyn Apply, b: &[f64], x: &mut [f64], tol: &Toleran
 fn cycle(
     comm: &Comm,
     a: &dyn Apply,
+    pc: &Precond,
     b: &[f64],
     x: &mut [f64],
     target: f64,
     max_iters: usize,
     stats: &mut KspStats,
     r: &mut [f64],
-    buf: &mut crate::linalg::dist::GhostBuf,
+    buf: &mut GhostBuf,
 ) -> f64 {
     let nl = a.local_rows();
     let r0norm = a.residual(comm, b, x, r, buf);
@@ -70,7 +100,8 @@ fn cycle(
     let mut y1 = r.to_vec();
     let mut d = vec![0.0; nl];
     let mut v = vec![0.0; nl];
-    a.apply(comm, &y1, &mut v, buf);
+    let mut tmp = vec![0.0; nl];
+    apply_op(comm, a, pc, &y1, &mut tmp, &mut v, buf);
     stats.spmvs += 1;
     let mut u1 = v.clone();
     let mut y2 = vec![0.0; nl];
@@ -91,7 +122,7 @@ fn cycle(
         for i in 0..nl {
             y2[i] = y1[i] - alpha * v[i];
         }
-        a.apply(comm, &y2, &mut u2, buf);
+        apply_op(comm, a, pc, &y2, &mut tmp, &mut u2, buf);
         stats.spmvs += 1;
 
         let mut done = false;
@@ -118,7 +149,17 @@ fn cycle(
             }
             for i in 0..nl {
                 d[i] = yj[i] + factor * d[i];
-                x[i] += eta * d[i];
+            }
+            // x lives in the unpreconditioned space: x ← x + η M⁻¹ d
+            if pc.is_identity() {
+                for i in 0..nl {
+                    x[i] += eta * d[i];
+                }
+            } else {
+                pc.apply(&d, &mut tmp);
+                for i in 0..nl {
+                    x[i] += eta * tmp[i];
+                }
             }
             // cheap quasi-residual bound τ·sqrt(m+1) triggers a true check
             let m_idx = 2 * stats.iterations - 1 + half;
@@ -143,7 +184,7 @@ fn cycle(
         for i in 0..nl {
             y1[i] = w[i] + beta * y2[i];
         }
-        a.apply(comm, &y1, &mut u1, buf);
+        apply_op(comm, a, pc, &y1, &mut tmp, &mut u1, buf);
         stats.spmvs += 1;
         for i in 0..nl {
             v[i] = u1[i] + beta * (u2[i] + beta * v[i]);
@@ -159,14 +200,16 @@ fn cycle(
 mod tests {
     use super::*;
     use crate::comm::World;
+    use crate::ksp::precond::PcType;
     use crate::ksp::testmat::random_policy_system;
     use crate::ksp::{LinOp, Precond};
     use crate::util::prop;
 
-    fn run(n: usize, size: usize, gamma: f64) -> Vec<f64> {
+    fn run_pc(n: usize, size: usize, gamma: f64, pc_type: PcType) -> Vec<f64> {
         let out = World::run(size, move |comm| {
             let (p, b, part) = random_policy_system(&comm, n, 42);
             let a = LinOp::new(&p, gamma);
+            let pc = Precond::build(pc_type, &a);
             let nl = part.local_len(comm.rank());
             let mut x = vec![0.0; nl];
             let tol = Tolerance {
@@ -174,7 +217,7 @@ mod tests {
                 rtol: 0.0,
                 max_iters: 5_000,
             };
-            let stats = solve(&comm, &a, &b, &mut x, &tol);
+            let stats = solve(&comm, &a, &pc, &b, &mut x, &tol);
             assert!(
                 stats.converged,
                 "tfqmr not converged: final={}",
@@ -183,6 +226,10 @@ mod tests {
             x
         });
         out.into_iter().flatten().collect()
+    }
+
+    fn run(n: usize, size: usize, gamma: f64) -> Vec<f64> {
+        run_pc(n, size, gamma, PcType::None)
     }
 
     #[test]
@@ -234,10 +281,70 @@ mod tests {
                 max_iters: 1_000,
             };
             let mut x = vec![0.0; 15];
-            solve(&comm, &a, &b, &mut x, &tol);
+            solve(&comm, &a, &Precond::None, &b, &mut x, &tol);
             let mut x2 = x.clone();
-            let s2 = solve(&comm, &a, &b, &mut x2, &tol);
+            let s2 = solve(&comm, &a, &Precond::None, &b, &mut x2, &tol);
             assert_eq!(s2.iterations, 0);
+        });
+    }
+
+    #[test]
+    fn jacobi_preconditioned_matches_unpreconditioned_solution() {
+        let xp = run_pc(30, 2, 0.95, PcType::Jacobi);
+        let xu = run_pc(30, 2, 0.95, PcType::None);
+        prop::close_slices(&xp, &xu, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn preconditioner_is_wired_through() {
+        // Regression: the KSP dispatcher used to call TFQMR without the
+        // Precond, so `-ksp_type tfqmr -pc_type jacobi` silently ran
+        // unpreconditioned. On a diagonal system A = diag(1 − γ p_i) with
+        // well-spread entries, Jacobi makes A·M⁻¹ the exact identity and
+        // TFQMR must converge in one iteration; unpreconditioned it needs
+        // many. Were the pc dropped again, both counts would be equal.
+        World::run(1, |comm| {
+            let n = 40;
+            let gamma = 0.99;
+            let part = crate::linalg::dist::Partition::new(n, 1);
+            let diag: Vec<f64> = (0..n)
+                .map(|i| 0.05 + 0.9 * (i as f64) / (n as f64 - 1.0))
+                .collect();
+            let rows: Vec<Vec<(usize, f64)>> =
+                diag.iter().enumerate().map(|(i, &p)| vec![(i, p)]).collect();
+            let p = crate::linalg::dist::DistCsr::assemble(&comm, part, rows);
+            let a = LinOp::new(&p, gamma);
+            let b: Vec<f64> = (0..n).map(|i| 1.0 + i as f64).collect();
+            let tol = Tolerance {
+                atol: 1e-10,
+                rtol: 0.0,
+                max_iters: 1_000,
+            };
+
+            let pc = Precond::build(PcType::Jacobi, &a);
+            let mut xp = vec![0.0; n];
+            let sp = solve(&comm, &a, &pc, &b, &mut xp, &tol);
+            let mut xu = vec![0.0; n];
+            let su = solve(&comm, &a, &Precond::None, &b, &mut xu, &tol);
+            assert!(sp.converged && su.converged);
+
+            // analytic solution of the diagonal system
+            let want: Vec<f64> = (0..n).map(|i| b[i] / (1.0 - gamma * diag[i])).collect();
+            prop::close_slices(&xp, &want, 1e-6).unwrap();
+            prop::close_slices(&xu, &want, 1e-6).unwrap();
+
+            assert!(
+                sp.iterations <= 2,
+                "A·M⁻¹ = I must converge immediately, took {}",
+                sp.iterations
+            );
+            assert!(
+                sp.iterations < su.iterations,
+                "jacobi tfqmr took {} iterations vs {} unpreconditioned — \
+                 the preconditioner is not being applied",
+                sp.iterations,
+                su.iterations
+            );
         });
     }
 }

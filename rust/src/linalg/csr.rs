@@ -109,22 +109,11 @@ impl Csr {
         let mut values = Vec::new();
         indptr.push(0);
         for row in rows.iter_mut() {
-            row.sort_by_key(|&(c, _)| c);
-            let mut i = 0;
-            while i < row.len() {
-                let c = row[i].0;
+            normalize_row_entries(row);
+            for &(c, v) in row.iter() {
                 assert!(c < ncols, "column {c} out of bounds ({ncols})");
-                let mut v = row[i].1;
-                let mut j = i + 1;
-                while j < row.len() && row[j].0 == c {
-                    v += row[j].1;
-                    j += 1;
-                }
-                if v != 0.0 {
-                    indices.push(c);
-                    values.push(v);
-                }
-                i = j;
+                indices.push(c);
+                values.push(v);
             }
             indptr.push(indices.len());
         }
@@ -139,6 +128,15 @@ impl Csr {
 
     pub fn nrows(&self) -> usize {
         self.nrows
+    }
+
+    /// Normalize one sparse row in place: sort by column, sum duplicate
+    /// columns, drop exact-zero sums. This is CSR's canonical row layout —
+    /// shared with the streaming `.mdpb` writer ([`crate::mdp::io`]) so
+    /// files written row-by-row are byte-identical to files written from
+    /// an assembled matrix.
+    pub fn normalize_row_entries(row: &mut Vec<(usize, f64)>) {
+        normalize_row_entries(row)
     }
 
     pub fn ncols(&self) -> usize {
@@ -281,6 +279,29 @@ impl Csr {
     pub fn storage_bytes(&self) -> usize {
         self.indptr.len() * 8 + self.indices.len() * 8 + self.values.len() * 8
     }
+}
+
+/// Shared implementation of [`Csr::normalize_row_entries`] (free function
+/// so the builder loop and the associated wrapper use one copy).
+fn normalize_row_entries(row: &mut Vec<(usize, f64)>) {
+    row.sort_by_key(|&(c, _)| c);
+    let mut out = 0usize;
+    let mut i = 0;
+    while i < row.len() {
+        let c = row[i].0;
+        let mut v = row[i].1;
+        let mut j = i + 1;
+        while j < row.len() && row[j].0 == c {
+            v += row[j].1;
+            j += 1;
+        }
+        if v != 0.0 {
+            row[out] = (c, v);
+            out += 1;
+        }
+        i = j;
+    }
+    row.truncate(out);
 }
 
 impl fmt::Display for Csr {

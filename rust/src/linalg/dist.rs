@@ -26,6 +26,9 @@ pub struct Partition {
 }
 
 impl Partition {
+    /// `n = 0` is a valid (empty) partition: every rank owns the empty
+    /// range and [`Self::owner`] has no valid argument. `n < size` is also
+    /// fine — trailing ranks simply own empty ranges.
     pub fn new(n: usize, size: usize) -> Partition {
         assert!(size >= 1);
         Partition { n, size }
@@ -54,8 +57,17 @@ impl Partition {
     }
 
     /// Which rank owns global index `i`.
+    ///
+    /// Panics when `i >= n` (including any call on an empty partition,
+    /// which owns no indices at all). The check is a real assert, not a
+    /// `debug_assert`: release builds previously fell through to the
+    /// division below and died with a bare divide-by-zero on `n = 0`.
     pub fn owner(&self, i: usize) -> usize {
-        debug_assert!(i < self.n);
+        assert!(
+            i < self.n,
+            "Partition::owner: index {i} out of range (n = {})",
+            self.n
+        );
         // Initial guess from the inverse of lo(), then local correction.
         let mut r = ((i as u128 * self.size as u128) / self.n as u128) as usize;
         r = r.min(self.size - 1);
@@ -354,6 +366,48 @@ mod tests {
     fn partition_owner_correct() {
         let p = Partition::new(103, 7);
         for i in 0..103 {
+            let r = p.owner(i);
+            assert!(p.lo(r) <= i && i < p.hi(r), "i={i} r={r}");
+        }
+    }
+
+    #[test]
+    fn partition_empty_is_well_defined() {
+        // n = 0: every rank owns the empty range; nothing divides by zero.
+        let p = Partition::new(0, 5);
+        for r in 0..5 {
+            assert_eq!((p.lo(r), p.hi(r)), (0, 0));
+            assert_eq!(p.local_len(r), 0);
+        }
+        assert_eq!(p.ranges(), vec![(0, 0); 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn partition_owner_empty_panics_cleanly() {
+        // Regression: release builds used to die with a raw divide-by-zero
+        // here; the contract violation must be reported as such instead.
+        Partition::new(0, 4).owner(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn partition_owner_rejects_out_of_range_index() {
+        Partition::new(10, 2).owner(10);
+    }
+
+    #[test]
+    fn partition_fewer_items_than_ranks() {
+        // n < size: leading ranks own one item each, the rest own nothing,
+        // and owner() agrees with the ranges.
+        let p = Partition::new(3, 8);
+        let mut total = 0;
+        for r in 0..8 {
+            total += p.local_len(r);
+            assert!(p.local_len(r) <= 1);
+        }
+        assert_eq!(total, 3);
+        for i in 0..3 {
             let r = p.owner(i);
             assert!(p.lo(r) <= i && i < p.hi(r), "i={i} r={r}");
         }

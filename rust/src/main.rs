@@ -19,7 +19,7 @@
 use madupite::comm::World;
 use madupite::ksp::precond::PcType;
 use madupite::ksp::KspType;
-use madupite::mdp::{io, Mdp};
+use madupite::mdp::io;
 use madupite::models::{
     garnet::GarnetSpec, gridworld::GridSpec, inventory::InventorySpec, queueing::QueueSpec,
     replacement::ReplacementSpec, sis::SisSpec, traffic::TrafficSpec, ModelGenerator,
@@ -59,7 +59,9 @@ fn print_help() {
         "madupite-rs {} — distributed solver for large-scale MDPs\n\n\
          commands:\n\
          \x20 solve     -model <name> | -file <path>, -method vi|mpi|pi|ipi, -ranks N\n\
-         \x20 generate  -model <name> -file <out.mdpb>\n\
+         \x20 generate  -model <name> -file <out.mdpb> [-ranks N] [-objective min|max]\n\
+         \x20           [-chunk_rows K]  (streaming v2 writer: O(chunk) memory,\n\
+         \x20           rank-parallel, bytes identical for every N)\n\
          \x20 info      -file <path.mdpb>\n\
          \x20 artifacts [-dir artifacts]  (list + smoke-compile PJRT artifacts)\n\n\
          common options: -gamma G -atol T -alpha A -adaptive_forcing\n\
@@ -204,18 +206,46 @@ fn cmd_solve(opts: &Options) -> Result<(), String> {
 fn cmd_generate(opts: &Options) -> Result<(), String> {
     let generator = make_generator(opts)?;
     let gamma = opts.get_f64("gamma", 0.99).map_err(err_str)?;
+    let objective = madupite::mdp::Objective::parse(&opts.get_str("objective", "min"))?;
+    let ranks = opts.get_usize("ranks", 1).map_err(err_str)?;
+    let chunk_rows = opts
+        .get_usize("chunk_rows", io::DEFAULT_CHUNK_ROWS)
+        .map_err(err_str)?;
     let file = opts
         .get("file")
         .ok_or("generate requires -file <out.mdpb>")?
         .to_string();
-    let mdp: Mdp = generator.build_serial(gamma);
-    io::save(&mdp, &file).map_err(err_str)?;
+    // Streaming v2 pipeline: rank-local blocks go straight from the
+    // generator to disk, O(chunk) memory — never a full in-memory Mdp.
+    let t0 = std::time::Instant::now();
+    let path = Arc::new(file.clone());
+    let results = World::run(ranks, move |comm| {
+        generator.write_mdpb(
+            &comm,
+            gamma,
+            objective,
+            std::path::Path::new(path.as_str()),
+            chunk_rows,
+        )
+    });
+    // every rank writes its own block — any rank failing means the file
+    // is incomplete, so surface the first per-rank error
+    let mut header = None;
+    for (rank, r) in results.into_iter().enumerate() {
+        header = Some(r.map_err(|e| format!("rank {rank}: {e}"))?);
+    }
+    let h = header.expect("world has at least one rank");
     println!(
-        "wrote {file}: {} states × {} actions, nnz={}, gamma={}",
-        mdp.n_states(),
-        mdp.n_actions(),
-        mdp.transitions().nnz(),
-        mdp.gamma()
+        "wrote {file}: {} states × {} actions, nnz={}, gamma={}, objective={} \
+         (v{}, {} ranks, {:.3}s)",
+        h.n_states,
+        h.n_actions,
+        h.nnz,
+        h.gamma,
+        h.objective.name(),
+        h.version,
+        ranks,
+        t0.elapsed().as_secs_f64(),
     );
     Ok(())
 }
@@ -223,14 +253,20 @@ fn cmd_generate(opts: &Options) -> Result<(), String> {
 fn cmd_info(opts: &Options) -> Result<(), String> {
     let file = opts.get("file").ok_or("info requires -file <path>")?;
     let mut f = std::fs::File::open(file).map_err(err_str)?;
+    let file_len = f.metadata().map_err(err_str)?.len();
     let h = io::read_header(&mut f).map_err(err_str)?;
+    h.validate_file_len(file_len).map_err(err_str)?;
     println!(
-        "{file}: n_states={} n_actions={} gamma={} nnz={} ({:.2} per row)",
+        "{file}: v{} n_states={} n_actions={} gamma={} objective={} nnz={} \
+         ({:.2} per row, {} bytes)",
+        h.version,
         h.n_states,
         h.n_actions,
         h.gamma,
+        h.objective.name(),
         h.nnz,
-        h.nnz as f64 / (h.n_states * h.n_actions) as f64
+        h.nnz as f64 / (h.n_states * h.n_actions) as f64,
+        file_len,
     );
     Ok(())
 }

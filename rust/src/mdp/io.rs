@@ -3,90 +3,136 @@
 //! madupite loads MDPs from PETSc binary files so that transition data
 //! collected offline (e.g. from simulations) can be solved later, possibly
 //! on a different number of ranks. This module defines the equivalent
-//! self-describing little-endian format:
+//! self-describing little-endian format, version 2:
 //!
 //! ```text
 //! offset  field
 //! 0       magic  b"MDPB"
-//! 4       version u32 (= 1)
+//! 4       version u32 (= 2)
 //! 8       n_states u64
 //! 16      n_actions u64
 //! 24      gamma f64
 //! 32      nnz u64
-//! 40      indptr  (n·m + 1) × u64
+//! 40      objective u64 (0 = min-cost, 1 = max-reward)   [v2 only]
+//! 48      indptr  (n·m + 1) × u64
 //! ...     indices nnz × u64
 //! ...     values  nnz × f64
 //! ...     costs   (n·m) × f64
 //! ```
 //!
+//! Version 1 (no `objective` field; payload starts at offset 40) is still
+//! accepted by every reader and defaults to [`Objective::Min`]. Writers
+//! always emit version 2 — v1 round-trips silently dropped the objective,
+//! turning reward-maximizing MDPs into cost-minimizing ones on reload.
+//!
 //! Because `indptr` precedes the payload, a rank can compute exactly the
 //! byte range of its row block and read only that slice —
 //! [`load_dist`] does a rank-local partial read, which is how the format
-//! supports loading a gigantic MDP that no single rank could hold.
+//! supports loading a gigantic MDP that no single rank could hold. The
+//! write side mirrors this: [`MdpWriter`] streams a contiguous block of
+//! rows into the file with seek-based chunk writes, so N rank-local
+//! writers ([`write_streaming`], [`save_dist`]) produce a byte-identical
+//! file to one serial writer without any rank ever materializing the full
+//! model (O(chunk) memory — the out-of-core generation path).
 
-use super::{DistMdp, Mdp};
-use crate::comm::Comm;
+use super::{DistMdp, Mdp, Objective};
+use crate::comm::{codec, Comm};
 use crate::linalg::dist::{DistCsr, Partition};
 use crate::linalg::Csr;
-use std::fs::File;
+use std::fs::{File, OpenOptions};
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"MDPB";
-const VERSION: u32 = 1;
-const HEADER_LEN: u64 = 40;
+/// Format version emitted by all writers.
+pub const VERSION: u32 = 2;
+const V1_HEADER_LEN: u64 = 40;
+const V2_HEADER_LEN: u64 = 48;
 
-/// Write a serial MDP to `path`.
-pub fn save(mdp: &Mdp, path: impl AsRef<Path>) -> std::io::Result<()> {
-    let f = File::create(path)?;
-    let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&(mdp.n_states() as u64).to_le_bytes())?;
-    w.write_all(&(mdp.n_actions() as u64).to_le_bytes())?;
-    w.write_all(&mdp.gamma().to_le_bytes())?;
-    let t = mdp.transitions();
-    w.write_all(&(t.nnz() as u64).to_le_bytes())?;
-    for &p in t.indptr() {
-        w.write_all(&(p as u64).to_le_bytes())?;
-    }
-    for &i in t.indices() {
-        w.write_all(&(i as u64).to_le_bytes())?;
-    }
-    for &v in t.values() {
-        w.write_all(&v.to_le_bytes())?;
-    }
-    for &c in mdp.costs() {
-        w.write_all(&c.to_le_bytes())?;
-    }
-    w.flush()
-}
+/// Default chunk granularity (rows buffered per flush) for the streaming
+/// writer: ~8k rows keep writer memory in the hundreds of KiB while the
+/// seek-write batches stay large enough to amortize syscall cost.
+pub const DEFAULT_CHUNK_ROWS: usize = 8192;
 
 /// Parsed header.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Header {
+    pub version: u32,
     pub n_states: usize,
     pub n_actions: usize,
     pub gamma: f64,
     pub nnz: usize,
+    pub objective: Objective,
 }
 
 impl Header {
-    fn indptr_off(&self) -> u64 {
-        HEADER_LEN
+    /// v2 header for in-memory metadata (the shape every writer emits).
+    pub fn v2(
+        n_states: usize,
+        n_actions: usize,
+        gamma: f64,
+        nnz: usize,
+        objective: Objective,
+    ) -> Header {
+        Header {
+            version: VERSION,
+            n_states,
+            n_actions,
+            gamma,
+            nnz,
+            objective,
+        }
     }
+
+    fn header_len(&self) -> u64 {
+        if self.version >= 2 {
+            V2_HEADER_LEN
+        } else {
+            V1_HEADER_LEN
+        }
+    }
+
+    fn indptr_off(&self) -> u64 {
+        self.header_len()
+    }
+
     fn indices_off(&self) -> u64 {
         self.indptr_off() + 8 * (self.n_states as u64 * self.n_actions as u64 + 1)
     }
+
     fn values_off(&self) -> u64 {
         self.indices_off() + 8 * self.nnz as u64
     }
+
     fn costs_off(&self) -> u64 {
         self.values_off() + 8 * self.nnz as u64
     }
+
+    /// Exact byte length a file with this header must have. Computed in
+    /// u128 so corrupt headers (oversized n/m/nnz) cannot overflow.
+    pub fn expected_file_len(&self) -> u128 {
+        let nm = self.n_states as u128 * self.n_actions as u128;
+        self.header_len() as u128 + 8 * (nm + 1) + 16 * self.nnz as u128 + 8 * nm
+    }
+
+    /// Reject headers whose advertised shape disagrees with the actual
+    /// file size — catches truncated payloads and oversized `nnz` before
+    /// any reader allocates or seeks. All section offsets are guaranteed
+    /// to fit in u64 once this passes.
+    pub fn validate_file_len(&self, actual: u64) -> std::io::Result<()> {
+        let want = self.expected_file_len();
+        if want != actual as u128 {
+            return Err(bad(&format!(
+                "file length {actual} does not match header (expected {want} bytes \
+                 for n={}, m={}, nnz={})",
+                self.n_states, self.n_actions, self.nnz
+            )));
+        }
+        Ok(())
+    }
 }
 
-/// Read and validate the header.
+/// Read and validate the header (v1 and v2 accepted).
 pub fn read_header(r: &mut impl Read) -> std::io::Result<Header> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
@@ -94,13 +140,22 @@ pub fn read_header(r: &mut impl Read) -> std::io::Result<Header> {
         return Err(bad("bad magic (not an MDPB file)"));
     }
     let version = read_u32(r)?;
-    if version != VERSION {
+    if !(1..=VERSION).contains(&version) {
         return Err(bad(&format!("unsupported version {version}")));
     }
     let n_states = read_u64(r)? as usize;
     let n_actions = read_u64(r)? as usize;
     let gamma = read_f64(r)?;
     let nnz = read_u64(r)? as usize;
+    let objective = if version >= 2 {
+        match read_u64(r)? {
+            0 => Objective::Min,
+            1 => Objective::Max,
+            other => return Err(bad(&format!("invalid objective code {other}"))),
+        }
+    } else {
+        Objective::Min
+    };
     if n_actions == 0 || n_states == 0 {
         return Err(bad("empty MDP"));
     }
@@ -108,18 +163,456 @@ pub fn read_header(r: &mut impl Read) -> std::io::Result<Header> {
         return Err(bad(&format!("gamma {gamma} out of range")));
     }
     Ok(Header {
+        version,
         n_states,
         n_actions,
         gamma,
         nnz,
+        objective,
     })
 }
+
+// ------------------------------------------------------------- write side
+
+/// Normalize a sparse row into CSR's canonical layout (sort by column,
+/// sum duplicates, drop exact-zero sums) — the *same* routine
+/// [`Csr::from_row_lists`] uses at MDP assembly, so streamed bytes match
+/// a serial [`save`] of the equivalent in-memory [`Mdp`] bit for bit.
+fn normalize_row(row: &mut Vec<(usize, f64)>) {
+    Csr::normalize_row_entries(row);
+}
+
+/// Row-stochasticity tolerance shared by the writer and both readers —
+/// the same bound [`Mdp::new`] enforces via `Csr::is_row_stochastic`, so
+/// a file the writer accepts is loadable serially and distributed, and
+/// vice versa.
+const STOCHASTIC_TOL: f64 = 1e-8;
+
+/// Shared row validation: every probability in `[0, 1]` and the row
+/// summing to 1, within [`STOCHASTIC_TOL`]. Returns the offending reason.
+fn check_row_stochastic(row: &[(usize, f64)]) -> Result<(), String> {
+    let mut sum = 0.0f64;
+    for &(_, p) in row {
+        if !(-STOCHASTIC_TOL..=1.0 + STOCHASTIC_TOL).contains(&p) {
+            return Err(format!("probability {p} outside [0, 1]"));
+        }
+        sum += p;
+    }
+    if !sum.is_finite() || (sum - 1.0).abs() > STOCHASTIC_TOL {
+        return Err(format!("probabilities sum to {sum}, not 1"));
+    }
+    Ok(())
+}
+
+/// Chunked, seek-based writer for one contiguous block of global rows
+/// `[row_lo, row_hi)` of a v2 `.mdpb` file.
+///
+/// Rows are pushed in global row order (`s·m + a`); every `chunk_rows`
+/// rows the buffered indptr / indices / values / costs slices are written
+/// at their exact byte offsets in the (pre-sized) file. Because all
+/// offsets are absolute, N block writers covering disjoint row ranges
+/// produce a byte-identical file to a single serial writer — this is the
+/// rank-parallel generation path. Peak memory is O(chunk), never O(model).
+///
+/// Protocol: one rank (or the serial caller) runs
+/// [`MdpWriter::create_file`] first; then each writer opens its block with
+/// [`MdpWriter::open_block`], pushes its rows, and calls
+/// [`MdpWriter::finish`].
+pub struct MdpWriter {
+    f: File,
+    h: Header,
+    row_hi: usize,
+    /// Next global row index [`Self::push_row`] will fill.
+    next_row: usize,
+    /// Global nonzero offset after the last pushed row.
+    nz: u64,
+    /// Required value of `nz` at [`Self::finish`] (the next block's base).
+    nz_hi: u64,
+    chunk_rows: usize,
+    rows_buffered: usize,
+    /// First global row currently buffered, and its global nz offset.
+    flush_row: usize,
+    flush_nz: u64,
+    indptr_buf: Vec<u8>,
+    indices_buf: Vec<u8>,
+    values_buf: Vec<u8>,
+    costs_buf: Vec<u8>,
+}
+
+impl MdpWriter {
+    /// Create (truncate) the output file: pre-size it to the exact final
+    /// length, write the v2 header and `indptr[0] = 0`. Call once before
+    /// any block writer opens the file.
+    pub fn create_file(path: impl AsRef<Path>, h: &Header) -> std::io::Result<()> {
+        if h.version != VERSION {
+            return Err(bad(&format!("writers only emit version {VERSION}")));
+        }
+        if h.n_states == 0 || h.n_actions == 0 {
+            return Err(bad("refusing to write an empty MDP"));
+        }
+        if !(0.0..1.0).contains(&h.gamma) {
+            return Err(bad(&format!("gamma {} out of range", h.gamma)));
+        }
+        let total = h.expected_file_len();
+        if total > u64::MAX as u128 {
+            return Err(bad("MDP too large for the .mdpb format"));
+        }
+        let f = File::create(path)?;
+        f.set_len(total as u64)?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&h.version.to_le_bytes())?;
+        w.write_all(&(h.n_states as u64).to_le_bytes())?;
+        w.write_all(&(h.n_actions as u64).to_le_bytes())?;
+        w.write_all(&h.gamma.to_le_bytes())?;
+        w.write_all(&(h.nnz as u64).to_le_bytes())?;
+        let obj: u64 = match h.objective {
+            Objective::Min => 0,
+            Objective::Max => 1,
+        };
+        w.write_all(&obj.to_le_bytes())?;
+        // indptr[0]: no row owns entry 0, each pushed row records its END
+        // offset at entry row+1.
+        w.write_all(&0u64.to_le_bytes())?;
+        w.flush()
+    }
+
+    /// Open a writer for global rows `[row_lo, row_hi)` whose nonzeros
+    /// occupy the global range `[nz_lo, nz_hi)`. The file must already
+    /// exist with the final size ([`Self::create_file`]).
+    pub fn open_block(
+        path: impl AsRef<Path>,
+        h: Header,
+        row_lo: usize,
+        row_hi: usize,
+        nz_lo: u64,
+        nz_hi: u64,
+        chunk_rows: usize,
+    ) -> std::io::Result<MdpWriter> {
+        let nm = h.n_states * h.n_actions;
+        if row_lo > row_hi || row_hi > nm {
+            return Err(bad(&format!(
+                "row block [{row_lo}, {row_hi}) out of range for {nm} rows"
+            )));
+        }
+        if nz_lo > nz_hi || nz_hi > h.nnz as u64 {
+            return Err(bad(&format!(
+                "nz block [{nz_lo}, {nz_hi}) out of range for nnz {}",
+                h.nnz
+            )));
+        }
+        if chunk_rows == 0 {
+            return Err(bad("chunk_rows must be >= 1"));
+        }
+        let f = OpenOptions::new().write(true).open(path)?;
+        Ok(MdpWriter {
+            f,
+            h,
+            row_hi,
+            next_row: row_lo,
+            nz: nz_lo,
+            nz_hi,
+            chunk_rows,
+            rows_buffered: 0,
+            flush_row: row_lo,
+            flush_nz: nz_lo,
+            indptr_buf: Vec::new(),
+            indices_buf: Vec::new(),
+            values_buf: Vec::new(),
+            costs_buf: Vec::new(),
+        })
+    }
+
+    /// Rows this block still expects before [`Self::finish`].
+    pub fn rows_remaining(&self) -> usize {
+        self.row_hi - self.next_row
+    }
+
+    /// Append the next row of the block: the sparse transition
+    /// distribution `(successor, probability)` plus the stage cost. The
+    /// row is normalized (sorted, duplicates summed) and validated —
+    /// out-of-range columns, non-stochastic rows and non-finite costs are
+    /// rejected so a streaming writer can never produce an unloadable
+    /// file.
+    pub fn push_row(&mut self, mut row: Vec<(usize, f64)>, cost: f64) -> std::io::Result<()> {
+        if self.next_row >= self.row_hi {
+            return Err(bad(&format!(
+                "push_row past the end of the block (row_hi = {})",
+                self.row_hi
+            )));
+        }
+        normalize_row(&mut row);
+        for &(c, _) in &row {
+            if c >= self.h.n_states {
+                return Err(bad(&format!(
+                    "row {}: successor state {c} out of range ({})",
+                    self.next_row, self.h.n_states
+                )));
+            }
+        }
+        if let Err(e) = check_row_stochastic(&row) {
+            return Err(bad(&format!("row {}: {e}", self.next_row)));
+        }
+        if !cost.is_finite() {
+            return Err(bad(&format!("row {}: non-finite cost {cost}", self.next_row)));
+        }
+        if self.nz + row.len() as u64 > self.nz_hi {
+            return Err(bad(&format!(
+                "row {}: block nonzeros exceed the declared range (nz_hi = {})",
+                self.next_row, self.nz_hi
+            )));
+        }
+        for &(c, v) in &row {
+            self.indices_buf.extend_from_slice(&(c as u64).to_le_bytes());
+            self.values_buf.extend_from_slice(&v.to_le_bytes());
+        }
+        self.nz += row.len() as u64;
+        self.indptr_buf.extend_from_slice(&self.nz.to_le_bytes());
+        self.costs_buf.extend_from_slice(&cost.to_le_bytes());
+        self.next_row += 1;
+        self.rows_buffered += 1;
+        if self.rows_buffered >= self.chunk_rows {
+            self.flush_chunk()?;
+        }
+        Ok(())
+    }
+
+    /// Write the buffered chunk into its four sections (absolute offsets).
+    fn flush_chunk(&mut self) -> std::io::Result<()> {
+        if self.rows_buffered == 0 {
+            return Ok(());
+        }
+        self.f.seek(SeekFrom::Start(self.h.indptr_off() + 8 * (self.flush_row as u64 + 1)))?;
+        self.f.write_all(&self.indptr_buf)?;
+        self.f.seek(SeekFrom::Start(self.h.indices_off() + 8 * self.flush_nz))?;
+        self.f.write_all(&self.indices_buf)?;
+        self.f.seek(SeekFrom::Start(self.h.values_off() + 8 * self.flush_nz))?;
+        self.f.write_all(&self.values_buf)?;
+        self.f.seek(SeekFrom::Start(self.h.costs_off() + 8 * self.flush_row as u64))?;
+        self.f.write_all(&self.costs_buf)?;
+        self.flush_row = self.next_row;
+        self.flush_nz = self.nz;
+        self.rows_buffered = 0;
+        self.indptr_buf.clear();
+        self.indices_buf.clear();
+        self.values_buf.clear();
+        self.costs_buf.clear();
+        Ok(())
+    }
+
+    /// Flush the trailing chunk and verify the block is complete: every
+    /// row pushed and the nonzero count exactly matching the declared
+    /// `[nz_lo, nz_hi)` range (catches impure row sources whose counting
+    /// pass disagrees with the writing pass).
+    pub fn finish(mut self) -> std::io::Result<()> {
+        if self.next_row != self.row_hi {
+            return Err(bad(&format!(
+                "finish with {} rows missing from the block",
+                self.row_hi - self.next_row
+            )));
+        }
+        if self.nz != self.nz_hi {
+            return Err(bad(&format!(
+                "block ends at nonzero {} but declared {} — row source is \
+                 not deterministic between passes",
+                self.nz, self.nz_hi
+            )));
+        }
+        self.flush_chunk()?;
+        self.f.flush()
+    }
+}
+
+/// Write a serial MDP to `path` (v2, includes the objective). Streams
+/// through [`MdpWriter`] — the same code path as the rank-parallel
+/// writers. The on-disk form is canonical: explicitly stored zero
+/// probabilities (possible via `Csr::from_parts`) are dropped, exactly as
+/// every other producer drops them, so the header `nnz` counts only the
+/// entries the writer will actually emit.
+pub fn save(mdp: &Mdp, path: impl AsRef<Path>) -> std::io::Result<()> {
+    let t = mdp.transitions();
+    let nm = mdp.n_states() * mdp.n_actions();
+    let nnz = t.values().iter().filter(|&&v| v != 0.0).count();
+    let h = Header::v2(mdp.n_states(), mdp.n_actions(), mdp.gamma(), nnz, mdp.objective());
+    MdpWriter::create_file(&path, &h)?;
+    let mut w = MdpWriter::open_block(&path, h, 0, nm, 0, nnz as u64, DEFAULT_CHUNK_ROWS)?;
+    for r in 0..nm {
+        let (cols, vals) = t.row(r);
+        let row: Vec<(usize, f64)> = cols.iter().copied().zip(vals.iter().copied()).collect();
+        w.push_row(row, mdp.costs()[r])?;
+    }
+    w.finish()
+}
+
+/// Stream a generated MDP straight to disk, rank-parallel. Collective.
+///
+/// `prob`/`cost` must be pure functions of `(s, a)` (the
+/// [`crate::models::ModelGenerator`] contract): pass 1 counts each rank's
+/// nonzeros (discarding the rows), the per-rank counts are exchanged once
+/// to fix the global layout, and pass 2 re-generates the rows into a
+/// rank-local [`MdpWriter`] block. No rank ever holds more than one chunk
+/// — this is how `generate` scales to models no single node could
+/// materialize, and the resulting bytes are identical for every world
+/// size.
+#[allow(clippy::too_many_arguments)]
+pub fn write_streaming<P, C>(
+    comm: &Comm,
+    path: &Path,
+    n_states: usize,
+    n_actions: usize,
+    gamma: f64,
+    objective: Objective,
+    chunk_rows: usize,
+    mut prob: P,
+    mut cost: C,
+) -> std::io::Result<Header>
+where
+    P: FnMut(usize, usize) -> Vec<(usize, f64)>,
+    C: FnMut(usize, usize) -> f64,
+{
+    let part = Partition::new(n_states, comm.size());
+    let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+
+    // Pass 1: count this rank's nonzeros (post-normalization lengths).
+    let mut local_nnz: u64 = 0;
+    for s in lo..hi {
+        for a in 0..n_actions {
+            let mut row = prob(s, a);
+            normalize_row(&mut row);
+            local_nnz += row.len() as u64;
+        }
+    }
+
+    // One exchange fixes the global layout: every rank learns all block
+    // sizes, hence its nz base offset and the total nnz.
+    let counts: Vec<u64> = comm
+        .allgatherv(codec::encode_usizes(&[local_nnz as usize]))
+        .iter()
+        .map(|b| codec::decode_usizes(b)[0] as u64)
+        .collect();
+    let nz_lo: u64 = counts[..comm.rank()].iter().sum();
+    let nnz: u64 = counts.iter().sum();
+    let header = Header::v2(n_states, n_actions, gamma, nnz as usize, objective);
+
+    // Root creates + sizes the file; everyone learns whether that worked
+    // before opening (keeps the collective deadlock-free on IO errors).
+    let create_err = if comm.is_root() {
+        MdpWriter::create_file(path, &header).err()
+    } else {
+        None
+    };
+    let ok = comm.broadcast_f64(0, if create_err.is_none() { 1.0 } else { 0.0 });
+
+    // Pass 2: every rank streams its block.
+    let block_res = if ok == 0.0 {
+        Err(create_err.unwrap_or_else(|| bad("rank 0 failed to create the output file")))
+    } else {
+        (|| -> std::io::Result<()> {
+            let mut w = MdpWriter::open_block(
+                path,
+                header,
+                lo * n_actions,
+                hi * n_actions,
+                nz_lo,
+                nz_lo + local_nnz,
+                chunk_rows,
+            )?;
+            for s in lo..hi {
+                for a in 0..n_actions {
+                    w.push_row(prob(s, a), cost(s, a))?;
+                }
+            }
+            w.finish()
+        })()
+    };
+    finish_collective_write(comm, block_res, header)
+}
+
+/// Exchange the per-rank write verdict: a block failing on *any* rank
+/// means the file is incomplete, so every rank must return `Err` (a rank
+/// whose own block succeeded would otherwise report success for a corrupt
+/// file). The allreduce doubles as the completion barrier — no rank can
+/// pass it before every writer has finished its block.
+fn finish_collective_write(
+    comm: &Comm,
+    block_res: std::io::Result<()>,
+    header: Header,
+) -> std::io::Result<Header> {
+    let any_err = comm.max(if block_res.is_err() { 1.0 } else { 0.0 });
+    match block_res {
+        Err(e) => Err(e),
+        Ok(()) if any_err > 0.0 => Err(bad("streaming write failed on another rank")),
+        Ok(()) => Ok(header),
+    }
+}
+
+/// Write a distributed MDP to `path`, each rank streaming its own block
+/// (the "collect on M ranks, solve on N" half of claim C5). Collective.
+/// Byte-identical to a serial [`save`] of the equivalent gathered MDP.
+pub fn save_dist(comm: &Comm, mdp: &DistMdp, path: impl AsRef<Path>) -> std::io::Result<Header> {
+    let path = path.as_ref();
+    let part = mdp.partition();
+    let m = mdp.n_actions();
+    let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+    let trans = mdp.transitions();
+    let local = trans.local();
+    let local_nnz = local.nnz() as u64;
+
+    let counts: Vec<u64> = comm
+        .allgatherv(codec::encode_usizes(&[local_nnz as usize]))
+        .iter()
+        .map(|b| codec::decode_usizes(b)[0] as u64)
+        .collect();
+    let nz_lo: u64 = counts[..comm.rank()].iter().sum();
+    let nnz: u64 = counts.iter().sum();
+    let header = Header::v2(mdp.n_states(), m, mdp.gamma(), nnz as usize, mdp.objective());
+
+    let create_err = if comm.is_root() {
+        MdpWriter::create_file(path, &header).err()
+    } else {
+        None
+    };
+    let ok = comm.broadcast_f64(0, if create_err.is_none() { 1.0 } else { 0.0 });
+
+    let block_res = if ok == 0.0 {
+        Err(create_err.unwrap_or_else(|| bad("rank 0 failed to create the output file")))
+    } else {
+        (|| -> std::io::Result<()> {
+            let mut w = MdpWriter::open_block(
+                path,
+                header,
+                lo * m,
+                hi * m,
+                nz_lo,
+                nz_lo + local_nnz,
+                DEFAULT_CHUNK_ROWS,
+            )?;
+            for r in 0..local.nrows() {
+                let (cols, vals) = local.row(r);
+                // translate remapped local columns back to global ids;
+                // push_row re-sorts into global column order
+                let row: Vec<(usize, f64)> = cols
+                    .iter()
+                    .map(|&c| trans.global_col(c))
+                    .zip(vals.iter().copied())
+                    .collect();
+                w.push_row(row, mdp.local_costs()[r])?;
+            }
+            w.finish()
+        })()
+    };
+    finish_collective_write(comm, block_res, header)
+}
+
+// -------------------------------------------------------------- read side
 
 /// Load a full (serial) MDP.
 pub fn load(path: impl AsRef<Path>) -> std::io::Result<Mdp> {
     let f = File::open(path)?;
+    let file_len = f.metadata()?.len();
     let mut r = BufReader::new(f);
     let h = read_header(&mut r)?;
+    h.validate_file_len(file_len)?;
     let nm = h.n_states * h.n_actions;
     let indptr = read_u64s(&mut r, nm + 1)?;
     let indices = read_u64s(&mut r, h.nnz)?;
@@ -127,14 +620,49 @@ pub fn load(path: impl AsRef<Path>) -> std::io::Result<Mdp> {
     let costs = read_f64s(&mut r, nm)?;
     let t = Csr::from_parts(nm, h.n_states, indptr, indices, values)
         .map_err(|e| bad(&format!("invalid CSR: {e}")))?;
-    Mdp::new(h.n_states, h.n_actions, t, costs, h.gamma).map_err(|e| bad(&e))
+    Mdp::new(h.n_states, h.n_actions, t, costs, h.gamma)
+        .map(|m| m.with_objective(h.objective))
+        .map_err(|e| bad(&e))
 }
 
 /// Distributed load: each rank reads only its slice of the file.
-/// Collective.
+/// Collective; a malformed file yields `Err` on every rank (the validation
+/// verdict is allreduced before assembly so no rank can hang in a
+/// collective another rank never enters).
 pub fn load_dist(comm: &Comm, path: impl AsRef<Path>) -> std::io::Result<DistMdp> {
+    let path = path.as_ref();
+    let local = read_local_block(comm, path);
+    // Collective error agreement: assembly is collective, so every rank
+    // must agree to proceed before any rank enters it.
+    let any_err = comm.max(if local.is_err() { 1.0 } else { 0.0 });
+    if any_err > 0.0 {
+        return match local {
+            Err(e) => Err(e),
+            Ok(_) => Err(bad("load_dist failed on another rank")),
+        };
+    }
+    let (h, part, rows, costs) = local.expect("checked above");
+    let trans = DistCsr::assemble(comm, part, rows);
+    Ok(DistMdp {
+        part,
+        n_actions: h.n_actions,
+        gamma: h.gamma,
+        objective: h.objective,
+        trans,
+        costs,
+    })
+}
+
+/// Rank-local half of [`load_dist`]: read + validate this rank's slice.
+#[allow(clippy::type_complexity)]
+fn read_local_block(
+    comm: &Comm,
+    path: &Path,
+) -> std::io::Result<(Header, Partition, Vec<Vec<(usize, f64)>>, Vec<f64>)> {
     let mut f = File::open(path)?;
+    let file_len = f.metadata()?.len();
     let h = read_header(&mut f)?;
+    h.validate_file_len(file_len)?;
     let part = Partition::new(h.n_states, comm.size());
     let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
     let m = h.n_actions;
@@ -143,39 +671,78 @@ pub fn load_dist(comm: &Comm, path: impl AsRef<Path>) -> std::io::Result<DistMdp
     // indptr slice for local rows (+1 for the end offset)
     f.seek(SeekFrom::Start(h.indptr_off() + 8 * row_lo as u64))?;
     let indptr = read_u64s(&mut f, row_hi - row_lo + 1)?;
+    // A corrupt indptr (non-monotone or out of range) previously panicked
+    // on index underflow below; reject it as InvalidData instead.
+    for w in indptr.windows(2) {
+        if w[0] > w[1] {
+            return Err(bad("indptr not monotone"));
+        }
+    }
     let (nz_lo, nz_hi) = (indptr[0], indptr[row_hi - row_lo]);
+    if nz_hi > h.nnz {
+        return Err(bad(&format!(
+            "indptr entry {nz_hi} exceeds declared nnz {}",
+            h.nnz
+        )));
+    }
+    // Global endpoint checks (the ranks owning the first/last rows see
+    // them; interior block boundaries agree because adjacent ranks read
+    // the same shared indptr entry) — serial `load` enforces these via
+    // `Csr::from_parts`, and both readers must accept the same files.
+    if row_lo == 0 && nz_lo != 0 {
+        return Err(bad(&format!("indptr starts at {nz_lo}, expected 0")));
+    }
+    if row_hi == h.n_states * m && nz_hi != h.nnz {
+        return Err(bad(&format!(
+            "indptr ends at {nz_hi}, expected nnz {}",
+            h.nnz
+        )));
+    }
 
     // indices + values slices
     f.seek(SeekFrom::Start(h.indices_off() + 8 * nz_lo as u64))?;
     let indices = read_u64s(&mut f, nz_hi - nz_lo)?;
     f.seek(SeekFrom::Start(h.values_off() + 8 * nz_lo as u64))?;
     let values = read_f64s(&mut f, nz_hi - nz_lo)?;
+    if let Some(&c) = indices.iter().find(|&&c| c >= h.n_states) {
+        return Err(bad(&format!(
+            "successor state {c} out of range ({})",
+            h.n_states
+        )));
+    }
 
     // costs slice
     f.seek(SeekFrom::Start(h.costs_off() + 8 * row_lo as u64))?;
     let costs = read_f64s(&mut f, row_hi - row_lo)?;
 
-    // build per-row global-column lists
+    // build per-row global-column lists, validating what the serial
+    // loader validates through `Csr::from_parts` + `Mdp::new` (sorted
+    // unique columns, stochasticity at the same tolerance) — a file must
+    // be loadable by both readers or neither
     let mut rows = Vec::with_capacity(row_hi - row_lo);
     for r in 0..(row_hi - row_lo) {
         let (a, b) = (indptr[r] - nz_lo, indptr[r + 1] - nz_lo);
-        rows.push(
-            indices[a..b]
-                .iter()
-                .copied()
-                .zip(values[a..b].iter().copied())
-                .collect::<Vec<_>>(),
-        );
+        let cols = &indices[a..b];
+        for w in cols.windows(2) {
+            if w[0] >= w[1] {
+                return Err(bad(&format!(
+                    "row {}: columns not sorted-unique",
+                    row_lo + r
+                )));
+            }
+        }
+        let row: Vec<(usize, f64)> = cols
+            .iter()
+            .copied()
+            .zip(values[a..b].iter().copied())
+            .collect();
+        check_row_stochastic(&row).map_err(|e| bad(&format!("row {}: {e}", row_lo + r)))?;
+        rows.push(row);
     }
-    let trans = DistCsr::assemble(comm, part, rows);
-    Ok(DistMdp {
-        part,
-        n_actions: h.n_actions,
-        gamma: h.gamma,
-        objective: crate::mdp::Objective::Min,
-        trans,
-        costs,
-    })
+    if let Some(&c) = costs.iter().find(|c| !c.is_finite()) {
+        return Err(bad(&format!("non-finite stage cost {c}")));
+    }
+    Ok((h, part, rows, costs))
 }
 
 fn bad(msg: &str) -> std::io::Error {
@@ -223,6 +790,7 @@ mod tests {
     use super::*;
     use crate::comm::World;
     use crate::mdp::fixtures::random_mdp;
+    use crate::models::{garnet::GarnetSpec, ModelGenerator};
     use crate::util::prop;
     use std::sync::Arc;
 
@@ -230,6 +798,33 @@ mod tests {
         let dir = std::env::temp_dir().join("madupite-tests");
         std::fs::create_dir_all(&dir).unwrap();
         dir.join(name)
+    }
+
+    /// Write the legacy v1 layout (no objective field) — backward-compat
+    /// fixture replicating the original serial writer byte for byte.
+    fn write_v1(mdp: &Mdp, path: &std::path::Path) {
+        let f = std::fs::File::create(path).unwrap();
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC).unwrap();
+        w.write_all(&1u32.to_le_bytes()).unwrap();
+        w.write_all(&(mdp.n_states() as u64).to_le_bytes()).unwrap();
+        w.write_all(&(mdp.n_actions() as u64).to_le_bytes()).unwrap();
+        w.write_all(&mdp.gamma().to_le_bytes()).unwrap();
+        let t = mdp.transitions();
+        w.write_all(&(t.nnz() as u64).to_le_bytes()).unwrap();
+        for &p in t.indptr() {
+            w.write_all(&(p as u64).to_le_bytes()).unwrap();
+        }
+        for &i in t.indices() {
+            w.write_all(&(i as u64).to_le_bytes()).unwrap();
+        }
+        for &v in t.values() {
+            w.write_all(&v.to_le_bytes()).unwrap();
+        }
+        for &c in mdp.costs() {
+            w.write_all(&c.to_le_bytes()).unwrap();
+        }
+        w.flush().unwrap();
     }
 
     #[test]
@@ -241,22 +836,59 @@ mod tests {
         assert_eq!(loaded.n_states(), 15);
         assert_eq!(loaded.n_actions(), 3);
         assert_eq!(loaded.gamma(), 0.92);
+        assert_eq!(loaded.objective(), Objective::Min);
         assert_eq!(loaded.transitions(), mdp.transitions());
         prop::close_slices(loaded.costs(), mdp.costs(), 0.0).unwrap();
     }
 
     #[test]
+    fn roundtrip_preserves_max_objective() {
+        // the v1 bug: Objective::Max silently degraded to Min on reload
+        let mdp = random_mdp(5, 12, 2, 0.9).with_objective(Objective::Max);
+        let path = tmpfile("objective.mdpb");
+        save(&mdp, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.objective(), Objective::Max);
+        // and through the distributed reader, at several world sizes
+        for size in [1usize, 3] {
+            let p = path.clone();
+            let objs = World::run(size, move |comm| {
+                load_dist(&comm, &p).unwrap().objective()
+            });
+            assert!(objs.into_iter().all(|o| o == Objective::Max), "size={size}");
+        }
+    }
+
+    #[test]
+    fn v1_files_still_load_as_min() {
+        let mdp = random_mdp(7, 10, 2, 0.85);
+        let path = tmpfile("legacy_v1.mdpb");
+        write_v1(&mdp, &path);
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.objective(), Objective::Min);
+        assert_eq!(loaded.transitions(), mdp.transitions());
+        prop::close_slices(loaded.costs(), mdp.costs(), 0.0).unwrap();
+        // distributed reader handles the 40-byte v1 header offsets too
+        let p = path.clone();
+        let mdp2 = Arc::new(mdp);
+        let mdp3 = Arc::clone(&mdp2);
+        World::run(2, move |comm| {
+            let d = load_dist(&comm, &p).unwrap();
+            assert_eq!(d.objective(), Objective::Min);
+            assert_eq!(d.n_states(), mdp3.n_states());
+        });
+    }
+
+    #[test]
     fn header_offsets_consistent() {
-        let h = Header {
-            n_states: 10,
-            n_actions: 2,
-            gamma: 0.9,
-            nnz: 33,
-        };
-        assert_eq!(h.indptr_off(), 40);
-        assert_eq!(h.indices_off(), 40 + 8 * 21);
+        let h = Header::v2(10, 2, 0.9, 33, Objective::Min);
+        assert_eq!(h.indptr_off(), 48);
+        assert_eq!(h.indices_off(), 48 + 8 * 21);
         assert_eq!(h.values_off(), h.indices_off() + 8 * 33);
         assert_eq!(h.costs_off(), h.values_off() + 8 * 33);
+        let v1 = Header { version: 1, ..h };
+        assert_eq!(v1.indptr_off(), 40);
+        assert_eq!(h.expected_file_len(), 48 + 8 * 21 + 16 * 33 + 8 * 20);
     }
 
     #[test]
@@ -272,9 +904,219 @@ mod tests {
         let mut bytes = Vec::new();
         bytes.extend_from_slice(b"MDPB");
         bytes.extend_from_slice(&99u32.to_le_bytes());
-        bytes.extend_from_slice(&[0u8; 32]);
+        bytes.extend_from_slice(&[0u8; 40]);
         std::fs::write(&path, bytes).unwrap();
         assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_objective_code() {
+        let path = tmpfile("badobj.mdpb");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"MDPB");
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // n
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // m
+        bytes.extend_from_slice(&0.9f64.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // nnz
+        bytes.extend_from_slice(&7u64.to_le_bytes()); // invalid objective
+        std::fs::write(&path, bytes).unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let mdp = random_mdp(11, 12, 2, 0.9);
+        let path = tmpfile("truncated.mdpb");
+        save(&mdp, &path).unwrap();
+        let full = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(full - 16).unwrap();
+        drop(f);
+        assert!(load(&path).is_err());
+        let p = path.clone();
+        World::run(2, move |comm| {
+            assert!(load_dist(&comm, &p).is_err());
+        });
+    }
+
+    #[test]
+    fn rejects_oversized_nnz() {
+        // header advertises an absurd nnz; readers must refuse before
+        // attempting any allocation of that size
+        let path = tmpfile("bignnz.mdpb");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"MDPB");
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&4u64.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        bytes.extend_from_slice(&0.95f64.to_le_bytes());
+        bytes.extend_from_slice(&(u64::MAX / 32).to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&[0u8; 64]);
+        std::fs::write(&path, bytes).unwrap();
+        assert!(load(&path).is_err());
+        let p = path.clone();
+        World::run(1, move |comm| {
+            assert!(load_dist(&comm, &p).is_err());
+        });
+    }
+
+    #[test]
+    fn rejects_non_monotone_indptr() {
+        let mdp = random_mdp(13, 12, 2, 0.9);
+        let path = tmpfile("nonmono.mdpb");
+        save(&mdp, &path).unwrap();
+        // corrupt indptr entry 1 (offset 48 + 8) to a huge in-range value:
+        // entry 1 > entry 2 → previously an index underflow panic
+        let nnz = mdp.transitions().nnz() as u64;
+        let mut f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.seek(SeekFrom::Start(V2_HEADER_LEN + 8)).unwrap();
+        f.write_all(&nnz.to_le_bytes()).unwrap();
+        drop(f);
+        assert!(load(&path).is_err(), "serial load must reject");
+        for size in [1usize, 3] {
+            let p = path.clone();
+            World::run(size, move |comm| {
+                assert!(load_dist(&comm, &p).is_err(), "dist load must reject");
+            });
+        }
+    }
+
+    #[test]
+    fn save_canonicalizes_explicit_zero_entries() {
+        // an Mdp built via from_parts may store an explicit 0.0 entry;
+        // save must not fail on it (regression: header nnz counted the
+        // zero the writer then dropped) — the file is the canonical form
+        let t = Csr::from_parts(2, 2, vec![0, 1, 3], vec![0, 0, 1], vec![1.0, 0.0, 1.0]).unwrap();
+        let mdp = Mdp::new(2, 1, t, vec![0.5, 0.25], 0.9).unwrap();
+        let path = tmpfile("explicit_zero.mdpb");
+        save(&mdp, &path).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.transitions().nnz(), 2, "zero entry dropped on disk");
+        let (tv0, _) = mdp.bellman(&[1.0, 2.0]);
+        let (tv1, _) = loaded.bellman(&[1.0, 2.0]);
+        prop::close_slices(&tv0, &tv1, 0.0).unwrap();
+    }
+
+    #[test]
+    fn rejects_duplicate_columns_in_both_readers() {
+        // duplicate columns within a row: Csr::from_parts rejects them in
+        // the serial loader; the distributed reader must agree instead of
+        // silently summing them in assemble
+        let path = tmpfile("dupcols.mdpb");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"MDPB");
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // n_states
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // n_actions
+        bytes.extend_from_slice(&0.9f64.to_le_bytes());
+        bytes.extend_from_slice(&3u64.to_le_bytes()); // nnz
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // objective min
+        for p in [0u64, 2, 3] {
+            bytes.extend_from_slice(&p.to_le_bytes());
+        }
+        for c in [0u64, 0, 1] {
+            bytes.extend_from_slice(&c.to_le_bytes()); // row 0: col 0 twice
+        }
+        for v in [0.5f64, 0.5, 1.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for c in [1.0f64, 2.0] {
+            bytes.extend_from_slice(&c.to_le_bytes());
+        }
+        std::fs::write(&path, bytes).unwrap();
+        assert!(load(&path).is_err());
+        let p = path.clone();
+        World::run(2, move |comm| {
+            assert!(load_dist(&comm, &p).is_err());
+        });
+    }
+
+    #[test]
+    fn rejects_indptr_not_starting_at_zero() {
+        let mdp = random_mdp(19, 8, 2, 0.9);
+        let path = tmpfile("badstart.mdpb");
+        save(&mdp, &path).unwrap();
+        let mut f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.seek(SeekFrom::Start(V2_HEADER_LEN)).unwrap();
+        f.write_all(&1u64.to_le_bytes()).unwrap();
+        drop(f);
+        assert!(load(&path).is_err());
+        let p = path.clone();
+        World::run(2, move |comm| {
+            assert!(load_dist(&comm, &p).is_err());
+        });
+    }
+
+    #[test]
+    fn writer_rejects_bad_rows() {
+        let h = Header::v2(4, 1, 0.9, 8, Objective::Min);
+        let path = tmpfile("writer_validation.mdpb");
+        MdpWriter::create_file(&path, &h).unwrap();
+        let mut w = MdpWriter::open_block(&path, h, 0, 4, 0, 8, 2).unwrap();
+        // column out of range
+        assert!(w.push_row(vec![(9, 1.0)], 0.0).is_err());
+        // non-stochastic
+        assert!(w.push_row(vec![(0, 0.4)], 0.0).is_err());
+        // non-finite cost
+        assert!(w.push_row(vec![(0, 1.0)], f64::NAN).is_err());
+        // a good row, then finishing early must fail
+        w.push_row(vec![(0, 1.0)], 1.0).unwrap();
+        assert!(w.finish().is_err());
+    }
+
+    #[test]
+    fn streaming_write_matches_serial_save_bytes() {
+        // the same garnet model through (a) build_serial + save and
+        // (b) write_streaming at several world sizes must be byte-identical
+        let spec = Arc::new(GarnetSpec::new(151, 3, 4, 11));
+        let gamma = 0.95;
+        let mdp = spec.build_serial(gamma).with_objective(Objective::Max);
+        let ref_path = tmpfile("stream_ref.mdpb");
+        save(&mdp, &ref_path).unwrap();
+        let want = std::fs::read(&ref_path).unwrap();
+        for ranks in [1usize, 2, 3] {
+            let out_path = tmpfile(&format!("stream_r{ranks}.mdpb"));
+            let spec2 = Arc::clone(&spec);
+            let p = out_path.clone();
+            World::run(ranks, move |comm| {
+                // chunk of 7 rows: deliberately not a divisor of anything
+                write_streaming(
+                    &comm,
+                    &p,
+                    spec2.n_states(),
+                    spec2.n_actions(),
+                    gamma,
+                    Objective::Max,
+                    7,
+                    |s, a| spec2.prob_row(s, a),
+                    |s, a| spec2.cost(s, a),
+                )
+                .unwrap();
+            });
+            let got = std::fs::read(&out_path).unwrap();
+            assert!(got == want, "ranks={ranks}: streamed bytes differ");
+        }
+    }
+
+    #[test]
+    fn save_dist_matches_serial_save_bytes() {
+        let mdp = Arc::new(random_mdp(17, 23, 3, 0.9).with_objective(Objective::Max));
+        let ref_path = tmpfile("savedist_ref.mdpb");
+        save(&mdp, &ref_path).unwrap();
+        let want = std::fs::read(&ref_path).unwrap();
+        for ranks in [1usize, 2, 4] {
+            let out_path = tmpfile(&format!("savedist_r{ranks}.mdpb"));
+            let rp = ref_path.clone();
+            let op = out_path.clone();
+            World::run(ranks, move |comm| {
+                let d = load_dist(&comm, &rp).unwrap();
+                save_dist(&comm, &d, &op).unwrap();
+            });
+            let got = std::fs::read(&out_path).unwrap();
+            assert!(got == want, "ranks={ranks}: save_dist bytes differ");
+        }
     }
 
     #[test]

@@ -10,8 +10,11 @@
 //! Construction mirrors madupite's two paths (paper claim C5):
 //! - **online/filler**: user functions `(s, a) → [(s', p)...]` and
 //!   `(s, a) → cost`, evaluated rank-locally in parallel;
-//! - **offline**: binary files written/loaded by [`io`], including
-//!   rank-sliced distributed loading.
+//! - **offline**: binary `.mdpb` v2 files written/loaded by [`io`],
+//!   including rank-sliced distributed loading ([`io::load_dist`]), a
+//!   chunked streaming writer ([`io::MdpWriter`]) and rank-parallel
+//!   generation/saving ([`io::write_streaming`], [`io::save_dist`]) that
+//!   never materialize the full model on one rank.
 
 pub mod io;
 pub mod matfree;
@@ -57,6 +60,14 @@ impl Objective {
             "min" | "mincost" => Ok(Objective::Min),
             "max" | "maxreward" => Ok(Objective::Max),
             other => Err(format!("unknown objective '{other}'")),
+        }
+    }
+
+    /// Canonical option-string form (inverse of [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Min => "min",
+            Objective::Max => "max",
         }
     }
 }

@@ -19,7 +19,8 @@ pub mod sis;
 pub mod traffic;
 
 use crate::comm::Comm;
-use crate::mdp::{DistMdp, Mdp};
+use crate::mdp::{io, DistMdp, Mdp, Objective};
+use std::path::Path;
 
 /// Anything that can generate MDP rows state-by-state.
 ///
@@ -51,6 +52,31 @@ pub trait ModelGenerator: Sync {
             self.n_states(),
             self.n_actions(),
             gamma,
+            |s, a| self.prob_row(s, a),
+            |s, a| self.cost(s, a),
+        )
+    }
+
+    /// Stream the generated MDP straight to a `.mdpb` v2 file without
+    /// materializing it: rank-parallel, O(chunk) memory per rank, bytes
+    /// identical for every world size (the offline pipeline behind
+    /// `madupite generate`). Collective; see [`io::write_streaming`].
+    fn write_mdpb(
+        &self,
+        comm: &Comm,
+        gamma: f64,
+        objective: Objective,
+        path: &Path,
+        chunk_rows: usize,
+    ) -> std::io::Result<io::Header> {
+        io::write_streaming(
+            comm,
+            path,
+            self.n_states(),
+            self.n_actions(),
+            gamma,
+            objective,
+            chunk_rows,
             |s, a| self.prob_row(s, a),
             |s, a| self.cost(s, a),
         )

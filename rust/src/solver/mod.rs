@@ -174,7 +174,9 @@ pub struct SolveResult {
     pub converged: bool,
     pub wall_time_s: f64,
     pub trace: Vec<IterRecord>,
-    /// Total communication volume (bytes) during the solve.
+    /// Total communication volume (bytes, summed over ranks) during the
+    /// solve itself — model distribution/assembly and result gathering are
+    /// excluded (counters are snapshotted at `solve_dist` entry and exit).
     pub comm_bytes: u64,
     /// Discount factor of the solved MDP (for the certificate below).
     pub gamma: f64,
@@ -223,11 +225,22 @@ pub struct LocalSolveResult {
     pub converged: bool,
     pub wall_time_s: f64,
     pub trace: Vec<IterRecord>,
+    /// Global communication bytes counted between solve entry and exit.
+    pub comm_bytes: u64,
 }
 
 /// Solve a distributed MDP in-world. Collective; every rank receives its
 /// local blocks of V* and π*.
 pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolveResult {
+    // Snapshot the (world-shared) comm counters so the result reports the
+    // bytes of *this solve*, not everything since world start (model
+    // distribution, assembly, earlier solves). The barrier makes the
+    // snapshot exact: in the SPMD thread world every rank counts an op
+    // before entering the next collective, so once all ranks reach this
+    // barrier, no pre-solve bytes are missing and no solve bytes have
+    // been counted yet.
+    comm.barrier();
+    let comm_bytes_start = comm.stats().total_bytes();
     let start = Instant::now();
     let nl = mdp.local_states();
     let part = mdp.partition();
@@ -373,6 +386,11 @@ pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolve
         converged = residual < opts.atol;
     }
 
+    // Closing barrier: every rank has counted all solve collectives once
+    // all ranks arrive, so the delta is exact and rank-identical.
+    comm.barrier();
+    let comm_bytes = comm.stats().total_bytes() - comm_bytes_start;
+
     LocalSolveResult {
         value: v,
         policy,
@@ -384,6 +402,7 @@ pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolve
         converged,
         wall_time_s: start.elapsed().as_secs_f64(),
         trace,
+        comm_bytes,
     }
 }
 
@@ -397,7 +416,6 @@ pub fn gather_result(comm: &Comm, local: LocalSolveResult) -> SolveResult {
         .into_iter()
         .map(|a| a as usize)
         .collect();
-    let comm_bytes = comm.stats().total_bytes();
     SolveResult {
         value,
         policy,
@@ -408,7 +426,7 @@ pub fn gather_result(comm: &Comm, local: LocalSolveResult) -> SolveResult {
         converged: local.converged,
         wall_time_s: local.wall_time_s,
         trace: local.trace,
-        comm_bytes,
+        comm_bytes: local.comm_bytes,
         gamma: local.gamma,
     }
 }
@@ -446,6 +464,11 @@ mod tests {
             Method::ipi_tfqmr(),
             Method::Ipi {
                 ksp: KspType::Richardson { omega: 1.0 },
+                pc: PcType::Jacobi,
+            },
+            // regression: the dispatcher used to drop the pc for TFQMR
+            Method::Ipi {
+                ksp: KspType::Tfqmr,
                 pc: PcType::Jacobi,
             },
         ]
@@ -734,6 +757,36 @@ mod tests {
             true_err,
             coarse.error_bound()
         );
+    }
+
+    #[test]
+    fn comm_bytes_is_per_solve_delta_not_cumulative() {
+        // Regression: gather_result used to report the world-cumulative
+        // counter, so a solve's comm_bytes included model distribution and
+        // every earlier solve. Two identical solves on the same world must
+        // now report identical volumes, both strictly below the cumulative
+        // total (which also contains assembly + gather traffic).
+        let mdp = Arc::new(random_mdp(13, 30, 3, 0.95));
+        let opts = SolveOptions {
+            method: Method::ipi_gmres(),
+            atol: 1e-8,
+            ..Default::default()
+        };
+        let out = World::run(3, move |comm| {
+            let d = DistMdp::from_serial(&comm, &mdp);
+            let r1 = gather_result(&comm, solve_dist(&comm, &d, &opts));
+            let r2 = gather_result(&comm, solve_dist(&comm, &d, &opts));
+            comm.barrier();
+            (r1.comm_bytes, r2.comm_bytes, comm.stats().total_bytes())
+        });
+        for (b1, b2, cumulative) in out {
+            assert!(b1 > 0, "distributed solve must communicate");
+            assert_eq!(b1, b2, "identical solves must report identical volume");
+            assert!(
+                b1 < cumulative,
+                "solve delta {b1} not below cumulative {cumulative}"
+            );
+        }
     }
 
     #[test]

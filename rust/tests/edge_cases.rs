@@ -143,13 +143,17 @@ fn nonstochastic_file_rejected() {
     let path = tmpfile("nonstoch.mdpb");
     io::save(&mdp, &path).unwrap();
     let mut bytes = std::fs::read(&path).unwrap();
-    // values start after header + indptr + indices
+    // values start after the v2 header + indptr + indices
     let nm = 20usize;
     let nnz = mdp.transitions().nnz();
-    let values_off = 40 + 8 * (nm + 1) + 8 * nnz;
+    let values_off = 48 + 8 * (nm + 1) + 8 * nnz;
     bytes[values_off..values_off + 8].copy_from_slice(&9.0f64.to_le_bytes());
     std::fs::write(&path, &bytes).unwrap();
     assert!(io::load(&path).is_err());
+    // the distributed reader applies the same stochasticity validation
+    World::run(2, move |comm| {
+        assert!(io::load_dist(&comm, &path).is_err());
+    });
 }
 
 // ------------------------------------------------------------ comm stress

@@ -1,0 +1,165 @@
+//! Offline pipeline end-to-end tests (paper claim C5, `.mdpb` v2).
+//!
+//! The acceptance properties of the v2 format + streaming writer:
+//! - an MDP saved with `Objective::Max` reloads as max-objective and
+//!   solves to the same values/policy as the in-memory model, through
+//!   both the serial and the rank-sliced distributed reader;
+//! - rank-parallel streaming generation (`write_mdpb`) produces bytes
+//!   identical to the in-memory save, for every world size, and the
+//!   resulting file solves identically to the in-memory model — i.e.
+//!   "collect on M ranks, solve on N" holds across the full matrix.
+
+use madupite::comm::World;
+use madupite::mdp::{io, Objective};
+use madupite::models::{garnet::GarnetSpec, ModelGenerator};
+use madupite::solver::{gather_result, solve_dist, solve_serial, Method, SolveOptions};
+use std::sync::Arc;
+
+fn tmpfile(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("madupite-io-pipeline");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for i in 0..a.len() {
+        assert!(
+            (a[i] - b[i]).abs() <= tol * (1.0 + a[i].abs().max(b[i].abs())),
+            "{what}: element {i}: {} vs {}",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+/// The v1 regression end-to-end: a reward-maximizing MDP must round-trip
+/// as reward-maximizing. Before v2 the objective was dropped on save and
+/// hard-coded to Min on load, so the reloaded model solved to the
+/// *cost-minimizing* policy.
+#[test]
+fn max_objective_roundtrips_and_solves_identically() {
+    let mdp = GarnetSpec::new(60, 3, 4, 7)
+        .build_serial(0.95)
+        .with_objective(Objective::Max);
+    let opts = SolveOptions {
+        method: Method::ipi_gmres(),
+        atol: 1e-9,
+        ..Default::default()
+    };
+    let want = solve_serial(&mdp, &opts);
+    assert!(want.converged);
+
+    // sanity: the max policy genuinely differs from the min policy, so
+    // this test would catch an objective silently degrading to Min
+    let min_res = solve_serial(&mdp.clone().with_objective(Objective::Min), &opts);
+    assert_ne!(want.policy, min_res.policy, "degenerate fixture");
+
+    let path = tmpfile("pipeline_max.mdpb");
+    io::save(&mdp, &path).unwrap();
+
+    // serial reload
+    let loaded = io::load(&path).unwrap();
+    assert_eq!(loaded.objective(), Objective::Max);
+    let got = solve_serial(&loaded, &opts);
+    assert!(got.converged);
+    close(&want.value, &got.value, 1e-7, "serial reload values");
+    assert_eq!(want.policy, got.policy, "serial reload policy");
+
+    // distributed reload on several world sizes
+    for ranks in [1usize, 2, 3] {
+        let p = path.clone();
+        let o = opts.clone();
+        let mut results = World::run(ranks, move |comm| {
+            let d = io::load_dist(&comm, &p).unwrap();
+            assert_eq!(d.objective(), Objective::Max);
+            gather_result(&comm, solve_dist(&comm, &d, &o))
+        });
+        let r = results.swap_remove(0);
+        assert!(r.converged, "ranks={ranks}");
+        close(
+            &want.value,
+            &r.value,
+            1e-7,
+            &format!("dist reload values (ranks={ranks})"),
+        );
+        assert_eq!(want.policy, r.policy, "dist reload policy (ranks={ranks})");
+    }
+}
+
+/// Generate on M ranks (streaming, O(chunk) memory), solve on N ranks:
+/// the full offline matrix must agree with solving the in-memory model.
+#[test]
+fn streaming_generate_on_m_ranks_solve_on_n_ranks() {
+    let spec = Arc::new(GarnetSpec::new(80, 3, 5, 21));
+    let gamma = 0.97;
+    let mdp = spec.build_serial(gamma).with_objective(Objective::Max);
+    let opts = SolveOptions {
+        method: Method::ipi_gmres(),
+        atol: 1e-9,
+        ..Default::default()
+    };
+    let want = solve_serial(&mdp, &opts);
+    assert!(want.converged);
+
+    for gen_ranks in [1usize, 3] {
+        let path = tmpfile(&format!("gen_m{gen_ranks}.mdpb"));
+        let spec2 = Arc::clone(&spec);
+        let p = path.clone();
+        let results = World::run(gen_ranks, move |comm| {
+            // small chunk to exercise many flushes
+            spec2.write_mdpb(&comm, gamma, Objective::Max, &p, 13)
+        });
+        for r in results {
+            r.unwrap();
+        }
+        for solve_ranks in [1usize, 2] {
+            let p = path.clone();
+            let o = opts.clone();
+            let mut results = World::run(solve_ranks, move |comm| {
+                let d = io::load_dist(&comm, &p).unwrap();
+                gather_result(&comm, solve_dist(&comm, &d, &o))
+            });
+            let r = results.swap_remove(0);
+            assert!(r.converged, "gen={gen_ranks} solve={solve_ranks}");
+            close(
+                &want.value,
+                &r.value,
+                1e-7,
+                &format!("values (gen={gen_ranks}, solve={solve_ranks})"),
+            );
+            assert_eq!(
+                want.policy, r.policy,
+                "policy (gen={gen_ranks}, solve={solve_ranks})"
+            );
+        }
+    }
+}
+
+/// `info`-level sanity on a streamed file: the header round-trips the
+/// generation parameters exactly.
+#[test]
+fn streamed_header_reports_generation_parameters() {
+    let spec = GarnetSpec::new(50, 2, 3, 5);
+    let path = tmpfile("header_check.mdpb");
+    let p = path.clone();
+    let nnz = {
+        let spec = Arc::new(spec);
+        let s2 = Arc::clone(&spec);
+        let mut out = World::run(2, move |comm| {
+            s2.write_mdpb(&comm, 0.9, Objective::Max, &p, io::DEFAULT_CHUNK_ROWS)
+                .unwrap()
+        });
+        out.swap_remove(0).nnz
+    };
+    let mut f = std::fs::File::open(&path).unwrap();
+    let file_len = f.metadata().unwrap().len();
+    let h = io::read_header(&mut f).unwrap();
+    h.validate_file_len(file_len).unwrap();
+    assert_eq!(h.version, io::VERSION);
+    assert_eq!(h.n_states, 50);
+    assert_eq!(h.n_actions, 2);
+    assert_eq!(h.gamma, 0.9);
+    assert_eq!(h.objective, Objective::Max);
+    assert_eq!(h.nnz, nnz);
+}
