@@ -1,0 +1,95 @@
+//! API tour: define an MDP from closures, solve it on 4 ranks through the
+//! options database, and write the madupite-style output files
+//! (`write_policy` / `write_cost` / `write_json_metadata`).
+//!
+//! The model is a service-queue admission problem defined entirely inline —
+//! no generator, no file — in the spirit of madupite's
+//! `createTransitionProbabilityTensor` closures: a queue of up to N jobs,
+//! arrivals with probability p, and two actions (slow/fast service) trading
+//! service cost against holding and overflow cost.
+//!
+//! Run: `cargo run --release --example api_tour`
+
+use madupite::api::{MdpBuilder, Solver};
+
+fn main() -> Result<(), madupite::api::ApiError> {
+    // 1. The model, as closures. States 0..=n_jobs count queued jobs.
+    let n_states = 2_000usize;
+    let p_arrival = 0.6;
+    // service completion probability per action: slow is cheap, fast costs
+    let p_serve = [0.5, 0.85];
+
+    let prob = move |s: usize, a: usize| -> Vec<(usize, f64)> {
+        let last = n_states - 1;
+        let ps = p_serve[a];
+        // transitions: arrival (+1 unless full), service (−1 unless empty)
+        let up = if s < last { p_arrival * (1.0 - ps) } else { 0.0 };
+        let down = if s > 0 { ps * (1.0 - p_arrival) } else { 0.0 };
+        let stay = 1.0 - up - down;
+        let mut row = Vec::with_capacity(3);
+        if down > 0.0 {
+            row.push((s - 1, down));
+        }
+        row.push((s, stay));
+        if up > 0.0 {
+            row.push((s + 1, up));
+        }
+        row
+    };
+    let cost = move |s: usize, a: usize| -> f64 {
+        let holding = s as f64 * 0.05;
+        let service = if a == 1 { 1.0 } else { 0.2 };
+        let overflow = if s == n_states - 1 { 50.0 } else { 0.0 };
+        holding + service + overflow
+    };
+
+    // 2. Build + configure through the options database, madupite style.
+    let builder = MdpBuilder::from_fillers(n_states, 2, prob, cost).gamma(0.995);
+    let mut solver = Solver::new(builder);
+    solver.set_options_from_str(
+        "-method ipi -ksp_type gmres -pc_type jacobi -alpha 1e-4 -atol 1e-9 -ranks 4",
+    )?;
+    solver.set_options_from_env()?; // MADUPITE_OPTIONS supplies low-priority defaults
+
+    // 3. Solve on 4 SPMD ranks.
+    let outcome = solver.solve()?;
+    println!(
+        "solved {} states x {} actions on {} ranks: method={} converged={} outer={} \
+         spmvs={} residual={:.2e} time={:.3}s",
+        outcome.n_states,
+        outcome.n_actions,
+        outcome.ranks,
+        outcome.options.method.name(),
+        outcome.result.converged,
+        outcome.result.outer_iterations,
+        outcome.result.total_spmvs,
+        outcome.result.residual,
+        outcome.result.wall_time_s,
+    );
+
+    // 4. Inspect: below some queue length the slow server suffices; past
+    // the threshold the optimal policy switches to the fast server.
+    let switch = outcome.policy().iter().position(|&a| a == 1);
+    match switch {
+        Some(s) => println!("policy switches to fast service at queue length {s}"),
+        None => println!("slow service is optimal everywhere"),
+    }
+
+    // 5. Write the madupite output surface (root-gathered, one writer).
+    let dir = std::env::temp_dir().join("madupite_api_tour");
+    std::fs::create_dir_all(&dir)
+        .map_err(|e| madupite::api::ApiError(format!("creating {}: {e}", dir.display())))?;
+    let policy_path = dir.join("policy.txt");
+    let cost_path = dir.join("cost.txt");
+    let meta_path = dir.join("metadata.json");
+    outcome.write_policy(&policy_path)?;
+    outcome.write_cost(&cost_path)?;
+    outcome.write_json_metadata(&meta_path)?;
+    println!(
+        "wrote {}, {}, {}",
+        policy_path.display(),
+        cost_path.display(),
+        meta_path.display()
+    );
+    Ok(())
+}

@@ -1,16 +1,18 @@
-//! Quickstart: build a small maze MDP, solve it with three methods, and
-//! compare their work counts — the 60-second tour of the public API.
+//! Quickstart: build a small maze MDP through the embedded API, solve it
+//! with three methods via the options database, and compare their work
+//! counts — the 60-second tour of the public API.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use madupite::api::{MdpBuilder, Solver};
 use madupite::models::gridworld::GridSpec;
-use madupite::models::ModelGenerator;
-use madupite::solver::{solve_serial, Method, SolveOptions};
+use std::sync::Arc;
 
-fn main() {
+fn main() -> Result<(), madupite::api::ApiError> {
     // 1. Build a 32×32 maze MDP (1024 states, 4 actions, γ = 0.99).
     let spec = GridSpec::maze(32, 32, 7);
-    let mdp = spec.build_serial(0.99);
+    let builder = MdpBuilder::from_model(Arc::new(spec.clone())).gamma(0.99);
+    let mdp = builder.build_serial()?;
     println!(
         "maze MDP: {} states × {} actions, {} transition nonzeros",
         mdp.n_states(),
@@ -18,43 +20,43 @@ fn main() {
         mdp.transitions().nnz()
     );
 
-    // 2. Solve with value iteration, modified PI, and iPI(GMRES).
-    for method in [Method::Vi, Method::Mpi { sweeps: 20 }, Method::ipi_gmres()] {
-        let opts = SolveOptions {
-            method: method.clone(),
-            atol: 1e-8,
-            max_outer: 100_000,
-            ..Default::default()
-        };
-        let r = solve_serial(&mdp, &opts);
+    // 2. Solve with value iteration, modified PI, and iPI(GMRES) — all
+    // configured through the same `-key value` options database the CLI
+    // uses.
+    for method in ["vi", "mpi", "ipi"] {
+        let mut solver = Solver::new(builder.clone());
+        solver
+            .set_option("-method", method)?
+            .set_option("-atol", "1e-8")?
+            .set_option("-max_iter_pi", "100000")?;
+        let outcome = solver.solve()?;
         println!(
             "  {:<14} converged={} outer={:5} spmvs={:6} residual={:.2e} time={:.3}s",
-            method.name(),
-            r.converged,
-            r.outer_iterations,
-            r.total_spmvs,
-            r.residual,
-            r.wall_time_s
+            outcome.options.method.name(),
+            outcome.result.converged,
+            outcome.result.outer_iterations,
+            outcome.result.total_spmvs,
+            outcome.result.residual,
+            outcome.result.wall_time_s
         );
     }
 
-    // 3. Inspect the solution: V* at the start corner and the first moves.
-    let r = solve_serial(
-        &mdp,
-        &SolveOptions {
-            method: Method::ipi_gmres(),
-            atol: 1e-10,
-            ..Default::default()
-        },
-    );
+    // 3. Inspect the solution: V* at the start corner and the first move.
+    let mut solver = Solver::new(builder);
+    solver.set_options_from_str("-method ipi -ksp_type gmres -atol 1e-10")?;
+    let outcome = solver.solve()?;
     let action_names = ["north", "east", "south", "west"];
     println!(
         "\noptimal expected cost from the start corner: {:.4}",
-        r.value[0]
+        outcome.value()[0]
     );
-    println!("first move from the start corner: {}", action_names[r.policy[0]]);
+    println!(
+        "first move from the start corner: {}",
+        action_names[outcome.policy()[0]]
+    );
     println!(
         "value at the goal (must be 0): {:.2e}",
-        r.value[spec.goal.0 * 32 + spec.goal.1]
+        outcome.value()[spec.goal.0 * 32 + spec.goal.1]
     );
+    Ok(())
 }

@@ -1,0 +1,486 @@
+//! [`MdpBuilder`] — construct serial or distributed MDPs from three
+//! interchangeable sources, plus the named benchmark-model catalog.
+//!
+//! madupite's `MDP` object is created either from user *filler* functions
+//! (`createTransitionProbabilityTensor` / `createStageCostMatrix` closures),
+//! from an offline binary file, or from one of the benchmark generators.
+//! The builder mirrors that surface: exactly one source must be set
+//! ([`MdpBuilder::file`], [`MdpBuilder::model`], [`MdpBuilder::fillers`]),
+//! conflicting or missing sources are validation *errors* (never panics),
+//! and closure-defined models are checked row-by-row for stochasticity
+//! before any solve starts.
+
+use crate::mdp::{self, Mdp, Objective};
+use crate::models::{
+    garnet::GarnetSpec, gridworld::GridSpec, inventory::InventorySpec, queueing::QueueSpec,
+    replacement::ReplacementSpec, sis::SisSpec, traffic::TrafficSpec, ModelGenerator,
+};
+use crate::util::args::Options;
+use std::sync::Arc;
+
+use super::{options, ApiError};
+
+/// Shared sparse-transition closure: `(s, a) → [(s', p), ...]`.
+pub type ProbFn = Arc<dyn Fn(usize, usize) -> Vec<(usize, f64)> + Send + Sync>;
+
+/// Shared stage-cost closure: `(s, a) → g(s, a)`.
+pub type CostFn = Arc<dyn Fn(usize, usize) -> f64 + Send + Sync>;
+
+/// One of the three model sources the builder accepts.
+#[derive(Clone)]
+pub(crate) enum Source {
+    /// Offline `.mdpb` file (gamma/objective come from its header).
+    File(String),
+    /// A benchmark model generator.
+    Model(Arc<dyn ModelGenerator + Send + Sync>),
+    /// User closures in the spirit of madupite's
+    /// `createTransitionProbabilityTensor`.
+    Fillers {
+        n_states: usize,
+        n_actions: usize,
+        prob: ProbFn,
+        cost: CostFn,
+    },
+}
+
+impl Source {
+    fn kind(&self) -> &'static str {
+        match self {
+            Source::File(_) => "file",
+            Source::Model(_) => "model",
+            Source::Fillers { .. } => "fillers",
+        }
+    }
+}
+
+/// Builder for serial or distributed MDPs (madupite's `MDP` creation
+/// surface). Construct with one source, optionally set `gamma`/`objective`,
+/// then either [`build_serial`](Self::build_serial) or hand it to a
+/// [`crate::api::Solver`] for a (possibly multi-rank) solve.
+///
+/// ```
+/// use madupite::api::MdpBuilder;
+///
+/// // Two-state chain: action 1 jumps to the absorbing state 1 at cost 1.5.
+/// let builder = MdpBuilder::from_fillers(
+///     2,
+///     2,
+///     |s, a| match (s, a) {
+///         (0, 0) => vec![(0, 1.0)],
+///         (0, 1) => vec![(1, 1.0)],
+///         _ => vec![(1, 1.0)],
+///     },
+///     |s, a| match (s, a) {
+///         (0, 0) => 1.0,
+///         (0, 1) => 1.5,
+///         _ => 0.0,
+///     },
+/// )
+/// .gamma(0.5);
+/// let mdp = builder.build_serial().unwrap();
+/// assert_eq!(mdp.n_states(), 2);
+/// ```
+#[derive(Clone, Default)]
+pub struct MdpBuilder {
+    sources: Vec<Source>,
+    gamma: Option<f64>,
+    objective: Option<Objective>,
+}
+
+impl MdpBuilder {
+    /// Empty builder: add exactly one source before building/solving.
+    pub fn new() -> MdpBuilder {
+        MdpBuilder::default()
+    }
+
+    /// Builder with an offline `.mdpb` file source.
+    pub fn from_file(path: impl Into<String>) -> MdpBuilder {
+        MdpBuilder::new().file(path)
+    }
+
+    /// Builder over an explicit benchmark generator.
+    pub fn from_model(generator: Arc<dyn ModelGenerator + Send + Sync>) -> MdpBuilder {
+        MdpBuilder::new().model(generator)
+    }
+
+    /// Builder over a named catalog model with `-key value` parameters
+    /// (see [`MODEL_CATALOG`]).
+    pub fn from_model_name(name: &str, params: &Options) -> Result<MdpBuilder, ApiError> {
+        Ok(MdpBuilder::new().model(model_from_options(name, params)?))
+    }
+
+    /// Builder from user closures `(s, a) → row` / `(s, a) → cost`. Rows
+    /// are validated (stochastic, in-range, finite) when the MDP is built.
+    pub fn from_fillers(
+        n_states: usize,
+        n_actions: usize,
+        prob: impl Fn(usize, usize) -> Vec<(usize, f64)> + Send + Sync + 'static,
+        cost: impl Fn(usize, usize) -> f64 + Send + Sync + 'static,
+    ) -> MdpBuilder {
+        MdpBuilder::new().fillers(n_states, n_actions, prob, cost)
+    }
+
+    /// Add a `.mdpb` file source (chainable; at most one source may be set).
+    pub fn file(mut self, path: impl Into<String>) -> MdpBuilder {
+        self.sources.push(Source::File(path.into()));
+        self
+    }
+
+    /// Add a generator source (chainable; at most one source may be set).
+    pub fn model(mut self, generator: Arc<dyn ModelGenerator + Send + Sync>) -> MdpBuilder {
+        self.sources.push(Source::Model(generator));
+        self
+    }
+
+    /// Add a closure source (chainable; at most one source may be set).
+    pub fn fillers(
+        mut self,
+        n_states: usize,
+        n_actions: usize,
+        prob: impl Fn(usize, usize) -> Vec<(usize, f64)> + Send + Sync + 'static,
+        cost: impl Fn(usize, usize) -> f64 + Send + Sync + 'static,
+    ) -> MdpBuilder {
+        self.sources.push(Source::Fillers {
+            n_states,
+            n_actions,
+            prob: Arc::new(prob),
+            cost: Arc::new(cost),
+        });
+        self
+    }
+
+    /// Set the discount factor (validated to [0, 1) at build/solve time).
+    /// A `-gamma` entry in the solver's options database overrides this.
+    pub fn gamma(mut self, gamma: f64) -> MdpBuilder {
+        self.gamma = Some(gamma);
+        self
+    }
+
+    /// Set the optimization sense (min-cost by default). A `-objective`
+    /// entry in the solver's options database overrides this.
+    pub fn objective(mut self, objective: Objective) -> MdpBuilder {
+        self.objective = Some(objective);
+        self
+    }
+
+    /// Builder-level gamma, if explicitly set.
+    pub fn gamma_value(&self) -> Option<f64> {
+        self.gamma
+    }
+
+    /// Builder-level objective, if explicitly set.
+    pub fn objective_value(&self) -> Option<Objective> {
+        self.objective
+    }
+
+    /// The single configured source — errors on zero or conflicting
+    /// sources.
+    pub(crate) fn resolved_source(&self) -> Result<&Source, ApiError> {
+        match self.sources.as_slice() {
+            [] => Err(ApiError(
+                "no model source set: use one of file/model/fillers (or -file / -model)".into(),
+            )),
+            [one] => Ok(one),
+            many => {
+                let kinds: Vec<&str> = many.iter().map(|s| s.kind()).collect();
+                Err(ApiError(format!(
+                    "conflicting model sources: {} are all set — choose exactly one",
+                    kinds.join(" and ")
+                )))
+            }
+        }
+    }
+
+    /// Build the model from the CLI options database: `-file` selects the
+    /// offline source, otherwise `-model` (default `maze`) selects a
+    /// catalog model. Setting both is a conflicting-sources error.
+    pub fn from_options(db: &Options) -> Result<MdpBuilder, ApiError> {
+        match (db.get("file").map(str::to_string), db.get("model")) {
+            (Some(_), Some(_)) => Err(ApiError(
+                "conflicting model sources: -file and -model are both set — choose one".into(),
+            )),
+            (Some(path), None) => Ok(MdpBuilder::from_file(path)),
+            (None, model) => {
+                let name = model.unwrap_or("maze").to_string();
+                MdpBuilder::from_model_name(&name, db)
+            }
+        }
+    }
+
+    /// Build the full in-memory serial [`Mdp`] (single rank; for the
+    /// distributed path hand the builder to a [`crate::api::Solver`]).
+    pub fn build_serial(&self) -> Result<Mdp, ApiError> {
+        let source = self.resolved_source()?;
+        match source {
+            Source::File(path) => {
+                if self.gamma.is_some() || self.objective.is_some() {
+                    return Err(ApiError(format!(
+                        "gamma/objective come from the .mdpb header of '{path}'; \
+                         do not set them on the builder"
+                    )));
+                }
+                mdp::io::load(path).map_err(|e| ApiError(format!("loading {path}: {e}")))
+            }
+            Source::Model(generator) => {
+                let gamma = validate_gamma(self.gamma.unwrap_or(0.99))?;
+                Ok(generator
+                    .build_serial(gamma)
+                    .with_objective(self.objective.unwrap_or_default()))
+            }
+            Source::Fillers {
+                n_states,
+                n_actions,
+                prob,
+                cost,
+            } => {
+                let gamma = validate_gamma(self.gamma.unwrap_or(0.99))?;
+                Mdp::try_from_fillers(
+                    *n_states,
+                    *n_actions,
+                    gamma,
+                    |s, a| prob(s, a),
+                    |s, a| cost(s, a),
+                )
+                .map(|m| m.with_objective(self.objective.unwrap_or_default()))
+                .map_err(ApiError)
+            }
+        }
+    }
+}
+
+fn validate_gamma(gamma: f64) -> Result<f64, ApiError> {
+    mdp::validate_gamma(gamma).map_err(ApiError)
+}
+
+/// One catalog entry: a named benchmark model plus the `-key value`
+/// parameters it accepts (with their defaults). The CLI help prints this
+/// table, so it cannot drift from [`model_from_options`].
+pub struct ModelInfo {
+    /// Catalog name (the `-model` value).
+    pub name: &'static str,
+    /// Accepted parameters with defaults, in CLI spelling.
+    pub params: &'static str,
+    /// One-line description.
+    pub about: &'static str,
+}
+
+/// The benchmark models `-model` accepts — one entry per arm of
+/// [`model_from_options`] (a unit test enforces the correspondence).
+pub const MODEL_CATALOG: &[ModelInfo] = &[
+    ModelInfo {
+        name: "maze",
+        params: "-rows 64 -cols 64 -seed 42",
+        about: "random-maze navigation gridworld (walls, 4 moves, slip)",
+    },
+    ModelInfo {
+        name: "grid",
+        params: "-rows 64 -cols 64",
+        about: "open gridworld navigation (no walls)",
+    },
+    ModelInfo {
+        name: "sis",
+        params: "-population 1000 -num_actions 4",
+        about: "SIS epidemic intervention control",
+    },
+    ModelInfo {
+        name: "traffic",
+        params: "-capacity 12",
+        about: "two-queue traffic signal control",
+    },
+    ModelInfo {
+        name: "garnet",
+        params: "-num_states 1000 -num_actions 4 -branching 5 -seed 42",
+        about: "random Garnet MDP family",
+    },
+    ModelInfo {
+        name: "inventory",
+        params: "-capacity 50",
+        about: "inventory control with order/holding/stockout costs",
+    },
+    ModelInfo {
+        name: "queueing",
+        params: "-capacity 50",
+        about: "queueing admission control",
+    },
+    ModelInfo {
+        name: "replacement",
+        params: "-num_states 50",
+        about: "machine replacement (aging cost vs replacement)",
+    },
+];
+
+/// Require a model-parameter condition, as a typed error (the spec
+/// constructors `assert!` the same invariants — this keeps user input on
+/// the error path, never the panic path).
+fn require(cond: bool, msg: impl Into<String>) -> Result<(), ApiError> {
+    if cond {
+        Ok(())
+    } else {
+        Err(ApiError(msg.into()))
+    }
+}
+
+/// Instantiate a catalog model from its name and `-key value` parameters
+/// (the one model registry behind the CLI, the embedded API and `generate`).
+/// Out-of-range parameters are typed errors, not panics.
+pub fn model_from_options(
+    name: &str,
+    db: &Options,
+) -> Result<Arc<dyn ModelGenerator + Send + Sync>, ApiError> {
+    let seed = db.get_u64("seed", 42)?;
+    Ok(match name {
+        "maze" | "grid" => {
+            let rows = db.get_usize("rows", 64)?;
+            let cols = db.get_usize("cols", 64)?;
+            require(
+                rows >= 2 && cols >= 2,
+                format!("{name} needs -rows >= 2 and -cols >= 2, got {rows}x{cols}"),
+            )?;
+            if name == "maze" {
+                Arc::new(GridSpec::maze(rows, cols, seed))
+            } else {
+                Arc::new(GridSpec::open(rows, cols))
+            }
+        }
+        "sis" => {
+            let population = db.get_usize("population", 1000)?;
+            let num_actions = db.get_usize("num_actions", 4)?;
+            require(
+                population >= 1 && num_actions >= 1,
+                "sis needs -population >= 1 and -num_actions >= 1",
+            )?;
+            Arc::new(SisSpec::standard(population, num_actions))
+        }
+        "traffic" => {
+            let capacity = db.get_usize("capacity", 12)?;
+            require(capacity >= 1, "traffic needs -capacity >= 1")?;
+            Arc::new(TrafficSpec::standard(capacity))
+        }
+        "garnet" => {
+            let num_states = db.get_usize("num_states", 1000)?;
+            let num_actions = db.get_usize("num_actions", 4)?;
+            let branching = db.get_usize("branching", 5)?;
+            require(
+                num_states >= 1 && num_actions >= 1,
+                "garnet needs -num_states >= 1 and -num_actions >= 1",
+            )?;
+            require(
+                branching >= 1 && branching <= num_states,
+                format!(
+                    "garnet needs 1 <= -branching <= -num_states, \
+                     got branching {branching} with {num_states} states"
+                ),
+            )?;
+            Arc::new(GarnetSpec::new(num_states, num_actions, branching, seed))
+        }
+        "inventory" => {
+            let capacity = db.get_usize("capacity", 50)?;
+            require(capacity >= 1, "inventory needs -capacity >= 1")?;
+            Arc::new(InventorySpec::standard(capacity))
+        }
+        "queueing" => {
+            let capacity = db.get_usize("capacity", 50)?;
+            require(capacity >= 1, "queueing needs -capacity >= 1")?;
+            Arc::new(QueueSpec::standard(capacity))
+        }
+        "replacement" => {
+            let num_states = db.get_usize("num_states", 50)?;
+            require(num_states >= 3, "replacement needs -num_states >= 3")?;
+            Arc::new(ReplacementSpec::standard(num_states))
+        }
+        other => {
+            let names: Vec<&str> = MODEL_CATALOG.iter().map(|m| m.name).collect();
+            return Err(match options::suggest(other, &names) {
+                Some(near) => ApiError(format!(
+                    "unknown model '{other}' (did you mean '{near}'?)"
+                )),
+                None => ApiError(format!("unknown model '{other}'")),
+            });
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn db(toks: &[&str]) -> Options {
+        Options::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn catalog_matches_registry() {
+        // every catalog name instantiates; an off-catalog name errors
+        for info in MODEL_CATALOG {
+            let g = model_from_options(info.name, &db(&[])).unwrap();
+            assert!(g.n_states() > 0, "{}", info.name);
+        }
+        assert!(model_from_options("not_a_model", &db(&[])).is_err());
+    }
+
+    #[test]
+    fn bad_model_params_are_errors_not_panics() {
+        // these all hit assert!s in the spec constructors if not caught
+        assert!(model_from_options("garnet", &db(&["-branching", "0"])).is_err());
+        assert!(model_from_options("garnet", &db(&["-branching", "2000"])).is_err());
+        assert!(model_from_options("replacement", &db(&["-num_states", "2"])).is_err());
+        assert!(model_from_options("maze", &db(&["-rows", "1"])).is_err());
+        assert!(model_from_options("sis", &db(&["-num_actions", "0"])).is_err());
+    }
+
+    #[test]
+    fn unknown_model_suggests() {
+        let err = model_from_options("mazee", &db(&[])).unwrap_err();
+        assert!(err.0.contains("unknown model"), "{err}");
+        assert!(err.0.contains("maze"), "{err}");
+    }
+
+    #[test]
+    fn conflicting_and_missing_sources() {
+        let none = MdpBuilder::new();
+        assert!(none.resolved_source().unwrap_err().0.contains("no model source"));
+        let both = MdpBuilder::from_file("x.mdpb").fillers(
+            1,
+            1,
+            |_, _| vec![(0, 1.0)],
+            |_, _| 0.0,
+        );
+        let err = both.resolved_source().unwrap_err();
+        assert!(err.0.contains("conflicting"), "{err}");
+        assert!(err.0.contains("file and fillers"), "{err}");
+    }
+
+    #[test]
+    fn from_options_source_selection() {
+        assert!(MdpBuilder::from_options(&db(&["-file", "a.mdpb", "-model", "maze"])).is_err());
+        let file = MdpBuilder::from_options(&db(&["-file", "a.mdpb"])).unwrap();
+        assert!(matches!(file.resolved_source().unwrap(), Source::File(_)));
+        let default = MdpBuilder::from_options(&db(&[])).unwrap();
+        assert!(matches!(default.resolved_source().unwrap(), Source::Model(_)));
+    }
+
+    #[test]
+    fn build_serial_validates_gamma_and_rows() {
+        let bad_gamma = MdpBuilder::from_fillers(1, 1, |_, _| vec![(0, 1.0)], |_, _| 0.0)
+            .gamma(1.5);
+        assert!(bad_gamma.build_serial().unwrap_err().0.contains("gamma"));
+
+        let substochastic =
+            MdpBuilder::from_fillers(2, 1, |_, _| vec![(0, 0.5)], |_, _| 0.0).gamma(0.9);
+        let err = substochastic.build_serial().unwrap_err();
+        assert!(err.0.contains("sums to"), "{err}");
+
+        let ok = MdpBuilder::from_fillers(2, 1, |s, _| vec![(s, 1.0)], |_, _| 1.0)
+            .gamma(0.9)
+            .build_serial()
+            .unwrap();
+        assert_eq!(ok.n_states(), 2);
+    }
+
+    #[test]
+    fn file_source_rejects_builder_gamma() {
+        let b = MdpBuilder::from_file("whatever.mdpb").gamma(0.9);
+        let err = b.build_serial().unwrap_err();
+        assert!(err.0.contains("header"), "{err}");
+    }
+}

@@ -1,0 +1,84 @@
+//! The embedded user API: madupite's user-facing surface as a library.
+//!
+//! The paper's core pitch is a *user-friendly API* over the distributed
+//! core. This module reproduces that layer for Rust callers — the same
+//! surface the original exposes to Python users:
+//!
+//! - [`MdpBuilder`] constructs MDPs from three interchangeable sources: an
+//!   offline `.mdpb` file, a named benchmark model ([`MODEL_CATALOG`]), or
+//!   user closures `(s, a) → row / cost` in the spirit of madupite's
+//!   `createTransitionProbabilityTensor`.
+//! - [`Solver`] carries a PETSc-style options database
+//!   (`set_option("-ksp_type", "gmres")`, [`Solver::set_options_from_str`],
+//!   env/argv ingestion) resolved through [`options::OPTION_TABLE`] — the
+//!   exact same table and code path the CLI uses, so the two can never
+//!   drift (a parity test compares their JSON output byte for byte).
+//! - [`SolveOutcome`] is the output surface: `write_policy`, `write_cost`,
+//!   `write_json_metadata` — gathered once on the calling thread, so the
+//!   writes are distributed-safe like the originals' root-gather.
+//!
+//! Everything user-triggerable fails with a typed [`ApiError`] (bad gamma,
+//! sub-stochastic closure rows, conflicting sources, unknown `-keys` with
+//! did-you-mean suggestions) — never a panic.
+//!
+//! ```
+//! use madupite::api::{MdpBuilder, Solver};
+//!
+//! // A 10-state random walk that can pay to jump home (state 0).
+//! let n = 10;
+//! let builder = MdpBuilder::from_fillers(
+//!     n,
+//!     2,
+//!     move |s, a| {
+//!         if a == 1 {
+//!             vec![(0, 1.0)] // jump home
+//!         } else if s + 1 < n {
+//!             vec![(s, 0.5), (s + 1, 0.5)] // drift away
+//!         } else {
+//!             vec![(s, 1.0)]
+//!         }
+//!     },
+//!     |s, a| if a == 1 { 2.0 } else { s as f64 * 0.1 },
+//! )
+//! .gamma(0.9);
+//!
+//! let mut solver = Solver::new(builder);
+//! solver.set_options_from_str("-method ipi -ksp_type gmres -atol 1e-9").unwrap();
+//! let outcome = solver.solve().unwrap();
+//! assert!(outcome.result.converged);
+//! assert_eq!(outcome.n_states, 10);
+//! ```
+
+pub mod builder;
+pub mod options;
+pub mod solver;
+
+pub use builder::{model_from_options, MdpBuilder, ModelInfo, MODEL_CATALOG};
+pub use solver::{run_solve, SolveOutcome, Solver};
+
+use std::fmt;
+
+/// Error type of the embedded API: every user-triggerable failure (bad
+/// options, invalid models, IO) is reported through this, never a panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ApiError(pub String);
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+impl From<crate::util::args::OptError> for ApiError {
+    fn from(e: crate::util::args::OptError) -> ApiError {
+        ApiError(e.to_string())
+    }
+}
+
+impl From<String> for ApiError {
+    fn from(s: String) -> ApiError {
+        ApiError(s)
+    }
+}

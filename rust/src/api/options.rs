@@ -1,0 +1,581 @@
+//! The shared options table: every `-key` the CLI and the embedded API
+//! accept, with one resolution path from strings to typed solver options.
+//!
+//! madupite inherits PETSc's options-database UX: solver configuration is a
+//! flat set of `-key value` pairs ingested from the command line, an options
+//! file, the environment or programmatic `set_option` calls. This module is
+//! the single source of truth for that database — [`OPTION_TABLE`] lists
+//! every known key (the CLI help is generated from it, so it cannot drift),
+//! [`validate_keys`] rejects unknown keys *before* anything runs (with a
+//! nearest-key suggestion, so `-ksp_tpye gmres` can no longer silently solve
+//! with the default method), and the `resolve_*` functions turn the database
+//! into [`Method`]/[`EvalBackend`]/[`SolveOptions`] for **both** the CLI and
+//! [`crate::api::Solver`] — proven identical by the parity test in
+//! `tests/api.rs`.
+
+use crate::ksp::precond::PcType;
+use crate::ksp::KspType;
+use crate::mdp::Objective;
+use crate::solver::{EvalBackend, Method, SolveOptions};
+use crate::util::args::Options;
+
+use super::ApiError;
+
+/// Which part of the surface an option belongs to (used to group the
+/// generated CLI help; resolution itself is scope-blind).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptionScope {
+    /// Model/source selection and per-model parameters.
+    Model,
+    /// Options shared by several commands (`-gamma`, `-ranks`, ...).
+    Common,
+    /// Outer/inner solver configuration (`solve`).
+    Solve,
+    /// Result output files (`solve`).
+    Output,
+    /// Offline generation (`generate`).
+    Generate,
+    /// Tooling commands (`info`, `artifacts`).
+    Tools,
+}
+
+/// One entry of the options database schema.
+pub struct OptionSpec {
+    /// Key as typed after the dash (`ksp_type` for `-ksp_type`).
+    pub key: &'static str,
+    /// Value placeholder or choice list shown in help (`"<float>"`,
+    /// `"gmres|bicgstab|..."`); empty for boolean flags.
+    pub value: &'static str,
+    /// One-line description shown in the generated help.
+    pub help: &'static str,
+    /// Help grouping.
+    pub scope: OptionScope,
+}
+
+/// Every option key the CLI and the embedded API accept. The CLI help and
+/// [`validate_keys`] are both driven by this table, so adding a knob here is
+/// all it takes to plumb it end to end.
+pub const OPTION_TABLE: &[OptionSpec] = &[
+    // -- model / source -----------------------------------------------------
+    OptionSpec {
+        key: "model",
+        value: "<name>",
+        help: "benchmark model to generate (see the model catalog)",
+        scope: OptionScope::Model,
+    },
+    OptionSpec {
+        key: "file",
+        value: "<path.mdpb>",
+        help: ".mdpb input (solve/info) or output (generate)",
+        scope: OptionScope::Model,
+    },
+    OptionSpec {
+        key: "rows",
+        value: "<n>",
+        help: "grid rows (maze, grid)",
+        scope: OptionScope::Model,
+    },
+    OptionSpec {
+        key: "cols",
+        value: "<n>",
+        help: "grid columns (maze, grid)",
+        scope: OptionScope::Model,
+    },
+    OptionSpec {
+        key: "seed",
+        value: "<u64>",
+        help: "generator seed (maze, garnet)",
+        scope: OptionScope::Model,
+    },
+    OptionSpec {
+        key: "population",
+        value: "<n>",
+        help: "population size (sis)",
+        scope: OptionScope::Model,
+    },
+    OptionSpec {
+        key: "capacity",
+        value: "<n>",
+        help: "capacity (traffic, inventory, queueing)",
+        scope: OptionScope::Model,
+    },
+    OptionSpec {
+        key: "num_states",
+        value: "<n>",
+        help: "state count (garnet, replacement)",
+        scope: OptionScope::Model,
+    },
+    OptionSpec {
+        key: "num_actions",
+        value: "<n>",
+        help: "action count (garnet, sis)",
+        scope: OptionScope::Model,
+    },
+    OptionSpec {
+        key: "branching",
+        value: "<n>",
+        help: "successors per (s,a) row (garnet)",
+        scope: OptionScope::Model,
+    },
+    // -- common -------------------------------------------------------------
+    OptionSpec {
+        key: "gamma",
+        value: "<float>",
+        help: "discount factor in [0, 1) (model sources only; .mdpb carries its own)",
+        scope: OptionScope::Common,
+    },
+    OptionSpec {
+        key: "objective",
+        value: "min|mincost|max|maxreward",
+        help: "optimization sense (model sources only; .mdpb carries its own)",
+        scope: OptionScope::Common,
+    },
+    OptionSpec {
+        key: "ranks",
+        value: "<n>",
+        help: "world size (SPMD rank-threads)",
+        scope: OptionScope::Common,
+    },
+    OptionSpec {
+        key: "verbose",
+        value: "",
+        help: "per-iteration residual logging on the root rank",
+        scope: OptionScope::Common,
+    },
+    OptionSpec {
+        key: "options_file",
+        value: "<path>",
+        help: "read additional '-key value' lines from a file (CLI overrides it)",
+        scope: OptionScope::Common,
+    },
+    // -- solve --------------------------------------------------------------
+    OptionSpec {
+        key: "method",
+        value: "vi|mpi|pi|ipi",
+        help: "outer solution method (default ipi)",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "sweeps",
+        value: "<n>",
+        help: "T_pi sweeps per outer iteration (mpi)",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "ksp_type",
+        value: "richardson|gmres|bicgstab|tfqmr|direct",
+        help: "inner Krylov solver (ipi)",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "ksp_gmres_restart",
+        value: "<n>",
+        help: "GMRES restart length (default 30)",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "ksp_richardson_scale",
+        value: "<float>",
+        help: "Richardson relaxation omega (default 1.0)",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "pc_type",
+        value: "none|jacobi|sor",
+        help: "inner-solver preconditioner",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "eval_backend",
+        value: "matfree|assembled",
+        help: "policy-evaluation operator: fused matrix-free vs cached P_pi CSR",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "atol",
+        value: "<float>",
+        help: "outer stop: ||TV - V||_inf < atol (default 1e-8)",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "alpha",
+        value: "<float>",
+        help: "forcing term: inner solve targets alpha * residual (default 1e-4)",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "adaptive_forcing",
+        value: "",
+        help: "Eisenstat-Walker-style adaptive forcing term",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "max_iter_pi",
+        value: "<n>",
+        help: "outer iteration cap (default 1000)",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "max_iter_ksp",
+        value: "<n>",
+        help: "inner iteration cap (default 10000)",
+        scope: OptionScope::Solve,
+    },
+    // -- output -------------------------------------------------------------
+    OptionSpec {
+        key: "json",
+        value: "<path>",
+        help: "write the raw solve report JSON",
+        scope: OptionScope::Output,
+    },
+    OptionSpec {
+        key: "write_policy",
+        value: "<path>",
+        help: "write the optimal policy (one action index per line)",
+        scope: OptionScope::Output,
+    },
+    OptionSpec {
+        key: "write_cost",
+        value: "<path>",
+        help: "write the optimal value/cost vector (one value per line)",
+        scope: OptionScope::Output,
+    },
+    OptionSpec {
+        key: "write_json_metadata",
+        value: "<path>",
+        help: "write solve metadata JSON (model + solver + result)",
+        scope: OptionScope::Output,
+    },
+    // -- generate -----------------------------------------------------------
+    OptionSpec {
+        key: "chunk_rows",
+        value: "<n>",
+        help: "streaming writer chunk size (generate)",
+        scope: OptionScope::Generate,
+    },
+    // -- tools --------------------------------------------------------------
+    OptionSpec {
+        key: "dir",
+        value: "<path>",
+        help: "artifact directory (artifacts)",
+        scope: OptionScope::Tools,
+    },
+];
+
+/// Look up a key in [`OPTION_TABLE`].
+pub fn spec_for(key: &str) -> Option<&'static OptionSpec> {
+    OPTION_TABLE.iter().find(|s| s.key == key)
+}
+
+/// Reject a single unknown key with a nearest-key suggestion.
+pub fn check_key(key: &str) -> Result<(), ApiError> {
+    if spec_for(key).is_some() {
+        return Ok(());
+    }
+    let known: Vec<&str> = OPTION_TABLE.iter().map(|s| s.key).collect();
+    match suggest(key, &known) {
+        Some(near) => Err(ApiError(format!(
+            "unknown option '-{key}' (did you mean '-{near}'?)"
+        ))),
+        None => Err(ApiError(format!(
+            "unknown option '-{key}' (run `madupite help` for the full list)"
+        ))),
+    }
+}
+
+/// Hard-error on any key in `db` that is not in [`OPTION_TABLE`]. Run this
+/// *before* solving: a typo'd key must fail fast, not silently fall back to
+/// a default and solve with the wrong configuration.
+pub fn validate_keys(db: &Options) -> Result<(), ApiError> {
+    for key in db.keys() {
+        check_key(key)?;
+    }
+    Ok(())
+}
+
+/// Nearest candidate by edit distance, if any is close enough to be a
+/// plausible typo (distance <= 2 and strictly closer than a full rewrite).
+pub fn suggest<'a>(input: &str, candidates: &[&'a str]) -> Option<&'a str> {
+    let mut best: Option<(&str, usize)> = None;
+    for &cand in candidates {
+        let d = edit_distance(input, cand);
+        if best.map(|(_, bd)| d < bd).unwrap_or(true) {
+            best = Some((cand, d));
+        }
+    }
+    match best {
+        Some((cand, d)) if d <= 2 && d < cand.len() => Some(cand),
+        _ => None,
+    }
+}
+
+/// Classic Levenshtein distance (small inputs only — option keys).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Attach a did-you-mean hint for a bad enumerated *value* (e.g.
+/// `-ksp_type gmers`).
+fn with_value_suggestion(err: String, value: &str, choices: &[&str]) -> ApiError {
+    match suggest(value, choices) {
+        Some(near) => ApiError(format!("{err} (did you mean '{near}'?)")),
+        None => ApiError(err),
+    }
+}
+
+/// Resolve `-method` (+ its sub-options `-sweeps`, `-ksp_type`,
+/// `-ksp_gmres_restart`, `-ksp_richardson_scale`, `-pc_type`) to a
+/// [`Method`]. Shared by the CLI and [`crate::api::Solver`].
+pub fn resolve_method(db: &Options) -> Result<Method, ApiError> {
+    let method = db.get_choice("method", &["vi", "mpi", "pi", "ipi"], "ipi")?;
+    Ok(match method.as_str() {
+        "vi" => Method::Vi,
+        "mpi" => {
+            let sweeps = db.get_usize("sweeps", 20)?;
+            if sweeps == 0 {
+                return Err(ApiError("-sweeps must be >= 1".into()));
+            }
+            Method::Mpi { sweeps }
+        }
+        "pi" => Method::ExactPi,
+        _ => {
+            let ksp_name = db.get_str("ksp_type", "gmres");
+            let mut ksp = KspType::parse(&ksp_name).map_err(|e| {
+                with_value_suggestion(
+                    e,
+                    &ksp_name,
+                    &["richardson", "gmres", "bicgstab", "tfqmr", "direct"],
+                )
+            })?;
+            if let KspType::Gmres { restart } = &mut ksp {
+                *restart = db.get_usize("ksp_gmres_restart", 30)?;
+                if *restart == 0 {
+                    return Err(ApiError("-ksp_gmres_restart must be >= 1".into()));
+                }
+            }
+            if let KspType::Richardson { omega } = &mut ksp {
+                *omega = db.get_f64("ksp_richardson_scale", 1.0)?;
+                if !(omega.is_finite() && *omega > 0.0) {
+                    return Err(ApiError(format!(
+                        "-ksp_richardson_scale must be a positive finite float, got {omega}"
+                    )));
+                }
+            }
+            let pc_name = db.get_str("pc_type", "none");
+            let pc = PcType::parse(&pc_name)
+                .map_err(|e| with_value_suggestion(e, &pc_name, &["none", "jacobi", "sor"]))?;
+            Method::Ipi { ksp, pc }
+        }
+    })
+}
+
+/// Resolve the full [`SolveOptions`] from the database — the one shared
+/// string→typed path behind both the CLI `solve` command and
+/// [`crate::api::Solver::solve`].
+pub fn resolve_solve_options(db: &Options) -> Result<SolveOptions, ApiError> {
+    let method = resolve_method(db)?;
+    let backend_name = db.get_str("eval_backend", "matfree");
+    let eval_backend = EvalBackend::parse(&backend_name)
+        .map_err(|e| with_value_suggestion(e, &backend_name, &["matfree", "assembled"]))?;
+    let atol = db.get_f64("atol", 1e-8)?;
+    if !(atol.is_finite() && atol > 0.0) {
+        return Err(ApiError(format!(
+            "-atol must be a positive finite float, got {atol}"
+        )));
+    }
+    let alpha = db.get_f64("alpha", 1e-4)?;
+    if !(alpha.is_finite() && alpha > 0.0) {
+        return Err(ApiError(format!(
+            "-alpha must be a positive finite float, got {alpha}"
+        )));
+    }
+    let max_outer = db.get_usize("max_iter_pi", 1_000)?;
+    if max_outer == 0 {
+        return Err(ApiError("-max_iter_pi must be >= 1".into()));
+    }
+    let max_inner = db.get_usize("max_iter_ksp", 10_000)?;
+    if max_inner == 0 {
+        return Err(ApiError("-max_iter_ksp must be >= 1".into()));
+    }
+    Ok(SolveOptions {
+        method,
+        eval_backend,
+        atol,
+        max_outer,
+        alpha,
+        adaptive_forcing: db.get_bool("adaptive_forcing", false)?,
+        max_inner,
+        v0: None,
+        verbose: db.get_bool("verbose", false)?,
+    })
+}
+
+/// Resolve the discount factor: `-gamma` in the database wins, then the
+/// builder-level `fallback`, then the crate default 0.99. Validated to
+/// [0, 1) — a "bad gamma" is an error here, never a panic downstream.
+pub fn resolve_gamma(db: &Options, fallback: Option<f64>) -> Result<f64, ApiError> {
+    let gamma = match db.get("gamma") {
+        Some(_) => db.get_f64("gamma", 0.0)?,
+        None => fallback.unwrap_or(0.99),
+    };
+    crate::mdp::validate_gamma(gamma).map_err(ApiError)
+}
+
+/// Resolve the optimization sense: `-objective` wins over the builder-level
+/// `fallback`, default min-cost.
+pub fn resolve_objective(db: &Options, fallback: Option<Objective>) -> Result<Objective, ApiError> {
+    match db.get("objective") {
+        Some(name) => Objective::parse(name)
+            .map_err(|e| with_value_suggestion(e, name, &["min", "mincost", "max", "maxreward"])),
+        None => Ok(fallback.unwrap_or_default()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn db(toks: &[&str]) -> Options {
+        Options::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn table_keys_unique() {
+        let mut keys: Vec<&str> = OPTION_TABLE.iter().map(|s| s.key).collect();
+        let n = keys.len();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), n, "duplicate keys in OPTION_TABLE");
+    }
+
+    #[test]
+    fn unknown_key_suggests_nearest() {
+        let err = check_key("ksp_tpye").unwrap_err();
+        assert!(err.0.contains("ksp_tpye"), "{err}");
+        assert!(err.0.contains("ksp_type"), "{err}");
+        assert!(check_key("ksp_type").is_ok());
+        // far-off keys get the generic message, not a wild guess
+        let err = check_key("zzzzzzzzzz").unwrap_err();
+        assert!(!err.0.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn validate_keys_rejects_typos() {
+        assert!(validate_keys(&db(&["-gamma", "0.9", "-atol", "1e-8"])).is_ok());
+        let err = validate_keys(&db(&["-gamma", "0.9", "-methdo", "vi"])).unwrap_err();
+        assert!(err.0.contains("method"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("gmres", "gmres"), 0);
+        assert_eq!(edit_distance("gmers", "gmres"), 2);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+    }
+
+    #[test]
+    fn method_resolution_all_spellings() {
+        assert_eq!(resolve_method(&db(&["-method", "vi"])).unwrap(), Method::Vi);
+        assert_eq!(
+            resolve_method(&db(&["-method", "mpi", "-sweeps", "7"])).unwrap(),
+            Method::Mpi { sweeps: 7 }
+        );
+        assert_eq!(
+            resolve_method(&db(&["-method", "pi"])).unwrap(),
+            Method::ExactPi
+        );
+        assert_eq!(
+            resolve_method(&db(&["-method", "ipi", "-ksp_type", "bcgs"])).unwrap(),
+            Method::Ipi {
+                ksp: KspType::BiCgStab,
+                pc: PcType::None
+            }
+        );
+        assert_eq!(
+            resolve_method(&db(&[
+                "-ksp_type",
+                "gmres",
+                "-ksp_gmres_restart",
+                "11",
+                "-pc_type",
+                "jacobi"
+            ]))
+            .unwrap(),
+            Method::Ipi {
+                ksp: KspType::Gmres { restart: 11 },
+                pc: PcType::Jacobi
+            }
+        );
+        assert_eq!(
+            resolve_method(&db(&["-ksp_type", "richardson", "-ksp_richardson_scale", "0.8"]))
+                .unwrap(),
+            Method::Ipi {
+                ksp: KspType::Richardson { omega: 0.8 },
+                pc: PcType::None
+            }
+        );
+        assert_eq!(
+            resolve_method(&db(&["-ksp_type", "preonly"])).unwrap(),
+            Method::Ipi {
+                ksp: KspType::Direct,
+                pc: PcType::None
+            }
+        );
+    }
+
+    #[test]
+    fn gamma_resolution_and_validation() {
+        assert_eq!(resolve_gamma(&db(&[]), None).unwrap(), 0.99);
+        assert_eq!(resolve_gamma(&db(&[]), Some(0.5)).unwrap(), 0.5);
+        assert_eq!(resolve_gamma(&db(&["-gamma", "0.7"]), Some(0.5)).unwrap(), 0.7);
+        assert!(resolve_gamma(&db(&["-gamma", "1.0"]), None).is_err());
+        assert!(resolve_gamma(&db(&["-gamma", "-0.1"]), None).is_err());
+        assert!(resolve_gamma(&db(&[]), Some(1.5)).is_err());
+    }
+
+    #[test]
+    fn objective_resolution() {
+        assert_eq!(resolve_objective(&db(&[]), None).unwrap(), Objective::Min);
+        assert_eq!(
+            resolve_objective(&db(&["-objective", "maxreward"]), None).unwrap(),
+            Objective::Max
+        );
+        assert_eq!(
+            resolve_objective(&db(&[]), Some(Objective::Max)).unwrap(),
+            Objective::Max
+        );
+        let err = resolve_objective(&db(&["-objective", "mni"]), None).unwrap_err();
+        assert!(err.0.contains("min"), "{err}");
+    }
+
+    #[test]
+    fn solve_options_validation() {
+        assert!(resolve_solve_options(&db(&["-atol", "0"])).is_err());
+        assert!(resolve_solve_options(&db(&["-alpha", "-1"])).is_err());
+        assert!(resolve_solve_options(&db(&["-max_iter_pi", "0"])).is_err());
+        assert!(resolve_solve_options(&db(&["-max_iter_ksp", "0"])).is_err());
+        let so = resolve_solve_options(&db(&["-adaptive_forcing", "-verbose"])).unwrap();
+        assert!(so.adaptive_forcing && so.verbose);
+    }
+
+    #[test]
+    fn bad_value_gets_suggestion() {
+        let err = resolve_method(&db(&["-ksp_type", "gmers"])).unwrap_err();
+        assert!(err.0.contains("gmres"), "{err}");
+        let err = resolve_solve_options(&db(&["-eval_backend", "matfre"])).unwrap_err();
+        assert!(err.0.contains("matfree"), "{err}");
+    }
+}

@@ -1,0 +1,532 @@
+//! [`Solver`] — the embedded solve handle carrying a madupite/PETSc-style
+//! options database, plus the [`SolveOutcome`] output surface
+//! (`write_policy` / `write_cost` / `write_json_metadata`).
+//!
+//! The CLI `solve` command and the embedded API both funnel through
+//! [`run_solve`]: one code path resolves the options database, realizes the
+//! model source on every rank, runs the distributed solver and gathers the
+//! result — the parity test in `tests/api.rs` checks the two entry points
+//! produce byte-identical metadata JSON for the same option set.
+
+use crate::comm::World;
+use crate::mdp::{io, DistMdp, Objective};
+use crate::solver::{gather_result, solve_dist, SolveOptions, SolveResult};
+use crate::util::args::Options;
+use crate::util::json::Json;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use super::builder::{MdpBuilder, Source};
+use super::{options, ApiError};
+
+/// An embedded solve handle: a model (from an [`MdpBuilder`]) plus a
+/// PETSc-style options database. Every knob of the CLI is available through
+/// [`set_option`](Self::set_option) under the same `-key` spelling, and is
+/// resolved through the same table — unknown keys are hard errors with a
+/// nearest-key suggestion.
+///
+/// ```
+/// use madupite::api::{MdpBuilder, Solver};
+///
+/// let builder = MdpBuilder::from_fillers(
+///     2,
+///     2,
+///     |s, a| match (s, a) {
+///         (0, 0) => vec![(0, 1.0)],
+///         (0, 1) => vec![(1, 1.0)],
+///         _ => vec![(1, 1.0)],
+///     },
+///     |s, a| match (s, a) {
+///         (0, 0) => 1.0,
+///         (0, 1) => 1.5,
+///         _ => 0.0,
+///     },
+/// )
+/// .gamma(0.5);
+///
+/// let mut solver = Solver::new(builder);
+/// solver.set_option("-method", "ipi").unwrap();
+/// solver.set_option("-ksp_type", "gmres").unwrap();
+/// solver.set_option("-atol", "1e-10").unwrap();
+/// let outcome = solver.solve().unwrap();
+/// assert!(outcome.result.converged);
+/// assert!((outcome.result.value[0] - 1.5).abs() < 1e-8);
+/// assert_eq!(outcome.result.policy[0], 1);
+/// ```
+pub struct Solver {
+    builder: MdpBuilder,
+    db: Options,
+}
+
+impl Solver {
+    /// Solver over `builder` with an empty options database (all defaults).
+    pub fn new(builder: MdpBuilder) -> Solver {
+        Solver {
+            builder,
+            db: Options::default(),
+        }
+    }
+
+    /// Solver over `builder` with a pre-populated database (the CLI hands
+    /// its parsed argv straight in here).
+    pub fn with_database(builder: MdpBuilder, db: Options) -> Solver {
+        Solver { builder, db }
+    }
+
+    /// Read access to the options database.
+    pub fn database(&self) -> &Options {
+        &self.db
+    }
+
+    /// Set one option, PETSc style: `set_option("-ksp_type", "gmres")`.
+    /// The leading dash is optional; unknown keys are rejected immediately
+    /// with a nearest-key suggestion. Pass `""` as the value for boolean
+    /// flags (`set_option("-verbose", "")`).
+    pub fn set_option(&mut self, key: &str, value: &str) -> Result<&mut Solver, ApiError> {
+        let key = key.trim_start_matches('-');
+        options::check_key(key)?;
+        self.db.set(key, value);
+        Ok(self)
+    }
+
+    /// Ingest a whitespace-separated option string:
+    /// `set_options_from_str("-method ipi -ksp_type gmres -alpha 1e-4")`.
+    pub fn set_options_from_str(&mut self, text: &str) -> Result<&mut Solver, ApiError> {
+        self.set_options_from_args(text.split_whitespace().map(str::to_string))
+    }
+
+    /// Ingest argv-style options (e.g. `std::env::args().skip(1)`).
+    /// Every token must belong to a `-key value` pair or flag — a stray
+    /// bare token (e.g. `method vi` without the dash) is an error, so a
+    /// malformed option string can never silently solve with defaults.
+    pub fn set_options_from_args<I>(&mut self, args: I) -> Result<&mut Solver, ApiError>
+    where
+        I: IntoIterator<Item = String>,
+    {
+        let parsed = Options::parse(args);
+        if let Some(first) = parsed.positional().first() {
+            return Err(ApiError(format!(
+                "stray token '{first}': options must be '-key value' pairs or '-flag's"
+            )));
+        }
+        options::validate_keys(&parsed)?;
+        self.db = std::mem::take(&mut self.db).merge(parsed);
+        Ok(self)
+    }
+
+    /// Ingest the `MADUPITE_OPTIONS` environment variable (PETSc's
+    /// `PETSC_OPTIONS` idiom), if set — with the same semantics as the CLI
+    /// front end: the env layer is the *lowest* priority (options already
+    /// in the database keep winning over it, whenever this is called), a
+    /// `-options_file` in it is read and layered just above the env
+    /// options, and env-supplied `-gamma`/`-objective`/`-model`/`-file`
+    /// defaults silently yield when the builder's source already carries
+    /// them (a `.mdpb` header, or any programmatically fixed source).
+    pub fn set_options_from_env(&mut self) -> Result<&mut Solver, ApiError> {
+        let Ok(text) = std::env::var("MADUPITE_OPTIONS") else {
+            return Ok(self);
+        };
+        let mut parsed = Options::parse(text.split_whitespace().map(str::to_string));
+        if let Some(first) = parsed.positional().first() {
+            return Err(ApiError(format!(
+                "MADUPITE_OPTIONS may only contain -key value options, \
+                 found stray token '{first}'"
+            )));
+        }
+        // The builder's source is fixed at construction; env-layer source
+        // selection keys are CLI defaults and do not apply here.
+        parsed.take("model");
+        parsed.take("file");
+        // Env-layer gamma/objective are *defaults*: they yield silently
+        // whenever the builder already carries a value — a .mdpb header
+        // (file source) or a programmatic .gamma()/.objective() call.
+        let source_is_file = matches!(self.builder.resolved_source(), Ok(Source::File(_)));
+        if source_is_file || self.builder.gamma_value().is_some() {
+            parsed.take("gamma");
+        }
+        if source_is_file || self.builder.objective_value().is_some() {
+            parsed.take("objective");
+        }
+        // Mirror the CLI: -options_file is consumed here, layered between
+        // the env options and everything already set.
+        if let Some(path) = parsed.take("options_file") {
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| ApiError(format!("reading -options_file {path}: {e}")))?;
+            let file_opts = Options::parse_file(&text);
+            if let Some(first) = file_opts.positional().first() {
+                return Err(ApiError(format!(
+                    "-options_file may only contain -key value options, \
+                     found stray token '{first}'"
+                )));
+            }
+            parsed = parsed.merge(file_opts);
+        }
+        options::validate_keys(&parsed)?;
+        self.db = parsed.merge(std::mem::take(&mut self.db));
+        Ok(self)
+    }
+
+    /// Solve the configured model on `-ranks` SPMD ranks (default 1) and
+    /// return the gathered outcome. Collective under the hood; the returned
+    /// outcome lives on the calling thread (the "root gather" of the
+    /// original `writePolicy`/`writeCost` path).
+    pub fn solve(&self) -> Result<SolveOutcome, ApiError> {
+        run_solve(&self.builder, &self.db)
+    }
+}
+
+/// The one shared solve path behind the CLI `solve` command and
+/// [`Solver::solve`]: validate the database, resolve options, realize the
+/// model source on every rank, solve, gather.
+pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, ApiError> {
+    options::validate_keys(db)?;
+    if db.has("options_file") {
+        return Err(ApiError(
+            "-options_file is consumed by the CLI front end; in the embedded API read the \
+             file and pass its contents to Solver::set_options_from_str"
+                .into(),
+        ));
+    }
+    let solve_opts = options::resolve_solve_options(db)?;
+    let ranks = db.get_usize("ranks", 1)?;
+    if ranks == 0 {
+        return Err(ApiError("-ranks must be >= 1".into()));
+    }
+    let source = builder.resolved_source()?.clone();
+
+    // gamma/objective: for model/closure sources they resolve from the
+    // database (falling back to the builder, then defaults); a .mdpb file
+    // carries its own in the header, so overriding is a conflict error.
+    let (gamma, objective) = match &source {
+        Source::File(path) => {
+            if db.has("gamma") || builder.gamma_value().is_some() {
+                return Err(ApiError(format!(
+                    "gamma comes from the .mdpb header of '{path}'; drop -gamma"
+                )));
+            }
+            if db.has("objective") || builder.objective_value().is_some() {
+                return Err(ApiError(format!(
+                    "objective comes from the .mdpb header of '{path}'; drop -objective"
+                )));
+            }
+            (0.0, Objective::Min) // placeholders; the header supplies both
+        }
+        _ => (
+            options::resolve_gamma(db, builder.gamma_value())?,
+            options::resolve_objective(db, builder.objective_value())?,
+        ),
+    };
+
+    let so = solve_opts.clone();
+    type RankOut = Result<(SolveResult, usize, f64, Objective), String>;
+    let results: Vec<RankOut> = World::run(ranks, move |comm| {
+        let mdp: DistMdp = match &source {
+            Source::File(path) => io::load_dist(&comm, path.as_str())
+                .map_err(|e| format!("loading {path}: {e}"))?,
+            Source::Model(generator) => {
+                generator.build_dist(&comm, gamma).with_objective(objective)
+            }
+            Source::Fillers {
+                n_states,
+                n_actions,
+                prob,
+                cost,
+            } => DistMdp::try_from_fillers(
+                &comm,
+                *n_states,
+                *n_actions,
+                gamma,
+                |s, a| prob(s, a),
+                |s, a| cost(s, a),
+            )?
+            .with_objective(objective),
+        };
+        let local = solve_dist(&comm, &mdp, &so);
+        let shape = (mdp.n_actions(), mdp.gamma(), mdp.objective());
+        let global = gather_result(&comm, local);
+        Ok((global, shape.0, shape.1, shape.2))
+    });
+
+    // Per-rank results agree (collective error agreement inside the world):
+    // surface the first error, otherwise take rank 0's gathered copy.
+    let mut gathered = None;
+    for r in results {
+        match r {
+            Err(e) => return Err(ApiError(e)),
+            Ok(v) => {
+                if gathered.is_none() {
+                    gathered = Some(v);
+                }
+            }
+        }
+    }
+    let (result, n_actions, gamma, objective) =
+        gathered.expect("world returns at least one rank");
+    let outcome = SolveOutcome {
+        n_states: result.value.len(),
+        n_actions,
+        gamma,
+        objective,
+        options: solve_opts,
+        ranks,
+        result,
+    };
+    // The output keys are part of the shared surface: whichever front end
+    // put them in the database, the writes happen on this one path (the
+    // CLI only reports the paths afterwards).
+    if let Some(path) = db.get("json") {
+        let text = outcome
+            .result
+            .to_json(&outcome.options.method.name())
+            .to_string_pretty();
+        std::fs::write(path, text).map_err(|e| ApiError(format!("writing {path}: {e}")))?;
+    }
+    if let Some(path) = db.get("write_policy") {
+        outcome.write_policy(path)?;
+    }
+    if let Some(path) = db.get("write_cost") {
+        outcome.write_cost(path)?;
+    }
+    if let Some(path) = db.get("write_json_metadata") {
+        outcome.write_json_metadata(path)?;
+    }
+    Ok(outcome)
+}
+
+/// Gathered result of an embedded solve plus everything needed to report
+/// it: the resolved solver configuration and the model shape. Produced on
+/// the calling thread (root-gathered), so the `write_*` methods are
+/// distributed-safe — they run once, never once-per-rank.
+pub struct SolveOutcome {
+    /// Global state count of the solved MDP.
+    pub n_states: usize,
+    /// Action count of the solved MDP.
+    pub n_actions: usize,
+    /// Discount factor actually solved with (from the options database,
+    /// the builder, or the `.mdpb` header).
+    pub gamma: f64,
+    /// Optimization sense actually solved with.
+    pub objective: Objective,
+    /// The resolved solver options (method, backend, tolerances).
+    pub options: SolveOptions,
+    /// World size the solve ran on.
+    pub ranks: usize,
+    /// The gathered global solve result (value, policy, trace).
+    pub result: SolveResult,
+}
+
+impl SolveOutcome {
+    /// The optimal value vector V* (global, gathered).
+    pub fn value(&self) -> &[f64] {
+        &self.result.value
+    }
+
+    /// The optimal policy π* (global, gathered; one action index per state).
+    pub fn policy(&self) -> &[usize] {
+        &self.result.policy
+    }
+
+    /// Solve metadata as JSON: model shape, resolved solver configuration,
+    /// and the full result report (madupite's `writeJSONmetadata`).
+    pub fn metadata_json(&self) -> Json {
+        Json::obj(vec![
+            ("madupite_version", Json::str(crate::VERSION)),
+            (
+                "model",
+                Json::obj(vec![
+                    ("n_states", Json::int(self.n_states as i64)),
+                    ("n_actions", Json::int(self.n_actions as i64)),
+                    ("gamma", Json::num(self.gamma)),
+                    ("objective", Json::str(self.objective.name())),
+                ]),
+            ),
+            (
+                "solver",
+                Json::obj(vec![
+                    ("method", Json::str(self.options.method.name())),
+                    ("eval_backend", Json::str(self.options.eval_backend.name())),
+                    ("ranks", Json::int(self.ranks as i64)),
+                    ("atol", Json::num(self.options.atol)),
+                    ("alpha", Json::num(self.options.alpha)),
+                    ("adaptive_forcing", Json::Bool(self.options.adaptive_forcing)),
+                    ("max_iter_pi", Json::int(self.options.max_outer as i64)),
+                    ("max_iter_ksp", Json::int(self.options.max_inner as i64)),
+                ]),
+            ),
+            ("result", self.result.to_json(&self.options.method.name())),
+        ])
+    }
+
+    /// Write the optimal policy as text: a `#` header line, then one action
+    /// index per line in state order (madupite's `writePolicy`).
+    pub fn write_policy(&self, path: impl AsRef<Path>) -> Result<(), ApiError> {
+        let mut out = String::with_capacity(self.result.policy.len() * 2 + 80);
+        let _ = writeln!(
+            out,
+            "# madupite optimal policy: n_states={} n_actions={} method={}",
+            self.n_states,
+            self.n_actions,
+            self.options.method.name()
+        );
+        for &a in &self.result.policy {
+            let _ = writeln!(out, "{a}");
+        }
+        write_text(path.as_ref(), &out)
+    }
+
+    /// Write the optimal value/cost vector as text: a `#` header line, then
+    /// one value per line in state order (madupite's `writeCost`).
+    pub fn write_cost(&self, path: impl AsRef<Path>) -> Result<(), ApiError> {
+        let mut out = String::with_capacity(self.result.value.len() * 20 + 80);
+        let _ = writeln!(
+            out,
+            "# madupite optimal cost: n_states={} gamma={} objective={}",
+            self.n_states,
+            self.gamma,
+            self.objective.name()
+        );
+        for &v in &self.result.value {
+            let _ = writeln!(out, "{v}");
+        }
+        write_text(path.as_ref(), &out)
+    }
+
+    /// Write [`Self::metadata_json`] pretty-printed (madupite's
+    /// `writeJSONmetadata`).
+    pub fn write_json_metadata(&self, path: impl AsRef<Path>) -> Result<(), ApiError> {
+        let mut text = self.metadata_json().to_string_pretty();
+        text.push('\n');
+        write_text(path.as_ref(), &text)
+    }
+}
+
+fn write_text(path: &Path, text: &str) -> Result<(), ApiError> {
+    std::fs::write(path, text)
+        .map_err(|e| ApiError(format!("writing {}: {e}", path.display())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn two_state_builder() -> MdpBuilder {
+        MdpBuilder::from_fillers(
+            2,
+            2,
+            |s, a| match (s, a) {
+                (0, 0) => vec![(0, 1.0)],
+                (0, 1) => vec![(1, 1.0)],
+                _ => vec![(1, 1.0)],
+            },
+            |s, a| match (s, a) {
+                (0, 0) => 1.0,
+                (0, 1) => 1.5,
+                _ => 0.0,
+            },
+        )
+        .gamma(0.5)
+    }
+
+    #[test]
+    fn embedded_solve_happy_path() {
+        let mut solver = Solver::new(two_state_builder());
+        solver
+            .set_option("-method", "ipi")
+            .unwrap()
+            .set_option("-ksp_type", "gmres")
+            .unwrap()
+            .set_option("-atol", "1e-10")
+            .unwrap();
+        let outcome = solver.solve().unwrap();
+        assert!(outcome.result.converged);
+        prop::close_slices(outcome.value(), &[1.5, 0.0], 1e-8).unwrap();
+        assert_eq!(outcome.policy()[0], 1);
+        assert_eq!(outcome.n_states, 2);
+        assert_eq!(outcome.n_actions, 2);
+        assert_eq!(outcome.gamma, 0.5);
+    }
+
+    #[test]
+    fn unknown_key_rejected_with_suggestion() {
+        let mut solver = Solver::new(two_state_builder());
+        let err = solver.set_option("-ksp_tpye", "gmres").unwrap_err();
+        assert!(err.0.contains("ksp_type"), "{err}");
+        let err = solver.set_options_from_str("-methdo vi").unwrap_err();
+        assert!(err.0.contains("method"), "{err}");
+    }
+
+    #[test]
+    fn options_from_str_merges_and_resolves() {
+        let mut solver = Solver::new(two_state_builder());
+        solver
+            .set_options_from_str("-method mpi -sweeps 5 -atol 1e-9")
+            .unwrap();
+        let outcome = solver.solve().unwrap();
+        assert!(outcome.result.converged);
+        assert_eq!(outcome.options.method.name(), "mpi(5)");
+    }
+
+    #[test]
+    fn multi_rank_solve_matches_serial() {
+        let serial = Solver::new(two_state_builder()).solve().unwrap();
+        let mut dist = Solver::new(two_state_builder());
+        dist.set_option("-ranks", "2").unwrap();
+        let dist = dist.solve().unwrap();
+        prop::close_slices(serial.value(), dist.value(), 1e-9).unwrap();
+        assert_eq!(serial.policy(), dist.policy());
+        assert_eq!(dist.ranks, 2);
+    }
+
+    #[test]
+    fn substochastic_fillers_error_not_panic() {
+        // the bad row lives on the *last* state so with 3 ranks only the
+        // last rank sees it locally — the collective agreement must turn
+        // that into an error on every rank, not a deadlock or panic
+        let builder = MdpBuilder::from_fillers(
+            30,
+            2,
+            |s, _| {
+                if s == 29 {
+                    vec![(0, 0.4)]
+                } else {
+                    vec![(s, 1.0)]
+                }
+            },
+            |_, _| 1.0,
+        )
+        .gamma(0.9);
+        for ranks in ["1", "3"] {
+            let mut solver = Solver::new(builder.clone());
+            solver.set_option("-ranks", ranks).unwrap();
+            let err = solver.solve().unwrap_err();
+            assert!(err.0.contains("sums to"), "ranks={ranks}: {err}");
+        }
+    }
+
+    #[test]
+    fn file_source_gamma_conflict() {
+        let mut solver = Solver::new(MdpBuilder::from_file("x.mdpb"));
+        solver.set_option("-gamma", "0.9").unwrap();
+        let err = solver.solve().unwrap_err();
+        assert!(err.0.contains("header"), "{err}");
+    }
+
+    #[test]
+    fn metadata_json_shape() {
+        let outcome = Solver::new(two_state_builder()).solve().unwrap();
+        let j = outcome.metadata_json();
+        assert_eq!(
+            j.get("model").unwrap().get("n_states").unwrap().as_f64(),
+            Some(2.0)
+        );
+        assert_eq!(
+            j.get("solver").unwrap().get("ranks").unwrap().as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(
+            j.get("result").unwrap().get("converged").unwrap().as_bool(),
+            Some(true)
+        );
+    }
+}

@@ -17,6 +17,7 @@ pub struct NestedVecMdp {
     /// rewards[s][a] (mdpsolver is reward-maximizing; we keep costs and
     /// minimize to stay comparable)
     pub costs: Vec<Vec<f64>>,
+    /// Discount factor.
     pub gamma: f64,
 }
 
@@ -50,10 +51,12 @@ impl NestedVecMdp {
         }
     }
 
+    /// Number of states.
     pub fn n_states(&self) -> usize {
         self.transitions.len()
     }
 
+    /// Number of actions.
     pub fn n_actions(&self) -> usize {
         self.transitions.first().map(|t| t.len()).unwrap_or(0)
     }

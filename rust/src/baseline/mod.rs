@@ -23,9 +23,13 @@ pub mod pymdp_like;
 /// Common result shape for the baselines.
 #[derive(Clone, Debug)]
 pub struct BaselineResult {
+    /// Final value vector.
     pub value: Vec<f64>,
+    /// Final greedy policy.
     pub policy: Vec<usize>,
+    /// Outer iterations executed.
     pub iterations: usize,
+    /// Whether the tolerance was met.
     pub converged: bool,
     /// Bytes used by the transition storage (for the memory comparison).
     pub storage_bytes: usize,

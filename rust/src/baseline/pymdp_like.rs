@@ -18,10 +18,12 @@ pub struct DenseMdp {
     pub p: Vec<DenseMat>,
     /// costs[a][s]
     pub costs: Vec<Vec<f64>>,
+    /// Discount factor.
     pub gamma: f64,
 }
 
 impl DenseMdp {
+    /// Densify a sparse [`Mdp`] into the baseline layout.
     pub fn from_mdp(mdp: &Mdp) -> DenseMdp {
         let (n, m) = (mdp.n_states(), mdp.n_actions());
         let mut p = Vec::with_capacity(m);
@@ -46,10 +48,12 @@ impl DenseMdp {
         }
     }
 
+    /// Number of states.
     pub fn n_states(&self) -> usize {
         self.costs.first().map(|c| c.len()).unwrap_or(0)
     }
 
+    /// Total memory of the dense tables (bytes).
     pub fn storage_bytes(&self) -> usize {
         let n = self.n_states();
         self.p.len() * n * n * 8 + self.costs.len() * n * 8

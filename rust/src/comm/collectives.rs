@@ -14,8 +14,11 @@ use super::Comm;
 /// Reduction operators for [`Comm::allreduce_f64`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Reduce {
+    /// Elementwise sum.
     Sum,
+    /// Elementwise minimum.
     Min,
+    /// Elementwise maximum.
     Max,
 }
 

@@ -53,14 +53,17 @@ pub struct Comm {
 }
 
 impl Comm {
+    /// This rank’s index in `[0, size)`.
     pub fn rank(&self) -> usize {
         self.rank
     }
 
+    /// World size (number of ranks).
     pub fn size(&self) -> usize {
         self.shared.size
     }
 
+    /// Whether this is rank 0.
     pub fn is_root(&self) -> bool {
         self.rank == 0
     }
@@ -142,6 +145,8 @@ impl Comm {
 pub struct World;
 
 impl World {
+    /// Spawn `size` rank-threads, run `f(comm)` on each, and return the
+    /// per-rank results in rank order (blocking until all ranks finish).
     pub fn run<T, F>(size: usize, f: F) -> Vec<T>
     where
         T: Send + 'static,

@@ -11,11 +11,17 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// Collective classes tracked separately.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Op {
+    /// Point-to-point send/recv.
     P2p,
+    /// One-to-all broadcast.
     Broadcast,
+    /// All-reduce (reduce + broadcast).
     Allreduce,
+    /// All-gather (variable-length).
     Allgather,
+    /// Root-to-ranks scatter.
     Scatter,
+    /// Personalized all-to-all exchange.
     Alltoall,
 }
 
@@ -33,6 +39,7 @@ impl Op {
         }
     }
 
+    /// Display name of the operation.
     pub fn name(self) -> &'static str {
         match self {
             Op::P2p => "p2p",
@@ -44,6 +51,7 @@ impl Op {
         }
     }
 
+    /// Every tracked operation, in display order.
     pub fn all() -> [Op; NOPS] {
         [
             Op::P2p,
@@ -65,6 +73,7 @@ pub struct CommStats {
 }
 
 impl CommStats {
+    /// Fresh zeroed counters for a world of `size` ranks.
     pub fn new(size: usize) -> Self {
         let n = size * NOPS;
         CommStats {
@@ -74,12 +83,14 @@ impl CommStats {
         }
     }
 
+    /// Record `nbytes` for one `op` executed by `rank`.
     pub fn count(&self, rank: usize, op: Op, nbytes: usize) {
         let i = rank * NOPS + op.idx();
         self.msgs[i].fetch_add(1, Ordering::Relaxed);
         self.bytes[i].fetch_add(nbytes as u64, Ordering::Relaxed);
     }
 
+    /// Record a point-to-point send of `nbytes` from `rank`.
     pub fn count_p2p(&self, rank: usize, nbytes: usize) {
         self.count(rank, Op::P2p, nbytes);
     }
@@ -121,28 +132,34 @@ impl CommStats {
 /// Immutable snapshot for reporting.
 #[derive(Debug, Clone, Default)]
 pub struct StatsSnapshot {
+    /// World size the counters were sized for.
     pub size: usize,
     msgs: Vec<u64>,
     bytes: Vec<u64>,
 }
 
 impl StatsSnapshot {
+    /// Message count of `op` on `rank`.
     pub fn msgs(&self, rank: usize, op: Op) -> u64 {
         self.msgs[rank * NOPS + op.idx()]
     }
 
+    /// Byte count of `op` on `rank`.
     pub fn bytes(&self, rank: usize, op: Op) -> u64 {
         self.bytes[rank * NOPS + op.idx()]
     }
 
+    /// Total bytes sent by `rank` across all operations.
     pub fn rank_bytes(&self, rank: usize) -> u64 {
         Op::all().iter().map(|&op| self.bytes(rank, op)).sum()
     }
 
+    /// Total bytes across all ranks and operations.
     pub fn total_bytes(&self) -> u64 {
         self.bytes.iter().sum()
     }
 
+    /// Total messages across all ranks and operations.
     pub fn total_msgs(&self) -> u64 {
         self.msgs.iter().sum()
     }
@@ -164,6 +181,7 @@ impl StatsSnapshot {
         }
     }
 
+    /// Snapshot as JSON (per-op totals + per-rank bytes).
     pub fn to_json(&self) -> Json {
         let mut ranks = Vec::new();
         for r in 0..self.size {

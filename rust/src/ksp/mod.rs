@@ -98,6 +98,7 @@ pub struct LinOp<'a> {
 }
 
 impl<'a> LinOp<'a> {
+    /// Operator `I - gamma P` over the assembled distributed CSR `p`.
     pub fn new(p: &'a DistCsr, gamma: f64) -> Self {
         assert_eq!(
             p.local_nrows(),
@@ -187,6 +188,7 @@ pub struct DenseOp<'a> {
 }
 
 impl<'a> DenseOp<'a> {
+    /// Operator `I - gamma P` over the dense block `p` (serial).
     pub fn new(p: &'a DenseMat, gamma: f64) -> Self {
         assert_eq!(p.nrows(), p.ncols(), "DenseOp requires a square matrix");
         DenseOp { p, gamma }
@@ -250,7 +252,9 @@ pub enum KspType {
     Richardson { omega: f64 },
     /// Restarted GMRES with Krylov dimension `restart`.
     Gmres { restart: usize },
+    /// BiCGStab (van der Vorst).
     BiCgStab,
+    /// Transpose-free QMR (Freund).
     Tfqmr,
     /// Gathered dense LU — exact solve, small problems only.
     Direct,
@@ -269,6 +273,7 @@ impl KspType {
         })
     }
 
+    /// Canonical option-string form (inverse of [`Self::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             KspType::Richardson { .. } => "richardson",
@@ -287,6 +292,7 @@ pub struct Tolerance {
     pub atol: f64,
     /// Relative (to ‖r₀‖₂) target.
     pub rtol: f64,
+    /// Iteration cap.
     pub max_iters: usize,
 }
 
@@ -310,11 +316,15 @@ impl Tolerance {
 /// Outcome of an inner solve.
 #[derive(Clone, Debug, Default)]
 pub struct KspStats {
+    /// Iterations executed.
     pub iterations: usize,
     /// Operator applications (the unit the iPI papers count cost in).
     pub spmvs: usize,
+    /// ℓ₂ residual before the solve.
     pub initial_residual: f64,
+    /// ℓ₂ residual after the solve.
     pub final_residual: f64,
+    /// Whether the tolerance was met within the cap.
     pub converged: bool,
 }
 

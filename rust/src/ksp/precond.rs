@@ -15,11 +15,14 @@ use crate::linalg::Csr;
 
 /// Preconditioner selector + state.
 pub enum Precond {
+    /// Identity (no preconditioning).
     None,
+    /// Diagonal scaling by `diag(I − γ P_π)`.
     Jacobi {
         /// Inverse diagonal of A (local block).
         inv_diag: Vec<f64>,
     },
+    /// Block-Jacobi ω-SOR sweeps on the local block.
     Sor {
         /// Local block of A = I − γ P_π in CSR (remapped columns; ghost
         /// columns are dropped — block-Jacobi semantics).
@@ -33,12 +36,16 @@ pub enum Precond {
 /// Selector parsed from options (`-pc_type`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PcType {
+    /// Identity (no preconditioning).
     None,
+    /// Diagonal (Jacobi) scaling.
     Jacobi,
+    /// Local ω-SOR sweeps (block-Jacobi across ranks).
     Sor,
 }
 
 impl PcType {
+    /// Parse the `-pc_type` option string.
     pub fn parse(name: &str) -> Result<PcType, String> {
         Ok(match name {
             "none" => PcType::None,
@@ -48,6 +55,7 @@ impl PcType {
         })
     }
 
+    /// Canonical option-string form (inverse of [`Self::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             PcType::None => "none",
@@ -125,6 +133,7 @@ impl Precond {
         }
     }
 
+    /// True for the identity preconditioner (lets solvers skip `z = M r`).
     pub fn is_identity(&self) -> bool {
         matches!(self, Precond::None)
     }

@@ -18,7 +18,14 @@
 //!
 //! See `DESIGN.md` for the architecture and the experiment index, and
 //! `EXPERIMENTS.md` for measured results.
+//!
+//! The user-facing front door is [`api`]: an [`api::MdpBuilder`] for model
+//! construction (file / benchmark model / closures) and an [`api::Solver`]
+//! carrying the madupite/PETSc-style options database that the CLI shares.
 
+#![warn(missing_docs)]
+
+pub mod api;
 pub mod baseline;
 pub mod comm;
 pub mod ksp;

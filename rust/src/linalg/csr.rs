@@ -126,6 +126,7 @@ impl Csr {
         }
     }
 
+    /// Number of rows.
     pub fn nrows(&self) -> usize {
         self.nrows
     }
@@ -139,26 +140,32 @@ impl Csr {
         normalize_row_entries(row)
     }
 
+    /// Number of columns.
     pub fn ncols(&self) -> usize {
         self.ncols
     }
 
+    /// Number of stored entries.
     pub fn nnz(&self) -> usize {
         self.indices.len()
     }
 
+    /// Row pointer array (`nrows + 1` entries).
     pub fn indptr(&self) -> &[usize] {
         &self.indptr
     }
 
+    /// Column indices, row-major.
     pub fn indices(&self) -> &[usize] {
         &self.indices
     }
 
+    /// Stored values, aligned with [`Self::indices`].
     pub fn values(&self) -> &[f64] {
         &self.values
     }
 
+    /// Mutable view of the stored values (sparsity is fixed).
     pub fn values_mut(&mut self) -> &mut [f64] {
         &mut self.values
     }

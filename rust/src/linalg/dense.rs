@@ -15,6 +15,7 @@ pub struct DenseMat {
 }
 
 impl DenseMat {
+    /// All-zero matrix of the given shape.
     pub fn zeros(nrows: usize, ncols: usize) -> DenseMat {
         DenseMat {
             nrows,
@@ -23,6 +24,7 @@ impl DenseMat {
         }
     }
 
+    /// The n x n identity.
     pub fn eye(n: usize) -> DenseMat {
         let mut m = Self::zeros(n, n);
         for i in 0..n {
@@ -31,6 +33,7 @@ impl DenseMat {
         m
     }
 
+    /// Build from row slices (all must share one length).
     pub fn from_rows(rows: &[&[f64]]) -> DenseMat {
         let nrows = rows.len();
         let ncols = rows.first().map(|r| r.len()).unwrap_or(0);
@@ -42,18 +45,22 @@ impl DenseMat {
         m
     }
 
+    /// Number of rows.
     pub fn nrows(&self) -> usize {
         self.nrows
     }
 
+    /// Number of columns.
     pub fn ncols(&self) -> usize {
         self.ncols
     }
 
+    /// Row `r` as a slice.
     pub fn row(&self, r: usize) -> &[f64] {
         &self.data[r * self.ncols..(r + 1) * self.ncols]
     }
 
+    /// Mutable row `r`.
     pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
         &mut self.data[r * self.ncols..(r + 1) * self.ncols]
     }

@@ -34,10 +34,12 @@ impl Partition {
         Partition { n, size }
     }
 
+    /// Global vector/row count.
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// Number of ranks in the partition.
     pub fn size(&self) -> usize {
         self.size
     }
@@ -52,6 +54,7 @@ impl Partition {
         ((rank + 1) * self.n) / self.size
     }
 
+    /// Number of indices owned by `rank`.
     pub fn local_len(&self, rank: usize) -> usize {
         self.hi(rank) - self.lo(rank)
     }
@@ -232,22 +235,27 @@ impl DistCsr {
         }
     }
 
+    /// Owning rank of this local block.
     pub fn rank(&self) -> usize {
         self.rank
     }
 
+    /// Number of locally owned rows.
     pub fn local_nrows(&self) -> usize {
         self.local.nrows()
     }
 
+    /// Number of ghost (off-rank) columns this block references.
     pub fn nghost(&self) -> usize {
         self.ghost_ids.len()
     }
 
+    /// Stored entries in the local block.
     pub fn nnz_local(&self) -> usize {
         self.local.nnz()
     }
 
+    /// The column-space partition (vector layout).
     pub fn col_partition(&self) -> Partition {
         self.col_part
     }

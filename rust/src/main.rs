@@ -1,35 +1,38 @@
-//! madupite CLI — solve, generate and inspect large-scale MDPs.
+//! madupite CLI — a thin shell over the embedded API (`madupite::api`).
 //!
 //! Usage (PETSc/madupite-style options database):
 //!
 //! ```text
 //! madupite solve    -model maze -rows 200 -cols 200 -gamma 0.99
 //!                   -method ipi -ksp_type gmres -alpha 1e-4 -atol 1e-8
-//!                   -ranks 4 [-json out.json] [-verbose]
+//!                   -ranks 4 [-json out.json] [-write_policy pi.txt]
+//!                   [-write_cost v.txt] [-write_json_metadata meta.json]
 //! madupite solve    -file model.mdpb -method mpi -sweeps 20
 //! madupite generate -model sis -population 10000 -gamma 0.95 -file out.mdpb
 //! madupite info     -file model.mdpb
 //! madupite artifacts [-dir artifacts]
 //! ```
 //!
-//! `-model` ∈ {maze, grid, sis, traffic, garnet, inventory, queueing}.
-//! `-method` ∈ {vi, mpi, pi, ipi}; `-ksp_type` ∈ {richardson, gmres,
-//! bicgstab, tfqmr}; `-pc_type` ∈ {none, jacobi, sor}.
+//! Options are ingested lowest-priority-first from the `MADUPITE_OPTIONS`
+//! environment variable, then `-options_file <path>`, then the command
+//! line. Unknown `-keys` are hard errors with a nearest-key suggestion.
+//! The full key table and the model catalog live in `madupite::api` — the
+//! help below is generated from them, so it cannot drift.
 
-use madupite::comm::World;
-use madupite::ksp::precond::PcType;
-use madupite::ksp::KspType;
+use madupite::api::options::{OptionScope, OPTION_TABLE};
+use madupite::api::{self, MdpBuilder};
 use madupite::mdp::io;
-use madupite::models::{
-    garnet::GarnetSpec, gridworld::GridSpec, inventory::InventorySpec, queueing::QueueSpec,
-    replacement::ReplacementSpec, sis::SisSpec, traffic::TrafficSpec, ModelGenerator,
-};
-use madupite::solver::{gather_result, solve_dist, EvalBackend, Method, SolveOptions};
 use madupite::util::args::Options;
 use std::sync::Arc;
 
 fn main() {
-    let opts = Options::from_env();
+    let opts = match assemble_options() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    };
     let cmd = opts.positional().first().cloned().unwrap_or_default();
     let code = match cmd.as_str() {
         "solve" => cmd_solve(&opts),
@@ -47,170 +50,177 @@ fn main() {
         eprintln!("error: {e}");
         1
     });
-    let unused = opts.unused_keys();
-    if !unused.is_empty() {
-        eprintln!("warning: unused options: {unused:?}");
+    // Known keys that this command never consulted (e.g. -population with
+    // -model maze) are reported as a warning; unknown keys were already
+    // rejected up front by `validate_keys`. Only meaningful when the
+    // command actually ran to completion.
+    if code == 0 && matches!(cmd.as_str(), "solve" | "generate" | "info" | "artifacts") {
+        let unused = opts.unused_keys();
+        if !unused.is_empty() {
+            eprintln!("warning: unused options: {unused:?}");
+        }
     }
     std::process::exit(code);
+}
+
+/// Layer the options database PETSc style: `MADUPITE_OPTIONS` environment
+/// variable first, then `-options_file <path>`, then the command line
+/// (highest priority).
+fn assemble_options() -> Result<Options, String> {
+    let mut cli = Options::from_env();
+    let mut env_opts = Options::default();
+    if let Ok(text) = std::env::var("MADUPITE_OPTIONS") {
+        env_opts = Options::parse(text.split_whitespace().map(str::to_string));
+        reject_positionals(&env_opts, "MADUPITE_OPTIONS")?;
+    }
+    // -options_file is a front-end key: honored from the CLI or the env
+    // layer, consumed here (taken out of *both* layers, unconditionally,
+    // so no copy of it ever reaches the solve path) with the CLI winning.
+    let cli_options_file = cli.take("options_file");
+    let env_options_file = env_opts.take("options_file");
+    let options_file = cli_options_file.or(env_options_file);
+    // Track whether gamma/objective/model were given *explicitly* (CLI or
+    // options file) before the layers are flattened — see below.
+    let mut explicit_gamma = cli.keys().any(|k| k == "gamma");
+    let mut explicit_objective = cli.keys().any(|k| k == "objective");
+    let mut explicit_model = cli.keys().any(|k| k == "model");
+    let mut layers = env_opts;
+    if let Some(path) = options_file {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("reading -options_file {path}: {e}"))?;
+        let file_opts = Options::parse_file(&text);
+        reject_positionals(&file_opts, "-options_file")?;
+        if file_opts.keys().any(|k| k == "options_file") {
+            return Err("-options_file cannot be nested inside an options file".into());
+        }
+        explicit_gamma |= file_opts.keys().any(|k| k == "gamma");
+        explicit_objective |= file_opts.keys().any(|k| k == "objective");
+        explicit_model |= file_opts.keys().any(|k| k == "model");
+        layers = layers.merge(file_opts);
+    }
+    let mut opts = layers.merge(cli);
+    // A .mdpb source carries gamma/objective in its header and *is* the
+    // model. Env-layer defaults for -gamma/-objective/-model are meant for
+    // model-source runs, so for -file solves they silently yield; only
+    // *explicit* values (CLI or options file) stay in the database and
+    // conflict loudly downstream. (generate's -file is an output path —
+    // env defaults stay meaningful there.)
+    let file_solve = opts.positional().first().map(String::as_str) == Some("solve")
+        && opts.keys().any(|k| k == "file");
+    if file_solve {
+        if !explicit_gamma {
+            opts.take("gamma");
+        }
+        if !explicit_objective {
+            opts.take("objective");
+        }
+        if !explicit_model {
+            opts.take("model");
+        }
+    }
+    Ok(opts)
+}
+
+/// The low-priority option layers may only carry `-key value` pairs — a
+/// stray bare token there would displace the CLI subcommand.
+fn reject_positionals(opts: &Options, origin: &str) -> Result<(), String> {
+    match opts.positional() {
+        [] => Ok(()),
+        [first, ..] => Err(format!(
+            "{origin} may only contain -key value options, found stray token '{first}'"
+        )),
+    }
 }
 
 fn print_help() {
     println!(
         "madupite-rs {} — distributed solver for large-scale MDPs\n\n\
          commands:\n\
-         \x20 solve     -model <name> | -file <path>, -method vi|mpi|pi|ipi, -ranks N\n\
-         \x20 generate  -model <name> -file <out.mdpb> [-ranks N] [-objective min|max]\n\
-         \x20           [-chunk_rows K]  (streaming v2 writer: O(chunk) memory,\n\
-         \x20           rank-parallel, bytes identical for every N)\n\
-         \x20 info      -file <path.mdpb>\n\
-         \x20 artifacts [-dir artifacts]  (list + smoke-compile PJRT artifacts)\n\n\
-         common options: -gamma G -atol T -alpha A -adaptive_forcing\n\
-         \x20               -ksp_type K -pc_type P -objective min|max\n\
-         \x20               -eval_backend matfree|assembled  (policy-evaluation\n\
-         \x20               operator: fused matrix-free vs cached P_pi CSR)\n\
-         model options:  -rows/-cols/-seed (maze, grid), -population (sis),\n\
-         \x20               -capacity (traffic, inventory, queueing),\n\
-         \x20               -num_states (replacement, garnet),\n\
-         \x20               -num_actions/-branching (garnet)",
+         \x20 solve     solve an MDP from -model <name> or -file <path.mdpb>\n\
+         \x20 generate  stream a model to a .mdpb v2 file (-model, -file; rank-parallel,\n\
+         \x20           O(chunk) memory, bytes identical for every -ranks)\n\
+         \x20 info      print the header of a .mdpb file (-file)\n\
+         \x20 artifacts list + smoke-compile PJRT artifacts (-dir)\n\
+         \x20 help      this text",
         madupite::VERSION
     );
+    let sections: &[(OptionScope, &str)] = &[
+        (OptionScope::Model, "model selection"),
+        (OptionScope::Common, "common"),
+        (OptionScope::Solve, "solver"),
+        (OptionScope::Output, "outputs (solve)"),
+        (OptionScope::Generate, "generate"),
+        (OptionScope::Tools, "tools"),
+    ];
+    for (scope, title) in sections {
+        println!("\n{title} options:");
+        for spec in OPTION_TABLE.iter().filter(|s| s.scope == *scope) {
+            let lhs = if spec.value.is_empty() {
+                format!("-{}", spec.key)
+            } else {
+                format!("-{} {}", spec.key, spec.value)
+            };
+            println!("  {lhs:<42} {}", spec.help);
+        }
+    }
+    println!("\nmodels (-model <name>, with per-model parameters and defaults):");
+    for m in api::MODEL_CATALOG {
+        println!("  {:<12} {:<52} {}", m.name, m.params, m.about);
+    }
 }
 
 fn err_str<E: std::fmt::Display>(e: E) -> String {
     e.to_string()
 }
 
-/// Build the generator named by `-model` from its options.
-fn make_generator(opts: &Options) -> Result<Arc<dyn ModelGenerator + Send + Sync>, String> {
-    let model = opts.get_str("model", "maze");
-    let seed = opts.get_u64("seed", 42).map_err(err_str)?;
-    Ok(match model.as_str() {
-        "maze" => Arc::new(GridSpec::maze(
-            opts.get_usize("rows", 64).map_err(err_str)?,
-            opts.get_usize("cols", 64).map_err(err_str)?,
-            seed,
-        )),
-        "grid" => Arc::new(GridSpec::open(
-            opts.get_usize("rows", 64).map_err(err_str)?,
-            opts.get_usize("cols", 64).map_err(err_str)?,
-        )),
-        "sis" => Arc::new(SisSpec::standard(
-            opts.get_usize("population", 1000).map_err(err_str)?,
-            opts.get_usize("num_actions", 4).map_err(err_str)?,
-        )),
-        "traffic" => Arc::new(TrafficSpec::standard(
-            opts.get_usize("capacity", 12).map_err(err_str)?,
-        )),
-        "garnet" => Arc::new(GarnetSpec::new(
-            opts.get_usize("num_states", 1000).map_err(err_str)?,
-            opts.get_usize("num_actions", 4).map_err(err_str)?,
-            opts.get_usize("branching", 5).map_err(err_str)?,
-            seed,
-        )),
-        "inventory" => Arc::new(InventorySpec::standard(
-            opts.get_usize("capacity", 50).map_err(err_str)?,
-        )),
-        "queueing" => Arc::new(QueueSpec::standard(
-            opts.get_usize("capacity", 50).map_err(err_str)?,
-        )),
-        "replacement" => Arc::new(ReplacementSpec::standard(
-            opts.get_usize("num_states", 50).map_err(err_str)?,
-        )),
-        other => return Err(format!("unknown model '{other}'")),
-    })
-}
-
-fn parse_method(opts: &Options) -> Result<Method, String> {
-    let method = opts
-        .get_choice("method", &["vi", "mpi", "pi", "ipi"], "ipi")
-        .map_err(err_str)?;
-    Ok(match method.as_str() {
-        "vi" => Method::Vi,
-        "mpi" => Method::Mpi {
-            sweeps: opts.get_usize("sweeps", 20).map_err(err_str)?,
-        },
-        "pi" => Method::ExactPi,
-        _ => {
-            let ksp = KspType::parse(&opts.get_str("ksp_type", "gmres"))?;
-            let pc = PcType::parse(&opts.get_str("pc_type", "none"))?;
-            Method::Ipi { ksp, pc }
-        }
-    })
-}
-
-fn parse_solve_options(opts: &Options) -> Result<SolveOptions, String> {
-    Ok(SolveOptions {
-        method: parse_method(opts)?,
-        eval_backend: EvalBackend::parse(&opts.get_str("eval_backend", "matfree"))?,
-        atol: opts.get_f64("atol", 1e-8).map_err(err_str)?,
-        max_outer: opts.get_usize("max_iter_pi", 1000).map_err(err_str)?,
-        alpha: opts.get_f64("alpha", 1e-4).map_err(err_str)?,
-        adaptive_forcing: opts.get_bool("adaptive_forcing", false).map_err(err_str)?,
-        max_inner: opts.get_usize("max_iter_ksp", 10_000).map_err(err_str)?,
-        v0: None,
-        verbose: opts.get_bool("verbose", false).map_err(err_str)?,
-    })
-}
-
 fn cmd_solve(opts: &Options) -> Result<(), String> {
-    let ranks = opts.get_usize("ranks", 1).map_err(err_str)?;
-    let solve_opts = parse_solve_options(opts)?;
-    let gamma = opts.get_f64("gamma", 0.99).map_err(err_str)?;
-    let file = opts.get("file").map(|s| s.to_string());
+    // Key validation happens inside run_solve — the one shared path.
+    let builder = MdpBuilder::from_options(opts).map_err(err_str)?;
     let t0 = std::time::Instant::now();
-
-    let result = if let Some(path) = file {
-        let path = Arc::new(path);
-        let so = solve_opts.clone();
-        let mut results = World::run(ranks, move |comm| {
-            let mdp = io::load_dist(&comm, path.as_str())
-                .unwrap_or_else(|e| panic!("loading {path}: {e}"));
-            let local = solve_dist(&comm, &mdp, &so);
-            gather_result(&comm, local)
-        });
-        results.swap_remove(0)
-    } else {
-        let generator = make_generator(opts)?;
-        let objective = madupite::mdp::Objective::parse(&opts.get_str("objective", "min"))?;
-        let so = solve_opts.clone();
-        let mut results = World::run(ranks, move |comm| {
-            let mdp = generator.build_dist(&comm, gamma).with_objective(objective);
-            let local = solve_dist(&comm, &mdp, &so);
-            gather_result(&comm, local)
-        });
-        results.swap_remove(0)
-    };
+    // The CLI is a thin shell: the database is handed to the embedded API
+    // unchanged (`run_solve` is also what `api::Solver::solve` calls), so
+    // both front ends resolve options through one code path.
+    let outcome = api::run_solve(&builder, opts).map_err(err_str)?;
 
     println!(
         "method={} backend={} states={} converged={} outer={} spmvs={} residual={:.3e} \
          err_bound={:.3e} time={:.3}s comm={}B",
-        solve_opts.method.name(),
-        solve_opts.eval_backend.name(),
-        result.value.len(),
-        result.converged,
-        result.outer_iterations,
-        result.total_spmvs,
-        result.residual,
-        result.error_bound(),
+        outcome.options.method.name(),
+        outcome.options.eval_backend.name(),
+        outcome.n_states,
+        outcome.result.converged,
+        outcome.result.outer_iterations,
+        outcome.result.total_spmvs,
+        outcome.result.residual,
+        outcome.result.error_bound(),
         t0.elapsed().as_secs_f64(),
-        result.comm_bytes,
+        outcome.result.comm_bytes,
     );
-    if let Some(json_path) = opts.get("json") {
-        let j = result.to_json(&solve_opts.method.name());
-        std::fs::write(json_path, j.to_string_pretty()).map_err(err_str)?;
-        println!("wrote {json_path}");
+    // run_solve already wrote any requested output files; report them.
+    for key in ["json", "write_policy", "write_cost", "write_json_metadata"] {
+        if let Some(path) = opts.get(key) {
+            println!("wrote {path}");
+        }
     }
     Ok(())
 }
 
 fn cmd_generate(opts: &Options) -> Result<(), String> {
-    let generator = make_generator(opts)?;
-    let gamma = opts.get_f64("gamma", 0.99).map_err(err_str)?;
-    let objective = madupite::mdp::Objective::parse(&opts.get_str("objective", "min"))?;
+    api::options::validate_keys(opts).map_err(err_str)?;
+    let model = opts.get_str("model", "maze");
+    let generator = api::model_from_options(&model, opts).map_err(err_str)?;
+    let gamma = api::options::resolve_gamma(opts, None).map_err(err_str)?;
+    let objective = api::options::resolve_objective(opts, None).map_err(err_str)?;
     let ranks = opts.get_usize("ranks", 1).map_err(err_str)?;
+    if ranks == 0 {
+        return Err("-ranks must be >= 1".into());
+    }
     let chunk_rows = opts
         .get_usize("chunk_rows", io::DEFAULT_CHUNK_ROWS)
         .map_err(err_str)?;
+    if chunk_rows == 0 {
+        return Err("-chunk_rows must be >= 1".into());
+    }
     let file = opts
         .get("file")
         .ok_or("generate requires -file <out.mdpb>")?
@@ -219,7 +229,7 @@ fn cmd_generate(opts: &Options) -> Result<(), String> {
     // generator to disk, O(chunk) memory — never a full in-memory Mdp.
     let t0 = std::time::Instant::now();
     let path = Arc::new(file.clone());
-    let results = World::run(ranks, move |comm| {
+    let results = madupite::comm::World::run(ranks, move |comm| {
         generator.write_mdpb(
             &comm,
             gamma,
@@ -251,6 +261,7 @@ fn cmd_generate(opts: &Options) -> Result<(), String> {
 }
 
 fn cmd_info(opts: &Options) -> Result<(), String> {
+    api::options::validate_keys(opts).map_err(err_str)?;
     let file = opts.get("file").ok_or("info requires -file <path>")?;
     let mut f = std::fs::File::open(file).map_err(err_str)?;
     let file_len = f.metadata().map_err(err_str)?.len();
@@ -272,6 +283,7 @@ fn cmd_info(opts: &Options) -> Result<(), String> {
 }
 
 fn cmd_artifacts(opts: &Options) -> Result<(), String> {
+    api::options::validate_keys(opts).map_err(err_str)?;
     let dir = opts.get_str("dir", "artifacts");
     let mut engine = madupite::runtime::Engine::load(&dir).map_err(err_str)?;
     println!("platform: {}", engine.platform());

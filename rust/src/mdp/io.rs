@@ -57,11 +57,17 @@ pub const DEFAULT_CHUNK_ROWS: usize = 8192;
 /// Parsed header.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Header {
+    /// Format version (1 legacy, 2 current).
     pub version: u32,
+    /// Number of states `n`.
     pub n_states: usize,
+    /// Number of actions `m`.
     pub n_actions: usize,
+    /// Discount factor.
     pub gamma: f64,
+    /// Total stored transition entries.
     pub nnz: usize,
+    /// Optimization sense (v2; v1 files default to min).
     pub objective: Objective,
 }
 

@@ -39,6 +39,7 @@ pub struct MatFreePolicyOp<'a> {
 }
 
 impl<'a> MatFreePolicyOp<'a> {
+    /// Operator view over `mdp` for the (rank-local) greedy `policy`.
     pub fn new(mdp: &'a DistMdp, policy: &'a [usize]) -> Self {
         assert_eq!(
             policy.len(),

@@ -31,8 +31,10 @@ use crate::linalg::Csr;
 /// and every greedy step maximizes; the contraction analysis is identical.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Objective {
+    /// Minimize expected discounted cost (the default).
     #[default]
     Min,
+    /// Maximize expected discounted reward.
     Max,
 }
 
@@ -55,6 +57,8 @@ impl Objective {
         }
     }
 
+    /// Parse the `-objective` option string (`min`/`mincost`,
+    /// `max`/`maxreward`).
     pub fn parse(name: &str) -> Result<Objective, String> {
         match name {
             "min" | "mincost" => Ok(Objective::Min),
@@ -70,6 +74,52 @@ impl Objective {
             Objective::Max => "max",
         }
     }
+}
+
+/// The one crate-wide discount-factor check: γ must be finite and in
+/// [0, 1). Every layer (options database, builder, filler construction)
+/// funnels through this so the accepted range can never drift.
+pub(crate) fn validate_gamma(gamma: f64) -> Result<f64, String> {
+    if gamma.is_finite() && (0.0..1.0).contains(&gamma) {
+        Ok(gamma)
+    } else {
+        Err(format!("gamma {gamma} outside [0, 1)"))
+    }
+}
+
+/// Validate one filler-produced transition row: non-empty, targets in
+/// range, probabilities finite/non-negative, sum 1 within 1e-8 (the same
+/// bar [`Csr::is_row_stochastic`] enforces post-assembly, but with the
+/// offending `(s, a)` pair named).
+fn validate_filler_row(
+    n_states: usize,
+    s: usize,
+    a: usize,
+    row: &[(usize, f64)],
+) -> Result<(), String> {
+    if row.is_empty() {
+        return Err(format!("transition row (s={s}, a={a}) is empty"));
+    }
+    let mut sum = 0.0;
+    for &(col, p) in row {
+        if col >= n_states {
+            return Err(format!(
+                "transition row (s={s}, a={a}) targets state {col} >= n_states {n_states}"
+            ));
+        }
+        if !p.is_finite() || p < 0.0 {
+            return Err(format!(
+                "transition row (s={s}, a={a}) has invalid probability {p}"
+            ));
+        }
+        sum += p;
+    }
+    if (sum - 1.0).abs() > 1e-8 {
+        return Err(format!(
+            "transition row (s={s}, a={a}) sums to {sum}, not 1 (not a distribution)"
+        ));
+    }
+    Ok(())
 }
 
 /// A complete (serial) infinite-horizon discounted MDP.
@@ -134,12 +184,14 @@ impl Mdp {
         self
     }
 
+    /// The optimization sense (min-cost or max-reward).
     pub fn objective(&self) -> Objective {
         self.objective
     }
 
     /// Build by evaluating filler functions over all (state, action) pairs
-    /// (madupite's "online simulation" creation path).
+    /// (madupite's "online simulation" creation path). Panics on invalid
+    /// fillers — use [`Self::try_from_fillers`] for the fallible variant.
     pub fn from_fillers(
         n_states: usize,
         n_actions: usize,
@@ -147,39 +199,70 @@ impl Mdp {
         prob: impl Fn(usize, usize) -> Vec<(usize, f64)>,
         cost: impl Fn(usize, usize) -> f64,
     ) -> Mdp {
+        Mdp::try_from_fillers(n_states, n_actions, gamma, prob, cost)
+            .unwrap_or_else(|e| panic!("filler produced an invalid MDP: {e}"))
+    }
+
+    /// Fallible [`Self::from_fillers`]: every generated row is validated
+    /// (targets in range, probabilities finite and non-negative, row sum 1
+    /// within 1e-8, costs finite) and the first offending `(s, a)` pair is
+    /// named in the error — the validation layer behind
+    /// [`crate::api::MdpBuilder`].
+    pub fn try_from_fillers(
+        n_states: usize,
+        n_actions: usize,
+        gamma: f64,
+        prob: impl Fn(usize, usize) -> Vec<(usize, f64)>,
+        cost: impl Fn(usize, usize) -> f64,
+    ) -> Result<Mdp, String> {
+        if n_states == 0 || n_actions == 0 {
+            return Err(format!("MDP shape {n_states}x{n_actions} must be positive"));
+        }
+        validate_gamma(gamma)?;
         let mut rows = Vec::with_capacity(n_states * n_actions);
         let mut costs = Vec::with_capacity(n_states * n_actions);
         for s in 0..n_states {
             for a in 0..n_actions {
-                rows.push(prob(s, a));
-                costs.push(cost(s, a));
+                let row = prob(s, a);
+                validate_filler_row(n_states, s, a, &row)?;
+                let c = cost(s, a);
+                if !c.is_finite() {
+                    return Err(format!("cost at (s={s}, a={a}) is not finite"));
+                }
+                rows.push(row);
+                costs.push(c);
             }
         }
         let transitions = Csr::from_row_lists(n_states, rows);
         Mdp::new(n_states, n_actions, transitions, costs, gamma)
-            .expect("filler produced an invalid MDP")
     }
 
+    /// Number of states `n`.
     pub fn n_states(&self) -> usize {
         self.n_states
     }
 
+    /// Number of actions `m`.
     pub fn n_actions(&self) -> usize {
         self.n_actions
     }
 
+    /// Discount factor γ ∈ [0, 1).
     pub fn gamma(&self) -> f64 {
         self.gamma
     }
 
+    /// The stacked `(n·m) × n` transition CSR.
     pub fn transitions(&self) -> &Csr {
         &self.transitions
     }
 
+    /// The dense stage-cost table, `costs[s·m + a]`.
     pub fn costs(&self) -> &[f64] {
         &self.costs
     }
 
+    /// Stage cost `g(s, a)`.
     pub fn cost(&self, s: usize, a: usize) -> f64 {
         self.costs[s * self.n_actions + a]
     }
@@ -277,7 +360,9 @@ pub struct DistMdp {
 }
 
 impl DistMdp {
-    /// Build rank-locally from filler functions. Collective.
+    /// Build rank-locally from filler functions. Collective. Panics on
+    /// invalid fillers — use [`Self::try_from_fillers`] for the fallible
+    /// variant.
     pub fn from_fillers(
         comm: &Comm,
         n_states: usize,
@@ -286,30 +371,67 @@ impl DistMdp {
         prob: impl Fn(usize, usize) -> Vec<(usize, f64)>,
         cost: impl Fn(usize, usize) -> f64,
     ) -> DistMdp {
+        DistMdp::try_from_fillers(comm, n_states, n_actions, gamma, prob, cost)
+            .unwrap_or_else(|e| panic!("filler produced an invalid distributed MDP: {e}"))
+    }
+
+    /// Fallible [`Self::from_fillers`]: each rank validates its own rows
+    /// (targets in range, probabilities finite and non-negative, row sum 1
+    /// within 1e-8, costs finite), then the world *agrees collectively* on
+    /// the outcome — either every rank proceeds to assembly or every rank
+    /// returns `Err`, so a sub-stochastic row on one rank can never
+    /// deadlock the others in a later collective. Collective.
+    pub fn try_from_fillers(
+        comm: &Comm,
+        n_states: usize,
+        n_actions: usize,
+        gamma: f64,
+        prob: impl Fn(usize, usize) -> Vec<(usize, f64)>,
+        cost: impl Fn(usize, usize) -> f64,
+    ) -> Result<DistMdp, String> {
+        // Uniform-input checks: identical on every rank, so an early return
+        // here cannot desynchronize the world.
+        if n_states == 0 || n_actions == 0 {
+            return Err(format!("MDP shape {n_states}x{n_actions} must be positive"));
+        }
+        validate_gamma(gamma)?;
         let part = Partition::new(n_states, comm.size());
         let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
         let mut rows = Vec::with_capacity((hi - lo) * n_actions);
         let mut costs = Vec::with_capacity((hi - lo) * n_actions);
-        for s in lo..hi {
+        let mut local_err: Option<String> = None;
+        'fill: for s in lo..hi {
             for a in 0..n_actions {
                 let row = prob(s, a);
-                debug_assert!(
-                    (row.iter().map(|(_, p)| p).sum::<f64>() - 1.0).abs() < 1e-8,
-                    "filler row (s={s}, a={a}) not stochastic"
-                );
+                if let Err(e) = validate_filler_row(n_states, s, a, &row) {
+                    local_err = Some(e);
+                    break 'fill;
+                }
+                let c = cost(s, a);
+                if !c.is_finite() {
+                    local_err = Some(format!("cost at (s={s}, a={a}) is not finite"));
+                    break 'fill;
+                }
                 rows.push(row);
-                costs.push(cost(s, a));
+                costs.push(c);
             }
         }
+        // Collective agreement before the (collective) assembly: gather
+        // every rank's verdict so all ranks return the same (first rank's)
+        // specific error — or all proceed together.
+        let verdicts = comm.allgatherv(local_err.unwrap_or_default().into_bytes());
+        if let Some(msg) = verdicts.into_iter().find(|m| !m.is_empty()) {
+            return Err(String::from_utf8_lossy(&msg).into_owned());
+        }
         let trans = DistCsr::assemble(comm, part, rows);
-        DistMdp {
+        Ok(DistMdp {
             part,
             n_actions,
             gamma,
             objective: Objective::Min,
             trans,
             costs,
-        }
+        })
     }
 
     /// Switch the optimization sense (builder style).
@@ -318,6 +440,7 @@ impl DistMdp {
         self
     }
 
+    /// The optimization sense (min-cost or max-reward).
     pub fn objective(&self) -> Objective {
         self.objective
     }
@@ -338,30 +461,37 @@ impl DistMdp {
         .with_objective(mdp.objective())
     }
 
+    /// The contiguous state partition across ranks.
     pub fn partition(&self) -> Partition {
         self.part
     }
 
+    /// Global number of states `n`.
     pub fn n_states(&self) -> usize {
         self.part.n()
     }
 
+    /// Number of actions `m`.
     pub fn n_actions(&self) -> usize {
         self.n_actions
     }
 
+    /// Discount factor γ ∈ [0, 1).
     pub fn gamma(&self) -> f64 {
         self.gamma
     }
 
+    /// Number of locally owned states.
     pub fn local_states(&self) -> usize {
         self.costs.len() / self.n_actions.max(1)
     }
 
+    /// The rank-local block of the stacked transition matrix.
     pub fn transitions(&self) -> &DistCsr {
         &self.trans
     }
 
+    /// Rank-local stage costs, `costs[(s − lo)·m + a]`.
     pub fn local_costs(&self) -> &[f64] {
         &self.costs
     }

@@ -10,14 +10,18 @@ use crate::util::prng::Xoshiro256pp;
 /// Garnet specification.
 #[derive(Clone, Debug)]
 pub struct GarnetSpec {
+    /// Number of states.
     pub n_states: usize,
+    /// Number of actions.
     pub n_actions: usize,
     /// Successors per (s, a) — controls sparsity: nnz = n·m·b.
     pub branching: usize,
+    /// PRNG seed (the spec is a pure function of it).
     pub seed: u64,
 }
 
 impl GarnetSpec {
+    /// Garnet spec with the given shape, branching factor and seed.
     pub fn new(n_states: usize, n_actions: usize, branching: usize, seed: u64) -> GarnetSpec {
         assert!(branching >= 1 && branching <= n_states);
         GarnetSpec {

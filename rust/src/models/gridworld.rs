@@ -17,7 +17,9 @@ const DC: [isize; 4] = [0, 1, 0, -1];
 /// Grid specification. Build with [`GridSpec::open`] or [`GridSpec::maze`].
 #[derive(Clone, Debug)]
 pub struct GridSpec {
+    /// Grid rows.
     pub rows: usize,
+    /// Grid columns.
     pub cols: usize,
     /// `walls[r*cols + c]` — wall cells are self-looping high-cost states.
     pub walls: Vec<bool>,
@@ -60,6 +62,7 @@ impl GridSpec {
         spec
     }
 
+    /// Total number of grid cells (`rows * cols`).
     pub fn n_cells(&self) -> usize {
         self.rows * self.cols
     }

@@ -12,19 +12,26 @@ use super::ModelGenerator;
 /// Inventory specification.
 #[derive(Clone, Debug)]
 pub struct InventorySpec {
+    /// Maximum stock level.
     pub capacity: usize,
+    /// Largest order per period (action count − 1).
     pub max_order: usize,
     /// Poisson demand rate.
     pub demand_rate: f64,
     /// Demand support truncation (0..=demand_max, renormalized).
     pub demand_max: usize,
+    /// Cost per unit held per period.
     pub holding_cost: f64,
+    /// Cost per unit ordered.
     pub unit_order_cost: f64,
+    /// Fixed cost per non-empty order.
     pub fixed_order_cost: f64,
+    /// Penalty per unit of unmet demand.
     pub stockout_penalty: f64,
 }
 
 impl InventorySpec {
+    /// The standard benchmark parameterization for a given capacity.
     pub fn standard(capacity: usize) -> InventorySpec {
         InventorySpec {
             capacity,

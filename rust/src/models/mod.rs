@@ -29,9 +29,13 @@ use std::path::Path;
 /// `(spec, s, a)` so that distributed construction is reproducible and
 /// rank-independent.
 pub trait ModelGenerator: Sync {
+    /// Number of states of the generated MDP.
     fn n_states(&self) -> usize;
+    /// Number of actions of the generated MDP.
     fn n_actions(&self) -> usize;
+    /// The sparse successor distribution of `(s, a)`.
     fn prob_row(&self, s: usize, a: usize) -> Vec<(usize, f64)>;
+    /// The stage cost of `(s, a)`.
     fn cost(&self, s: usize, a: usize) -> f64;
 
     /// Build the full serial MDP.

@@ -24,6 +24,7 @@ pub struct QueueSpec {
 }
 
 impl QueueSpec {
+    /// The standard benchmark parameterization for a given capacity.
     pub fn standard(capacity: usize) -> QueueSpec {
         QueueSpec {
             capacity,

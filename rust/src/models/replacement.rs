@@ -22,12 +22,14 @@ pub struct ReplacementSpec {
     pub shock_prob: f64,
     /// Operating cost at condition c: `base + slope · c²/(n−1)²` (convex).
     pub operating_base: f64,
+    /// Slope of the convex operating-cost curve.
     pub operating_slope: f64,
     /// Cost of replacing the machine (paid once, restart at condition 0).
     pub replacement_cost: f64,
 }
 
 impl ReplacementSpec {
+    /// The standard benchmark parameterization with `n_conditions` states.
     pub fn standard(n_conditions: usize) -> ReplacementSpec {
         assert!(n_conditions >= 3);
         ReplacementSpec {

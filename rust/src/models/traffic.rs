@@ -17,6 +17,7 @@ pub struct TrafficSpec {
     pub capacity: usize,
     /// Bernoulli arrival probability, approach 1 / approach 2.
     pub arrival1: f64,
+    /// Bernoulli arrival probability, approach 2.
     pub arrival2: f64,
     /// Vehicles discharged per green period.
     pub saturation: usize,
@@ -25,6 +26,7 @@ pub struct TrafficSpec {
 }
 
 impl TrafficSpec {
+    /// The standard benchmark parameterization for a given queue capacity.
     pub fn standard(capacity: usize) -> TrafficSpec {
         TrafficSpec {
             capacity,
@@ -44,6 +46,7 @@ impl TrafficSpec {
         ((q1 * self.qdim()) + q2) * 2 + phase
     }
 
+    /// Decode a state index into `(queue1, queue2, phase)`.
     pub fn decode(&self, s: usize) -> (usize, usize, usize) {
         let phase = s % 2;
         let q = s / 2;

@@ -43,6 +43,7 @@ impl Engine {
         ))
     }
 
+    /// The PJRT platform name (or the stub marker when no client is linked).
     pub fn platform(&self) -> String {
         match self.void {}
     }
@@ -71,8 +72,11 @@ impl Engine {
 /// CSR path. Constructible only from a live [`Engine`], hence unreachable
 /// in this build.
 pub struct DenseBellman {
+    /// Number of states of the dense block.
     pub n_states: usize,
+    /// Number of actions of the dense block.
     pub n_actions: usize,
+    /// Fused VI sweeps per execution.
     pub sweeps: usize,
 }
 

@@ -47,6 +47,7 @@ impl Method {
         }
     }
 
+    /// iPI with BiCGStab, no preconditioner.
     pub fn ipi_bicgstab() -> Method {
         Method::Ipi {
             ksp: KspType::BiCgStab,
@@ -54,6 +55,7 @@ impl Method {
         }
     }
 
+    /// iPI with TFQMR, no preconditioner.
     pub fn ipi_tfqmr() -> Method {
         Method::Ipi {
             ksp: KspType::Tfqmr,
@@ -61,6 +63,7 @@ impl Method {
         }
     }
 
+    /// Canonical display name (`vi`, `mpi(k)`, `pi-exact`, `ipi(gmres)`, ...).
     pub fn name(&self) -> String {
         match self {
             Method::Vi => "vi".to_string(),
@@ -102,6 +105,7 @@ impl EvalBackend {
         })
     }
 
+    /// Canonical option-string form (inverse of [`Self::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             EvalBackend::MatFree => "matfree",
@@ -113,6 +117,7 @@ impl EvalBackend {
 /// Solver options (madupite's options database, DESIGN §4).
 #[derive(Clone, Debug)]
 pub struct SolveOptions {
+    /// Outer solution method (`-method` + inner-solver options).
     pub method: Method,
     /// Operator realization for the evaluation step (`-eval_backend`).
     pub eval_backend: EvalBackend,
@@ -131,6 +136,7 @@ pub struct SolveOptions {
     pub max_inner: usize,
     /// Initial value vector (defaults to zeros).
     pub v0: Option<Vec<f64>>,
+    /// Per-iteration residual logging on the root rank (`-verbose`).
     pub verbose: bool,
 }
 
@@ -153,26 +159,38 @@ impl Default for SolveOptions {
 /// Per-outer-iteration record (the convergence trace the experiments plot).
 #[derive(Clone, Debug)]
 pub struct IterRecord {
+    /// Outer iteration index.
     pub outer: usize,
     /// ‖TV − V‖∞ *before* this iteration's evaluation step.
     pub residual: f64,
+    /// Inner (KSP) iterations spent in this outer iteration.
     pub inner_iterations: usize,
+    /// Operator applications in this outer iteration (incl. the backup).
     pub spmvs: usize,
+    /// Wall time since solve start, seconds.
     pub elapsed_s: f64,
 }
 
 /// Result of a solve (global quantities gathered on every rank).
 #[derive(Clone, Debug)]
 pub struct SolveResult {
+    /// Optimal value vector V* (global).
     pub value: Vec<f64>,
+    /// Greedy/optimal policy π* (global, one action index per state).
     pub policy: Vec<usize>,
+    /// Outer iterations executed.
     pub outer_iterations: usize,
     /// Total operator applications across outer + inner work.
     pub total_spmvs: usize,
+    /// Total inner (KSP) iterations across all outer iterations.
     pub total_inner_iterations: usize,
+    /// Final ∞-norm Bellman residual ‖TV − V‖∞.
     pub residual: f64,
+    /// Whether the residual dropped below `atol`.
     pub converged: bool,
+    /// Wall time of the solve, seconds.
     pub wall_time_s: f64,
+    /// Per-outer-iteration convergence trace.
     pub trace: Vec<IterRecord>,
     /// Total communication volume (bytes, summed over ranks) during the
     /// solve itself — model distribution/assembly and result gathering are
@@ -215,15 +233,25 @@ impl SolveResult {
 
 /// Rank-local result (before gathering).
 pub struct LocalSolveResult {
+    /// Rank-local block of the value vector.
     pub value: Vec<f64>,
+    /// Rank-local block of the greedy policy.
     pub policy: Vec<usize>,
+    /// Discount factor of the solved MDP.
     pub gamma: f64,
+    /// Outer iterations executed.
     pub outer_iterations: usize,
+    /// Total operator applications across outer + inner work.
     pub total_spmvs: usize,
+    /// Total inner (KSP) iterations.
     pub total_inner_iterations: usize,
+    /// Final ∞-norm Bellman residual (global).
     pub residual: f64,
+    /// Whether the residual dropped below `atol`.
     pub converged: bool,
+    /// Wall time of the solve, seconds.
     pub wall_time_s: f64,
+    /// Per-outer-iteration convergence trace.
     pub trace: Vec<IterRecord>,
     /// Global communication bytes counted between solve entry and exit.
     pub comm_bytes: u64,

@@ -73,19 +73,26 @@ impl Options {
         Options::parse(std::env::args().skip(1))
     }
 
-    /// Parse an options file: `key value` or `-key value` per line,
-    /// `#` comments. Later CLI options override file options via `merge`.
+    /// Parse an options file: `key value` / `-key value` pairs (or bare
+    /// flags) per line, `#` comments. On a line with no `-`-prefixed
+    /// token, every even-positioned token is treated as a key and dashed
+    /// (so `verbose` alone is a flag, `ksp_type gmres` is a pair); lines
+    /// that already use dashes are taken verbatim. The bare-key heuristic
+    /// is per line, so a flag on one line cannot shift the key/value
+    /// pairing of the next. Later CLI options override file options via
+    /// [`Self::merge`].
     pub fn parse_file(text: &str) -> Options {
         let mut tokens = Vec::new();
         for line in text.lines() {
             let line = line.split('#').next().unwrap_or("");
-            for tok in line.split_whitespace() {
-                let mut t = tok.to_string();
-                if !t.starts_with('-') && tokens.len() % 2 == 0 {
-                    // allow bare `key value` lines
-                    t = format!("-{t}");
+            let line_toks: Vec<&str> = line.split_whitespace().collect();
+            let bare = !line_toks.is_empty() && line_toks.iter().all(|t| !t.starts_with('-'));
+            for (i, tok) in line_toks.iter().enumerate() {
+                if bare && i % 2 == 0 {
+                    tokens.push(format!("-{tok}"));
+                } else {
+                    tokens.push(tok.to_string());
                 }
-                tokens.push(t);
             }
         }
         Options::parse(tokens)
@@ -105,10 +112,24 @@ impl Options {
         self.map.insert(key.to_string(), value.into());
     }
 
+    /// Remove `key` from the database, returning its value if present
+    /// (for front-end keys that must not reach later layers).
+    pub fn take(&mut self, key: &str) -> Option<String> {
+        self.map.remove(key)
+    }
+
+    /// Positional (non-`-key`) arguments, in order.
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
 
+    /// All keys present in the database, sorted (does not mark them used —
+    /// this is the schema-validation view, not a lookup).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    /// Whether `key` is present (marks it used).
     pub fn has(&self, key: &str) -> bool {
         self.touch(key);
         self.map.contains_key(key)
@@ -120,10 +141,12 @@ impl Options {
         self.map.get(key).map(|s| s.as_str())
     }
 
+    /// String lookup with a default.
     pub fn get_str(&self, key: &str, default: &str) -> String {
         self.get(key).map(|s| s.to_string()).unwrap_or_else(|| default.to_string())
     }
 
+    /// Float lookup with a default; parse failures are errors.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, OptError> {
         match self.get(key) {
             None => Ok(default),
@@ -133,6 +156,7 @@ impl Options {
         }
     }
 
+    /// Integer lookup with a default; accepts `4k`/`2m`/`1g` suffixes.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, OptError> {
         match self.get(key) {
             None => Ok(default),
@@ -141,10 +165,13 @@ impl Options {
         }
     }
 
+    /// `u64` lookup with a default (same grammar as [`Self::get_usize`]).
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, OptError> {
         Ok(self.get_usize(key, default as usize)? as u64)
     }
 
+    /// Bool lookup: bare flags and `true/1/yes/on` are true,
+    /// `false/0/no/off` false.
     pub fn get_bool(&self, key: &str, default: bool) -> Result<bool, OptError> {
         match self.get(key) {
             None => Ok(default),
@@ -278,6 +305,19 @@ mod tests {
         let merged = file.merge(cli);
         assert_eq!(merged.get_f64("alpha", 0.0).unwrap(), 1e-6);
         assert_eq!(merged.get("ksp_type"), Some("gmres"));
+    }
+
+    #[test]
+    fn file_flag_does_not_shift_pairing() {
+        // regression: a bare flag line used to flip the global token
+        // parity, making the next line's key consume as a value
+        let o = Options::parse_file("verbose\nksp_type gmres\n");
+        assert!(o.get_bool("verbose", false).unwrap());
+        assert_eq!(o.get("ksp_type"), Some("gmres"));
+        // multi-pair bare lines still work
+        let o = Options::parse_file("a 1 b 2\n");
+        assert_eq!(o.get("a"), Some("1"));
+        assert_eq!(o.get("b"), Some("2"));
     }
 
     #[test]

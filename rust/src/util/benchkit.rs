@@ -11,6 +11,7 @@ use std::time::{Duration, Instant};
 /// Statistics for one measured case.
 #[derive(Debug, Clone)]
 pub struct Stats {
+    /// Case label (row name in the report table).
     pub name: String,
     /// Per-iteration wall times, seconds.
     pub samples: Vec<f64>,
@@ -20,6 +21,7 @@ pub struct Stats {
 }
 
 impl Stats {
+    /// Median of the recorded samples.
     pub fn median(&self) -> f64 {
         let mut s = self.samples.clone();
         s.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -34,6 +36,7 @@ impl Stats {
         }
     }
 
+    /// Arithmetic mean of the recorded samples.
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
             return f64::NAN;
@@ -41,6 +44,7 @@ impl Stats {
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
     }
 
+    /// Sample standard deviation of the recorded samples.
     pub fn stddev(&self) -> f64 {
         let n = self.samples.len();
         if n < 2 {
@@ -50,10 +54,12 @@ impl Stats {
         (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
     }
 
+    /// Minimum recorded sample.
     pub fn min(&self) -> f64 {
         self.samples.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
+    /// Stats as a JSON object (name, n, median, mean, stddev, min).
     pub fn to_json(&self) -> Json {
         let mut pairs = vec![
             ("name", Json::str(self.name.clone())),
@@ -78,7 +84,9 @@ impl Stats {
 
 /// A benchmark suite: collects cases, prints a table, writes JSON.
 pub struct Suite {
+    /// Suite title (report heading).
     pub title: String,
+    /// Collected per-case statistics, in run order.
     pub results: Vec<Stats>,
     /// Max samples per case.
     pub max_samples: usize,
@@ -89,6 +97,7 @@ pub struct Suite {
 }
 
 impl Suite {
+    /// New empty suite titled `title`.
     pub fn new(title: &str) -> Self {
         // Environment knobs let CI shrink the suites:
         // MADUPITE_BENCH_SAMPLES / MADUPITE_BENCH_BUDGET_MS.
@@ -175,6 +184,7 @@ impl Suite {
         render_table(&self.title, &rows)
     }
 
+    /// Full suite report as JSON (title + per-benchmark stats).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("title", Json::str(self.title.clone())),

@@ -18,11 +18,17 @@ use std::fmt;
 /// deterministic — important for golden tests and diffable experiment logs.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (f64, like JavaScript).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object (sorted keys — serialization is deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
@@ -37,14 +43,17 @@ impl Json {
         Json::Arr(items)
     }
 
+    /// String value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
+    /// Float value.
     pub fn num(x: f64) -> Json {
         Json::Num(x)
     }
 
+    /// Integer value (stored as f64, like JavaScript).
     pub fn int(x: i64) -> Json {
         Json::Num(x as f64)
     }
@@ -54,6 +63,7 @@ impl Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// The number, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -61,6 +71,7 @@ impl Json {
         }
     }
 
+    /// The string, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -68,6 +79,7 @@ impl Json {
         }
     }
 
+    /// The bool, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -75,6 +87,7 @@ impl Json {
         }
     }
 
+    /// The items, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -82,6 +95,7 @@ impl Json {
         }
     }
 
+    /// Object field lookup, if this is an `Obj`.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -212,7 +226,9 @@ fn write_escaped(out: &mut String, s: &str) {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct JsonError {
+    /// Human-readable parse failure.
     pub msg: String,
+    /// Byte offset of the failure in the input.
     pub pos: usize,
 }
 

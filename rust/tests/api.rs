@@ -1,0 +1,357 @@
+//! Embedded-API and options-database tests: key validation, spelling
+//! round-trips, builder validation, output files, and CLI-vs-API parity.
+
+use madupite::api::{self, MdpBuilder, Solver};
+use madupite::ksp::precond::PcType;
+use madupite::ksp::KspType;
+use madupite::mdp::Objective;
+use madupite::solver::{EvalBackend, Method};
+use madupite::util::args::Options;
+use madupite::util::json::Json;
+use std::path::PathBuf;
+
+fn db(toks: &[&str]) -> Options {
+    Options::parse(toks.iter().map(|s| s.to_string()))
+}
+
+fn tmpfile(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("madupite_api_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{name}", std::process::id()))
+}
+
+fn two_state_builder() -> MdpBuilder {
+    MdpBuilder::from_fillers(
+        2,
+        2,
+        |s, a| match (s, a) {
+            (0, 0) => vec![(0, 1.0)],
+            (0, 1) => vec![(1, 1.0)],
+            _ => vec![(1, 1.0)],
+        },
+        |s, a| match (s, a) {
+            (0, 0) => 1.0,
+            (0, 1) => 1.5,
+            _ => 0.0,
+        },
+    )
+    .gamma(0.5)
+}
+
+/// Unknown keys are hard errors with a nearest-key suggestion in the
+/// embedded path — the `-ksp_tpye gmres` typo can no longer silently
+/// solve with the default method.
+#[test]
+fn api_unknown_key_is_hard_error() {
+    let mut solver = Solver::new(two_state_builder());
+    let err = solver.set_option("-ksp_tpye", "gmres").unwrap_err();
+    assert!(err.0.contains("unknown option"), "{err}");
+    assert!(err.0.contains("ksp_type"), "{err}");
+
+    // ...and through run_solve on a raw database too
+    let err = api::run_solve(&two_state_builder(), &db(&["-ksp_tpye", "gmres"])).unwrap_err();
+    assert!(err.0.contains("ksp_type"), "{err}");
+}
+
+/// The CLI rejects unknown keys before solving, with the suggestion.
+#[test]
+fn cli_unknown_key_is_hard_error() {
+    let exe = env!("CARGO_BIN_EXE_madupite");
+    let out = std::process::Command::new(exe)
+        .args([
+            "solve", "-model", "maze", "-rows", "8", "-cols", "8", "-ksp_tpye", "gmres",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown option"), "{stderr}");
+    assert!(stderr.contains("did you mean"), "{stderr}");
+    assert!(stderr.contains("ksp_type"), "{stderr}");
+}
+
+/// Every accepted spelling of -method/-ksp_type/-pc_type/-eval_backend/
+/// -objective round-trips to the right enum through the shared resolvers.
+#[test]
+fn option_spellings_round_trip() {
+    use api::options::{resolve_method, resolve_objective, resolve_solve_options};
+
+    assert_eq!(resolve_method(&db(&["-method", "vi"])).unwrap(), Method::Vi);
+    assert_eq!(
+        resolve_method(&db(&["-method", "mpi", "-sweeps", "12"])).unwrap(),
+        Method::Mpi { sweeps: 12 }
+    );
+    assert_eq!(
+        resolve_method(&db(&["-method", "pi"])).unwrap(),
+        Method::ExactPi
+    );
+
+    let ksp_cases: &[(&str, KspType)] = &[
+        ("richardson", KspType::Richardson { omega: 1.0 }),
+        ("gmres", KspType::Gmres { restart: 30 }),
+        ("bicgstab", KspType::BiCgStab),
+        ("bcgs", KspType::BiCgStab),
+        ("tfqmr", KspType::Tfqmr),
+        ("direct", KspType::Direct),
+        ("preonly", KspType::Direct),
+    ];
+    for (spelling, expect) in ksp_cases {
+        let m = resolve_method(&db(&["-method", "ipi", "-ksp_type", *spelling])).unwrap();
+        assert_eq!(
+            m,
+            Method::Ipi {
+                ksp: expect.clone(),
+                pc: PcType::None
+            },
+            "-ksp_type {spelling}"
+        );
+    }
+
+    for (spelling, expect) in [
+        ("none", PcType::None),
+        ("jacobi", PcType::Jacobi),
+        ("sor", PcType::Sor),
+    ] {
+        let m = resolve_method(&db(&["-pc_type", spelling])).unwrap();
+        assert!(
+            matches!(m, Method::Ipi { pc, .. } if pc == expect),
+            "-pc_type {spelling}"
+        );
+    }
+
+    for (spelling, expect) in [
+        ("matfree", EvalBackend::MatFree),
+        ("matrix-free", EvalBackend::MatFree),
+        ("mat_free", EvalBackend::MatFree),
+        ("assembled", EvalBackend::Assembled),
+        ("explicit", EvalBackend::Assembled),
+    ] {
+        let so = resolve_solve_options(&db(&["-eval_backend", spelling])).unwrap();
+        assert_eq!(so.eval_backend, expect, "-eval_backend {spelling}");
+    }
+
+    for (spelling, expect) in [
+        ("min", Objective::Min),
+        ("mincost", Objective::Min),
+        ("max", Objective::Max),
+        ("maxreward", Objective::Max),
+    ] {
+        let o = resolve_objective(&db(&["-objective", spelling]), None).unwrap();
+        assert_eq!(o, expect, "-objective {spelling}");
+    }
+}
+
+/// Conflicting and missing sources are typed errors, not panics.
+#[test]
+fn builder_source_validation() {
+    let err = Solver::new(MdpBuilder::new()).solve().unwrap_err();
+    assert!(err.0.contains("no model source"), "{err}");
+
+    let both = MdpBuilder::from_file("x.mdpb").fillers(1, 1, |_, _| vec![(0, 1.0)], |_, _| 0.0);
+    let err = Solver::new(both).solve().unwrap_err();
+    assert!(err.0.contains("conflicting"), "{err}");
+
+    let err = MdpBuilder::from_options(&db(&["-file", "a.mdpb", "-model", "maze"])).unwrap_err();
+    assert!(err.0.contains("conflicting"), "{err}");
+}
+
+/// Bad gamma surfaces as a validation error from both the builder and the
+/// options database.
+#[test]
+fn bad_gamma_is_error() {
+    let err = Solver::new(two_state_builder().gamma(1.5)).solve().unwrap_err();
+    assert!(err.0.contains("gamma"), "{err}");
+
+    let mut solver = Solver::new(two_state_builder());
+    solver.set_option("-gamma", "2.0").unwrap();
+    let err = solver.solve().unwrap_err();
+    assert!(err.0.contains("gamma"), "{err}");
+}
+
+/// Closure-built MDPs reject non-stochastic rows — serially and across
+/// ranks (collective agreement instead of deadlock).
+#[test]
+fn non_stochastic_closures_rejected() {
+    let bad = MdpBuilder::from_fillers(
+        24,
+        2,
+        |s, _| {
+            if s == 23 {
+                vec![(0, 0.25)] // sub-stochastic row on the last rank
+            } else {
+                vec![(s, 1.0)]
+            }
+        },
+        |_, _| 1.0,
+    )
+    .gamma(0.9);
+    let err = bad.build_serial().unwrap_err();
+    assert!(err.0.contains("sums to"), "{err}");
+    for ranks in ["1", "2", "4"] {
+        let mut solver = Solver::new(bad.clone());
+        solver.set_option("-ranks", ranks).unwrap();
+        let err = solver.solve().unwrap_err();
+        assert!(err.0.contains("sums to"), "ranks={ranks}: {err}");
+    }
+}
+
+/// The output surface round-trips: policy/cost/metadata files land on disk
+/// with the solved content.
+#[test]
+fn outputs_round_trip() {
+    let mut solver = Solver::new(two_state_builder());
+    solver.set_options_from_str("-method ipi -atol 1e-10").unwrap();
+    let outcome = solver.solve().unwrap();
+
+    let policy_path = tmpfile("policy.txt");
+    let cost_path = tmpfile("cost.txt");
+    let meta_path = tmpfile("meta.json");
+    outcome.write_policy(&policy_path).unwrap();
+    outcome.write_cost(&cost_path).unwrap();
+    outcome.write_json_metadata(&meta_path).unwrap();
+
+    let policy_text = std::fs::read_to_string(&policy_path).unwrap();
+    let actions: Vec<usize> = policy_text
+        .lines()
+        .filter(|l| !l.starts_with('#'))
+        .map(|l| l.parse().unwrap())
+        .collect();
+    assert_eq!(actions, outcome.policy());
+
+    let cost_text = std::fs::read_to_string(&cost_path).unwrap();
+    let values: Vec<f64> = cost_text
+        .lines()
+        .filter(|l| !l.starts_with('#'))
+        .map(|l| l.parse().unwrap())
+        .collect();
+    assert_eq!(values.len(), 2);
+    assert!((values[0] - 1.5).abs() < 1e-8);
+
+    let meta = Json::parse(&std::fs::read_to_string(&meta_path).unwrap()).unwrap();
+    assert_eq!(
+        meta.get("model").unwrap().get("n_states").unwrap().as_f64(),
+        Some(2.0)
+    );
+    assert_eq!(
+        meta.get("result").unwrap().get("converged").unwrap().as_bool(),
+        Some(true)
+    );
+}
+
+/// Drop the (non-deterministic) wall-time field from a metadata JSON.
+fn strip_wall_time(j: &mut Json) {
+    if let Some(Json::Obj(result)) = match j {
+        Json::Obj(m) => m.get_mut("result"),
+        _ => None,
+    } {
+        result.remove("wall_time_s");
+    }
+}
+
+/// The CLI and the embedded API resolve the same option set through the
+/// same table and produce identical solve metadata (modulo wall time) on a
+/// fixed maze — the no-drift guarantee of the shared `run_solve` path.
+#[test]
+fn cli_api_parity_on_fixed_maze() {
+    let args = [
+        "-model", "maze", "-rows", "12", "-cols", "12", "-seed", "5", "-gamma", "0.95",
+        "-method", "ipi", "-ksp_type", "gmres", "-pc_type", "jacobi", "-atol", "1e-8",
+        "-ranks", "2",
+    ];
+
+    // CLI side: run the real binary.
+    let cli_meta_path = tmpfile("cli_meta.json");
+    let cli_policy_path = tmpfile("cli_policy.txt");
+    let exe = env!("CARGO_BIN_EXE_madupite");
+    let out = std::process::Command::new(exe)
+        .arg("solve")
+        .args(args)
+        .args([
+            "-write_json_metadata",
+            cli_meta_path.to_str().unwrap(),
+            "-write_policy",
+            cli_policy_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // API side: same option set through the embedded path.
+    let database = db(&args);
+    let builder = MdpBuilder::from_options(&database).unwrap();
+    let outcome = api::run_solve(&builder, &database).unwrap();
+    let api_meta_path = tmpfile("api_meta.json");
+    let api_policy_path = tmpfile("api_policy.txt");
+    outcome.write_json_metadata(&api_meta_path).unwrap();
+    outcome.write_policy(&api_policy_path).unwrap();
+
+    // Policies must be byte-identical; metadata identical modulo wall time.
+    let cli_policy = std::fs::read_to_string(&cli_policy_path).unwrap();
+    let api_policy = std::fs::read_to_string(&api_policy_path).unwrap();
+    assert_eq!(cli_policy, api_policy);
+
+    let mut cli_meta = Json::parse(&std::fs::read_to_string(&cli_meta_path).unwrap()).unwrap();
+    let mut api_meta = Json::parse(&std::fs::read_to_string(&api_meta_path).unwrap()).unwrap();
+    strip_wall_time(&mut cli_meta);
+    strip_wall_time(&mut api_meta);
+    assert_eq!(cli_meta.to_string(), api_meta.to_string());
+}
+
+/// GMRES restart and Richardson relaxation are reachable from the database.
+#[test]
+fn ksp_sub_options_resolve() {
+    use api::options::resolve_method;
+    assert_eq!(
+        resolve_method(&db(&["-ksp_type", "gmres", "-ksp_gmres_restart", "7"])).unwrap(),
+        Method::Ipi {
+            ksp: KspType::Gmres { restart: 7 },
+            pc: PcType::None
+        }
+    );
+    assert_eq!(
+        resolve_method(&db(&["-ksp_type", "richardson", "-ksp_richardson_scale", "0.5"]))
+            .unwrap(),
+        Method::Ipi {
+            ksp: KspType::Richardson { omega: 0.5 },
+            pc: PcType::None
+        }
+    );
+}
+
+/// A distributed closure-defined solve through the options database
+/// matches the serial solve of the same model (the api_tour setup).
+#[test]
+fn closure_model_multi_rank_matches_serial() {
+    let builder = || {
+        MdpBuilder::from_fillers(
+            60,
+            2,
+            |s, a| {
+                let n = 60usize;
+                let ps = [0.5, 0.85][a];
+                let up = if s + 1 < n { 0.6 * (1.0 - ps) } else { 0.0 };
+                let down = if s > 0 { ps * 0.4 } else { 0.0 };
+                let mut row = vec![(s, 1.0 - up - down)];
+                if s > 0 {
+                    row.push((s - 1, down));
+                }
+                if s + 1 < n {
+                    row.push((s + 1, up));
+                }
+                row.retain(|&(_, p)| p > 0.0);
+                row
+            },
+            |s, a| s as f64 * 0.05 + if a == 1 { 1.0 } else { 0.2 },
+        )
+        .gamma(0.99)
+    };
+    let serial = Solver::new(builder()).solve().unwrap();
+    let mut dist = Solver::new(builder());
+    dist.set_options_from_str("-ranks 4 -method ipi -ksp_type bicgstab")
+        .unwrap();
+    let dist = dist.solve().unwrap();
+    assert!(serial.result.converged && dist.result.converged);
+    for (a, b) in serial.value().iter().zip(dist.value()) {
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+}
