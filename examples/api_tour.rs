@@ -1,5 +1,6 @@
-//! API tour: define an MDP from closures, solve it on 4 ranks through the
-//! options database, and write the madupite-style output files
+//! API tour: define an MDP from closures, solve it hybrid-parallel on
+//! 4 ranks × 2 threads per rank through the options database, and write
+//! the madupite-style output files
 //! (`write_policy` / `write_cost` / `write_json_metadata`).
 //!
 //! The model is a service-queue admission problem defined entirely inline —
@@ -47,18 +48,22 @@ fn main() -> Result<(), madupite::api::ApiError> {
     let builder = MdpBuilder::from_fillers(n_states, 2, prob, cost).gamma(0.995);
     let mut solver = Solver::new(builder);
     solver.set_options_from_str(
-        "-method ipi -ksp_type gmres -pc_type jacobi -alpha 1e-4 -atol 1e-9 -ranks 4",
+        "-method ipi -ksp_type gmres -pc_type jacobi -alpha 1e-4 -atol 1e-9 \
+         -ranks 4 -threads 2",
     )?;
     solver.set_options_from_env()?; // MADUPITE_OPTIONS supplies low-priority defaults
 
-    // 3. Solve on 4 SPMD ranks.
+    // 3. Solve hybrid-parallel on 4 SPMD ranks × 2 worker threads each
+    // (the thread dimension changes wall time only — results are bitwise
+    // identical for any -threads, see DESIGN.md §11).
     let outcome = solver.solve()?;
     println!(
-        "solved {} states x {} actions on {} ranks: method={} converged={} outer={} \
-         spmvs={} residual={:.2e} time={:.3}s",
+        "solved {} states x {} actions on {} ranks x {} threads: method={} converged={} \
+         outer={} spmvs={} residual={:.2e} time={:.3}s",
         outcome.n_states,
         outcome.n_actions,
         outcome.ranks,
+        outcome.threads,
         outcome.options.method.name(),
         outcome.result.converged,
         outcome.result.outer_iterations,

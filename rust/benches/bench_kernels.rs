@@ -4,18 +4,28 @@
 //! - CSR SpMV at several sizes → effective GB/s against the memory-traffic
 //!   roofline estimate (8B value + 8B col index per nnz + x/y traffic).
 //! - Stacked Bellman backup (the per-outer-iteration unit).
+//! - Both of the above across an intra-rank **thread dimension**
+//!   (`util::par`, DESIGN.md §11): `t=1` is the serial baseline, higher
+//!   `t` must show near-linear speedup on a multi-core box while staying
+//!   bitwise identical (asserted via checksums).
 //! - Policy operator `I − γ P_π`: fused matrix-free application off the
 //!   stacked kernel vs assembly + apply of an explicit `P_π` CSR — the
 //!   per-policy-change setup cost and memory the `MatFree` backend removes.
 //! - PJRT artifact execution (Pallas kernel via HLO) vs native dense Rust:
 //!   dispatch overhead + crossover block size, and artifact compile time.
+//!
+//! Environment knobs: `MADUPITE_BENCH_THREADS` (comma-separated thread
+//! counts, default `1,2,4`) and `MADUPITE_BENCH_MAX_N` (skip workloads
+//! larger than this state count — CI's perf-smoke uses it to bound wall
+//! time), on top of benchkit's `MADUPITE_BENCH_SAMPLES`/`_BUDGET_MS`.
 
 use madupite::comm::World;
 use madupite::ksp::{Apply, LinOp};
 use madupite::mdp::{DistMdp, MatFreePolicyOp};
 use madupite::models::{garnet::GarnetSpec, ModelGenerator};
 use madupite::runtime::{bellman_dense_native, random_block, DenseBellman, Engine};
-use madupite::util::benchkit::{fmt_time, Suite};
+use madupite::util::benchkit::{fmt_time, thread_counts, Suite};
+use madupite::util::par;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -24,113 +34,174 @@ fn random_mdp_bench(seed: u64, n: usize, m: usize, gamma: f64, b: usize) -> madu
     GarnetSpec::new(n, m, b, seed).build_serial(gamma)
 }
 
+/// Bit-exact checksum of a whole vector (rotate-xor of every element's
+/// bits), so the determinism gate catches divergence in *any* chunk, not
+/// just the first element.
+fn bits_checksum(xs: &[f64]) -> u64 {
+    xs.iter()
+        .fold(0u64, |acc, v| acc.rotate_left(1) ^ v.to_bits())
+}
+
+/// Workload size cap (`MADUPITE_BENCH_MAX_N`) for time-bounded CI runs.
+fn max_n() -> usize {
+    std::env::var("MADUPITE_BENCH_MAX_N")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(usize::MAX)
+}
+
 fn main() {
     let mut suite = Suite::new("E6 kernels");
+    let threads = thread_counts(&[1, 2, 4]);
+    let max_n = max_n();
 
-    // --- CSR SpMV roofline -------------------------------------------------
+    // --- CSR SpMV roofline, threads × size ---------------------------------
     for n in [10_000usize, 100_000, 1_000_000] {
+        if n > max_n {
+            println!("spmv/n={n}: skipped (MADUPITE_BENCH_MAX_N={max_n})");
+            continue;
+        }
         let mdp = random_mdp_bench(7, n, 4, 0.99, 5);
         let t = mdp.transitions();
         let x = vec![1.0f64; n];
         let mut y = vec![0.0f64; t.nrows()];
         let nnz = t.nnz();
-        suite.case(&format!("spmv/n={n}"), || {
-            t.spmv(&x, &mut y);
-            let bytes = (nnz * 16 + (t.nrows() + n) * 8) as f64;
-            vec![
-                ("nnz".to_string(), nnz as f64),
-                ("traffic_MiB".to_string(), bytes / (1 << 20) as f64),
-            ]
-        });
+        let mut checksum_t1: Option<u64> = None;
+        for &nt in &threads {
+            par::set_threads(nt);
+            suite.case(&format!("spmv/n={n}/t={nt}"), || {
+                t.spmv(&x, &mut y);
+                let bytes = (nnz * 16 + (t.nrows() + n) * 8) as f64;
+                vec![
+                    ("threads".to_string(), nt as f64),
+                    ("nnz".to_string(), nnz as f64),
+                    ("traffic_MiB".to_string(), bytes / (1 << 20) as f64),
+                ]
+            });
+            // determinism gate: identical bits (whole vector) at every
+            // thread count
+            let bits = bits_checksum(&y);
+            match checksum_t1 {
+                None => checksum_t1 = Some(bits),
+                Some(b) => assert_eq!(b, bits, "spmv not thread-count independent"),
+            }
+        }
     }
 
-    // --- full Bellman backup (serial world) --------------------------------
+    // --- full Bellman backup (serial world), threads × size ----------------
     for n in [100_000usize, 1_000_000] {
+        if n > max_n {
+            println!("bellman_backup/n={n}: skipped (MADUPITE_BENCH_MAX_N={max_n})");
+            continue;
+        }
         let mdp = random_mdp_bench(9, n, 4, 0.99, 5);
-        suite.case(&format!("bellman_backup/n={n}"), || {
-            let v = vec![0.0f64; n];
-            let (tv, _) = mdp.bellman(&v);
-            vec![("checksum".to_string(), tv[0])]
-        });
+        let mut checksum_t1: Option<u64> = None;
+        for &nt in &threads {
+            par::set_threads(nt);
+            let mut last = 0u64;
+            suite.case(&format!("bellman_backup/n={n}/t={nt}"), || {
+                let v = vec![0.0f64; n];
+                let (tv, _) = mdp.bellman(&v);
+                last = bits_checksum(&tv);
+                vec![
+                    ("threads".to_string(), nt as f64),
+                    ("checksum".to_string(), tv[0]),
+                ]
+            });
+            match checksum_t1 {
+                None => checksum_t1 = Some(last),
+                Some(b) => assert_eq!(b, last, "bellman not thread-count independent"),
+            }
+        }
     }
+    par::set_threads(1);
 
     // --- policy operator: fused matrix-free vs assembled P_π ---------------
     // Setup = what a policy change costs before the first inner iteration;
     // apply = steady-state per-iteration cost of y ← (I − γ P_π) x.
     for n in [100_000usize] {
+        if n > max_n {
+            println!("policy_op/n={n}: skipped (MADUPITE_BENCH_MAX_N={max_n})");
+            continue;
+        }
         let mdp = Arc::new(random_mdp_bench(21, n, 4, 0.99, 5));
-        let mdp2 = Arc::clone(&mdp);
-        suite.case(&format!("policy_op/n={n}"), move || {
-            let mdp3 = Arc::clone(&mdp2);
-            let mut out = World::run(1, move |comm| {
-                let d = DistMdp::from_serial(&comm, &mdp3);
-                let nl = d.local_states();
-                let policy: Vec<usize> = (0..nl).map(|s| s % d.n_actions()).collect();
-                let x: Vec<f64> = (0..nl).map(|i| (i as f64 * 0.01).sin()).collect();
-                let mut y = vec![0.0; nl];
+        for &nt in &threads {
+            par::set_threads(nt);
+            let mdp2 = Arc::clone(&mdp);
+            suite.case(&format!("policy_op/n={n}/t={nt}"), move || {
+                let mdp3 = Arc::clone(&mdp2);
+                let mut out = World::run(1, move |comm| {
+                    let d = DistMdp::from_serial(&comm, &mdp3);
+                    let nl = d.local_states();
+                    let policy: Vec<usize> = (0..nl).map(|s| s % d.n_actions()).collect();
+                    let x: Vec<f64> = (0..nl).map(|i| (i as f64 * 0.01).sin()).collect();
+                    let mut y = vec![0.0; nl];
 
-                // assembled: ghost plan + CSR copy, then apply
-                let t0 = Instant::now();
-                let (p_pi, _g) = d.policy_system(&comm, &policy);
-                let assembled_setup = t0.elapsed().as_secs_f64();
-                let asm = LinOp::new(&p_pi, d.gamma());
-                let mut buf = asm.make_buffer();
-                let t0 = Instant::now();
-                for _ in 0..10 {
-                    asm.apply(&comm, &x, &mut y, &mut buf);
-                }
-                let assembled_apply = t0.elapsed().as_secs_f64() / 10.0;
-                let assembled_bytes = p_pi.local().storage_bytes();
-                let y_assembled = y.clone();
+                    // assembled: ghost plan + CSR copy, then apply
+                    let t0 = Instant::now();
+                    let (p_pi, _g) = d.policy_system(&comm, &policy);
+                    let assembled_setup = t0.elapsed().as_secs_f64();
+                    let asm = LinOp::new(&p_pi, d.gamma());
+                    let mut buf = asm.make_buffer();
+                    let t0 = Instant::now();
+                    for _ in 0..10 {
+                        asm.apply(&comm, &x, &mut y, &mut buf);
+                    }
+                    let assembled_apply = t0.elapsed().as_secs_f64() / 10.0;
+                    let assembled_bytes = p_pi.local().storage_bytes();
+                    let y_assembled = y.clone();
 
-                // matrix-free: O(1) setup, apply off the stacked kernel
-                let t0 = Instant::now();
-                let mf = MatFreePolicyOp::new(&d, &policy);
-                let _g = d.policy_costs(&policy);
-                let matfree_setup = t0.elapsed().as_secs_f64();
-                let mut buf = mf.make_buffer();
-                let t0 = Instant::now();
-                for _ in 0..10 {
-                    mf.apply(&comm, &x, &mut y, &mut buf);
-                }
-                let matfree_apply = t0.elapsed().as_secs_f64() / 10.0;
-                let max_diff = y
-                    .iter()
-                    .zip(&y_assembled)
-                    .map(|(a, b)| (a - b).abs())
-                    .fold(0.0f64, f64::max);
-                assert!(
-                    max_diff < 1e-12,
-                    "matfree and assembled applies diverged: max|Δ| = {max_diff}"
-                );
-                if matfree_setup >= assembled_setup {
-                    // timing noise, not correctness — report, don't abort
-                    eprintln!(
-                        "WARNING: matrix-free setup {matfree_setup}s not below \
-                         assembled {assembled_setup}s (noisy sample?)"
+                    // matrix-free: O(1) setup, apply off the stacked kernel
+                    let t0 = Instant::now();
+                    let mf = MatFreePolicyOp::new(&d, &policy);
+                    let _g = d.policy_costs(&policy);
+                    let matfree_setup = t0.elapsed().as_secs_f64();
+                    let mut buf = mf.make_buffer();
+                    let t0 = Instant::now();
+                    for _ in 0..10 {
+                        mf.apply(&comm, &x, &mut y, &mut buf);
+                    }
+                    let matfree_apply = t0.elapsed().as_secs_f64() / 10.0;
+                    let max_diff = y
+                        .iter()
+                        .zip(&y_assembled)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f64, f64::max);
+                    assert!(
+                        max_diff < 1e-12,
+                        "matfree and assembled applies diverged: max|Δ| = {max_diff}"
                     );
-                }
-                (
-                    assembled_setup,
-                    matfree_setup,
-                    assembled_apply,
-                    matfree_apply,
-                    assembled_bytes,
-                )
+                    if matfree_setup >= assembled_setup {
+                        // timing noise, not correctness — report, don't abort
+                        eprintln!(
+                            "WARNING: matrix-free setup {matfree_setup}s not below \
+                             assembled {assembled_setup}s (noisy sample?)"
+                        );
+                    }
+                    (
+                        assembled_setup,
+                        matfree_setup,
+                        assembled_apply,
+                        matfree_apply,
+                        assembled_bytes,
+                    )
+                });
+                let (asm_setup, mf_setup, asm_apply, mf_apply, p_pi_bytes) = out.swap_remove(0);
+                vec![
+                    ("threads".to_string(), nt as f64),
+                    ("asm_setup_ms".to_string(), asm_setup * 1e3),
+                    ("mf_setup_ms".to_string(), mf_setup * 1e3),
+                    ("asm_apply_ms".to_string(), asm_apply * 1e3),
+                    ("mf_apply_ms".to_string(), mf_apply * 1e3),
+                    (
+                        "p_pi_MiB".to_string(),
+                        p_pi_bytes as f64 / (1 << 20) as f64,
+                    ),
+                ]
             });
-            let (asm_setup, mf_setup, asm_apply, mf_apply, p_pi_bytes) = out.swap_remove(0);
-            vec![
-                ("asm_setup_ms".to_string(), asm_setup * 1e3),
-                ("mf_setup_ms".to_string(), mf_setup * 1e3),
-                ("asm_apply_ms".to_string(), asm_apply * 1e3),
-                ("mf_apply_ms".to_string(), mf_apply * 1e3),
-                (
-                    "p_pi_MiB".to_string(),
-                    p_pi_bytes as f64 / (1 << 20) as f64,
-                ),
-            ]
-        });
+        }
     }
+    par::set_threads(1);
 
     // --- PJRT dense path vs native rust ------------------------------------
     match Engine::load("artifacts") {

@@ -1,17 +1,25 @@
-//! E2 — Strong scaling (DESIGN.md §6): solve a fixed large maze on
-//! worlds of 1/2/4/8 simulated ranks. On this single-CPU container the
-//! meaningful scaling observables are **communication volume**, message
-//! counts and per-rank byte balance (wall time is reported for
-//! completeness but ranks share one core — see DESIGN.md §3).
+//! E2 — Strong scaling (DESIGN.md §6): solve a fixed large maze on a
+//! hybrid `ranks × threads` grid — worlds of 1/2/4/8 simulated ranks, each
+//! rank running its kernels on 1 or more intra-rank worker threads
+//! (`util::par`, DESIGN.md §11). On this single-CPU container the
+//! meaningful rank-scaling observables are **communication volume**,
+//! message counts and per-rank byte balance; the thread dimension is the
+//! one that actually buys wall time on a multi-core box (wall time is
+//! reported for completeness — ranks share cores, see DESIGN.md §3).
 //!
 //! Expected shape (claim C3): per-rank memory and compute shrink ~1/R;
-//! total comm volume grows sub-linearly (ghost boundary + reductions),
-//! and the per-rank balance stays near 1.
+//! total comm volume grows sub-linearly (ghost boundary + reductions), the
+//! per-rank balance stays near 1, and — thread-count independence — every
+//! `ranks=R` row reports the identical outer/spmv counts for every `t`.
+//!
+//! Environment knobs: `MADUPITE_SCALING_ROWS` (maze side, default 512) and
+//! `MADUPITE_BENCH_THREADS` (comma-separated thread counts, default 1,2).
 
 use madupite::comm::World;
 use madupite::models::{gridworld::GridSpec, ModelGenerator};
 use madupite::solver::{gather_result, solve_dist, Method, SolveOptions};
-use madupite::util::benchkit::Suite;
+use madupite::util::benchkit::{thread_counts, Suite};
+use madupite::util::par;
 use std::sync::Arc;
 
 fn main() {
@@ -19,50 +27,56 @@ fn main() {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(512);
+    let threads = thread_counts(&[1, 2]);
     let spec = Arc::new(GridSpec::maze(rows, rows, 2024));
     let n = rows * rows;
     let mut suite = Suite::new("E2 strong scaling");
     println!("workload: {rows}x{rows} maze = {n} states, iPI(GMRES), gamma=0.9");
 
     for ranks in [1usize, 2, 4, 8] {
-        let spec2 = Arc::clone(&spec);
-        suite.case(&format!("ranks={ranks}"), move || {
-            let spec3 = Arc::clone(&spec2);
-            let opts = SolveOptions {
-                method: Method::ipi_gmres(),
-                atol: 1e-8,
-                alpha: 1e-2,
-                max_outer: 100_000,
-                ..Default::default()
-            };
-            let mut out = World::run(ranks, move |comm| {
-                let mdp = spec3.build_dist(&comm, 0.9);
-                let local_bytes = mdp.storage_bytes();
-                let local = solve_dist(&comm, &mdp, &opts);
-                let snap = comm.stats().snapshot();
-                let r = gather_result(&comm, local);
-                (r, snap, local_bytes)
+        for &t in &threads {
+            par::set_threads(t);
+            let spec2 = Arc::clone(&spec);
+            suite.case(&format!("ranks={ranks}/t={t}"), move || {
+                let spec3 = Arc::clone(&spec2);
+                let opts = SolveOptions {
+                    method: Method::ipi_gmres(),
+                    atol: 1e-8,
+                    alpha: 1e-2,
+                    max_outer: 100_000,
+                    ..Default::default()
+                };
+                let mut out = World::run(ranks, move |comm| {
+                    let mdp = spec3.build_dist(&comm, 0.9);
+                    let local_bytes = mdp.storage_bytes();
+                    let local = solve_dist(&comm, &mdp, &opts);
+                    let snap = comm.stats().snapshot();
+                    let r = gather_result(&comm, local);
+                    (r, snap, local_bytes)
+                });
+                let (r, snap, local_bytes) = out.swap_remove(0);
+                assert!(r.converged);
+                vec![
+                    ("cores".to_string(), (r.ranks * r.threads) as f64),
+                    ("outer".to_string(), r.outer_iterations as f64),
+                    ("spmvs".to_string(), r.total_spmvs as f64),
+                    (
+                        "comm_MiB".to_string(),
+                        snap.total_bytes() as f64 / (1 << 20) as f64,
+                    ),
+                    ("msgs".to_string(), snap.total_msgs() as f64),
+                    (
+                        "balance".to_string(),
+                        if ranks > 1 { snap.imbalance() } else { 1.0 },
+                    ),
+                    (
+                        "rank0_MiB".to_string(),
+                        local_bytes as f64 / (1 << 20) as f64,
+                    ),
+                ]
             });
-            let (r, snap, local_bytes) = out.swap_remove(0);
-            assert!(r.converged);
-            vec![
-                ("outer".to_string(), r.outer_iterations as f64),
-                ("spmvs".to_string(), r.total_spmvs as f64),
-                (
-                    "comm_MiB".to_string(),
-                    snap.total_bytes() as f64 / (1 << 20) as f64,
-                ),
-                ("msgs".to_string(), snap.total_msgs() as f64),
-                (
-                    "balance".to_string(),
-                    if ranks > 1 { snap.imbalance() } else { 1.0 },
-                ),
-                (
-                    "rank0_MiB".to_string(),
-                    local_bytes as f64 / (1 << 20) as f64,
-                ),
-            ]
-        });
+        }
     }
+    par::set_threads(1);
     suite.finish();
 }

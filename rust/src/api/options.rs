@@ -137,6 +137,13 @@ pub const OPTION_TABLE: &[OptionSpec] = &[
         scope: OptionScope::Common,
     },
     OptionSpec {
+        key: "threads",
+        value: "<n>",
+        help: "intra-rank worker threads per rank (hybrid ranks x threads; \
+                env MADUPITE_THREADS, default 1; results are thread-count independent)",
+        scope: OptionScope::Common,
+    },
+    OptionSpec {
         key: "verbose",
         value: "",
         help: "per-iteration residual logging on the root rank",
@@ -422,6 +429,34 @@ pub fn resolve_solve_options(db: &Options) -> Result<SolveOptions, ApiError> {
     })
 }
 
+/// Resolve `-threads`, the intra-rank worker thread count of the hybrid
+/// `ranks × threads` execution (DESIGN.md §11): the database wins, then a
+/// positive-integer `MADUPITE_THREADS` environment variable, then 1
+/// (fully serial execution). Zero and negative/non-integer values are
+/// typed errors: the thread count can only change speed, never results
+/// (`util::par`'s fixed chunk grid), but silently falling back would hide
+/// a misconfigured run.
+pub fn resolve_threads(db: &Options) -> Result<usize, ApiError> {
+    if db.has("threads") {
+        let t = db.get_usize("threads", 1)?;
+        if t == 0 {
+            return Err(ApiError(
+                "-threads must be >= 1 (a rank cannot run on 0 threads)".into(),
+            ));
+        }
+        return Ok(t);
+    }
+    match std::env::var("MADUPITE_THREADS") {
+        Ok(s) => match s.trim().parse::<usize>() {
+            Ok(t) if t >= 1 => Ok(t),
+            _ => Err(ApiError(format!(
+                "MADUPITE_THREADS: expected a positive integer, got '{s}'"
+            ))),
+        },
+        Err(_) => Ok(1),
+    }
+}
+
 /// Resolve the discount factor: `-gamma` in the database wins, then the
 /// builder-level `fallback`, then the crate default 0.99. Validated to
 /// [0, 1) — a "bad gamma" is an error here, never a panic downstream.
@@ -559,6 +594,24 @@ mod tests {
         );
         let err = resolve_objective(&db(&["-objective", "mni"]), None).unwrap_err();
         assert!(err.0.contains("min"), "{err}");
+    }
+
+    #[test]
+    fn threads_resolution_and_validation() {
+        // NOTE: no env manipulation here — tests run in parallel and
+        // MADUPITE_THREADS is process-global; the env path is covered by
+        // the CI thread-matrix leg.
+        assert_eq!(resolve_threads(&db(&["-threads", "4"])).unwrap(), 4);
+        assert_eq!(resolve_threads(&db(&["-threads", "1"])).unwrap(), 1);
+        let err = resolve_threads(&db(&["-threads", "0"])).unwrap_err();
+        assert!(err.0.contains(">= 1"), "{err}");
+        let err = resolve_threads(&db(&["-threads", "-2"])).unwrap_err();
+        assert!(err.0.contains("expected integer"), "{err}");
+        let err = resolve_threads(&db(&["-threads", "two"])).unwrap_err();
+        assert!(err.0.contains("expected integer"), "{err}");
+        // typo'd key keeps the did-you-mean behavior
+        let err = check_key("thread").unwrap_err();
+        assert!(err.0.contains("threads"), "{err}");
     }
 
     #[test]

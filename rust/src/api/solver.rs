@@ -192,6 +192,11 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
     if ranks == 0 {
         return Err(ApiError("-ranks must be >= 1".into()));
     }
+    // Hybrid ranks × threads: install the intra-rank worker-thread count
+    // before the world spawns, so every rank's lazily created pool (see
+    // `util::par`) picks it up. Results are thread-count independent.
+    let threads = options::resolve_threads(db)?;
+    crate::util::par::set_threads(threads);
     let source = builder.resolved_source()?.clone();
 
     // gamma/objective: for model/closure sources they resolve from the
@@ -269,6 +274,7 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
         objective,
         options: solve_opts,
         ranks,
+        threads,
         result,
     };
     // The output keys are part of the shared surface: whichever front end
@@ -311,6 +317,9 @@ pub struct SolveOutcome {
     pub options: SolveOptions,
     /// World size the solve ran on.
     pub ranks: usize,
+    /// Intra-rank worker threads per rank (`-threads`) — the second
+    /// dimension of the hybrid `ranks × threads` execution.
+    pub threads: usize,
     /// The gathered global solve result (value, policy, trace).
     pub result: SolveResult,
 }
@@ -346,6 +355,7 @@ impl SolveOutcome {
                     ("method", Json::str(self.options.method.name())),
                     ("eval_backend", Json::str(self.options.eval_backend.name())),
                     ("ranks", Json::int(self.ranks as i64)),
+                    ("threads", Json::int(self.threads as i64)),
                     ("atol", Json::num(self.options.atol)),
                     ("alpha", Json::num(self.options.alpha)),
                     ("adaptive_forcing", Json::Bool(self.options.adaptive_forcing)),

@@ -213,9 +213,15 @@ impl Apply for DenseOp<'_> {
         let n = self.p.nrows();
         assert_eq!(x.len(), n);
         assert_eq!(y.len(), n);
-        for (r, yr) in y.iter_mut().enumerate() {
-            *yr = x[r] - self.gamma * crate::linalg::dot(self.p.row(r), x);
-        }
+        // Row-parallel over the rank's worker pool; the per-row dot nests
+        // inside the region and therefore runs inline over the same fixed
+        // chunk grid — bitwise identical for any thread count.
+        crate::util::par::par_for_rows(y, |offset, chunk| {
+            for (i, yr) in chunk.iter_mut().enumerate() {
+                let r = offset + i;
+                *yr = x[r] - self.gamma * crate::linalg::dot(self.p.row(r), x);
+            }
+        });
     }
 
     fn diag(&self, out: &mut [f64]) {

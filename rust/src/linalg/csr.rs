@@ -187,23 +187,29 @@ impl Csr {
 
     /// y ← A·x
     ///
-    /// Hot path of every solver iteration. The gather `x[col]` uses an
-    /// unchecked read: column indices are validated `< ncols` by every
-    /// constructor (`from_parts` rejects violations, the builders assert),
-    /// and `values_mut` cannot alter indices — see EXPERIMENTS.md §Perf.
+    /// Hot path of every solver iteration. Rows are parallelized over the
+    /// rank's worker pool ([`crate::util::par`]); each row's accumulation
+    /// stays serial, so the result is bitwise identical for every thread
+    /// count. The gather `x[col]` uses an unchecked read: column indices
+    /// are validated `< ncols` by every constructor (`from_parts` rejects
+    /// violations, the builders assert), and `values_mut` cannot alter
+    /// indices — see EXPERIMENTS.md §Perf.
     pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.ncols, "spmv: x len");
         assert_eq!(y.len(), self.nrows, "spmv: y len");
-        for (r, yr) in y.iter_mut().enumerate() {
-            let (a, b) = (self.indptr[r], self.indptr[r + 1]);
-            let mut acc = 0.0;
-            for (&c, &v) in self.indices[a..b].iter().zip(&self.values[a..b]) {
-                debug_assert!(c < self.ncols);
-                // SAFETY: c < ncols == x.len(), enforced at construction.
-                acc += v * unsafe { *x.get_unchecked(c) };
+        crate::util::par::par_for_rows(y, |offset, chunk| {
+            for (i, yr) in chunk.iter_mut().enumerate() {
+                let r = offset + i;
+                let (a, b) = (self.indptr[r], self.indptr[r + 1]);
+                let mut acc = 0.0;
+                for (&c, &v) in self.indices[a..b].iter().zip(&self.values[a..b]) {
+                    debug_assert!(c < self.ncols);
+                    // SAFETY: c < ncols == x.len(), enforced at construction.
+                    acc += v * unsafe { *x.get_unchecked(c) };
+                }
+                *yr = acc;
             }
-            *yr = acc;
-        }
+        });
     }
 
     /// y ← A·x (allocating convenience).
@@ -213,18 +219,22 @@ impl Csr {
         y
     }
 
-    /// y ← α·A·x + β·y
+    /// y ← α·A·x + β·y (row-parallel like [`Self::spmv`], same bitwise
+    /// thread-count independence).
     pub fn spmv_acc(&self, alpha: f64, x: &[f64], beta: f64, y: &mut [f64]) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
-        for r in 0..self.nrows {
-            let (a, b) = (self.indptr[r], self.indptr[r + 1]);
-            let mut acc = 0.0;
-            for k in a..b {
-                acc += self.values[k] * x[self.indices[k]];
+        crate::util::par::par_for_rows(y, |offset, chunk| {
+            for (i, yr) in chunk.iter_mut().enumerate() {
+                let r = offset + i;
+                let (a, b) = (self.indptr[r], self.indptr[r + 1]);
+                let mut acc = 0.0;
+                for k in a..b {
+                    acc += self.values[k] * x[self.indices[k]];
+                }
+                *yr = alpha * acc + beta * *yr;
             }
-            y[r] = alpha * acc + beta * y[r];
-        }
+        });
     }
 
     /// Extract a sub-matrix of the given rows (keeps all columns).

@@ -14,9 +14,19 @@ pub use csr::Csr;
 pub use dense::DenseMat;
 pub use dist::{DistCsr, Partition};
 
+use crate::util::par;
+
 /// ∞-norm of a slice.
+///
+/// Parallel over the fixed chunk grid for large slices; `max` is exact, so
+/// the result is identical to the serial fold for every thread count.
 pub fn norm_inf(xs: &[f64]) -> f64 {
-    xs.iter().fold(0.0, |m, &x| m.max(x.abs()))
+    par::par_reduce(
+        xs.len(),
+        |lo, hi| xs[lo..hi].iter().fold(0.0f64, |m, &x| m.max(x.abs())),
+        f64::max,
+    )
+    .unwrap_or(0.0)
 }
 
 /// 2-norm of a slice.
@@ -25,32 +35,58 @@ pub fn norm2(xs: &[f64]) -> f64 {
 }
 
 /// Dot product.
+///
+/// Large slices reduce over the fixed chunk grid of [`crate::util::par`]
+/// (per-chunk serial sums combined in chunk order), so the value is
+/// **bitwise identical for every thread count** — the KSP inner products
+/// this feeds stay deterministic under `-threads`.
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
+    par::par_reduce(
+        a.len(),
+        |lo, hi| dot_serial(&a[lo..hi], &b[lo..hi]),
+        |x, y| x + y,
+    )
+    .unwrap_or(0.0)
+}
+
+/// Plain left-to-right dot product (one grid chunk's worth of work).
+fn dot_serial(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
 /// y ← a·x + y
+///
+/// Elementwise, so parallel chunks are bitwise identical to the serial
+/// loop for every thread count.
 pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += a * xi;
-    }
+    par::par_for_rows(y, |offset, chunk| {
+        let xs = &x[offset..offset + chunk.len()];
+        for (yi, xi) in chunk.iter_mut().zip(xs) {
+            *yi += a * xi;
+        }
+    });
 }
 
 /// y ← x + b·y  (BLAS `aypx`)
 pub fn aypx(b: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi = xi + b * *yi;
-    }
+    par::par_for_rows(y, |offset, chunk| {
+        let xs = &x[offset..offset + chunk.len()];
+        for (yi, xi) in chunk.iter_mut().zip(xs) {
+            *yi = xi + b * *yi;
+        }
+    });
 }
 
 /// x ← a·x
 pub fn scale(a: f64, x: &mut [f64]) {
-    for xi in x {
-        *xi *= a;
-    }
+    par::par_for_rows(x, |_offset, chunk| {
+        for xi in chunk {
+            *xi *= a;
+        }
+    });
 }
 
 #[cfg(test)]

@@ -183,10 +183,12 @@ fn cmd_solve(opts: &Options) -> Result<(), String> {
     let outcome = api::run_solve(&builder, opts).map_err(err_str)?;
 
     println!(
-        "method={} backend={} states={} converged={} outer={} spmvs={} residual={:.3e} \
-         err_bound={:.3e} time={:.3}s comm={}B",
+        "method={} backend={} ranks={} threads={} states={} converged={} outer={} spmvs={} \
+         residual={:.3e} err_bound={:.3e} time={:.3}s comm={}B",
         outcome.options.method.name(),
         outcome.options.eval_backend.name(),
+        outcome.ranks,
+        outcome.threads,
         outcome.n_states,
         outcome.result.converged,
         outcome.result.outer_iterations,

@@ -80,14 +80,19 @@ impl Apply for MatFreePolicyOp<'_> {
         let local = trans.local();
         let xb = buf.x();
         let gamma = self.mdp.gamma();
-        for (s, ys) in y.iter_mut().enumerate() {
-            let (cols, vals) = local.row(self.row_of(s));
-            let mut px = 0.0;
-            for (&c, &v) in cols.iter().zip(vals) {
-                px += v * xb[c];
+        // Row-parallel over the rank's worker pool; each selected row's
+        // accumulation is serial → bitwise identical for any thread count.
+        crate::util::par::par_for_rows(y, |offset, chunk| {
+            for (i, ys) in chunk.iter_mut().enumerate() {
+                let s = offset + i;
+                let (cols, vals) = local.row(self.row_of(s));
+                let mut px = 0.0;
+                for (&c, &v) in cols.iter().zip(vals) {
+                    px += v * xb[c];
+                }
+                *ys = x[s] - gamma * px;
             }
-            *ys = x[s] - gamma * px;
-        }
+        });
     }
 
     fn diag(&self, out: &mut [f64]) {

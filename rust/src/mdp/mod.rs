@@ -278,23 +278,35 @@ impl Mdp {
     }
 
     /// One Bellman backup: returns (TV, greedy policy).
+    ///
+    /// States are parallelized over the rank's worker pool
+    /// ([`crate::util::par`]); each state's action scan is serial, so the
+    /// result is bitwise identical for every thread count.
     pub fn bellman(&self, v: &[f64]) -> (Vec<f64>, Vec<usize>) {
         assert_eq!(v.len(), self.n_states);
         let mut tv = vec![0.0; self.n_states];
         let mut pol = vec![0usize; self.n_states];
-        for s in 0..self.n_states {
-            let mut best = self.objective.worst();
-            let mut best_a = 0;
-            for a in 0..self.n_actions {
-                let q = self.q_value(s, a, v);
-                if self.objective.better(q, best) {
-                    best = q;
-                    best_a = a;
+        let _ = crate::util::par::par_for_rows2(
+            &mut tv,
+            &mut pol,
+            |offset, tv_chunk, pol_chunk| {
+                for (i, (tvs, pols)) in tv_chunk.iter_mut().zip(pol_chunk.iter_mut()).enumerate() {
+                    let s = offset + i;
+                    let mut best = self.objective.worst();
+                    let mut best_a = 0;
+                    for a in 0..self.n_actions {
+                        let q = self.q_value(s, a, v);
+                        if self.objective.better(q, best) {
+                            best = q;
+                            best_a = a;
+                        }
+                    }
+                    *tvs = best;
+                    *pols = best_a;
                 }
-            }
-            tv[s] = best;
-            pol[s] = best_a;
-        }
+            },
+            |(), ()| (),
+        );
         (tv, pol)
     }
 
@@ -523,22 +535,38 @@ impl DistMdp {
         // q = P_stacked · v  (one exchange, m·nl local rows)
         q_scratch.resize(nl * self.n_actions, 0.0);
         self.trans.spmv(comm, v_local, q_scratch, buf);
-        let mut local_res = 0.0f64;
-        for s in 0..nl {
-            let mut best = self.objective.worst();
-            let mut best_a = 0usize;
-            let base = s * self.n_actions;
-            for a in 0..self.n_actions {
-                let q = self.costs[base + a] + self.gamma * q_scratch[base + a];
-                if self.objective.better(q, best) {
-                    best = q;
-                    best_a = a;
+        // Greedy improvement + residual, state-parallel over the rank's
+        // worker pool: per-state action scans are serial and the chunk
+        // maxima fold in fixed chunk order (max is exact anyway), so the
+        // result is bitwise identical for every thread count.
+        let q: &[f64] = q_scratch.as_slice();
+        let m = self.n_actions;
+        let local_res = crate::util::par::par_for_rows2(
+            tv,
+            policy,
+            |offset, tv_chunk, pol_chunk| {
+                let mut res = 0.0f64;
+                for (i, (tvs, pols)) in tv_chunk.iter_mut().zip(pol_chunk.iter_mut()).enumerate() {
+                    let s = offset + i;
+                    let base = s * m;
+                    let mut best = self.objective.worst();
+                    let mut best_a = 0usize;
+                    for a in 0..m {
+                        let qv = self.costs[base + a] + self.gamma * q[base + a];
+                        if self.objective.better(qv, best) {
+                            best = qv;
+                            best_a = a;
+                        }
+                    }
+                    *tvs = best;
+                    *pols = best_a;
+                    res = res.max((best - v_local[s]).abs());
                 }
-            }
-            tv[s] = best;
-            policy[s] = best_a;
-            local_res = local_res.max((best - v_local[s]).abs());
-        }
+                res
+            },
+            f64::max,
+        )
+        .unwrap_or(0.0);
         comm.max(local_res)
     }
 

@@ -198,6 +198,13 @@ pub struct SolveResult {
     pub comm_bytes: u64,
     /// Discount factor of the solved MDP (for the certificate below).
     pub gamma: f64,
+    /// World size (SPMD ranks) the solve ran on.
+    pub ranks: usize,
+    /// Intra-rank worker threads per rank during the solve (`-threads`) —
+    /// together with [`Self::ranks`] this is the hybrid `ranks × threads`
+    /// execution shape (DESIGN.md §11). Thread count never changes the
+    /// numbers, only the wall time.
+    pub threads: usize,
 }
 
 impl SolveResult {
@@ -222,6 +229,8 @@ impl SolveResult {
             ("converged", Json::Bool(self.converged)),
             ("wall_time_s", Json::num(self.wall_time_s)),
             ("comm_bytes", Json::int(self.comm_bytes as i64)),
+            ("ranks", Json::int(self.ranks as i64)),
+            ("threads", Json::int(self.threads as i64)),
             ("error_bound", Json::num(self.error_bound())),
             (
                 "residual_trace",
@@ -406,12 +415,26 @@ pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolve
         });
     }
 
+    // Outer-iteration count = loop iterations only; the post-loop re-check
+    // below appends a trace record but is not an outer iteration.
+    let outer_iterations = trace.len();
+
     // final residual check if we ran out of iterations without breaking
     if !converged {
         residual =
             mdp.bellman_backup(comm, &v, &mut tv, &mut policy, &mut buf, &mut q_scratch);
         total_spmvs += 1;
         converged = residual < opts.atol;
+        // The re-check is a real Bellman backup: record it so the trace's
+        // residual/spmv accounting matches `total_spmvs` in metadata JSON
+        // (previously this backup's work was silently dropped).
+        trace.push(IterRecord {
+            outer: outer_iterations,
+            residual,
+            inner_iterations: 0,
+            spmvs: 1,
+            elapsed_s: start.elapsed().as_secs_f64(),
+        });
     }
 
     // Closing barrier: every rank has counted all solve collectives once
@@ -423,7 +446,7 @@ pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolve
         value: v,
         policy,
         gamma: mdp.gamma(),
-        outer_iterations: trace.len(),
+        outer_iterations,
         total_spmvs,
         total_inner_iterations: total_inner,
         residual,
@@ -456,6 +479,8 @@ pub fn gather_result(comm: &Comm, local: LocalSolveResult) -> SolveResult {
         trace: local.trace,
         comm_bytes: local.comm_bytes,
         gamma: local.gamma,
+        ranks: comm.size(),
+        threads: crate::util::par::configured_threads(),
     }
 }
 

@@ -196,6 +196,11 @@ impl Suite {
     }
 
     /// Print the table and write `target/bench-json/<slug>.json`.
+    ///
+    /// Write failures are *reported on stderr*, never swallowed: CI's
+    /// perf-smoke job merges these files into the `BENCH_CI.json` artifact,
+    /// and a silently missing suite would read as "no data" instead of
+    /// "broken writer".
     pub fn finish(&self) {
         println!("{}", self.table());
         let slug: String = self
@@ -204,12 +209,42 @@ impl Suite {
             .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '-' })
             .collect();
         let dir = std::path::Path::new("target/bench-json");
-        if std::fs::create_dir_all(dir).is_ok() {
-            let path = dir.join(format!("{slug}.json"));
-            let _ = std::fs::write(&path, self.to_json().to_string_pretty());
-            println!("[benchkit] wrote {}", path.display());
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!(
+                "[benchkit] WARNING: cannot create {}: {e} — suite '{}' not exported",
+                dir.display(),
+                self.title
+            );
+            return;
+        }
+        let path = dir.join(format!("{slug}.json"));
+        match std::fs::write(&path, self.to_json().to_string_pretty()) {
+            Ok(()) => println!("[benchkit] wrote {}", path.display()),
+            Err(e) => eprintln!(
+                "[benchkit] WARNING: failed to write {}: {e} — suite '{}' not exported",
+                path.display(),
+                self.title
+            ),
         }
     }
+}
+
+/// Thread counts for bench sweeps: the comma-separated
+/// `MADUPITE_BENCH_THREADS` environment variable, else `default`.
+/// Non-positive or unparsable entries are dropped; if nothing valid
+/// remains, `default` wins. Shared by `bench_kernels`/`bench_scaling` so
+/// the grammar cannot drift between them.
+pub fn thread_counts(default: &[usize]) -> Vec<usize> {
+    std::env::var("MADUPITE_BENCH_THREADS")
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .filter(|&t| t >= 1)
+                .collect::<Vec<usize>>()
+        })
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| default.to_vec())
 }
 
 /// Human-scaled time formatting.

@@ -7,5 +7,6 @@
 pub mod args;
 pub mod benchkit;
 pub mod json;
+pub mod par;
 pub mod prng;
 pub mod prop;

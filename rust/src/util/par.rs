@@ -1,0 +1,658 @@
+//! Shared-memory parallel execution layer (hybrid rank × thread).
+//!
+//! madupite runs hybrid-parallel: MPI ranks distribute memory, and inside
+//! each rank the PETSc kernels exploit the node's cores. Our reproduction
+//! distributes memory across rank-threads ([`crate::comm`], DESIGN.md §3);
+//! this module adds the *intra-rank* dimension — a zero-dependency worker
+//! pool (`std::thread` only) that parallelizes the hot row loops of every
+//! per-rank kernel: Bellman backups, CSR/dense SpMV, the matrix-free policy
+//! operator, and the KSP vector kernels (dot, norms, axpy). DESIGN.md §11
+//! has the full picture.
+//!
+//! # Deterministic, thread-count-independent reductions
+//!
+//! Floating-point addition is not associative, so a naive parallel sum
+//! would change with the thread count. Every primitive here therefore works
+//! over a **fixed chunk grid** that depends only on the problem size `n`
+//! (never on the thread count): ranges below [`MIN_PAR`] items are a single
+//! chunk evaluated inline, larger ranges are cut into [`GRID_CHUNK`]-sized
+//! chunks. Threads only decide *who* computes a chunk; per-chunk partials
+//! are always combined **in ascending chunk order** on the calling thread.
+//! The result is bitwise identical for `threads = 1..N` — proven by
+//! `tests/par_determinism.rs` across the full method × backend matrix.
+//!
+//! # Pool lifecycle
+//!
+//! Each rank-thread lazily owns one persistent [`ThreadPool`], created on
+//! the first sufficiently large kernel call and sized by
+//! [`configured_threads`] (the `-threads` option / `MADUPITE_THREADS`
+//! environment variable, default 1 — fully serial execution). Note that
+//! the chunked reduction *order* applies at **every** thread count,
+//! including 1: a reduction over ≥ [`MIN_PAR`] items folds per-chunk
+//! partials rather than one long left-to-right sum, so large-problem
+//! results can differ bitwise from pre-hybrid releases (by design — the
+//! invariant is thread-count independence, not cross-release bit
+//! stability). The pool lives in a thread-local, so it is dropped (workers
+//! joined) when the rank-thread exits at the end of `World::run`. Nested
+//! parallel regions — a kernel invoked from inside a chunk body, on either
+//! the caller lane or a worker — detect the situation and run inline over
+//! the same grid, so determinism survives composition and the thread count
+//! can never multiply.
+
+use std::cell::{Cell, RefCell};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// Row count of one grid chunk for ranges of at least [`MIN_PAR`] items.
+pub const GRID_CHUNK: usize = 2048;
+
+/// Ranges smaller than this are a single chunk evaluated inline on the
+/// caller — parallel dispatch would cost more than it saves, and the
+/// cutoff depends only on the problem size, preserving determinism.
+pub const MIN_PAR: usize = 4096;
+
+/// Process-wide thread-count configuration (`0` = unset, fall back to the
+/// `MADUPITE_THREADS` environment variable, then 1).
+static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+/// Cached `MADUPITE_THREADS` resolution (`0` = not read yet).
+static ENV_DEFAULT: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the intra-rank thread count for subsequent parallel regions (the
+/// `-threads` option lands here via `api::options::resolve_threads`).
+/// Values are clamped to at least 1. Each rank's pool is rebuilt lazily on
+/// its next parallel region if the size changed.
+pub fn set_threads(n: usize) {
+    CONFIGURED.store(n.max(1), Ordering::Relaxed);
+}
+
+/// The thread count parallel regions currently run with: the value set by
+/// [`set_threads`], else a positive-integer `MADUPITE_THREADS` environment
+/// variable, else 1.
+pub fn configured_threads() -> usize {
+    let t = CONFIGURED.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let cached = ENV_DEFAULT.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let resolved = std::env::var("MADUPITE_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&v| v >= 1)
+        .unwrap_or(1);
+    ENV_DEFAULT.store(resolved, Ordering::Relaxed);
+    resolved
+}
+
+thread_local! {
+    /// The rank-thread's persistent pool (created lazily, joined on exit).
+    static RANK_POOL: RefCell<Option<ThreadPool>> = const { RefCell::new(None) };
+    /// True while this thread is the caller lane of an active region.
+    static IN_REGION: Cell<bool> = const { Cell::new(false) };
+    /// True on pool worker threads (set once at spawn).
+    static IS_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A lane body dispatched to the pool: called once per lane with the lane
+/// index in `[0, lanes)`. Type- and lifetime-erased to a raw data pointer
+/// plus a monomorphized invoke shim; soundness is the pool's completion
+/// wait (see [`ThreadPool::run`]) — the pointee outlives every call.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    invoke: unsafe fn(*const (), usize),
+}
+
+// SAFETY: `Job` is only built by `ThreadPool::run` from an `&F` where
+// `F: Fn(usize) + Sync`, so sharing the pointee across worker threads is
+// sound, and `run` blocks until no worker can still call it.
+unsafe impl Send for Job {}
+
+/// State shared between a pool's caller and its workers.
+struct Shared {
+    state: Mutex<State>,
+    /// Workers wait here for a new epoch.
+    work: Condvar,
+    /// The caller waits here for `active == 0`.
+    done: Condvar,
+}
+
+struct State {
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers still running the current epoch's job.
+    active: usize,
+    /// A worker's lane body panicked this epoch.
+    panicked: bool,
+    shutdown: bool,
+}
+
+/// A small persistent worker pool owned by one rank-thread.
+///
+/// `lanes` counts the caller too: a pool of `lanes = T` has `T − 1` parked
+/// worker threads, and [`ThreadPool::run`] executes the lane body on all
+/// `T` lanes (lane 0 on the caller). `lanes = 1` spawns nothing and runs
+/// inline. Workers park on a condvar between regions, so a region costs
+/// one mutex/condvar round-trip rather than `T` thread spawns.
+pub struct ThreadPool {
+    lanes: usize,
+    shared: Option<Arc<Shared>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Pool with `lanes` total lanes (clamped to at least 1); spawns
+    /// `lanes − 1` parked worker threads.
+    pub fn new(lanes: usize) -> ThreadPool {
+        let lanes = lanes.max(1);
+        if lanes == 1 {
+            return ThreadPool {
+                lanes,
+                shared: None,
+                workers: Vec::new(),
+            };
+        }
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut workers = Vec::with_capacity(lanes - 1);
+        for lane in 1..lanes {
+            let shared = Arc::clone(&shared);
+            let handle = thread::Builder::new()
+                .name(format!("madupite-par{lane}"))
+                .spawn(move || worker_loop(lane, shared))
+                .expect("failed to spawn pool worker");
+            workers.push(handle);
+        }
+        ThreadPool {
+            lanes,
+            shared: Some(shared),
+            workers,
+        }
+    }
+
+    /// Total lanes (caller + workers).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Run `body(lane)` once on every lane; lane 0 executes on the calling
+    /// thread. Blocks until all lanes finished. A panic in any lane body is
+    /// re-raised on the caller *after* every lane completed, so borrowed
+    /// data never outlives a running worker.
+    pub fn run<F: Fn(usize) + Sync>(&self, body: &F) {
+        let Some(shared) = &self.shared else {
+            body(0);
+            return;
+        };
+        /// Monomorphized shim recovering the erased closure type.
+        ///
+        /// # Safety
+        /// `ptr` must point at a live `F`; guaranteed because `run` does
+        /// not return (or unwind) until `active == 0`, i.e. until no
+        /// worker can still invoke the job.
+        unsafe fn invoke<F: Fn(usize)>(ptr: *const (), lane: usize) {
+            // SAFETY: see the function contract above.
+            unsafe { (*ptr.cast::<F>())(lane) }
+        }
+        let job = Job {
+            data: (body as *const F).cast::<()>(),
+            invoke: invoke::<F>,
+        };
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.job = Some(job);
+            st.active = self.workers.len();
+            st.epoch = st.epoch.wrapping_add(1);
+            shared.work.notify_all();
+        }
+        // Caller is lane 0. Catch a caller-lane panic so we still wait for
+        // the workers before unwinding frees the borrowed data.
+        let caller = catch_unwind(AssertUnwindSafe(|| body(0)));
+        let worker_panicked = {
+            let mut st = shared.state.lock().unwrap();
+            while st.active > 0 {
+                st = shared.done.wait(st).unwrap();
+            }
+            st.job = None;
+            std::mem::replace(&mut st.panicked, false)
+        };
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("a worker thread panicked inside a parallel region");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        if let Some(shared) = &self.shared {
+            shared.state.lock().unwrap().shutdown = true;
+            shared.work.notify_all();
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(lane: usize, shared: Arc<Shared>) {
+    IS_WORKER.with(|f| f.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("epoch bumped without a job");
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+        // SAFETY: the caller of `run` blocks until this epoch completes,
+        // so the erased closure behind `job.data` is still alive.
+        let outcome = catch_unwind(AssertUnwindSafe(|| unsafe { (job.invoke)(job.data, lane) }));
+        let mut st = shared.state.lock().unwrap();
+        if outcome.is_err() {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Number of grid chunks for a range of `n` items (a pure function of `n`,
+/// which is what makes every reduction thread-count-independent).
+fn chunk_count(n: usize) -> usize {
+    if n < MIN_PAR {
+        1
+    } else {
+        n.div_ceil(GRID_CHUNK)
+    }
+}
+
+/// Bounds of chunk `c` in the grid of `n` items.
+fn chunk_bounds(n: usize, nchunks: usize, c: usize) -> (usize, usize) {
+    if nchunks == 1 {
+        (0, n)
+    } else {
+        (c * GRID_CHUNK, ((c + 1) * GRID_CHUNK).min(n))
+    }
+}
+
+/// Contiguous chunk-index span `[lo, hi)` owned by `lane` of `lanes`.
+fn lane_span(nchunks: usize, lanes: usize, lane: usize) -> (usize, usize) {
+    let per = nchunks / lanes;
+    let rem = nchunks % lanes;
+    let lo = lane * per + lane.min(rem);
+    (lo, lo + per + usize::from(lane < rem))
+}
+
+/// Clears the in-region flag even if the region body unwinds.
+struct RegionGuard;
+
+impl RegionGuard {
+    fn enter() -> RegionGuard {
+        IN_REGION.with(|f| f.set(true));
+        RegionGuard
+    }
+}
+
+impl Drop for RegionGuard {
+    fn drop(&mut self) {
+        IN_REGION.with(|f| f.set(false));
+    }
+}
+
+/// Core dispatcher: invoke `body(c, lo, hi)` for every chunk of the fixed
+/// grid over `[0, n)`, spreading contiguous chunk spans over the rank
+/// pool's lanes (or inline when small, serial, nested, or on a worker).
+fn run_chunks(n: usize, body: &(dyn Fn(usize, usize, usize) + Sync)) {
+    if n == 0 {
+        return;
+    }
+    let nchunks = chunk_count(n);
+    let serial = || {
+        for c in 0..nchunks {
+            let (lo, hi) = chunk_bounds(n, nchunks, c);
+            body(c, lo, hi);
+        }
+    };
+    if nchunks == 1
+        || IS_WORKER.with(|f| f.get())
+        || IN_REGION.with(|f| f.get())
+        || configured_threads() == 1
+    {
+        serial();
+        return;
+    }
+    RANK_POOL.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let want = configured_threads();
+        if slot.as_ref().map(|p| p.lanes()) != Some(want) {
+            *slot = Some(ThreadPool::new(want));
+        }
+        let pool = slot.as_ref().expect("pool installed above");
+        if pool.lanes() == 1 {
+            serial();
+            return;
+        }
+        let lanes = pool.lanes();
+        let _region = RegionGuard::enter();
+        pool.run(&|lane| {
+            let (clo, chi) = lane_span(nchunks, lanes, lane);
+            for c in clo..chi {
+                let (lo, hi) = chunk_bounds(n, nchunks, c);
+                body(c, lo, hi);
+            }
+        });
+    });
+}
+
+/// Raw-pointer wrapper making disjoint chunk writes shareable across
+/// lanes. Soundness: every chunk of the grid is visited by exactly one
+/// lane, and chunk ranges are disjoint by construction.
+struct SendPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+/// Chunked parallel-for over row ranges: `body(offset, chunk)` receives
+/// each grid chunk of `out` as a disjoint mutable sub-slice starting at
+/// global row `offset`. Rows are independent, so results are bitwise
+/// identical for every thread count.
+pub fn par_for_rows<T, F>(out: &mut [T], body: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = out.len();
+    if n == 0 {
+        return;
+    }
+    if chunk_count(n) == 1 {
+        // Single-chunk grid (n < MIN_PAR): identical at every thread
+        // count; skip the dispatch machinery on this hot path.
+        body(0, out);
+        return;
+    }
+    let ptr = SendPtr(out.as_mut_ptr());
+    run_chunks(n, &|_c, lo, hi| {
+        // SAFETY: chunks are disjoint and each is visited exactly once, so
+        // the sub-slices never alias; `out` is untouched until return.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(lo), hi - lo) };
+        body(lo, chunk);
+    });
+}
+
+/// Two-output variant of [`par_for_rows`] with a deterministic reduction:
+/// `body(offset, a_chunk, b_chunk) -> R` runs per grid chunk; the per-chunk
+/// partials are folded **in ascending chunk order** on the caller, so the
+/// result is bitwise identical for every thread count. Returns `None` for
+/// empty inputs. This is the Bellman-backup shape (values + greedy actions
+/// + residual max).
+pub fn par_for_rows2<A, B, R, F, G>(a: &mut [A], b: &mut [B], body: F, fold: G) -> Option<R>
+where
+    A: Send,
+    B: Send,
+    R: Send,
+    F: Fn(usize, &mut [A], &mut [B]) -> R + Sync,
+    G: FnMut(R, R) -> R,
+{
+    let n = a.len();
+    assert_eq!(n, b.len(), "par_for_rows2: slice lengths differ");
+    if n == 0 {
+        return None;
+    }
+    let nchunks = chunk_count(n);
+    if nchunks == 1 {
+        // Single-chunk grid: same value at every thread count; skip the
+        // partials allocation on this hot path.
+        return Some(body(0, a, b));
+    }
+    let mut partials: Vec<Option<R>> = (0..nchunks).map(|_| None).collect();
+    let pa = SendPtr(a.as_mut_ptr());
+    let pb = SendPtr(b.as_mut_ptr());
+    let pp = SendPtr(partials.as_mut_ptr());
+    run_chunks(n, &|c, lo, hi| {
+        // SAFETY: disjoint chunks, one visit per chunk (see par_for_rows);
+        // partial slot `c` is likewise written by exactly one lane.
+        let ca = unsafe { std::slice::from_raw_parts_mut(pa.get().add(lo), hi - lo) };
+        let cb = unsafe { std::slice::from_raw_parts_mut(pb.get().add(lo), hi - lo) };
+        let r = body(lo, ca, cb);
+        unsafe { *pp.get().add(c) = Some(r) };
+    });
+    partials
+        .into_iter()
+        .map(|p| p.expect("every chunk produced a partial"))
+        .reduce(fold)
+}
+
+/// Deterministic parallel reduction: `body(lo, hi) -> R` runs once per grid
+/// chunk of `[0, n)`; partials are folded **in ascending chunk order** on
+/// the caller. Bitwise identical for every thread count (the grid depends
+/// only on `n`). Returns `None` when `n == 0`.
+pub fn par_reduce<R, F, G>(n: usize, body: F, fold: G) -> Option<R>
+where
+    R: Send,
+    F: Fn(usize, usize) -> R + Sync,
+    G: FnMut(R, R) -> R,
+{
+    if n == 0 {
+        return None;
+    }
+    let nchunks = chunk_count(n);
+    if nchunks == 1 {
+        // Single-chunk grid (every dot/norm below MIN_PAR, e.g. the
+        // per-row dots of DenseOp): same value at every thread count, and
+        // no partials allocation on this hot path.
+        return Some(body(0, n));
+    }
+    let mut partials: Vec<Option<R>> = (0..nchunks).map(|_| None).collect();
+    let pp = SendPtr(partials.as_mut_ptr());
+    run_chunks(n, &|c, lo, hi| {
+        let r = body(lo, hi);
+        // SAFETY: slot `c` is written by exactly one lane.
+        unsafe { *pp.get().add(c) = Some(r) };
+    });
+    partials
+        .into_iter()
+        .map(|p| p.expect("every chunk produced a partial"))
+        .reduce(fold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256pp;
+
+    fn noisy(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256pp::new(seed);
+        (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn grid_depends_only_on_n() {
+        assert_eq!(chunk_count(0), 1);
+        assert_eq!(chunk_count(MIN_PAR - 1), 1);
+        assert_eq!(chunk_count(MIN_PAR), MIN_PAR / GRID_CHUNK);
+        let n = 10 * GRID_CHUNK + 7;
+        let nchunks = chunk_count(n);
+        let mut covered = 0;
+        for c in 0..nchunks {
+            let (lo, hi) = chunk_bounds(n, nchunks, c);
+            assert_eq!(lo, covered);
+            covered = hi;
+        }
+        assert_eq!(covered, n);
+    }
+
+    #[test]
+    fn lane_span_partitions_chunks() {
+        for (nchunks, lanes) in [(1usize, 4usize), (7, 3), (16, 4), (5, 8)] {
+            let mut covered = 0;
+            for lane in 0..lanes {
+                let (lo, hi) = lane_span(nchunks, lanes, lane);
+                assert_eq!(lo, covered);
+                covered = hi;
+            }
+            assert_eq!(covered, nchunks);
+        }
+    }
+
+    #[test]
+    fn par_for_rows_matches_serial() {
+        let n = 3 * MIN_PAR + 17;
+        let x = noisy(n, 1);
+        for t in [1usize, 2, 5] {
+            set_threads(t);
+            let mut y = vec![0.0; n];
+            par_for_rows(&mut y, |offset, chunk| {
+                for (i, yi) in chunk.iter_mut().enumerate() {
+                    *yi = 2.0 * x[offset + i] + 1.0;
+                }
+            });
+            for (yi, xi) in y.iter().zip(&x) {
+                assert_eq!(*yi, 2.0 * xi + 1.0);
+            }
+        }
+        set_threads(1);
+    }
+
+    #[test]
+    fn par_reduce_bitwise_identical_across_thread_counts() {
+        let n = 5 * MIN_PAR + 123;
+        let x = noisy(n, 2);
+        let y = noisy(n, 3);
+        let mut reference: Option<u64> = None;
+        for t in [1usize, 2, 3, 8] {
+            set_threads(t);
+            let dot = par_reduce(
+                n,
+                |lo, hi| crate::linalg::dot(&x[lo..hi], &y[lo..hi]),
+                |a, b| a + b,
+            )
+            .unwrap();
+            match reference {
+                None => reference = Some(dot.to_bits()),
+                Some(bits) => assert_eq!(bits, dot.to_bits(), "threads={t} diverged"),
+            }
+        }
+        set_threads(1);
+    }
+
+    #[test]
+    fn par_for_rows2_reduction_in_chunk_order() {
+        let n = 2 * MIN_PAR;
+        set_threads(4);
+        let mut a = vec![0.0f64; n];
+        let mut b = vec![0usize; n];
+        let max = par_for_rows2(
+            &mut a,
+            &mut b,
+            |offset, ca, cb| {
+                let mut m = 0.0f64;
+                for (i, (ai, bi)) in ca.iter_mut().zip(cb.iter_mut()).enumerate() {
+                    *ai = (offset + i) as f64;
+                    *bi = offset + i;
+                    m = m.max(*ai);
+                }
+                m
+            },
+            f64::max,
+        )
+        .unwrap();
+        assert_eq!(max, (n - 1) as f64);
+        assert_eq!(a[n - 1], (n - 1) as f64);
+        assert_eq!(b[7], 7);
+        set_threads(1);
+    }
+
+    #[test]
+    fn nested_regions_run_inline_and_stay_deterministic() {
+        let n = 2 * MIN_PAR;
+        let x = noisy(n, 9);
+        set_threads(4);
+        let mut y = vec![0.0; n];
+        // The chunk body calls another parallel primitive; it must inline.
+        par_for_rows(&mut y, |offset, chunk| {
+            let inner = par_reduce(chunk.len(), |lo, hi| (hi - lo) as f64, |a, b| a + b).unwrap();
+            assert_eq!(inner, chunk.len() as f64);
+            for (i, yi) in chunk.iter_mut().enumerate() {
+                *yi = x[offset + i];
+            }
+        });
+        assert_eq!(y, x);
+        set_threads(1);
+    }
+
+    #[test]
+    fn panic_in_chunk_body_propagates_and_pool_survives() {
+        let n = 2 * MIN_PAR;
+        set_threads(3);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut y = vec![0.0f64; n];
+            par_for_rows(&mut y, |offset, _chunk| {
+                if offset == 0 {
+                    panic!("deliberate chunk panic");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller");
+        // The pool must still be usable afterwards.
+        let mut y = vec![0.0f64; n];
+        par_for_rows(&mut y, |_, chunk| chunk.fill(1.0));
+        assert!(y.iter().all(|&v| v == 1.0));
+        set_threads(1);
+    }
+
+    #[test]
+    fn pool_resizes_when_configuration_changes() {
+        let n = 2 * MIN_PAR;
+        for t in [2usize, 4, 1, 3] {
+            set_threads(t);
+            let total = par_reduce(n, |lo, hi| (hi - lo) as f64, |a, b| a + b).unwrap();
+            assert_eq!(total, n as f64);
+        }
+        set_threads(1);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert!(par_reduce(0, |_, _| 1.0f64, |a, b| a + b).is_none());
+        let mut empty: Vec<f64> = Vec::new();
+        par_for_rows(&mut empty, |_, _| panic!("must not be called"));
+        let mut one = vec![0.0f64];
+        par_for_rows(&mut one, |offset, c| {
+            assert_eq!((offset, c.len()), (0, 1));
+            c[0] = 5.0;
+        });
+        assert_eq!(one[0], 5.0);
+    }
+}

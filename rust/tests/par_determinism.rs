@@ -1,0 +1,262 @@
+//! Hybrid-parallel determinism gate (DESIGN.md §11).
+//!
+//! The `-threads` dimension must change *only* wall time, never results:
+//! `util::par` runs every kernel over a fixed chunk grid (a function of
+//! the problem size alone) and folds per-chunk partials in chunk order, so
+//! values, policies and residual traces are **bitwise identical** for any
+//! thread count. This suite pins that across the method × backend matrix,
+//! on serial and multi-rank worlds, and checks the `-threads` option's
+//! typed-error surface.
+
+use madupite::api::options::resolve_threads;
+use madupite::api::{MdpBuilder, Solver};
+use madupite::ksp::precond::PcType;
+use madupite::ksp::KspType;
+use madupite::models::{garnet::GarnetSpec, ModelGenerator};
+use madupite::solver::{solve_world, EvalBackend, Method, SolveOptions, SolveResult};
+use madupite::util::args::Options;
+use madupite::util::par;
+use std::sync::{Arc, Mutex};
+
+/// `par::set_threads` is process-global and `SolveResult::threads` reports
+/// it, so the tests in this binary serialize on one lock (the determinism
+/// guarantee itself needs no lock — that is the point — but the shape
+/// assertions do).
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    THREADS_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// The full outer-method matrix (small MDPs, so ExactPi is fine too).
+fn methods() -> Vec<Method> {
+    vec![
+        Method::Vi,
+        Method::Mpi { sweeps: 5 },
+        Method::ExactPi,
+        Method::ipi_gmres(),
+        Method::ipi_bicgstab(),
+        Method::ipi_tfqmr(),
+        Method::Ipi {
+            ksp: KspType::Richardson { omega: 1.0 },
+            pc: PcType::Jacobi,
+        },
+    ]
+}
+
+/// Everything a thread count must not change, reduced to exact bits:
+/// values, policy, convergence flags/counters, and the residual trace
+/// (residual bits + inner-iteration/spmv counts; wall times excluded).
+type Fingerprint = (
+    Vec<u64>,
+    Vec<usize>,
+    bool,
+    usize,
+    usize,
+    Vec<(u64, usize, usize)>,
+);
+
+fn fingerprint(r: &SolveResult) -> Fingerprint {
+    (
+        r.value.iter().map(|v| v.to_bits()).collect(),
+        r.policy.clone(),
+        r.converged,
+        r.outer_iterations,
+        r.total_spmvs,
+        r.trace
+            .iter()
+            .map(|t| (t.residual.to_bits(), t.inner_iterations, t.spmvs))
+            .collect(),
+    )
+}
+
+#[test]
+fn solver_bitwise_identical_across_thread_counts() {
+    let _guard = lock();
+    // Small matrix covering every method × backend × ranks combination
+    // (ExactPi's gathered dense LU caps the size).
+    let mdp = Arc::new(GarnetSpec::new(400, 4, 5, 99).build_serial(0.95));
+    for ranks in [1usize, 3] {
+        for method in methods() {
+            for backend in [EvalBackend::MatFree, EvalBackend::Assembled] {
+                let opts = SolveOptions {
+                    method: method.clone(),
+                    eval_backend: backend,
+                    atol: 1e-9,
+                    ..Default::default()
+                };
+                let mut reference = None;
+                for threads in [1usize, 2, 8] {
+                    par::set_threads(threads);
+                    let r = solve_world(Arc::clone(&mdp), ranks, &opts);
+                    assert!(
+                        r.converged,
+                        "{}/{}/ranks={ranks}/threads={threads} did not converge",
+                        method.name(),
+                        backend.name()
+                    );
+                    assert_eq!(r.threads, threads, "SolveResult must report -threads");
+                    assert_eq!(r.ranks, ranks, "SolveResult must report ranks");
+                    let fp = fingerprint(&r);
+                    match &reference {
+                        None => reference = Some(fp),
+                        Some(re) => assert_eq!(
+                            re,
+                            &fp,
+                            "{}/{}/ranks={ranks}: threads={threads} diverged from threads=1",
+                            method.name(),
+                            backend.name()
+                        ),
+                    }
+                }
+            }
+        }
+    }
+    par::set_threads(1);
+}
+
+#[test]
+fn solver_bitwise_identical_above_the_parallel_threshold() {
+    let _guard = lock();
+    // Large enough that every threaded path really runs chunked parallel
+    // regions (n > MIN_PAR states, n·m rows in the stacked SpMV, length-n
+    // KSP vectors) — ExactPi/direct excluded, dense LU at this size is
+    // not a unit-test workload.
+    let n = 2 * par::MIN_PAR;
+    let mdp = Arc::new(GarnetSpec::new(n, 3, 5, 11).build_serial(0.95));
+    let methods = [
+        Method::Vi,
+        Method::Mpi { sweeps: 5 },
+        Method::ipi_gmres(),
+        Method::ipi_bicgstab(),
+        Method::ipi_tfqmr(),
+    ];
+    for method in methods {
+        for backend in [EvalBackend::MatFree, EvalBackend::Assembled] {
+            let opts = SolveOptions {
+                method: method.clone(),
+                eval_backend: backend,
+                atol: 1e-8,
+                max_outer: 100_000,
+                ..Default::default()
+            };
+            let mut reference = None;
+            for threads in [1usize, 2, 8] {
+                par::set_threads(threads);
+                let r = solve_world(Arc::clone(&mdp), 1, &opts);
+                assert!(
+                    r.converged,
+                    "{}/{}/threads={threads} did not converge",
+                    method.name(),
+                    backend.name()
+                );
+                let fp = fingerprint(&r);
+                match &reference {
+                    None => reference = Some(fp),
+                    Some(re) => assert_eq!(
+                        re,
+                        &fp,
+                        "{}/{}: threads={threads} diverged from threads=1",
+                        method.name(),
+                        backend.name()
+                    ),
+                }
+            }
+        }
+    }
+    par::set_threads(1);
+}
+
+#[test]
+fn nonconverged_trace_is_thread_count_independent_and_complete() {
+    let _guard = lock();
+    // Exercises the post-loop residual re-check path: the trace must
+    // record the final backup (one extra record beyond outer_iterations)
+    // identically at every thread count.
+    let mdp = Arc::new(GarnetSpec::new(300, 3, 4, 7).build_serial(0.99));
+    let opts = SolveOptions {
+        method: Method::Vi,
+        atol: 1e-300,
+        max_outer: 4,
+        ..Default::default()
+    };
+    let mut reference = None;
+    for threads in [1usize, 2, 8] {
+        par::set_threads(threads);
+        let r = solve_world(Arc::clone(&mdp), 1, &opts);
+        assert!(!r.converged);
+        assert_eq!(r.outer_iterations, 4);
+        assert_eq!(r.trace.len(), 5, "final residual re-check must be traced");
+        assert_eq!(r.trace.last().unwrap().spmvs, 1);
+        let spmvs_traced: usize = r.trace.iter().map(|t| t.spmvs).sum();
+        assert_eq!(spmvs_traced, r.total_spmvs, "trace must account every backup");
+        let fp = fingerprint(&r);
+        match &reference {
+            None => reference = Some(fp),
+            Some(re) => assert_eq!(re, &fp, "threads={threads} diverged"),
+        }
+    }
+    par::set_threads(1);
+}
+
+fn db(tokens: &[&str]) -> Options {
+    Options::parse(tokens.iter().map(|s| s.to_string()))
+}
+
+#[test]
+fn threads_option_zero_and_negative_are_typed_errors() {
+    let err = resolve_threads(&db(&["-threads", "0"])).unwrap_err();
+    assert!(err.0.contains("threads"), "{err}");
+    assert!(err.0.contains(">= 1"), "{err}");
+    let err = resolve_threads(&db(&["-threads", "-4"])).unwrap_err();
+    assert!(err.0.contains("expected integer"), "{err}");
+    assert_eq!(resolve_threads(&db(&["-threads", "3"])).unwrap(), 3);
+}
+
+fn two_state_builder() -> MdpBuilder {
+    MdpBuilder::from_fillers(
+        2,
+        2,
+        |s, a| match (s, a) {
+            (0, 0) => vec![(0, 1.0)],
+            (0, 1) => vec![(1, 1.0)],
+            _ => vec![(1, 1.0)],
+        },
+        |s, a| match (s, a) {
+            (0, 0) => 1.0,
+            (0, 1) => 1.5,
+            _ => 0.0,
+        },
+    )
+    .gamma(0.5)
+}
+
+#[test]
+fn threads_option_end_to_end_through_the_api() {
+    let _guard = lock();
+    // -threads 0 errors before any world spawns…
+    let mut solver = Solver::new(two_state_builder());
+    solver.set_option("-threads", "0").unwrap();
+    let err = solver.solve().unwrap_err();
+    assert!(err.0.contains(">= 1"), "{err}");
+
+    // …a typo'd key keeps the did-you-mean surface…
+    let mut solver = Solver::new(two_state_builder());
+    let err = solver.set_option("-thraeds", "2").unwrap_err();
+    assert!(err.0.contains("threads"), "{err}");
+
+    // …and a threaded solve reports its shape and matches serial bitwise.
+    let mut serial = Solver::new(two_state_builder());
+    serial.set_option("-threads", "1").unwrap();
+    let serial = serial.solve().unwrap();
+    let mut threaded = Solver::new(two_state_builder());
+    threaded.set_option("-threads", "2").unwrap();
+    let threaded = threaded.solve().unwrap();
+    assert_eq!(threaded.threads, 2);
+    assert_eq!(
+        threaded.metadata_json().get("solver").unwrap().get("threads").unwrap().as_f64(),
+        Some(2.0)
+    );
+    assert_eq!(fingerprint(&serial.result), fingerprint(&threaded.result));
+    par::set_threads(1);
+}
