@@ -21,7 +21,7 @@
 
 use madupite::comm::World;
 use madupite::ksp::{Apply, LinOp};
-use madupite::mdp::{DistMdp, MatFreePolicyOp};
+use madupite::mdp::{Discount, DiscountMode, DistMdp, MatFreePolicyOp, Mdp};
 use madupite::models::{garnet::GarnetSpec, ModelGenerator};
 use madupite::runtime::{bellman_dense_native, random_block, DenseBellman, Engine};
 use madupite::util::benchkit::{fmt_time, thread_counts, Suite};
@@ -202,6 +202,83 @@ fn main() {
         }
     }
     par::set_threads(1);
+
+    // --- discount_mode dimension: Scalar vs constant PerStateAction --------
+    // The generalized-discounting layer's performance promise: reading the
+    // per-row factor from a vector instead of a scalar costs <5% on the
+    // fused matfree path (one predictable indexed load per state), and the
+    // outputs are bitwise identical (the representation invariant).
+    for n in [100_000usize] {
+        if n > max_n {
+            println!("discount_mode/n={n}: skipped (MADUPITE_BENCH_MAX_N={max_n})");
+            continue;
+        }
+        let base = Arc::new(random_mdp_bench(33, n, 4, 0.99, 5));
+        let psa = Arc::new(
+            Mdp::new_discounted(
+                n,
+                4,
+                base.transitions().clone(),
+                base.costs().to_vec(),
+                Discount::constant(DiscountMode::PerStateAction, 0.99, n, 4),
+            )
+            .unwrap(),
+        );
+        suite.case(&format!("discount_mode/n={n}"), move || {
+            let mut times = Vec::new();
+            let mut bits: Option<u64> = None;
+            for mdp in [&base, &psa] {
+                let mdp2 = Arc::clone(mdp);
+                let mut out = World::run(1, move |comm| {
+                    let d = DistMdp::from_serial(&comm, &mdp2);
+                    let nl = d.local_states();
+                    let policy: Vec<usize> = (0..nl).map(|s| s % d.n_actions()).collect();
+                    let x: Vec<f64> = (0..nl).map(|i| (i as f64 * 0.01).sin()).collect();
+                    let mut y = vec![0.0; nl];
+                    let mf = MatFreePolicyOp::new(&d, &policy);
+                    let mut buf = mf.make_buffer();
+                    let t0 = Instant::now();
+                    for _ in 0..10 {
+                        mf.apply(&comm, &x, &mut y, &mut buf);
+                    }
+                    let apply_s = t0.elapsed().as_secs_f64() / 10.0;
+
+                    let mut tv = vec![0.0; nl];
+                    let mut pol = vec![0usize; nl];
+                    let mut q = Vec::new();
+                    let mut bbuf = d.make_buffer();
+                    let t0 = Instant::now();
+                    d.bellman_backup(&comm, &x, &mut tv, &mut pol, &mut bbuf, &mut q);
+                    let backup_s = t0.elapsed().as_secs_f64();
+                    (bits_checksum(&y) ^ bits_checksum(&tv), apply_s, backup_s)
+                });
+                let (b, apply_s, backup_s) = out.swap_remove(0);
+                match bits {
+                    None => bits = Some(b),
+                    Some(want) => {
+                        assert_eq!(want, b, "discount representations not bitwise identical")
+                    }
+                }
+                times.push((apply_s, backup_s));
+            }
+            let overhead = times[1].0 / times[0].0 - 1.0;
+            if overhead > 0.05 {
+                // timing noise, not correctness — report, don't abort
+                eprintln!(
+                    "WARNING: per-state-action apply overhead {:.1}% above the \
+                     5% target (noisy sample?)",
+                    overhead * 100.0
+                );
+            }
+            vec![
+                ("scalar_apply_ms".to_string(), times[0].0 * 1e3),
+                ("psa_apply_ms".to_string(), times[1].0 * 1e3),
+                ("scalar_backup_ms".to_string(), times[0].1 * 1e3),
+                ("psa_backup_ms".to_string(), times[1].1 * 1e3),
+                ("apply_overhead_pct".to_string(), overhead * 100.0),
+            ]
+        });
+    }
 
     // --- PJRT dense path vs native rust ------------------------------------
     match Engine::load("artifacts") {

@@ -12,8 +12,9 @@
 
 use crate::mdp::{self, Mdp, Objective};
 use crate::models::{
-    garnet::GarnetSpec, gridworld::GridSpec, inventory::InventorySpec, queueing::QueueSpec,
-    replacement::ReplacementSpec, sis::SisSpec, traffic::TrafficSpec, ModelGenerator,
+    garnet::GarnetSpec, gridworld::GridSpec, inventory::InventorySpec,
+    maintenance::MaintenanceSpec, queueing::QueueSpec, replacement::ReplacementSpec, sis::SisSpec,
+    traffic::TrafficSpec, ModelGenerator,
 };
 use crate::util::args::Options;
 use std::sync::Arc;
@@ -26,10 +27,14 @@ pub type ProbFn = Arc<dyn Fn(usize, usize) -> Vec<(usize, f64)> + Send + Sync>;
 /// Shared stage-cost closure: `(s, a) → g(s, a)`.
 pub type CostFn = Arc<dyn Fn(usize, usize) -> f64 + Send + Sync>;
 
+/// Shared per-transition discount closure: `(s, a) → γ(s,a)` (the semi-MDP
+/// filler alongside [`ProbFn`] / [`CostFn`]).
+pub type DiscountFn = Arc<dyn Fn(usize, usize) -> f64 + Send + Sync>;
+
 /// One of the three model sources the builder accepts.
 #[derive(Clone)]
 pub(crate) enum Source {
-    /// Offline `.mdpb` file (gamma/objective come from its header).
+    /// Offline `.mdpb` file (gamma/objective/discounts come from it).
     File(String),
     /// A benchmark model generator.
     Model(Arc<dyn ModelGenerator + Send + Sync>),
@@ -85,6 +90,9 @@ pub struct MdpBuilder {
     sources: Vec<Source>,
     gamma: Option<f64>,
     objective: Option<Objective>,
+    /// Semi-MDP filler: per-transition discounts `(s, a) → γ(s,a)`,
+    /// applicable to closure sources only.
+    discount_filler: Option<DiscountFn>,
 }
 
 impl MdpBuilder {
@@ -156,6 +164,20 @@ impl MdpBuilder {
         self
     }
 
+    /// Set a **per-transition discount filler** `(s, a) → γ(s,a)` — the
+    /// semi-MDP companion of the transition/cost fillers (madupite's
+    /// generalized-discount surface). Applies to closure sources only;
+    /// every produced value is validated through the shared gamma check
+    /// (rank-locally, with collective agreement, on distributed solves).
+    /// Mutually exclusive with a scalar [`Self::gamma`] / `-gamma`.
+    pub fn discount_filler(
+        mut self,
+        disc: impl Fn(usize, usize) -> f64 + Send + Sync + 'static,
+    ) -> MdpBuilder {
+        self.discount_filler = Some(Arc::new(disc));
+        self
+    }
+
     /// Set the optimization sense (min-cost by default). A `-objective`
     /// entry in the solver's options database overrides this.
     pub fn objective(mut self, objective: Objective) -> MdpBuilder {
@@ -171,6 +193,39 @@ impl MdpBuilder {
     /// Builder-level objective, if explicitly set.
     pub fn objective_value(&self) -> Option<Objective> {
         self.objective
+    }
+
+    /// The per-transition discount filler, if set.
+    pub(crate) fn discount_filler_value(&self) -> Option<&DiscountFn> {
+        self.discount_filler.as_ref()
+    }
+
+    /// The one discount-filler conflict check, shared by
+    /// [`Self::build_serial`] and `api::run_solve`: the filler belongs to
+    /// closure sources, and it is mutually exclusive with any scalar gamma
+    /// (`db_gamma` covers the options database's `-gamma`).
+    pub(crate) fn validate_discount_filler(
+        &self,
+        source: &Source,
+        db_gamma: bool,
+    ) -> Result<(), ApiError> {
+        if self.discount_filler.is_none() {
+            return Ok(());
+        }
+        if !matches!(source, Source::Fillers { .. }) {
+            return Err(ApiError(
+                "discount_filler applies to closure (filler) sources only; \
+                 files carry their discounts in the header and models define their own"
+                    .into(),
+            ));
+        }
+        if db_gamma || self.gamma.is_some() {
+            return Err(ApiError(
+                "discount_filler supplies γ(s,a) directly; a scalar gamma conflicts with it"
+                    .into(),
+            ));
+        }
+        Ok(())
     }
 
     /// The single configured source — errors on zero or conflicting
@@ -211,6 +266,7 @@ impl MdpBuilder {
     /// distributed path hand the builder to a [`crate::api::Solver`]).
     pub fn build_serial(&self) -> Result<Mdp, ApiError> {
         let source = self.resolved_source()?;
+        self.validate_discount_filler(source, false)?;
         match source {
             Source::File(path) => {
                 if self.gamma.is_some() || self.objective.is_some() {
@@ -223,9 +279,10 @@ impl MdpBuilder {
             }
             Source::Model(generator) => {
                 let gamma = validate_gamma(self.gamma.unwrap_or(0.99))?;
-                Ok(generator
-                    .build_serial(gamma)
-                    .with_objective(self.objective.unwrap_or_default()))
+                generator
+                    .try_build_serial(gamma)
+                    .map(|m| m.with_objective(self.objective.unwrap_or_default()))
+                    .map_err(ApiError)
             }
             Source::Fillers {
                 n_states,
@@ -233,6 +290,18 @@ impl MdpBuilder {
                 prob,
                 cost,
             } => {
+                if let Some(disc) = &self.discount_filler {
+                    // gamma conflicts were rejected by validate_discount_filler
+                    return Mdp::try_from_fillers_semi(
+                        *n_states,
+                        *n_actions,
+                        |s, a| disc(s, a),
+                        |s, a| prob(s, a),
+                        |s, a| cost(s, a),
+                    )
+                    .map(|m| m.with_objective(self.objective.unwrap_or_default()))
+                    .map_err(ApiError);
+                }
                 let gamma = validate_gamma(self.gamma.unwrap_or(0.99))?;
                 Mdp::try_from_fillers(
                     *n_states,
@@ -306,6 +375,11 @@ pub const MODEL_CATALOG: &[ModelInfo] = &[
         name: "replacement",
         params: "-num_states 50",
         about: "machine replacement (aging cost vs replacement)",
+    },
+    ModelInfo {
+        name: "maintenance",
+        params: "-num_states 50",
+        about: "semi-MDP machine maintenance (exponential sojourns, per-(s,a) discounts)",
     },
 ];
 
@@ -387,6 +461,11 @@ pub fn model_from_options(
             let num_states = db.get_usize("num_states", 50)?;
             require(num_states >= 3, "replacement needs -num_states >= 3")?;
             Arc::new(ReplacementSpec::standard(num_states))
+        }
+        "maintenance" => {
+            let num_states = db.get_usize("num_states", 50)?;
+            require(num_states >= 3, "maintenance needs -num_states >= 3")?;
+            Arc::new(MaintenanceSpec::standard(num_states))
         }
         other => {
             let names: Vec<&str> = MODEL_CATALOG.iter().map(|m| m.name).collect();

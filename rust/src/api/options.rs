@@ -15,7 +15,7 @@
 
 use crate::ksp::precond::PcType;
 use crate::ksp::KspType;
-use crate::mdp::Objective;
+use crate::mdp::{DiscountMode, Objective};
 use crate::solver::{EvalBackend, Method, SolveOptions};
 use crate::util::args::Options;
 
@@ -128,6 +128,14 @@ pub const OPTION_TABLE: &[OptionSpec] = &[
         key: "objective",
         value: "min|mincost|max|maxreward",
         help: "optimization sense (model sources only; .mdpb carries its own)",
+        scope: OptionScope::Common,
+    },
+    OptionSpec {
+        key: "discount_mode",
+        value: "auto|scalar|per_state|per_state_action",
+        help: "discount representation: auto follows the source (semi-MDP models \
+                use per-(s,a) factors); vector modes expand a scalar model or \
+                closure source to a constant vector (.mdpb carries its own)",
         scope: OptionScope::Common,
     },
     OptionSpec {
@@ -468,6 +476,44 @@ pub fn resolve_gamma(db: &Options, fallback: Option<f64>) -> Result<f64, ApiErro
     crate::mdp::validate_gamma(gamma).map_err(ApiError)
 }
 
+/// Resolve `-discount_mode`: `None` means `auto` (follow the source — a
+/// semi-MDP model or a `discount_filler` yields per-state-action factors,
+/// everything else the scalar); `Some(mode)` forces the representation.
+/// Forcing a vector mode on a scalar source expands it to a constant
+/// vector, which solves bitwise identically — the CLI-visible form of the
+/// scalar↔vector equivalence invariant (and the overhead-ablation knob in
+/// `bench_kernels`). Unknown values are typed errors with a did-you-mean
+/// suggestion.
+pub fn resolve_discount_mode(db: &Options) -> Result<Option<DiscountMode>, ApiError> {
+    match db.get("discount_mode") {
+        None | Some("auto") => Ok(None),
+        Some(name) => DiscountMode::parse(name).map(Some).map_err(|e| {
+            with_value_suggestion(e, name, &["auto", "scalar", "per_state", "per_state_action"])
+        }),
+    }
+}
+
+/// Reject a `-discount_mode` that would narrow a semi-MDP source: a model
+/// with per-state-action factors cannot be represented as scalar or
+/// per-state without solving/generating a *different* model. One shared
+/// rule for `run_solve` and the CLI `generate` command; `verb` names the
+/// action for the error text.
+pub fn check_discount_narrowing(
+    dmode: Option<DiscountMode>,
+    has_discounts: bool,
+    verb: &str,
+) -> Result<(), ApiError> {
+    if has_discounts && matches!(dmode, Some(DiscountMode::Scalar) | Some(DiscountMode::PerState)) {
+        return Err(ApiError(format!(
+            "this model defines per-state-action discounts (a semi-MDP); \
+             -discount_mode {} would {verb} a different model — use auto or \
+             per_state_action",
+            dmode.unwrap().name()
+        )));
+    }
+    Ok(())
+}
+
 /// Resolve the optimization sense: `-objective` wins over the builder-level
 /// `fallback`, default min-cost.
 pub fn resolve_objective(db: &Options, fallback: Option<Objective>) -> Result<Objective, ApiError> {
@@ -622,6 +668,34 @@ mod tests {
         assert!(resolve_solve_options(&db(&["-max_iter_ksp", "0"])).is_err());
         let so = resolve_solve_options(&db(&["-adaptive_forcing", "-verbose"])).unwrap();
         assert!(so.adaptive_forcing && so.verbose);
+    }
+
+    #[test]
+    fn discount_mode_resolution() {
+        assert_eq!(resolve_discount_mode(&db(&[])).unwrap(), None);
+        assert_eq!(
+            resolve_discount_mode(&db(&["-discount_mode", "auto"])).unwrap(),
+            None
+        );
+        assert_eq!(
+            resolve_discount_mode(&db(&["-discount_mode", "scalar"])).unwrap(),
+            Some(DiscountMode::Scalar)
+        );
+        assert_eq!(
+            resolve_discount_mode(&db(&["-discount_mode", "per_state"])).unwrap(),
+            Some(DiscountMode::PerState)
+        );
+        assert_eq!(
+            resolve_discount_mode(&db(&["-discount_mode", "per-state-action"])).unwrap(),
+            Some(DiscountMode::PerStateAction)
+        );
+        // bad values are typed errors with a did-you-mean suggestion
+        let err = resolve_discount_mode(&db(&["-discount_mode", "scalr"])).unwrap_err();
+        assert!(err.0.contains("scalar"), "{err}");
+        // ...and the key itself round-trips through validate_keys
+        assert!(validate_keys(&db(&["-discount_mode", "auto"])).is_ok());
+        let err = check_key("discount_mod").unwrap_err();
+        assert!(err.0.contains("discount_mode"), "{err}");
     }
 
     #[test]

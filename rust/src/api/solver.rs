@@ -9,7 +9,7 @@
 //! produce byte-identical metadata JSON for the same option set.
 
 use crate::comm::World;
-use crate::mdp::{io, DistMdp, Objective};
+use crate::mdp::{io, DiscountMode, DistMdp, Objective};
 use crate::solver::{gather_result, solve_dist, SolveOptions, SolveResult};
 use crate::util::args::Options;
 use crate::util::json::Json;
@@ -137,15 +137,20 @@ impl Solver {
         // selection keys are CLI defaults and do not apply here.
         parsed.take("model");
         parsed.take("file");
-        // Env-layer gamma/objective are *defaults*: they yield silently
-        // whenever the builder already carries a value — a .mdpb header
-        // (file source) or a programmatic .gamma()/.objective() call.
+        // Env-layer gamma/objective/discount_mode are *defaults*: they
+        // yield silently whenever the builder already carries a value — a
+        // .mdpb header (file source), a programmatic .gamma()/.objective()
+        // call, or a discount_filler (which fixes the representation).
         let source_is_file = matches!(self.builder.resolved_source(), Ok(Source::File(_)));
-        if source_is_file || self.builder.gamma_value().is_some() {
+        let has_filler = self.builder.discount_filler_value().is_some();
+        if source_is_file || has_filler || self.builder.gamma_value().is_some() {
             parsed.take("gamma");
         }
         if source_is_file || self.builder.objective_value().is_some() {
             parsed.take("objective");
+        }
+        if source_is_file || has_filler {
+            parsed.take("discount_mode");
         }
         // Mirror the CLI: -options_file is consumed here, layered between
         // the env options and everything already set.
@@ -198,6 +203,39 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
     let threads = options::resolve_threads(db)?;
     crate::util::par::set_threads(threads);
     let source = builder.resolved_source()?.clone();
+    let discount_filler = builder.discount_filler_value().cloned();
+    let dmode = options::resolve_discount_mode(db)?;
+
+    // Discount-source conflicts (all typed errors, checked before the
+    // world spawns): the filler closure belongs to closure sources and
+    // excludes any scalar gamma (one shared check with the builder), a
+    // .mdpb carries its own representation, and a semi-MDP's per-(s,a)
+    // factors cannot be narrowed to scalar/per-state without solving a
+    // different model.
+    builder.validate_discount_filler(&source, db.has("gamma"))?;
+    match &source {
+        Source::File(path) => {
+            if dmode.is_some() {
+                return Err(ApiError(format!(
+                    "the discount representation comes from the .mdpb header of \
+                     '{path}'; drop -discount_mode"
+                )));
+            }
+        }
+        Source::Model(generator) => {
+            options::check_discount_narrowing(dmode, generator.has_discounts(), "solve")?;
+        }
+        _ => {}
+    }
+    if discount_filler.is_some()
+        && matches!(dmode, Some(DiscountMode::Scalar) | Some(DiscountMode::PerState))
+    {
+        return Err(ApiError(format!(
+            "discount_filler produces per-state-action discounts; \
+             -discount_mode {} conflicts with it",
+            dmode.unwrap().name()
+        )));
+    }
 
     // gamma/objective: for model/closure sources they resolve from the
     // database (falling back to the builder, then defaults); a .mdpb file
@@ -216,6 +254,11 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
             }
             (0.0, Objective::Min) // placeholders; the header supplies both
         }
+        _ if discount_filler.is_some() => (
+            // the filler supplies γ(s,a); no scalar gamma participates
+            0.0,
+            options::resolve_objective(db, builder.objective_value())?,
+        ),
         _ => (
             options::resolve_gamma(db, builder.gamma_value())?,
             options::resolve_objective(db, builder.objective_value())?,
@@ -223,33 +266,81 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
     };
 
     let so = solve_opts.clone();
-    type RankOut = Result<(SolveResult, usize, f64, Objective), String>;
+    type RankOut = Result<(SolveResult, usize, f64, Objective, DiscountMode), String>;
     let results: Vec<RankOut> = World::run(ranks, move |comm| {
         let mdp: DistMdp = match &source {
             Source::File(path) => io::load_dist(&comm, path.as_str())
                 .map_err(|e| format!("loading {path}: {e}"))?,
             Source::Model(generator) => {
-                generator.build_dist(&comm, gamma).with_objective(objective)
+                match dmode {
+                    // Force a vector representation of a scalar-discount
+                    // model: a rank-local constant expansion, bitwise
+                    // equivalent by the Discount invariant (the CLI-visible
+                    // ablation knob) and O(local rows) in memory.
+                    Some(mode) if mode != DiscountMode::Scalar && !generator.has_discounts() => {
+                        DistMdp::try_from_fillers_constant(
+                            &comm,
+                            generator.n_states(),
+                            generator.n_actions(),
+                            mode,
+                            gamma,
+                            |s, a| generator.prob_row(s, a),
+                            |s, a| generator.cost(s, a),
+                        )?
+                        .with_objective(objective)
+                    }
+                    // fallible build: a semi-MDP generator can reject
+                    // extreme gammas (effective factor rounding to 1.0) —
+                    // typed error on every rank, not a world panic
+                    _ => generator
+                        .try_build_dist(&comm, gamma)?
+                        .with_objective(objective),
+                }
             }
             Source::Fillers {
                 n_states,
                 n_actions,
                 prob,
                 cost,
-            } => DistMdp::try_from_fillers(
-                &comm,
-                *n_states,
-                *n_actions,
-                gamma,
-                |s, a| prob(s, a),
-                |s, a| cost(s, a),
-            )?
-            .with_objective(objective),
+            } => {
+                if let Some(disc) = &discount_filler {
+                    DistMdp::try_from_fillers_semi(
+                        &comm,
+                        *n_states,
+                        *n_actions,
+                        |s, a| disc(s, a),
+                        |s, a| prob(s, a),
+                        |s, a| cost(s, a),
+                    )?
+                    .with_objective(objective)
+                } else if let Some(mode) = dmode.filter(|&m| m != DiscountMode::Scalar) {
+                    DistMdp::try_from_fillers_constant(
+                        &comm,
+                        *n_states,
+                        *n_actions,
+                        mode,
+                        gamma,
+                        |s, a| prob(s, a),
+                        |s, a| cost(s, a),
+                    )?
+                    .with_objective(objective)
+                } else {
+                    DistMdp::try_from_fillers(
+                        &comm,
+                        *n_states,
+                        *n_actions,
+                        gamma,
+                        |s, a| prob(s, a),
+                        |s, a| cost(s, a),
+                    )?
+                    .with_objective(objective)
+                }
+            }
         };
         let local = solve_dist(&comm, &mdp, &so);
-        let shape = (mdp.n_actions(), mdp.gamma(), mdp.objective());
+        let shape = (mdp.n_actions(), mdp.gamma(), mdp.objective(), mdp.discount().mode());
         let global = gather_result(&comm, local);
-        Ok((global, shape.0, shape.1, shape.2))
+        Ok((global, shape.0, shape.1, shape.2, shape.3))
     });
 
     // Per-rank results agree (collective error agreement inside the world):
@@ -265,13 +356,14 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
             }
         }
     }
-    let (result, n_actions, gamma, objective) =
+    let (result, n_actions, gamma, objective, discount_mode) =
         gathered.expect("world returns at least one rank");
     let outcome = SolveOutcome {
         n_states: result.value.len(),
         n_actions,
         gamma,
         objective,
+        discount_mode,
         options: solve_opts,
         ranks,
         threads,
@@ -308,9 +400,13 @@ pub struct SolveOutcome {
     pub n_states: usize,
     /// Action count of the solved MDP.
     pub n_actions: usize,
-    /// Discount factor actually solved with (from the options database,
-    /// the builder, or the `.mdpb` header).
+    /// Uniform discount bound actually solved with — the scalar γ for
+    /// classic MDPs, `max γ(s,a)` for semi-MDPs (from the options
+    /// database, the builder, the model, or the `.mdpb` header).
     pub gamma: f64,
+    /// Discount representation actually solved with
+    /// (scalar / per-state / per-state-action).
+    pub discount_mode: DiscountMode,
     /// Optimization sense actually solved with.
     pub objective: Objective,
     /// The resolved solver options (method, backend, tolerances).
@@ -346,6 +442,7 @@ impl SolveOutcome {
                     ("n_states", Json::int(self.n_states as i64)),
                     ("n_actions", Json::int(self.n_actions as i64)),
                     ("gamma", Json::num(self.gamma)),
+                    ("discount_mode", Json::str(self.discount_mode.name())),
                     ("objective", Json::str(self.objective.name())),
                 ]),
             ),

@@ -23,8 +23,16 @@ pub struct NestedVecMdp {
 
 impl NestedVecMdp {
     /// Convert from the madupite representation (what a user migrating
-    /// between the tools would do).
+    /// between the tools would do). Scalar-discount MDPs only: the
+    /// baseline models one γ, so a semi-MDP ([`crate::mdp::Discount`]
+    /// vector modes) would be silently collapsed to its bound — refused
+    /// loudly instead.
     pub fn from_mdp(mdp: &Mdp) -> NestedVecMdp {
+        assert!(
+            mdp.discount().as_scalar().is_some(),
+            "baseline solvers support scalar discounting only (got {})",
+            mdp.discount().mode().name()
+        );
         let (n, m) = (mdp.n_states(), mdp.n_actions());
         let mut transitions = Vec::with_capacity(n);
         let mut costs = Vec::with_capacity(n);

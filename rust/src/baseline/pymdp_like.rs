@@ -23,8 +23,16 @@ pub struct DenseMdp {
 }
 
 impl DenseMdp {
-    /// Densify a sparse [`Mdp`] into the baseline layout.
+    /// Densify a sparse [`Mdp`] into the baseline layout. Scalar-discount
+    /// MDPs only: the baseline algorithms model one γ, so a semi-MDP
+    /// ([`crate::mdp::Discount`] vector modes) would be silently collapsed
+    /// to its bound — refused loudly instead.
     pub fn from_mdp(mdp: &Mdp) -> DenseMdp {
+        assert!(
+            mdp.discount().as_scalar().is_some(),
+            "baseline solvers support scalar discounting only (got {})",
+            mdp.discount().mode().name()
+        );
         let (n, m) = (mdp.n_states(), mdp.n_actions());
         let mut p = Vec::with_capacity(m);
         let mut costs = Vec::with_capacity(m);

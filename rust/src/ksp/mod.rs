@@ -90,11 +90,17 @@ pub trait Apply {
     }
 }
 
-/// The linear operator `A = I − γ P` over an **assembled** distributed
-/// policy-transition matrix (the `Assembled` evaluation backend).
+/// The linear operator `A = I − diag(γ) P` over an **assembled**
+/// distributed policy-transition matrix (the `Assembled` evaluation
+/// backend). `γ` is either one scalar (classic discounting) or a
+/// per-local-row factor vector (`γ_π` for semi-MDPs, see
+/// [`crate::mdp::Discount`]); a constant vector applies bit-identically
+/// to the scalar because both paths multiply the same f64 per row.
 pub struct LinOp<'a> {
     p: &'a DistCsr,
     gamma: f64,
+    /// Per-local-row discounts `γ_π(s)`; overrides `gamma` when set.
+    row_discounts: Option<&'a [f64]>,
 }
 
 impl<'a> LinOp<'a> {
@@ -105,7 +111,40 @@ impl<'a> LinOp<'a> {
             p.col_partition().local_len(p.rank()),
             "LinOp requires a square (state × state) policy matrix"
         );
-        LinOp { p, gamma }
+        LinOp {
+            p,
+            gamma,
+            row_discounts: None,
+        }
+    }
+
+    /// Operator `I − diag(γ_π) P` with one discount factor per local row
+    /// (the assembled policy system of a semi-MDP).
+    pub fn with_row_discounts(p: &'a DistCsr, discounts: &'a [f64]) -> Self {
+        assert_eq!(
+            p.local_nrows(),
+            p.col_partition().local_len(p.rank()),
+            "LinOp requires a square (state × state) policy matrix"
+        );
+        assert_eq!(
+            discounts.len(),
+            p.local_nrows(),
+            "row discounts must cover the local rows"
+        );
+        LinOp {
+            p,
+            gamma: 0.0,
+            row_discounts: Some(discounts),
+        }
+    }
+
+    /// The discount factor applied to local row `i`.
+    #[inline]
+    fn gamma_row(&self, i: usize) -> f64 {
+        match self.row_discounts {
+            Some(g) => g[i],
+            None => self.gamma,
+        }
     }
 
     /// Local diagonal of A as a vector (convenience over [`Apply::diag`]).
@@ -131,15 +170,24 @@ impl Apply for LinOp<'_> {
 
     fn apply(&self, comm: &Comm, x: &[f64], y: &mut [f64], buf: &mut GhostBuf) {
         self.p.spmv(comm, x, y, buf);
-        for (yi, xi) in y.iter_mut().zip(x) {
-            *yi = xi - self.gamma * *yi;
+        match self.row_discounts {
+            None => {
+                for (yi, xi) in y.iter_mut().zip(x) {
+                    *yi = xi - self.gamma * *yi;
+                }
+            }
+            Some(g) => {
+                for (i, (yi, xi)) in y.iter_mut().zip(x).enumerate() {
+                    *yi = xi - g[i] * *yi;
+                }
+            }
         }
     }
 
     fn diag(&self, out: &mut [f64]) {
         let local = self.p.local();
         for (i, o) in out.iter_mut().enumerate() {
-            *o = 1.0 - self.gamma * local.get(i, i);
+            *o = 1.0 - self.gamma_row(i) * local.get(i, i);
         }
     }
 
@@ -149,10 +197,11 @@ impl Apply for LinOp<'_> {
         let mut rows: Vec<Vec<(usize, f64)>> = Vec::with_capacity(nl);
         for i in 0..nl {
             let (cols, vals) = p_local.row(i);
+            let gamma = self.gamma_row(i);
             let mut row: Vec<(usize, f64)> = vec![(i, 1.0)];
             for (&c, &v) in cols.iter().zip(vals) {
                 if c < nl {
-                    row.push((c, -self.gamma * v));
+                    row.push((c, -gamma * v));
                 }
             }
             rows.push(row);
@@ -167,10 +216,11 @@ impl Apply for LinOp<'_> {
         (0..nl)
             .map(|i| {
                 let (cols, vals) = local.row(i);
+                let gamma = self.gamma_row(i);
                 let mut row: Vec<(usize, f64)> = Vec::with_capacity(cols.len() + 1);
                 row.push((lo + i, 1.0));
                 for (&c, &v) in cols.iter().zip(vals) {
-                    row.push((self.p.global_col(c), -self.gamma * v));
+                    row.push((self.p.global_col(c), -gamma * v));
                 }
                 row
             })

@@ -36,5 +36,17 @@ pub mod runtime;
 pub mod solver;
 pub mod util;
 
+/// Narrative documentation, compiled and executed in CI.
+pub mod docs {
+    //! The long-form docs live as markdown under `docs/` and are included
+    //! here so every Rust code block is a doctest: `cargo test --doc`
+    //! runs the guide's examples, and the `docs_guide` integration test
+    //! pins its options table against [`crate::api::options::OPTION_TABLE`]
+    //! — the documentation cannot rot.
+
+    #[doc = include_str!("../../docs/guide.md")]
+    pub mod guide {}
+}
+
 /// Crate version (mirrors Cargo.toml).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -21,7 +21,7 @@
 
 use madupite::api::options::{OptionScope, OPTION_TABLE};
 use madupite::api::{self, MdpBuilder};
-use madupite::mdp::io;
+use madupite::mdp::{io, DiscountMode};
 use madupite::util::args::Options;
 use std::sync::Arc;
 
@@ -79,10 +79,12 @@ fn assemble_options() -> Result<Options, String> {
     let cli_options_file = cli.take("options_file");
     let env_options_file = env_opts.take("options_file");
     let options_file = cli_options_file.or(env_options_file);
-    // Track whether gamma/objective/model were given *explicitly* (CLI or
-    // options file) before the layers are flattened — see below.
+    // Track whether gamma/objective/discount_mode/model were given
+    // *explicitly* (CLI or options file) before the layers are flattened —
+    // see below.
     let mut explicit_gamma = cli.keys().any(|k| k == "gamma");
     let mut explicit_objective = cli.keys().any(|k| k == "objective");
+    let mut explicit_discount_mode = cli.keys().any(|k| k == "discount_mode");
     let mut explicit_model = cli.keys().any(|k| k == "model");
     let mut layers = env_opts;
     if let Some(path) = options_file {
@@ -95,16 +97,18 @@ fn assemble_options() -> Result<Options, String> {
         }
         explicit_gamma |= file_opts.keys().any(|k| k == "gamma");
         explicit_objective |= file_opts.keys().any(|k| k == "objective");
+        explicit_discount_mode |= file_opts.keys().any(|k| k == "discount_mode");
         explicit_model |= file_opts.keys().any(|k| k == "model");
         layers = layers.merge(file_opts);
     }
     let mut opts = layers.merge(cli);
-    // A .mdpb source carries gamma/objective in its header and *is* the
-    // model. Env-layer defaults for -gamma/-objective/-model are meant for
-    // model-source runs, so for -file solves they silently yield; only
-    // *explicit* values (CLI or options file) stay in the database and
-    // conflict loudly downstream. (generate's -file is an output path —
-    // env defaults stay meaningful there.)
+    // A .mdpb source carries gamma/objective/discount mode in its header
+    // and *is* the model. Env-layer defaults for
+    // -gamma/-objective/-discount_mode/-model are meant for model-source
+    // runs, so for -file solves they silently yield; only *explicit*
+    // values (CLI or options file) stay in the database and conflict
+    // loudly downstream. (generate's -file is an output path — env
+    // defaults stay meaningful there.)
     let file_solve = opts.positional().first().map(String::as_str) == Some("solve")
         && opts.keys().any(|k| k == "file");
     if file_solve {
@@ -113,6 +117,9 @@ fn assemble_options() -> Result<Options, String> {
         }
         if !explicit_objective {
             opts.take("objective");
+        }
+        if !explicit_discount_mode {
+            opts.take("discount_mode");
         }
         if !explicit_model {
             opts.take("model");
@@ -213,6 +220,9 @@ fn cmd_generate(opts: &Options) -> Result<(), String> {
     let generator = api::model_from_options(&model, opts).map_err(err_str)?;
     let gamma = api::options::resolve_gamma(opts, None).map_err(err_str)?;
     let objective = api::options::resolve_objective(opts, None).map_err(err_str)?;
+    let dmode = api::options::resolve_discount_mode(opts).map_err(err_str)?;
+    api::options::check_discount_narrowing(dmode, generator.has_discounts(), "generate")
+        .map_err(err_str)?;
     let ranks = opts.get_usize("ranks", 1).map_err(err_str)?;
     if ranks == 0 {
         return Err("-ranks must be >= 1".into());
@@ -227,18 +237,31 @@ fn cmd_generate(opts: &Options) -> Result<(), String> {
         .get("file")
         .ok_or("generate requires -file <out.mdpb>")?
         .to_string();
-    // Streaming v2 pipeline: rank-local blocks go straight from the
+    // Streaming v3 pipeline: rank-local blocks go straight from the
     // generator to disk, O(chunk) memory — never a full in-memory Mdp.
+    // A forced vector -discount_mode on a scalar model streams a constant
+    // payload (bitwise-equivalent to the scalar on solve).
     let t0 = std::time::Instant::now();
     let path = Arc::new(file.clone());
     let results = madupite::comm::World::run(ranks, move |comm| {
-        generator.write_mdpb(
-            &comm,
-            gamma,
-            objective,
-            std::path::Path::new(path.as_str()),
-            chunk_rows,
-        )
+        let p = std::path::Path::new(path.as_str());
+        match dmode {
+            Some(mode) if mode != DiscountMode::Scalar && !generator.has_discounts() => {
+                io::write_streaming_constant(
+                    &comm,
+                    p,
+                    generator.n_states(),
+                    generator.n_actions(),
+                    mode,
+                    gamma,
+                    objective,
+                    chunk_rows,
+                    |s, a| generator.prob_row(s, a),
+                    |s, a| generator.cost(s, a),
+                )
+            }
+            _ => generator.write_mdpb(&comm, gamma, objective, p, chunk_rows),
+        }
     });
     // every rank writes its own block — any rank failing means the file
     // is incomplete, so surface the first per-rank error
@@ -248,12 +271,13 @@ fn cmd_generate(opts: &Options) -> Result<(), String> {
     }
     let h = header.expect("world has at least one rank");
     println!(
-        "wrote {file}: {} states × {} actions, nnz={}, gamma={}, objective={} \
-         (v{}, {} ranks, {:.3}s)",
+        "wrote {file}: {} states × {} actions, nnz={}, gamma={}, discount={}, \
+         objective={} (v{}, {} ranks, {:.3}s)",
         h.n_states,
         h.n_actions,
         h.nnz,
         h.gamma,
+        h.discount_mode.name(),
         h.objective.name(),
         h.version,
         ranks,
@@ -270,12 +294,13 @@ fn cmd_info(opts: &Options) -> Result<(), String> {
     let h = io::read_header(&mut f).map_err(err_str)?;
     h.validate_file_len(file_len).map_err(err_str)?;
     println!(
-        "{file}: v{} n_states={} n_actions={} gamma={} objective={} nnz={} \
-         ({:.2} per row, {} bytes)",
+        "{file}: v{} n_states={} n_actions={} gamma={} discount={} objective={} \
+         nnz={} ({:.2} per row, {} bytes)",
         h.version,
         h.n_states,
         h.n_actions,
         h.gamma,
+        h.discount_mode.name(),
         h.objective.name(),
         h.nnz,
         h.nnz as f64 / (h.n_states * h.n_actions) as f64,

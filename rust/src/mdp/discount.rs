@@ -1,0 +1,342 @@
+//! Generalized discounting — the semi-MDP layer (DESIGN.md §12).
+//!
+//! madupite's companion paper ("Inside madupite") supports state- and
+//! state-action-dependent discount factors, which is exactly what makes the
+//! solver applicable to **semi-MDPs**: when the sojourn time in state `s`
+//! under action `a` is random (e.g. exponential with rate `r(s,a)` in a
+//! maintenance or queueing system), discounting at continuous rate `ρ`
+//! yields a per-transition *effective* discount
+//! `γ(s,a) = E[e^{−ρτ}] = r(s,a) / (r(s,a) + ρ)` — a number in `[0, 1)`
+//! that differs per transition. The Bellman operator becomes
+//!
+//! ```text
+//! (TV)(s) = opt_a [ g(s,a) + γ(s,a) · Σ_{s'} P(s'|s,a) V(s') ]
+//! ```
+//!
+//! and policy evaluation solves `(I − diag(γ_π) P_π) V = g_π`. Everything
+//! else — contraction (modulus `max γ(s,a)`), the Krylov machinery, the
+//! matrix-free fused operator — carries over unchanged.
+//!
+//! [`Discount`] is the one representation threaded through every layer:
+//! [`crate::mdp::Mdp`]/[`crate::mdp::DistMdp`] storage and backups, the
+//! policy-evaluation operators ([`crate::mdp::MatFreePolicyOp`],
+//! [`crate::ksp::LinOp`]), the `.mdpb` v3 on-disk format and the options
+//! database (`-discount_mode`). The load-bearing invariant, pinned by
+//! `tests/discount.rs`: `Discount::Scalar(g)` and a constant
+//! per-state(-action) vector filled with `g` produce **bitwise identical**
+//! values, policies and residual traces — every kernel reads the effective
+//! per-row factor through [`Discount::at_row`] and then runs the exact same
+//! arithmetic, so the representation can never change the numbers.
+
+use super::validate_gamma;
+
+/// The representation of the discount factor (`-discount_mode`) — how many
+/// entries back an MDP's discounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum DiscountMode {
+    /// One global scalar γ (the classic discounted MDP).
+    #[default]
+    Scalar,
+    /// One factor per state: γ(s) (`n` entries).
+    PerState,
+    /// One factor per state-action pair: γ(s,a) (`n·m` entries, row-aligned
+    /// with the stacked `(n·m) × n` transition kernel) — the semi-MDP case.
+    PerStateAction,
+}
+
+impl DiscountMode {
+    /// Parse the `-discount_mode` option string.
+    pub fn parse(name: &str) -> Result<DiscountMode, String> {
+        match name {
+            "scalar" => Ok(DiscountMode::Scalar),
+            "per_state" | "per-state" => Ok(DiscountMode::PerState),
+            "per_state_action" | "per-state-action" => Ok(DiscountMode::PerStateAction),
+            other => Err(format!("unknown discount_mode '{other}'")),
+        }
+    }
+
+    /// Canonical option-string form (inverse of [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DiscountMode::Scalar => "scalar",
+            DiscountMode::PerState => "per_state",
+            DiscountMode::PerStateAction => "per_state_action",
+        }
+    }
+
+    /// The `.mdpb` v3 header code (0/1/2).
+    pub fn code(&self) -> u64 {
+        match self {
+            DiscountMode::Scalar => 0,
+            DiscountMode::PerState => 1,
+            DiscountMode::PerStateAction => 2,
+        }
+    }
+
+    /// Decode a `.mdpb` v3 header code.
+    pub fn from_code(code: u64) -> Result<DiscountMode, String> {
+        match code {
+            0 => Ok(DiscountMode::Scalar),
+            1 => Ok(DiscountMode::PerState),
+            2 => Ok(DiscountMode::PerStateAction),
+            other => Err(format!("invalid discount_mode code {other}")),
+        }
+    }
+
+    /// Number of f64 entries the discount payload of this mode stores for
+    /// an `n × m` MDP (0 for scalar — the header's `gamma` field carries it).
+    pub fn payload_len(&self, n_states: usize, n_actions: usize) -> usize {
+        match self {
+            DiscountMode::Scalar => 0,
+            DiscountMode::PerState => n_states,
+            DiscountMode::PerStateAction => n_states * n_actions,
+        }
+    }
+}
+
+/// Discount factors of an MDP: one scalar, one per state, or one per
+/// state-action pair (semi-MDPs). See the module docs for the semantics;
+/// every entry must be finite and in `[0, 1)` ([`Self::validate`]).
+///
+/// In a [`crate::mdp::DistMdp`] the vector variants hold the **rank-local
+/// slice** (states `[lo, hi)` of the partition), aligned with the local
+/// cost table; indexing through [`Self::at`]/[`Self::at_row`] therefore
+/// works identically for global (serial) and local (distributed) objects.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Discount {
+    /// One global γ ∈ [0, 1).
+    Scalar(f64),
+    /// γ(s), one entry per (owned) state.
+    PerState(Vec<f64>),
+    /// γ(s,a), row-aligned with the stacked transition kernel:
+    /// entry `s·m + a`.
+    PerStateAction(Vec<f64>),
+}
+
+impl Discount {
+    /// A constant discount in the requested representation — `gamma`
+    /// replicated over however many entries `mode` stores for an
+    /// `n_states × n_actions` MDP. By the bitwise-equivalence invariant
+    /// this solves identically to `Discount::Scalar(gamma)` in every
+    /// method, backend and world shape.
+    pub fn constant(mode: DiscountMode, gamma: f64, n_states: usize, n_actions: usize) -> Discount {
+        match mode {
+            DiscountMode::Scalar => Discount::Scalar(gamma),
+            DiscountMode::PerState => Discount::PerState(vec![gamma; n_states]),
+            DiscountMode::PerStateAction => {
+                Discount::PerStateAction(vec![gamma; n_states * n_actions])
+            }
+        }
+    }
+
+    /// The representation this object uses.
+    pub fn mode(&self) -> DiscountMode {
+        match self {
+            Discount::Scalar(_) => DiscountMode::Scalar,
+            Discount::PerState(_) => DiscountMode::PerState,
+            Discount::PerStateAction(_) => DiscountMode::PerStateAction,
+        }
+    }
+
+    /// The scalar γ, when this is the scalar representation.
+    pub fn as_scalar(&self) -> Option<f64> {
+        match self {
+            Discount::Scalar(g) => Some(*g),
+            _ => None,
+        }
+    }
+
+    /// The raw vector entries (None for the scalar representation).
+    pub fn entries(&self) -> Option<&[f64]> {
+        match self {
+            Discount::Scalar(_) => None,
+            Discount::PerState(v) | Discount::PerStateAction(v) => Some(v),
+        }
+    }
+
+    /// Validate every entry through the one crate-wide gamma check
+    /// (finite, in `[0, 1)`) and the vector length against the MDP shape.
+    /// The first offending entry is named — out-of-range, non-finite and
+    /// wrong-length inputs are all typed errors here, never downstream
+    /// panics.
+    pub fn validate(&self, n_states: usize, n_actions: usize) -> Result<(), String> {
+        match self {
+            Discount::Scalar(g) => validate_gamma(*g).map(|_| ()),
+            Discount::PerState(v) => {
+                if v.len() != n_states {
+                    return Err(format!(
+                        "per-state discount vector has {} entries, expected n_states = {}",
+                        v.len(),
+                        n_states
+                    ));
+                }
+                for (s, &g) in v.iter().enumerate() {
+                    validate_gamma(g).map_err(|e| format!("discount at state {s}: {e}"))?;
+                }
+                Ok(())
+            }
+            Discount::PerStateAction(v) => {
+                if v.len() != n_states * n_actions {
+                    return Err(format!(
+                        "per-state-action discount vector has {} entries, \
+                         expected n_states * n_actions = {}",
+                        v.len(),
+                        n_states * n_actions
+                    ));
+                }
+                for (row, &g) in v.iter().enumerate() {
+                    validate_gamma(g).map_err(|e| {
+                        format!("discount at (s={}, a={}): {e}", row / n_actions, row % n_actions)
+                    })?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Effective discount of the (state, action) pair. `s` is a global
+    /// state index on serial objects and a local one on rank-local slices.
+    #[inline]
+    pub fn at(&self, s: usize, a: usize, n_actions: usize) -> f64 {
+        match self {
+            Discount::Scalar(g) => *g,
+            Discount::PerState(v) => v[s],
+            Discount::PerStateAction(v) => v[s * n_actions + a],
+        }
+    }
+
+    /// Effective discount of stacked transition row `row = s·m + a`
+    /// (local row on rank-local slices).
+    #[inline]
+    pub fn at_row(&self, row: usize, n_actions: usize) -> f64 {
+        match self {
+            Discount::Scalar(g) => *g,
+            Discount::PerState(v) => v[row / n_actions],
+            Discount::PerStateAction(v) => v[row],
+        }
+    }
+
+    /// Uniform upper bound `γ̄ = max γ(s,a)` — the contraction modulus of
+    /// the generalized Bellman operator (used by the suboptimality
+    /// certificate `‖V − V*‖∞ ≤ residual / (1 − γ̄)`). Equals the scalar
+    /// for classic MDPs.
+    pub fn max_gamma(&self) -> f64 {
+        match self {
+            Discount::Scalar(g) => *g,
+            Discount::PerState(v) | Discount::PerStateAction(v) => {
+                v.iter().copied().fold(0.0, f64::max)
+            }
+        }
+    }
+
+    /// The sub-slice owned by states `[lo, hi)` — how a validated global
+    /// discount is distributed across ranks (scalar stays scalar).
+    pub fn slice_states(&self, lo: usize, hi: usize, n_actions: usize) -> Discount {
+        match self {
+            Discount::Scalar(g) => Discount::Scalar(*g),
+            Discount::PerState(v) => Discount::PerState(v[lo..hi].to_vec()),
+            Discount::PerStateAction(v) => {
+                Discount::PerStateAction(v[lo * n_actions..hi * n_actions].to_vec())
+            }
+        }
+    }
+
+    /// Per-state effective discounts under a fixed policy — the diagonal of
+    /// `diag(γ_π)` in the policy-evaluation system
+    /// `(I − diag(γ_π) P_π) V = g_π`. Returns `None` for the scalar
+    /// representation (the operator then uses the plain `I − γ P_π` path,
+    /// keeping scalar solves byte-identical to the pre-semi-MDP code).
+    pub fn policy_rows(&self, policy: &[usize], n_actions: usize) -> Option<Vec<f64>> {
+        match self {
+            Discount::Scalar(_) => None,
+            // per-state factors do not depend on the chosen action
+            Discount::PerState(v) => Some(v[..policy.len()].to_vec()),
+            Discount::PerStateAction(v) => Some(
+                policy
+                    .iter()
+                    .enumerate()
+                    .map(|(s, &a)| v[s * n_actions + a])
+                    .collect(),
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        for mode in [
+            DiscountMode::Scalar,
+            DiscountMode::PerState,
+            DiscountMode::PerStateAction,
+        ] {
+            assert_eq!(DiscountMode::parse(mode.name()).unwrap(), mode);
+            assert_eq!(DiscountMode::from_code(mode.code()).unwrap(), mode);
+        }
+        assert!(DiscountMode::parse("per_action").is_err());
+        assert!(DiscountMode::from_code(9).is_err());
+        assert_eq!(DiscountMode::PerState.payload_len(5, 3), 5);
+        assert_eq!(DiscountMode::PerStateAction.payload_len(5, 3), 15);
+        assert_eq!(DiscountMode::Scalar.payload_len(5, 3), 0);
+    }
+
+    #[test]
+    fn validate_catches_bad_entries() {
+        assert!(Discount::Scalar(0.9).validate(4, 2).is_ok());
+        assert!(Discount::Scalar(1.0).validate(4, 2).is_err());
+        // wrong length
+        let err = Discount::PerState(vec![0.9; 3]).validate(4, 2).unwrap_err();
+        assert!(err.contains("3 entries"), "{err}");
+        let err = Discount::PerStateAction(vec![0.9; 7])
+            .validate(4, 2)
+            .unwrap_err();
+        assert!(err.contains("7 entries"), "{err}");
+        // out of range / non-finite, with the offending index named
+        let err = Discount::PerState(vec![0.9, 1.0, 0.5, 0.2])
+            .validate(4, 2)
+            .unwrap_err();
+        assert!(err.contains("state 1"), "{err}");
+        let err = Discount::PerStateAction(vec![0.9, 0.9, 0.9, f64::NAN, 0.9, 0.9, 0.9, 0.9])
+            .validate(4, 2)
+            .unwrap_err();
+        assert!(err.contains("s=1, a=1"), "{err}");
+    }
+
+    #[test]
+    fn indexing_is_row_aligned() {
+        let d = Discount::PerStateAction((0..6).map(|i| i as f64 / 10.0).collect());
+        assert_eq!(d.at(1, 1, 2), 0.3);
+        assert_eq!(d.at_row(3, 2), 0.3);
+        let ps = Discount::PerState(vec![0.1, 0.2, 0.3]);
+        assert_eq!(ps.at(2, 1, 2), 0.3);
+        assert_eq!(ps.at_row(5, 2), 0.3);
+        assert_eq!(Discount::Scalar(0.7).at_row(5, 2), 0.7);
+    }
+
+    #[test]
+    fn slicing_and_policy_rows() {
+        let d = Discount::PerStateAction((0..8).map(|i| i as f64 / 10.0).collect());
+        let local = d.slice_states(1, 3, 2);
+        assert_eq!(local, Discount::PerStateAction(vec![0.2, 0.3, 0.4, 0.5]));
+        let rows = d.policy_rows(&[1, 0, 1, 0], 2).unwrap();
+        assert_eq!(rows, vec![0.1, 0.2, 0.5, 0.6]);
+        assert!(Discount::Scalar(0.9).policy_rows(&[0, 0], 2).is_none());
+        let ps = Discount::PerState(vec![0.1, 0.2, 0.3]);
+        assert_eq!(ps.policy_rows(&[1, 1, 0], 2).unwrap(), vec![0.1, 0.2, 0.3]);
+        assert_eq!(ps.slice_states(1, 3, 2), Discount::PerState(vec![0.2, 0.3]));
+    }
+
+    #[test]
+    fn constant_and_max() {
+        let c = Discount::constant(DiscountMode::PerStateAction, 0.9, 3, 2);
+        assert_eq!(c.entries().unwrap(), &[0.9; 6]);
+        assert_eq!(c.max_gamma(), 0.9);
+        assert_eq!(Discount::Scalar(0.5).max_gamma(), 0.5);
+        assert_eq!(Discount::PerState(vec![0.1, 0.7, 0.3]).max_gamma(), 0.7);
+        assert_eq!(c.mode().name(), "per_state_action");
+        assert_eq!(Discount::constant(DiscountMode::Scalar, 0.4, 3, 2), Discount::Scalar(0.4));
+    }
+}

@@ -3,27 +3,34 @@
 //! madupite loads MDPs from PETSc binary files so that transition data
 //! collected offline (e.g. from simulations) can be solved later, possibly
 //! on a different number of ranks. This module defines the equivalent
-//! self-describing little-endian format, version 2:
+//! self-describing little-endian format, version 3:
 //!
 //! ```text
 //! offset  field
 //! 0       magic  b"MDPB"
-//! 4       version u32 (= 2)
+//! 4       version u32 (= 3)
 //! 8       n_states u64
 //! 16      n_actions u64
-//! 24      gamma f64
+//! 24      gamma f64 (scalar discount; for vector modes: max γ(s,a))
 //! 32      nnz u64
-//! 40      objective u64 (0 = min-cost, 1 = max-reward)   [v2 only]
-//! 48      indptr  (n·m + 1) × u64
+//! 40      objective u64 (0 = min-cost, 1 = max-reward)       [v2+]
+//! 48      discount_mode u64 (0 = scalar, 1 = per-state,
+//!                            2 = per-state-action)            [v3 only]
+//! 56      indptr  (n·m + 1) × u64
 //! ...     indices nnz × u64
 //! ...     values  nnz × f64
 //! ...     costs   (n·m) × f64
+//! ...     discounts 0 | n | n·m × f64 (per discount_mode)     [v3 only]
 //! ```
 //!
-//! Version 1 (no `objective` field; payload starts at offset 40) is still
-//! accepted by every reader and defaults to [`Objective::Min`]. Writers
-//! always emit version 2 — v1 round-trips silently dropped the objective,
-//! turning reward-maximizing MDPs into cost-minimizing ones on reload.
+//! Version 1 (no `objective` field; payload starts at offset 40) and
+//! version 2 (no `discount_mode` field; payload at 48, no discount
+//! section) are still accepted byte-compatibly by every reader: v1
+//! defaults to [`Objective::Min`], both default to scalar discounting.
+//! Writers always emit version 3 — the optional trailing discount payload
+//! is what makes state(-action)-dependent discounting (semi-MDPs,
+//! [`crate::mdp::Discount`]) storable offline; scalar-discount files carry
+//! no payload (length 0) beyond the mode field.
 //!
 //! Because `indptr` precedes the payload, a rank can compute exactly the
 //! byte range of its row block and read only that slice —
@@ -35,7 +42,7 @@
 //! file to one serial writer without any rank ever materializing the full
 //! model (O(chunk) memory — the out-of-core generation path).
 
-use super::{DistMdp, Mdp, Objective};
+use super::{validate_gamma, Discount, DiscountMode, DistMdp, Mdp, Objective};
 use crate::comm::{codec, Comm};
 use crate::linalg::dist::{DistCsr, Partition};
 use crate::linalg::Csr;
@@ -45,9 +52,10 @@ use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"MDPB";
 /// Format version emitted by all writers.
-pub const VERSION: u32 = 2;
+pub const VERSION: u32 = 3;
 const V1_HEADER_LEN: u64 = 40;
 const V2_HEADER_LEN: u64 = 48;
+const V3_HEADER_LEN: u64 = 56;
 
 /// Default chunk granularity (rows buffered per flush) for the streaming
 /// writer: ~8k rows keep writer memory in the hundreds of KiB while the
@@ -57,28 +65,32 @@ pub const DEFAULT_CHUNK_ROWS: usize = 8192;
 /// Parsed header.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Header {
-    /// Format version (1 legacy, 2 current).
+    /// Format version (1/2 legacy, 3 current).
     pub version: u32,
     /// Number of states `n`.
     pub n_states: usize,
     /// Number of actions `m`.
     pub n_actions: usize,
-    /// Discount factor.
+    /// Discount factor (for vector discount modes: the uniform bound
+    /// `max γ(s,a)`; the per-entry factors live in the trailing payload).
     pub gamma: f64,
     /// Total stored transition entries.
     pub nnz: usize,
-    /// Optimization sense (v2; v1 files default to min).
+    /// Optimization sense (v2+; v1 files default to min).
     pub objective: Objective,
+    /// Discount representation (v3; v1/v2 files are scalar).
+    pub discount_mode: DiscountMode,
 }
 
 impl Header {
-    /// v2 header for in-memory metadata (the shape every writer emits).
-    pub fn v2(
+    /// v3 header for in-memory metadata (the shape every writer emits).
+    pub fn v3(
         n_states: usize,
         n_actions: usize,
         gamma: f64,
         nnz: usize,
         objective: Objective,
+        discount_mode: DiscountMode,
     ) -> Header {
         Header {
             version: VERSION,
@@ -87,14 +99,15 @@ impl Header {
             gamma,
             nnz,
             objective,
+            discount_mode,
         }
     }
 
     fn header_len(&self) -> u64 {
-        if self.version >= 2 {
-            V2_HEADER_LEN
-        } else {
-            V1_HEADER_LEN
+        match self.version {
+            0 | 1 => V1_HEADER_LEN,
+            2 => V2_HEADER_LEN,
+            _ => V3_HEADER_LEN,
         }
     }
 
@@ -114,11 +127,34 @@ impl Header {
         self.values_off() + 8 * self.nnz as u64
     }
 
+    fn discount_off(&self) -> u64 {
+        self.costs_off() + 8 * (self.n_states as u64 * self.n_actions as u64)
+    }
+
+    /// Number of f64 entries in the trailing discount payload (0 for
+    /// scalar-discount files and all v1/v2 files). Computed in u128 like
+    /// [`Self::expected_file_len`] so corrupt oversized headers cannot
+    /// overflow before the file-length check rejects them.
+    fn discount_len(&self) -> u128 {
+        if self.version < 3 {
+            return 0;
+        }
+        match self.discount_mode {
+            DiscountMode::Scalar => 0,
+            DiscountMode::PerState => self.n_states as u128,
+            DiscountMode::PerStateAction => self.n_states as u128 * self.n_actions as u128,
+        }
+    }
+
     /// Exact byte length a file with this header must have. Computed in
     /// u128 so corrupt headers (oversized n/m/nnz) cannot overflow.
     pub fn expected_file_len(&self) -> u128 {
         let nm = self.n_states as u128 * self.n_actions as u128;
-        self.header_len() as u128 + 8 * (nm + 1) + 16 * self.nnz as u128 + 8 * nm
+        self.header_len() as u128
+            + 8 * (nm + 1)
+            + 16 * self.nnz as u128
+            + 8 * nm
+            + 8 * self.discount_len()
     }
 
     /// Reject headers whose advertised shape disagrees with the actual
@@ -138,7 +174,7 @@ impl Header {
     }
 }
 
-/// Read and validate the header (v1 and v2 accepted).
+/// Read and validate the header (v1, v2 and v3 accepted).
 pub fn read_header(r: &mut impl Read) -> std::io::Result<Header> {
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
@@ -162,12 +198,15 @@ pub fn read_header(r: &mut impl Read) -> std::io::Result<Header> {
     } else {
         Objective::Min
     };
+    let discount_mode = if version >= 3 {
+        DiscountMode::from_code(read_u64(r)?).map_err(|e| bad(&e))?
+    } else {
+        DiscountMode::Scalar
+    };
     if n_actions == 0 || n_states == 0 {
         return Err(bad("empty MDP"));
     }
-    if !(0.0..1.0).contains(&gamma) {
-        return Err(bad(&format!("gamma {gamma} out of range")));
-    }
+    validate_gamma(gamma).map_err(|e| bad(&e))?;
     Ok(Header {
         version,
         n_states,
@@ -175,6 +214,7 @@ pub fn read_header(r: &mut impl Read) -> std::io::Result<Header> {
         gamma,
         nnz,
         objective,
+        discount_mode,
     })
 }
 
@@ -211,19 +251,21 @@ fn check_row_stochastic(row: &[(usize, f64)]) -> Result<(), String> {
 }
 
 /// Chunked, seek-based writer for one contiguous block of global rows
-/// `[row_lo, row_hi)` of a v2 `.mdpb` file.
+/// `[row_lo, row_hi)` of a v3 `.mdpb` file.
 ///
 /// Rows are pushed in global row order (`s·m + a`); every `chunk_rows`
-/// rows the buffered indptr / indices / values / costs slices are written
-/// at their exact byte offsets in the (pre-sized) file. Because all
-/// offsets are absolute, N block writers covering disjoint row ranges
-/// produce a byte-identical file to a single serial writer — this is the
-/// rank-parallel generation path. Peak memory is O(chunk), never O(model).
+/// rows the buffered indptr / indices / values / costs (and, for vector
+/// discount modes, discount) slices are written at their exact byte
+/// offsets in the (pre-sized) file. Because all offsets are absolute, N
+/// block writers covering disjoint row ranges produce a byte-identical
+/// file to a single serial writer — this is the rank-parallel generation
+/// path. Peak memory is O(chunk), never O(model).
 ///
 /// Protocol: one rank (or the serial caller) runs
 /// [`MdpWriter::create_file`] first; then each writer opens its block with
-/// [`MdpWriter::open_block`], pushes its rows, and calls
-/// [`MdpWriter::finish`].
+/// [`MdpWriter::open_block`], pushes its rows ([`MdpWriter::push_row`] for
+/// scalar-discount files, [`MdpWriter::push_row_discounted`] for vector
+/// modes), and calls [`MdpWriter::finish`].
 pub struct MdpWriter {
     f: File,
     h: Header,
@@ -239,15 +281,24 @@ pub struct MdpWriter {
     /// First global row currently buffered, and its global nz offset.
     flush_row: usize,
     flush_nz: u64,
+    /// Global discount-entry index of the first buffered discount entry,
+    /// and the index after the last pushed one (rows for per-state-action
+    /// mode, states for per-state mode; unused for scalar files).
+    flush_disc: u64,
+    next_disc: u64,
+    /// Per-state mode: the current state's factor, to enforce that all
+    /// `m` rows of a state agree before one entry is stored.
+    state_gamma: f64,
     indptr_buf: Vec<u8>,
     indices_buf: Vec<u8>,
     values_buf: Vec<u8>,
     costs_buf: Vec<u8>,
+    disc_buf: Vec<u8>,
 }
 
 impl MdpWriter {
     /// Create (truncate) the output file: pre-size it to the exact final
-    /// length, write the v2 header and `indptr[0] = 0`. Call once before
+    /// length, write the v3 header and `indptr[0] = 0`. Call once before
     /// any block writer opens the file.
     pub fn create_file(path: impl AsRef<Path>, h: &Header) -> std::io::Result<()> {
         if h.version != VERSION {
@@ -256,9 +307,7 @@ impl MdpWriter {
         if h.n_states == 0 || h.n_actions == 0 {
             return Err(bad("refusing to write an empty MDP"));
         }
-        if !(0.0..1.0).contains(&h.gamma) {
-            return Err(bad(&format!("gamma {} out of range", h.gamma)));
-        }
+        validate_gamma(h.gamma).map_err(|e| bad(&e))?;
         let total = h.expected_file_len();
         if total > u64::MAX as u128 {
             return Err(bad("MDP too large for the .mdpb format"));
@@ -277,6 +326,7 @@ impl MdpWriter {
             Objective::Max => 1,
         };
         w.write_all(&obj.to_le_bytes())?;
+        w.write_all(&h.discount_mode.code().to_le_bytes())?;
         // indptr[0]: no row owns entry 0, each pushed row records its END
         // offset at entry row+1.
         w.write_all(&0u64.to_le_bytes())?;
@@ -310,6 +360,18 @@ impl MdpWriter {
         if chunk_rows == 0 {
             return Err(bad("chunk_rows must be >= 1"));
         }
+        let m = h.n_actions;
+        if h.discount_mode == DiscountMode::PerState && (row_lo % m != 0 || row_hi % m != 0) {
+            return Err(bad(&format!(
+                "per-state discount blocks must be state-aligned, \
+                 got rows [{row_lo}, {row_hi}) with m = {m}"
+            )));
+        }
+        let disc_base = match h.discount_mode {
+            DiscountMode::Scalar => 0,
+            DiscountMode::PerState => (row_lo / m) as u64,
+            DiscountMode::PerStateAction => row_lo as u64,
+        };
         let f = OpenOptions::new().write(true).open(path)?;
         Ok(MdpWriter {
             f,
@@ -322,10 +384,14 @@ impl MdpWriter {
             rows_buffered: 0,
             flush_row: row_lo,
             flush_nz: nz_lo,
+            flush_disc: disc_base,
+            next_disc: disc_base,
+            state_gamma: 0.0,
             indptr_buf: Vec::new(),
             indices_buf: Vec::new(),
             values_buf: Vec::new(),
             costs_buf: Vec::new(),
+            disc_buf: Vec::new(),
         })
     }
 
@@ -339,8 +405,43 @@ impl MdpWriter {
     /// row is normalized (sorted, duplicates summed) and validated —
     /// out-of-range columns, non-stochastic rows and non-finite costs are
     /// rejected so a streaming writer can never produce an unloadable
-    /// file.
-    pub fn push_row(&mut self, mut row: Vec<(usize, f64)>, cost: f64) -> std::io::Result<()> {
+    /// file. Scalar-discount files only; vector discount modes push each
+    /// row's effective factor through [`Self::push_row_discounted`].
+    pub fn push_row(&mut self, row: Vec<(usize, f64)>, cost: f64) -> std::io::Result<()> {
+        if self.h.discount_mode != DiscountMode::Scalar {
+            return Err(bad(&format!(
+                "this file stores {} discounts; use push_row_discounted",
+                self.h.discount_mode.name()
+            )));
+        }
+        self.push_row_impl(row, cost, None)
+    }
+
+    /// [`Self::push_row`] for vector discount modes: `gamma` is the
+    /// effective discount of this row's `(s, a)` pair, validated through
+    /// the shared gamma check. For per-state files all `m` rows of a state
+    /// must carry the same factor (one entry is stored per state; a
+    /// disagreement is an error, not a silent pick).
+    pub fn push_row_discounted(
+        &mut self,
+        row: Vec<(usize, f64)>,
+        cost: f64,
+        gamma: f64,
+    ) -> std::io::Result<()> {
+        if self.h.discount_mode == DiscountMode::Scalar {
+            return Err(bad(
+                "this file stores a scalar discount (header gamma); use push_row",
+            ));
+        }
+        self.push_row_impl(row, cost, Some(gamma))
+    }
+
+    fn push_row_impl(
+        &mut self,
+        mut row: Vec<(usize, f64)>,
+        cost: f64,
+        gamma: Option<f64>,
+    ) -> std::io::Result<()> {
         if self.next_row >= self.row_hi {
             return Err(bad(&format!(
                 "push_row past the end of the block (row_hi = {})",
@@ -368,6 +469,32 @@ impl MdpWriter {
                 self.next_row, self.nz_hi
             )));
         }
+        if let Some(g) = gamma {
+            if let Err(e) = validate_gamma(g) {
+                return Err(bad(&format!("row {}: discount {e}", self.next_row)));
+            }
+            match self.h.discount_mode {
+                DiscountMode::Scalar => unreachable!("checked by the public entry points"),
+                DiscountMode::PerStateAction => {
+                    self.disc_buf.extend_from_slice(&g.to_le_bytes());
+                    self.next_disc += 1;
+                }
+                DiscountMode::PerState => {
+                    if self.next_row % self.h.n_actions == 0 {
+                        // first row of the state owns the entry
+                        self.disc_buf.extend_from_slice(&g.to_le_bytes());
+                        self.next_disc += 1;
+                        self.state_gamma = g;
+                    } else if g.to_bits() != self.state_gamma.to_bits() {
+                        return Err(bad(&format!(
+                            "row {}: per-state discount {g} disagrees with this \
+                             state's earlier rows ({})",
+                            self.next_row, self.state_gamma
+                        )));
+                    }
+                }
+            }
+        }
         for &(c, v) in &row {
             self.indices_buf.extend_from_slice(&(c as u64).to_le_bytes());
             self.values_buf.extend_from_slice(&v.to_le_bytes());
@@ -383,7 +510,7 @@ impl MdpWriter {
         Ok(())
     }
 
-    /// Write the buffered chunk into its four sections (absolute offsets).
+    /// Write the buffered chunk into its sections (absolute offsets).
     fn flush_chunk(&mut self) -> std::io::Result<()> {
         if self.rows_buffered == 0 {
             return Ok(());
@@ -396,13 +523,19 @@ impl MdpWriter {
         self.f.write_all(&self.values_buf)?;
         self.f.seek(SeekFrom::Start(self.h.costs_off() + 8 * self.flush_row as u64))?;
         self.f.write_all(&self.costs_buf)?;
+        if !self.disc_buf.is_empty() {
+            self.f.seek(SeekFrom::Start(self.h.discount_off() + 8 * self.flush_disc))?;
+            self.f.write_all(&self.disc_buf)?;
+        }
         self.flush_row = self.next_row;
         self.flush_nz = self.nz;
+        self.flush_disc = self.next_disc;
         self.rows_buffered = 0;
         self.indptr_buf.clear();
         self.indices_buf.clear();
         self.values_buf.clear();
         self.costs_buf.clear();
+        self.disc_buf.clear();
         Ok(())
     }
 
@@ -429,23 +562,29 @@ impl MdpWriter {
     }
 }
 
-/// Write a serial MDP to `path` (v2, includes the objective). Streams
-/// through [`MdpWriter`] — the same code path as the rank-parallel
-/// writers. The on-disk form is canonical: explicitly stored zero
-/// probabilities (possible via `Csr::from_parts`) are dropped, exactly as
-/// every other producer drops them, so the header `nnz` counts only the
-/// entries the writer will actually emit.
+/// Write a serial MDP to `path` (v3: objective + discount mode, plus the
+/// discount payload for semi-MDPs). Streams through [`MdpWriter`] — the
+/// same code path as the rank-parallel writers. The on-disk form is
+/// canonical: explicitly stored zero probabilities (possible via
+/// `Csr::from_parts`) are dropped, exactly as every other producer drops
+/// them, so the header `nnz` counts only the entries the writer will
+/// actually emit.
 pub fn save(mdp: &Mdp, path: impl AsRef<Path>) -> std::io::Result<()> {
     let t = mdp.transitions();
-    let nm = mdp.n_states() * mdp.n_actions();
+    let m = mdp.n_actions();
+    let nm = mdp.n_states() * m;
     let nnz = t.values().iter().filter(|&&v| v != 0.0).count();
-    let h = Header::v2(mdp.n_states(), mdp.n_actions(), mdp.gamma(), nnz, mdp.objective());
+    let mode = mdp.discount().mode();
+    let h = Header::v3(mdp.n_states(), m, mdp.gamma(), nnz, mdp.objective(), mode);
     MdpWriter::create_file(&path, &h)?;
     let mut w = MdpWriter::open_block(&path, h, 0, nm, 0, nnz as u64, DEFAULT_CHUNK_ROWS)?;
     for r in 0..nm {
         let (cols, vals) = t.row(r);
         let row: Vec<(usize, f64)> = cols.iter().copied().zip(vals.iter().copied()).collect();
-        w.push_row(row, mdp.costs()[r])?;
+        match mode {
+            DiscountMode::Scalar => w.push_row(row, mdp.costs()[r])?,
+            _ => w.push_row_discounted(row, mdp.costs()[r], mdp.discount().at_row(r, m))?,
+        }
     }
     w.finish()
 }
@@ -469,6 +608,116 @@ pub fn write_streaming<P, C>(
     gamma: f64,
     objective: Objective,
     chunk_rows: usize,
+    prob: P,
+    cost: C,
+) -> std::io::Result<Header>
+where
+    P: FnMut(usize, usize) -> Vec<(usize, f64)>,
+    C: FnMut(usize, usize) -> f64,
+{
+    write_streaming_discounted(
+        comm,
+        path,
+        n_states,
+        n_actions,
+        objective,
+        chunk_rows,
+        StreamDiscount::Scalar(gamma),
+        prob,
+        cost,
+    )
+}
+
+/// How [`write_streaming_discounted`] sources discount factors: one
+/// scalar, a per-state closure, or a per-state-action closure (the
+/// semi-MDP generation path). Closures must be pure functions of their
+/// indices, like the transition/cost fillers.
+pub enum StreamDiscount<'a> {
+    /// Classic discounting: one γ in the header, no payload.
+    Scalar(f64),
+    /// γ(s) per state (`n` payload entries).
+    PerState(&'a dyn Fn(usize) -> f64),
+    /// γ(s,a) per state-action pair (`n·m` payload entries).
+    PerStateAction(&'a dyn Fn(usize, usize) -> f64),
+}
+
+impl StreamDiscount<'_> {
+    fn mode(&self) -> DiscountMode {
+        match self {
+            StreamDiscount::Scalar(_) => DiscountMode::Scalar,
+            StreamDiscount::PerState(_) => DiscountMode::PerState,
+            StreamDiscount::PerStateAction(_) => DiscountMode::PerStateAction,
+        }
+    }
+
+    fn at(&self, s: usize, a: usize) -> f64 {
+        match self {
+            StreamDiscount::Scalar(g) => *g,
+            StreamDiscount::PerState(f) => f(s),
+            StreamDiscount::PerStateAction(f) => f(s, a),
+        }
+    }
+}
+
+/// [`write_streaming`] with a **constant** discount in the requested
+/// representation — the generate-side counterpart of
+/// [`crate::mdp::DistMdp::try_from_fillers_constant`], i.e. a forced
+/// vector `-discount_mode` on a scalar source: the payload is `gamma`
+/// replicated, which loads and solves bitwise identically to the scalar.
+/// Collective.
+#[allow(clippy::too_many_arguments)]
+pub fn write_streaming_constant<P, C>(
+    comm: &Comm,
+    path: &Path,
+    n_states: usize,
+    n_actions: usize,
+    mode: DiscountMode,
+    gamma: f64,
+    objective: Objective,
+    chunk_rows: usize,
+    prob: P,
+    cost: C,
+) -> std::io::Result<Header>
+where
+    P: FnMut(usize, usize) -> Vec<(usize, f64)>,
+    C: FnMut(usize, usize) -> f64,
+{
+    let per_state = move |_s: usize| gamma;
+    let per_sa = move |_s: usize, _a: usize| gamma;
+    let discount = match mode {
+        DiscountMode::Scalar => StreamDiscount::Scalar(gamma),
+        DiscountMode::PerState => StreamDiscount::PerState(&per_state),
+        DiscountMode::PerStateAction => StreamDiscount::PerStateAction(&per_sa),
+    };
+    write_streaming_discounted(
+        comm,
+        path,
+        n_states,
+        n_actions,
+        objective,
+        chunk_rows,
+        discount,
+        prob,
+        cost,
+    )
+}
+
+/// [`write_streaming`] with generalized discounting: streams the v3
+/// discount payload chunk-wise alongside the transition rows, still
+/// rank-parallel with O(chunk) memory and bytes identical for every world
+/// size. The header's `gamma` field records the global bound
+/// `max γ(s,a)` (one extra allreduce for the closure modes); invalid
+/// closure values fail collectively through the writer's shared per-row
+/// validation, not a deadlock. Collective.
+#[allow(clippy::too_many_arguments)]
+pub fn write_streaming_discounted<P, C>(
+    comm: &Comm,
+    path: &Path,
+    n_states: usize,
+    n_actions: usize,
+    objective: Objective,
+    chunk_rows: usize,
+    discount: StreamDiscount<'_>,
     mut prob: P,
     mut cost: C,
 ) -> std::io::Result<Header>
@@ -478,14 +727,22 @@ where
 {
     let part = Partition::new(n_states, comm.size());
     let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+    let mode = discount.mode();
 
-    // Pass 1: count this rank's nonzeros (post-normalization lengths).
+    // Pass 1: count this rank's nonzeros (post-normalization lengths) and,
+    // for the closure modes, its local discount bound. No early returns —
+    // validation happens in pass 2's writer so every rank reaches the
+    // collectives below.
     let mut local_nnz: u64 = 0;
+    let mut local_gmax: f64 = 0.0;
     for s in lo..hi {
         for a in 0..n_actions {
             let mut row = prob(s, a);
             normalize_row(&mut row);
             local_nnz += row.len() as u64;
+            if mode != DiscountMode::Scalar {
+                local_gmax = local_gmax.max(discount.at(s, a));
+            }
         }
     }
 
@@ -498,7 +755,13 @@ where
         .collect();
     let nz_lo: u64 = counts[..comm.rank()].iter().sum();
     let nnz: u64 = counts.iter().sum();
-    let header = Header::v2(n_states, n_actions, gamma, nnz as usize, objective);
+    // The header gamma is the global discount bound (mode-uniform across
+    // ranks, so either every rank reduces or none does).
+    let gamma = match &discount {
+        StreamDiscount::Scalar(g) => *g,
+        _ => comm.max(local_gmax),
+    };
+    let header = Header::v3(n_states, n_actions, gamma, nnz as usize, objective, mode);
 
     // Root creates + sizes the file; everyone learns whether that worked
     // before opening (keeps the collective deadlock-free on IO errors).
@@ -525,7 +788,14 @@ where
             )?;
             for s in lo..hi {
                 for a in 0..n_actions {
-                    w.push_row(prob(s, a), cost(s, a))?;
+                    match mode {
+                        DiscountMode::Scalar => w.push_row(prob(s, a), cost(s, a))?,
+                        _ => w.push_row_discounted(
+                            prob(s, a),
+                            cost(s, a),
+                            discount.at(s, a),
+                        )?,
+                    }
                 }
             }
             w.finish()
@@ -563,6 +833,10 @@ pub fn save_dist(comm: &Comm, mdp: &DistMdp, path: impl AsRef<Path>) -> std::io:
     let trans = mdp.transitions();
     let local = trans.local();
     let local_nnz = local.nnz() as u64;
+    // Discount mode and the global bound are rank-uniform by construction
+    // (`DistMdp::gamma` is the collectively-agreed max), so the headers
+    // every rank computes here are identical.
+    let mode = mdp.discount().mode();
 
     let counts: Vec<u64> = comm
         .allgatherv(codec::encode_usizes(&[local_nnz as usize]))
@@ -571,7 +845,7 @@ pub fn save_dist(comm: &Comm, mdp: &DistMdp, path: impl AsRef<Path>) -> std::io:
         .collect();
     let nz_lo: u64 = counts[..comm.rank()].iter().sum();
     let nnz: u64 = counts.iter().sum();
-    let header = Header::v2(mdp.n_states(), m, mdp.gamma(), nnz as usize, mdp.objective());
+    let header = Header::v3(mdp.n_states(), m, mdp.gamma(), nnz as usize, mdp.objective(), mode);
 
     let create_err = if comm.is_root() {
         MdpWriter::create_file(path, &header).err()
@@ -602,7 +876,14 @@ pub fn save_dist(comm: &Comm, mdp: &DistMdp, path: impl AsRef<Path>) -> std::io:
                     .map(|&c| trans.global_col(c))
                     .zip(vals.iter().copied())
                     .collect();
-                w.push_row(row, mdp.local_costs()[r])?;
+                match mode {
+                    DiscountMode::Scalar => w.push_row(row, mdp.local_costs()[r])?,
+                    _ => w.push_row_discounted(
+                        row,
+                        mdp.local_costs()[r],
+                        mdp.discount().at_row(r, m),
+                    )?,
+                }
             }
             w.finish()
         })()
@@ -624,9 +905,18 @@ pub fn load(path: impl AsRef<Path>) -> std::io::Result<Mdp> {
     let indices = read_u64s(&mut r, h.nnz)?;
     let values = read_f64s(&mut r, h.nnz)?;
     let costs = read_f64s(&mut r, nm)?;
+    // v3 trailing discount payload (validate_file_len proved the section
+    // is present and exactly sized, so the count fits in usize here)
+    let discount = match h.discount_mode {
+        DiscountMode::Scalar => Discount::Scalar(h.gamma),
+        DiscountMode::PerState => Discount::PerState(read_f64s(&mut r, h.n_states)?),
+        DiscountMode::PerStateAction => Discount::PerStateAction(read_f64s(&mut r, nm)?),
+    };
     let t = Csr::from_parts(nm, h.n_states, indptr, indices, values)
         .map_err(|e| bad(&format!("invalid CSR: {e}")))?;
-    Mdp::new(h.n_states, h.n_actions, t, costs, h.gamma)
+    // Mdp::new_discounted re-validates every discount entry (finite,
+    // [0, 1), length) — a corrupt payload is InvalidData, never a panic.
+    Mdp::new_discounted(h.n_states, h.n_actions, t, costs, discount)
         .map(|m| m.with_objective(h.objective))
         .map_err(|e| bad(&e))
 }
@@ -647,12 +937,21 @@ pub fn load_dist(comm: &Comm, path: impl AsRef<Path>) -> std::io::Result<DistMdp
             Ok(_) => Err(bad("load_dist failed on another rank")),
         };
     }
-    let (h, part, rows, costs) = local.expect("checked above");
+    let (h, part, rows, costs, discount) = local.expect("checked above");
+    // Contraction bound: recomputed from the payload (not trusted from
+    // the header) and agreed collectively, like the filler builds. Every
+    // rank reads the same header, so the mode — hence whether the reduce
+    // runs — is rank-uniform.
+    let gamma_max = match &discount {
+        Discount::Scalar(g) => *g,
+        d => comm.max(d.entries().unwrap().iter().copied().fold(0.0, f64::max)),
+    };
     let trans = DistCsr::assemble(comm, part, rows);
     Ok(DistMdp {
         part,
         n_actions: h.n_actions,
-        gamma: h.gamma,
+        discount,
+        gamma_max,
         objective: h.objective,
         trans,
         costs,
@@ -664,7 +963,7 @@ pub fn load_dist(comm: &Comm, path: impl AsRef<Path>) -> std::io::Result<DistMdp
 fn read_local_block(
     comm: &Comm,
     path: &Path,
-) -> std::io::Result<(Header, Partition, Vec<Vec<(usize, f64)>>, Vec<f64>)> {
+) -> std::io::Result<(Header, Partition, Vec<Vec<(usize, f64)>>, Vec<f64>, Discount)> {
     let mut f = File::open(path)?;
     let file_len = f.metadata()?.len();
     let h = read_header(&mut f)?;
@@ -748,7 +1047,34 @@ fn read_local_block(
     if let Some(&c) = costs.iter().find(|c| !c.is_finite()) {
         return Err(bad(&format!("non-finite stage cost {c}")));
     }
-    Ok((h, part, rows, costs))
+
+    // v3 discount payload: read only this rank's slice, validating each
+    // entry at the same bar as the serial loader (a file must be loadable
+    // by both readers or neither).
+    let discount = match h.discount_mode {
+        DiscountMode::Scalar => Discount::Scalar(h.gamma),
+        DiscountMode::PerState => {
+            f.seek(SeekFrom::Start(h.discount_off() + 8 * lo as u64))?;
+            let g = read_f64s(&mut f, hi - lo)?;
+            for (i, &gi) in g.iter().enumerate() {
+                validate_gamma(gi)
+                    .map_err(|e| bad(&format!("discount at state {}: {e}", lo + i)))?;
+            }
+            Discount::PerState(g)
+        }
+        DiscountMode::PerStateAction => {
+            f.seek(SeekFrom::Start(h.discount_off() + 8 * row_lo as u64))?;
+            let g = read_f64s(&mut f, row_hi - row_lo)?;
+            for (i, &gi) in g.iter().enumerate() {
+                let row = row_lo + i;
+                validate_gamma(gi).map_err(|e| {
+                    bad(&format!("discount at (s={}, a={}): {e}", row / m, row % m))
+                })?;
+            }
+            Discount::PerStateAction(g)
+        }
+    };
+    Ok((h, part, rows, costs, discount))
 }
 
 fn bad(msg: &str) -> std::io::Error {
@@ -885,16 +1211,91 @@ mod tests {
         });
     }
 
+    /// Write the legacy v2 layout (objective, no discount_mode field) —
+    /// backward-compat fixture replicating the v2 serial writer byte for
+    /// byte.
+    fn write_v2(mdp: &Mdp, path: &std::path::Path) {
+        let f = std::fs::File::create(path).unwrap();
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC).unwrap();
+        w.write_all(&2u32.to_le_bytes()).unwrap();
+        w.write_all(&(mdp.n_states() as u64).to_le_bytes()).unwrap();
+        w.write_all(&(mdp.n_actions() as u64).to_le_bytes()).unwrap();
+        w.write_all(&mdp.gamma().to_le_bytes()).unwrap();
+        let t = mdp.transitions();
+        w.write_all(&(t.nnz() as u64).to_le_bytes()).unwrap();
+        let obj: u64 = match mdp.objective() {
+            Objective::Min => 0,
+            Objective::Max => 1,
+        };
+        w.write_all(&obj.to_le_bytes()).unwrap();
+        for &p in t.indptr() {
+            w.write_all(&(p as u64).to_le_bytes()).unwrap();
+        }
+        for &i in t.indices() {
+            w.write_all(&(i as u64).to_le_bytes()).unwrap();
+        }
+        for &v in t.values() {
+            w.write_all(&v.to_le_bytes()).unwrap();
+        }
+        for &c in mdp.costs() {
+            w.write_all(&c.to_le_bytes()).unwrap();
+        }
+        w.flush().unwrap();
+    }
+
+    #[test]
+    fn v2_files_still_load_with_objective() {
+        use crate::mdp::Discount;
+        let mdp = random_mdp(23, 10, 2, 0.85).with_objective(Objective::Max);
+        let path = tmpfile("legacy_v2.mdpb");
+        write_v2(&mdp, &path);
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.objective(), Objective::Max);
+        assert_eq!(loaded.discount(), &Discount::Scalar(0.85));
+        assert_eq!(loaded.transitions(), mdp.transitions());
+        prop::close_slices(loaded.costs(), mdp.costs(), 0.0).unwrap();
+        // the distributed reader handles the 48-byte v2 header offsets too
+        let p = path.clone();
+        World::run(2, move |comm| {
+            let d = load_dist(&comm, &p).unwrap();
+            assert_eq!(d.objective(), Objective::Max);
+            assert_eq!(d.gamma(), 0.85);
+            assert_eq!(d.discount(), &Discount::Scalar(0.85));
+        });
+    }
+
     #[test]
     fn header_offsets_consistent() {
-        let h = Header::v2(10, 2, 0.9, 33, Objective::Min);
-        assert_eq!(h.indptr_off(), 48);
-        assert_eq!(h.indices_off(), 48 + 8 * 21);
+        let h = Header::v3(10, 2, 0.9, 33, Objective::Min, DiscountMode::Scalar);
+        assert_eq!(h.indptr_off(), 56);
+        assert_eq!(h.indices_off(), 56 + 8 * 21);
         assert_eq!(h.values_off(), h.indices_off() + 8 * 33);
         assert_eq!(h.costs_off(), h.values_off() + 8 * 33);
+        assert_eq!(h.discount_off(), h.costs_off() + 8 * 20);
         let v1 = Header { version: 1, ..h };
         assert_eq!(v1.indptr_off(), 40);
-        assert_eq!(h.expected_file_len(), 48 + 8 * 21 + 16 * 33 + 8 * 20);
+        let v2 = Header { version: 2, ..h };
+        assert_eq!(v2.indptr_off(), 48);
+        assert_eq!(h.expected_file_len(), 56 + 8 * 21 + 16 * 33 + 8 * 20);
+        // vector discount modes append their payload after the costs
+        let hs = Header {
+            discount_mode: DiscountMode::PerState,
+            ..h
+        };
+        assert_eq!(hs.expected_file_len(), h.expected_file_len() + 8 * 10);
+        let hsa = Header {
+            discount_mode: DiscountMode::PerStateAction,
+            ..h
+        };
+        assert_eq!(hsa.expected_file_len(), h.expected_file_len() + 8 * 20);
+        // ...but never for legacy versions, which predate the field
+        let v2s = Header {
+            version: 2,
+            discount_mode: DiscountMode::PerStateAction,
+            ..h
+        };
+        assert_eq!(v2s.expected_file_len(), 48 + 8 * 21 + 16 * 33 + 8 * 20);
     }
 
     #[test]
@@ -973,11 +1374,11 @@ mod tests {
         let mdp = random_mdp(13, 12, 2, 0.9);
         let path = tmpfile("nonmono.mdpb");
         save(&mdp, &path).unwrap();
-        // corrupt indptr entry 1 (offset 48 + 8) to a huge in-range value:
+        // corrupt indptr entry 1 (offset 56 + 8) to a huge in-range value:
         // entry 1 > entry 2 → previously an index underflow panic
         let nnz = mdp.transitions().nnz() as u64;
         let mut f = OpenOptions::new().write(true).open(&path).unwrap();
-        f.seek(SeekFrom::Start(V2_HEADER_LEN + 8)).unwrap();
+        f.seek(SeekFrom::Start(V3_HEADER_LEN + 8)).unwrap();
         f.write_all(&nnz.to_le_bytes()).unwrap();
         drop(f);
         assert!(load(&path).is_err(), "serial load must reject");
@@ -1045,7 +1446,7 @@ mod tests {
         let path = tmpfile("badstart.mdpb");
         save(&mdp, &path).unwrap();
         let mut f = OpenOptions::new().write(true).open(&path).unwrap();
-        f.seek(SeekFrom::Start(V2_HEADER_LEN)).unwrap();
+        f.seek(SeekFrom::Start(V3_HEADER_LEN)).unwrap();
         f.write_all(&1u64.to_le_bytes()).unwrap();
         drop(f);
         assert!(load(&path).is_err());
@@ -1057,7 +1458,7 @@ mod tests {
 
     #[test]
     fn writer_rejects_bad_rows() {
-        let h = Header::v2(4, 1, 0.9, 8, Objective::Min);
+        let h = Header::v3(4, 1, 0.9, 8, Objective::Min, DiscountMode::Scalar);
         let path = tmpfile("writer_validation.mdpb");
         MdpWriter::create_file(&path, &h).unwrap();
         let mut w = MdpWriter::open_block(&path, h, 0, 4, 0, 8, 2).unwrap();
@@ -1067,9 +1468,40 @@ mod tests {
         assert!(w.push_row(vec![(0, 0.4)], 0.0).is_err());
         // non-finite cost
         assert!(w.push_row(vec![(0, 1.0)], f64::NAN).is_err());
+        // discounted pushes belong to vector-mode files
+        assert!(w.push_row_discounted(vec![(0, 1.0)], 0.0, 0.5).is_err());
         // a good row, then finishing early must fail
         w.push_row(vec![(0, 1.0)], 1.0).unwrap();
         assert!(w.finish().is_err());
+    }
+
+    #[test]
+    fn writer_validates_discount_entries() {
+        let h = Header::v3(3, 2, 0.9, 6, Objective::Min, DiscountMode::PerStateAction);
+        let path = tmpfile("writer_disc_validation.mdpb");
+        MdpWriter::create_file(&path, &h).unwrap();
+        let mut w = MdpWriter::open_block(&path, h, 0, 6, 0, 6, 2).unwrap();
+        // scalar pushes belong to scalar files
+        assert!(w.push_row(vec![(0, 1.0)], 0.0).is_err());
+        // out-of-range / non-finite discounts are typed errors
+        assert!(w.push_row_discounted(vec![(0, 1.0)], 0.0, 1.0).is_err());
+        assert!(w
+            .push_row_discounted(vec![(0, 1.0)], 0.0, f64::NAN)
+            .is_err());
+        w.push_row_discounted(vec![(0, 1.0)], 0.0, 0.99).unwrap();
+
+        // per-state files require all m rows of a state to agree
+        let h = Header::v3(3, 2, 0.9, 6, Objective::Min, DiscountMode::PerState);
+        let path = tmpfile("writer_disc_perstate.mdpb");
+        MdpWriter::create_file(&path, &h).unwrap();
+        // ...and the block must be state-aligned
+        assert!(MdpWriter::open_block(&path, h, 1, 6, 0, 6, 2).is_err());
+        let mut w = MdpWriter::open_block(&path, h, 0, 6, 0, 6, 2).unwrap();
+        w.push_row_discounted(vec![(0, 1.0)], 0.0, 0.5).unwrap();
+        let err = w
+            .push_row_discounted(vec![(0, 1.0)], 0.0, 0.6)
+            .unwrap_err();
+        assert!(err.to_string().contains("disagrees"), "{err}");
     }
 
     #[test]

@@ -2,9 +2,12 @@
 //!
 //! madupite keeps its Krylov layer matrix-type-agnostic through PETSc's
 //! shell `Mat`; this module is the payoff of that seam on our side: the
-//! policy system `A = I − γ P_π` applied **directly from the stacked
-//! `(n·m) × n` transition CSR** by indexing rows `s·m + π(s)`, with no
-//! `P_π` materialization at all.
+//! policy system `A = I − diag(γ_π) P_π` applied **directly from the
+//! stacked `(n·m) × n` transition CSR** by indexing rows `s·m + π(s)`,
+//! with no `P_π` materialization at all. With generalized (semi-MDP)
+//! discounting the per-state factor `γ_π(s) = γ(s, π(s))` folds into the
+//! same fused row pass — `diag(γ_π)` is never assembled either
+//! (DESIGN.md §12); for scalar discounts this reduces to `I − γ P_π`.
 //!
 //! Versus the assembled backend ([`crate::ksp::LinOp`] over
 //! [`DistMdp::policy_system`]) this removes, per policy change:
@@ -28,7 +31,8 @@ use crate::ksp::Apply;
 use crate::linalg::dist::{GhostBuf, Partition};
 use crate::linalg::Csr;
 
-/// `A = I − γ P_π` applied matrix-free off a [`DistMdp`]'s stacked kernel.
+/// `A = I − diag(γ_π) P_π` applied matrix-free off a [`DistMdp`]'s stacked
+/// kernel (`γ_π(s) = γ(s, π(s))`; plain `I − γ P_π` for scalar discounts).
 ///
 /// Borrows the MDP and the rank-local greedy policy; construction is O(1)
 /// and communication-free (the ghost plan of the stacked matrix is reused,
@@ -55,6 +59,17 @@ impl<'a> MatFreePolicyOp<'a> {
     fn row_of(&self, s: usize) -> usize {
         s * self.mdp.n_actions() + self.policy[s]
     }
+
+    /// Effective discount of the selected stacked `row = s·m + π(s)`:
+    /// `γ(s, π(s))`, the diagonal of `diag(γ_π)` (the scalar γ for classic
+    /// MDPs). Takes the row index the caller already computed for its CSR
+    /// access, so the fused kernels pay one indexed load per state — no
+    /// second `row_of` evaluation, no second pass, no assembled
+    /// `diag(γ_π)` matrix.
+    #[inline]
+    fn gamma_at(&self, row: usize) -> f64 {
+        self.mdp.discount().at_row(row, self.mdp.n_actions())
+    }
 }
 
 impl Apply for MatFreePolicyOp<'_> {
@@ -79,18 +94,18 @@ impl Apply for MatFreePolicyOp<'_> {
         trans.update_ghosts(comm, x, buf);
         let local = trans.local();
         let xb = buf.x();
-        let gamma = self.mdp.gamma();
         // Row-parallel over the rank's worker pool; each selected row's
         // accumulation is serial → bitwise identical for any thread count.
         crate::util::par::par_for_rows(y, |offset, chunk| {
             for (i, ys) in chunk.iter_mut().enumerate() {
                 let s = offset + i;
-                let (cols, vals) = local.row(self.row_of(s));
+                let row = self.row_of(s);
+                let (cols, vals) = local.row(row);
                 let mut px = 0.0;
                 for (&c, &v) in cols.iter().zip(vals) {
                     px += v * xb[c];
                 }
-                *ys = x[s] - gamma * px;
+                *ys = x[s] - self.gamma_at(row) * px;
             }
         });
     }
@@ -99,19 +114,20 @@ impl Apply for MatFreePolicyOp<'_> {
         // Owned columns are remapped to [0, nlocal): the diagonal of local
         // state s sits at local column s of its selected stacked row.
         let local = self.mdp.transitions().local();
-        let gamma = self.mdp.gamma();
         for (s, o) in out.iter_mut().enumerate() {
-            *o = 1.0 - gamma * local.get(self.row_of(s), s);
+            let row = self.row_of(s);
+            *o = 1.0 - self.gamma_at(row) * local.get(row, s);
         }
     }
 
     fn local_block(&self) -> Csr {
         let nl = self.local_rows();
         let local = self.mdp.transitions().local();
-        let gamma = self.mdp.gamma();
         let mut rows: Vec<Vec<(usize, f64)>> = Vec::with_capacity(nl);
         for s in 0..nl {
-            let (cols, vals) = local.row(self.row_of(s));
+            let row_idx = self.row_of(s);
+            let (cols, vals) = local.row(row_idx);
+            let gamma = self.gamma_at(row_idx);
             let mut row: Vec<(usize, f64)> = vec![(s, 1.0)];
             for (&c, &v) in cols.iter().zip(vals) {
                 if c < nl {
@@ -128,10 +144,11 @@ impl Apply for MatFreePolicyOp<'_> {
         let trans = self.mdp.transitions();
         let local = trans.local();
         let lo = self.partition().lo(trans.rank());
-        let gamma = self.mdp.gamma();
         (0..nl)
             .map(|s| {
-                let (cols, vals) = local.row(self.row_of(s));
+                let row_idx = self.row_of(s);
+                let (cols, vals) = local.row(row_idx);
+                let gamma = self.gamma_at(row_idx);
                 let mut row: Vec<(usize, f64)> = Vec::with_capacity(cols.len() + 1);
                 row.push((lo + s, 1.0));
                 for (&c, &v) in cols.iter().zip(vals) {

@@ -16,9 +16,11 @@
 //!   generation/saving ([`io::write_streaming`], [`io::save_dist`]) that
 //!   never materialize the full model on one rank.
 
+pub mod discount;
 pub mod io;
 pub mod matfree;
 
+pub use discount::{Discount, DiscountMode};
 pub use matfree::MatFreePolicyOp;
 
 use crate::comm::Comm;
@@ -122,7 +124,8 @@ fn validate_filler_row(
     Ok(())
 }
 
-/// A complete (serial) infinite-horizon discounted MDP.
+/// A complete (serial) infinite-horizon discounted MDP (or semi-MDP, when
+/// the discount is state(-action)-dependent — see [`Discount`]).
 #[derive(Clone, Debug)]
 pub struct Mdp {
     n_states: usize,
@@ -131,8 +134,9 @@ pub struct Mdp {
     transitions: Csr,
     /// Stage costs, `costs[s·m + a]`.
     costs: Vec<f64>,
-    /// Discount factor γ ∈ (0, 1).
-    gamma: f64,
+    /// Discount factors: one scalar, or per-state / per-state-action
+    /// vectors (semi-MDPs), every entry in [0, 1).
+    discount: Discount,
     /// Optimization sense (min-cost by default).
     objective: Objective,
 }
@@ -145,6 +149,19 @@ impl Mdp {
         transitions: Csr,
         costs: Vec<f64>,
         gamma: f64,
+    ) -> Result<Mdp, String> {
+        Mdp::new_discounted(n_states, n_actions, transitions, costs, Discount::Scalar(gamma))
+    }
+
+    /// [`Self::new`] with generalized (possibly state-action-dependent)
+    /// discounting. The discount is validated element-wise through the one
+    /// crate-wide gamma check — finite, in [0, 1), correct length.
+    pub fn new_discounted(
+        n_states: usize,
+        n_actions: usize,
+        transitions: Csr,
+        costs: Vec<f64>,
+        discount: Discount,
     ) -> Result<Mdp, String> {
         if transitions.nrows() != n_states * n_actions {
             return Err(format!(
@@ -159,9 +176,7 @@ impl Mdp {
         if costs.len() != n_states * n_actions {
             return Err("cost table size != n·m".into());
         }
-        if !(0.0..1.0).contains(&gamma) {
-            return Err(format!("gamma {gamma} outside [0,1)"));
-        }
+        discount.validate(n_states, n_actions)?;
         if !transitions.is_row_stochastic(1e-8) {
             return Err("transition matrix is not row-stochastic".into());
         }
@@ -173,7 +188,7 @@ impl Mdp {
             n_actions,
             transitions,
             costs,
-            gamma,
+            discount,
             objective: Objective::Min,
         })
     }
@@ -215,10 +230,22 @@ impl Mdp {
         prob: impl Fn(usize, usize) -> Vec<(usize, f64)>,
         cost: impl Fn(usize, usize) -> f64,
     ) -> Result<Mdp, String> {
+        Mdp::try_from_fillers_discounted(n_states, n_actions, Discount::Scalar(gamma), prob, cost)
+    }
+
+    /// [`Self::try_from_fillers`] with a pre-built (possibly vector)
+    /// [`Discount`] — validated element-wise before any row is generated.
+    pub fn try_from_fillers_discounted(
+        n_states: usize,
+        n_actions: usize,
+        discount: Discount,
+        prob: impl Fn(usize, usize) -> Vec<(usize, f64)>,
+        cost: impl Fn(usize, usize) -> f64,
+    ) -> Result<Mdp, String> {
         if n_states == 0 || n_actions == 0 {
             return Err(format!("MDP shape {n_states}x{n_actions} must be positive"));
         }
-        validate_gamma(gamma)?;
+        discount.validate(n_states, n_actions)?;
         let mut rows = Vec::with_capacity(n_states * n_actions);
         let mut costs = Vec::with_capacity(n_states * n_actions);
         for s in 0..n_states {
@@ -234,7 +261,39 @@ impl Mdp {
             }
         }
         let transitions = Csr::from_row_lists(n_states, rows);
-        Mdp::new(n_states, n_actions, transitions, costs, gamma)
+        Mdp::new_discounted(n_states, n_actions, transitions, costs, discount)
+    }
+
+    /// Semi-MDP filler construction: a third closure supplies the
+    /// per-transition effective discount `(s, a) → γ(s,a)`, validated
+    /// pair-by-pair through the shared gamma check with the offending
+    /// `(s, a)` named (the serial counterpart of
+    /// [`DistMdp::try_from_fillers_semi`]).
+    pub fn try_from_fillers_semi(
+        n_states: usize,
+        n_actions: usize,
+        disc: impl Fn(usize, usize) -> f64,
+        prob: impl Fn(usize, usize) -> Vec<(usize, f64)>,
+        cost: impl Fn(usize, usize) -> f64,
+    ) -> Result<Mdp, String> {
+        if n_states == 0 || n_actions == 0 {
+            return Err(format!("MDP shape {n_states}x{n_actions} must be positive"));
+        }
+        let mut gammas = Vec::with_capacity(n_states * n_actions);
+        for s in 0..n_states {
+            for a in 0..n_actions {
+                gammas.push(disc(s, a));
+            }
+        }
+        // Discount::validate (inside the discounted build) checks every
+        // entry through the shared gamma check, naming the offending (s, a).
+        Mdp::try_from_fillers_discounted(
+            n_states,
+            n_actions,
+            Discount::PerStateAction(gammas),
+            prob,
+            cost,
+        )
     }
 
     /// Number of states `n`.
@@ -247,9 +306,17 @@ impl Mdp {
         self.n_actions
     }
 
-    /// Discount factor γ ∈ [0, 1).
+    /// Uniform discount bound `γ̄ = max γ(s,a)` ∈ [0, 1) — the contraction
+    /// modulus. For classic (scalar-discount) MDPs this *is* the discount
+    /// factor; semi-MDPs expose their per-transition factors through
+    /// [`Self::discount`].
     pub fn gamma(&self) -> f64 {
-        self.gamma
+        self.discount.max_gamma()
+    }
+
+    /// The discount representation (scalar, per-state, per-state-action).
+    pub fn discount(&self) -> &Discount {
+        &self.discount
     }
 
     /// The stacked `(n·m) × n` transition CSR.
@@ -267,14 +334,15 @@ impl Mdp {
         self.costs[s * self.n_actions + a]
     }
 
-    /// Q-factor backup for one (s, a): `g(s,a) + γ Σ P(s'|s,a) V(s')`.
+    /// Q-factor backup for one (s, a): `g(s,a) + γ(s,a) Σ P(s'|s,a) V(s')`.
     pub fn q_value(&self, s: usize, a: usize, v: &[f64]) -> f64 {
-        let (cols, vals) = self.transitions.row(s * self.n_actions + a);
+        let row = s * self.n_actions + a;
+        let (cols, vals) = self.transitions.row(row);
         let mut exp = 0.0;
         for (&c, &p) in cols.iter().zip(vals) {
             exp += p * v[c];
         }
-        self.cost(s, a) + self.gamma * exp
+        self.cost(s, a) + self.discount.at_row(row, self.n_actions) * exp
     }
 
     /// One Bellman backup: returns (TV, greedy policy).
@@ -334,10 +402,13 @@ impl Mdp {
     pub fn evaluate_policy_exact(&self, policy: &[usize]) -> Vec<f64> {
         let (p_pi, g_pi) = self.policy_system(policy);
         let mut a = p_pi.to_dense();
-        // A = I - γ P_π
+        // A = I - diag(γ_π) P_π (γ_π(s) = γ(s, π(s)); scalar γ for classic MDPs)
         for r in 0..self.n_states {
+            let g = self
+                .discount
+                .at_row(r * self.n_actions + policy[r], self.n_actions);
             for c in 0..self.n_states {
-                a[(r, c)] = if r == c { 1.0 } else { 0.0 } - self.gamma * a[(r, c)];
+                a[(r, c)] = if r == c { 1.0 } else { 0.0 } - g * a[(r, c)];
             }
         }
         a.solve(&g_pi).expect("policy system singular")
@@ -354,7 +425,8 @@ impl Mdp {
 
     /// Total memory of the MDP data (bytes) — reported in E5.
     pub fn storage_bytes(&self) -> usize {
-        self.transitions.storage_bytes() + self.costs.len() * 8
+        let disc = self.discount.entries().map_or(0, |v| v.len() * 8);
+        self.transitions.storage_bytes() + self.costs.len() * 8 + disc
     }
 }
 
@@ -362,13 +434,29 @@ impl Mdp {
 pub struct DistMdp {
     part: Partition,
     n_actions: usize,
-    gamma: f64,
+    /// Rank-local discount slice (scalar, or the owned states' entries of
+    /// the per-state / per-state-action vectors).
+    discount: Discount,
+    /// Global contraction modulus `max γ(s,a)` — agreed across ranks at
+    /// construction so every rank reports the same certificate.
+    gamma_max: f64,
     objective: Objective,
     /// Local stacked transition rows (`m · local_states` of them),
     /// ghost-remapped over the state partition.
     trans: DistCsr,
     /// Local stage costs, `costs[(s − lo)·m + a]`.
     costs: Vec<f64>,
+}
+
+/// How a distributed filler build sources its discount factors: a
+/// rank-uniform pre-built [`Discount`] (sliced locally), a constant
+/// expanded to the requested representation (built directly at local
+/// size — no rank ever materializes the global vector), or a closure
+/// evaluated rank-locally over the owned `(s, a)` pairs.
+enum DiscountSource<'a> {
+    Global(Discount),
+    Constant(DiscountMode, f64),
+    Filler(&'a dyn Fn(usize, usize) -> f64),
 }
 
 impl DistMdp {
@@ -401,16 +489,115 @@ impl DistMdp {
         prob: impl Fn(usize, usize) -> Vec<(usize, f64)>,
         cost: impl Fn(usize, usize) -> f64,
     ) -> Result<DistMdp, String> {
+        DistMdp::build_from_fillers(
+            comm,
+            n_states,
+            n_actions,
+            DiscountSource::Global(Discount::Scalar(gamma)),
+            prob,
+            cost,
+        )
+    }
+
+    /// [`Self::try_from_fillers`] with a pre-built (possibly vector)
+    /// [`Discount`]. The discount must be **rank-uniform** (every rank
+    /// passes the same global object — e.g. a header-loaded vector or a
+    /// constant expansion); it is validated identically on every rank and
+    /// each rank keeps only its owned slice. Collective.
+    pub fn try_from_fillers_discounted(
+        comm: &Comm,
+        n_states: usize,
+        n_actions: usize,
+        discount: Discount,
+        prob: impl Fn(usize, usize) -> Vec<(usize, f64)>,
+        cost: impl Fn(usize, usize) -> f64,
+    ) -> Result<DistMdp, String> {
+        DistMdp::build_from_fillers(
+            comm,
+            n_states,
+            n_actions,
+            DiscountSource::Global(discount),
+            prob,
+            cost,
+        )
+    }
+
+    /// [`Self::try_from_fillers`] with a **constant** discount in the
+    /// requested representation — `gamma` replicated over however many
+    /// entries `mode` stores. Each rank builds only its local slice
+    /// (O(local), never the global vector), and by the representation
+    /// invariant the result solves bitwise identically to the scalar.
+    /// Collective.
+    pub fn try_from_fillers_constant(
+        comm: &Comm,
+        n_states: usize,
+        n_actions: usize,
+        mode: DiscountMode,
+        gamma: f64,
+        prob: impl Fn(usize, usize) -> Vec<(usize, f64)>,
+        cost: impl Fn(usize, usize) -> f64,
+    ) -> Result<DistMdp, String> {
+        DistMdp::build_from_fillers(
+            comm,
+            n_states,
+            n_actions,
+            DiscountSource::Constant(mode, gamma),
+            prob,
+            cost,
+        )
+    }
+
+    /// Semi-MDP filler construction: a third closure supplies the
+    /// per-transition effective discount `(s, a) → γ(s,a)`, evaluated and
+    /// validated **rank-locally** over the owned pairs (through the shared
+    /// gamma check, with the offending `(s, a)` named) — the verdict then
+    /// joins the same collective agreement as the row validation, so a bad
+    /// discount on one rank errors every rank instead of deadlocking the
+    /// world. Collective.
+    pub fn try_from_fillers_semi(
+        comm: &Comm,
+        n_states: usize,
+        n_actions: usize,
+        disc: impl Fn(usize, usize) -> f64,
+        prob: impl Fn(usize, usize) -> Vec<(usize, f64)>,
+        cost: impl Fn(usize, usize) -> f64,
+    ) -> Result<DistMdp, String> {
+        DistMdp::build_from_fillers(
+            comm,
+            n_states,
+            n_actions,
+            DiscountSource::Filler(&disc),
+            prob,
+            cost,
+        )
+    }
+
+    /// The shared distributed filler build behind every construction path.
+    fn build_from_fillers(
+        comm: &Comm,
+        n_states: usize,
+        n_actions: usize,
+        discount: DiscountSource<'_>,
+        prob: impl Fn(usize, usize) -> Vec<(usize, f64)>,
+        cost: impl Fn(usize, usize) -> f64,
+    ) -> Result<DistMdp, String> {
         // Uniform-input checks: identical on every rank, so an early return
         // here cannot desynchronize the world.
         if n_states == 0 || n_actions == 0 {
             return Err(format!("MDP shape {n_states}x{n_actions} must be positive"));
         }
-        validate_gamma(gamma)?;
+        match &discount {
+            DiscountSource::Global(d) => d.validate(n_states, n_actions)?,
+            DiscountSource::Constant(_, g) => {
+                validate_gamma(*g)?;
+            }
+            DiscountSource::Filler(_) => {}
+        }
         let part = Partition::new(n_states, comm.size());
         let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
         let mut rows = Vec::with_capacity((hi - lo) * n_actions);
         let mut costs = Vec::with_capacity((hi - lo) * n_actions);
+        let mut local_gammas: Vec<f64> = Vec::new();
         let mut local_err: Option<String> = None;
         'fill: for s in lo..hi {
             for a in 0..n_actions {
@@ -424,6 +611,14 @@ impl DistMdp {
                     local_err = Some(format!("cost at (s={s}, a={a}) is not finite"));
                     break 'fill;
                 }
+                if let DiscountSource::Filler(f) = &discount {
+                    let g = f(s, a);
+                    if let Err(e) = validate_gamma(g) {
+                        local_err = Some(format!("discount at (s={s}, a={a}): {e}"));
+                        break 'fill;
+                    }
+                    local_gammas.push(g);
+                }
                 rows.push(row);
                 costs.push(c);
             }
@@ -435,11 +630,29 @@ impl DistMdp {
         if let Some(msg) = verdicts.into_iter().find(|m| !m.is_empty()) {
             return Err(String::from_utf8_lossy(&msg).into_owned());
         }
+        // The discount source variant is rank-uniform (every rank runs the
+        // same call), so either all ranks enter the `comm.max` or none do.
+        let (local_discount, gamma_max) = match discount {
+            DiscountSource::Global(d) => {
+                let gmax = d.max_gamma();
+                (d.slice_states(lo, hi, n_actions), gmax)
+            }
+            // local-size expansion: bitwise identical to slicing a global
+            // constant vector, without ever building one
+            DiscountSource::Constant(mode, g) => {
+                (Discount::constant(mode, g, hi - lo, n_actions), g)
+            }
+            DiscountSource::Filler(_) => {
+                let local_max = local_gammas.iter().copied().fold(0.0, f64::max);
+                (Discount::PerStateAction(local_gammas), comm.max(local_max))
+            }
+        };
         let trans = DistCsr::assemble(comm, part, rows);
         Ok(DistMdp {
             part,
             n_actions,
-            gamma,
+            discount: local_discount,
+            gamma_max,
             objective: Objective::Min,
             trans,
             costs,
@@ -457,19 +670,21 @@ impl DistMdp {
         self.objective
     }
 
-    /// Distribute a serial MDP (each rank slices its block). Collective.
+    /// Distribute a serial MDP (each rank slices its block — including the
+    /// discount vector for semi-MDPs). Collective.
     pub fn from_serial(comm: &Comm, mdp: &Mdp) -> DistMdp {
-        DistMdp::from_fillers(
+        DistMdp::try_from_fillers_discounted(
             comm,
             mdp.n_states(),
             mdp.n_actions(),
-            mdp.gamma(),
+            mdp.discount().clone(),
             |s, a| {
                 let (cols, vals) = mdp.transitions().row(s * mdp.n_actions() + a);
                 cols.iter().copied().zip(vals.iter().copied()).collect()
             },
             |s, a| mdp.cost(s, a),
         )
+        .unwrap_or_else(|e| panic!("serial MDP failed to distribute: {e}"))
         .with_objective(mdp.objective())
     }
 
@@ -488,9 +703,17 @@ impl DistMdp {
         self.n_actions
     }
 
-    /// Discount factor γ ∈ [0, 1).
+    /// Uniform discount bound `γ̄ = max γ(s,a)` ∈ [0, 1) over the **global**
+    /// MDP (agreed collectively at construction) — the contraction modulus.
+    /// For classic scalar-discount MDPs this is the discount factor.
     pub fn gamma(&self) -> f64 {
-        self.gamma
+        self.gamma_max
+    }
+
+    /// The rank-local discount slice (scalar, or the owned states'
+    /// per-state / per-state-action entries).
+    pub fn discount(&self) -> &Discount {
+        &self.discount
     }
 
     /// Number of locally owned states.
@@ -541,6 +764,7 @@ impl DistMdp {
         // result is bitwise identical for every thread count.
         let q: &[f64] = q_scratch.as_slice();
         let m = self.n_actions;
+        let disc = &self.discount;
         let local_res = crate::util::par::par_for_rows2(
             tv,
             policy,
@@ -552,7 +776,15 @@ impl DistMdp {
                     let mut best = self.objective.worst();
                     let mut best_a = 0usize;
                     for a in 0..m {
-                        let qv = self.costs[base + a] + self.gamma * q[base + a];
+                        // Scalar and a constant vector read the same f64
+                        // here, so the Q-values (hence TV/policy/residual)
+                        // are bitwise identical across representations.
+                        let gv = match disc {
+                            Discount::Scalar(g) => *g,
+                            Discount::PerState(v) => v[s],
+                            Discount::PerStateAction(v) => v[base + a],
+                        };
+                        let qv = self.costs[base + a] + gv * q[base + a];
                         if self.objective.better(qv, best) {
                             best = qv;
                             best_a = a;
@@ -585,6 +817,15 @@ impl DistMdp {
             .collect()
     }
 
+    /// Rank-local per-state discounts `γ_π` under a fixed policy — the
+    /// diagonal of `diag(γ_π)` in the evaluation system
+    /// `(I − diag(γ_π) P_π) V = g_π`. `None` for scalar discounting (the
+    /// assembled operator then takes the classic `I − γ P_π` path).
+    pub fn policy_discounts(&self, policy: &[usize]) -> Option<Vec<f64>> {
+        debug_assert_eq!(policy.len(), self.local_states());
+        self.discount.policy_rows(policy, self.n_actions)
+    }
+
     /// Extract the distributed policy system `(P_π, g_π)` for the current
     /// local policy. Collective (builds a fresh ghost plan).
     pub fn policy_system(&self, comm: &Comm, policy: &[usize]) -> (DistCsr, Vec<f64>) {
@@ -610,9 +851,10 @@ impl DistMdp {
         (p_pi, g)
     }
 
-    /// Local storage bytes (matrix block + costs).
+    /// Local storage bytes (matrix block + costs + discount entries).
     pub fn storage_bytes(&self) -> usize {
-        self.trans.local().storage_bytes() + self.costs.len() * 8
+        let disc = self.discount.entries().map_or(0, |v| v.len() * 8);
+        self.trans.local().storage_bytes() + self.costs.len() * 8 + disc
     }
 }
 

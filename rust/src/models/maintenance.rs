@@ -1,0 +1,268 @@
+//! Machine-maintenance **semi-MDP** with exponential sojourn times — the
+//! scenario class that needs state-action-dependent discounting
+//! (DESIGN.md §12; the companion madupite paper's generalized-discount
+//! support is exactly for models like this).
+//!
+//! A machine deteriorates through wear levels `0` (new) … `n − 1`
+//! (failed), but unlike the discrete-time [`super::replacement`] model the
+//! time between decision epochs is **random**: in wear level `c` under
+//! action `a` the machine holds for an exponential sojourn `τ ~ Exp(r(c,a))`
+//! before the next transition. Costs accrue at a *rate* while the sojourn
+//! lasts, and future cost is discounted continuously at rate `ρ > 0`.
+//! Standard semi-MDP algebra turns this into an equivalent discrete model
+//! with per-transition quantities:
+//!
+//! - effective discount `γ(c,a) = E[e^{−ρτ}] = r(c,a) / (r(c,a) + ρ)`
+//!   (the Laplace transform of the exponential sojourn at `ρ`), and
+//! - stage cost: this model uses the expected **undiscounted** sojourn
+//!   cost `g(c,a) = c_rate(c,a) · E[τ] = c_rate(c,a) / r(c,a)` — the
+//!   ρ → 0 limit of the fully discounted integral
+//!   `c_rate · (1 − γ(c,a)) / ρ`. The deliberate simplification keeps
+//!   stage costs independent of the `-gamma` knob (like every other
+//!   catalog model, whose `cost(s, a)` has no gamma parameter) while
+//!   preserving the time-scale trade-off that makes the model a semi-MDP:
+//!   slow states accrue more cost per decision epoch, fast states
+//!   discount the future less per epoch.
+//!
+//! The base `-gamma` knob keeps its usual meaning as the *per unit time*
+//! discount, mapped to the continuous rate via `ρ = −ln γ`. Worn machines
+//! fail faster (`r` grows with wear), so their sojourns are shorter and
+//! their effective discounts *larger* — the future matters more per
+//! decision exactly where decisions come thick — which is why collapsing
+//! γ(c,a) to any single scalar changes the optimal policy, not just the
+//! values. Repairs also take time (`Exp(repair_rate)`), discounting the
+//! post-repair future accordingly.
+
+use super::ModelGenerator;
+
+/// Semi-MDP machine-maintenance specification (all rates per unit time).
+#[derive(Clone, Debug)]
+pub struct MaintenanceSpec {
+    /// Number of wear levels (0 = new, last = failed). At least 3.
+    pub n_conditions: usize,
+    /// Degradation rate of a new machine under "run" (sojourn `Exp(rate)`).
+    pub base_rate: f64,
+    /// Additional degradation rate per unit of relative wear: the rate at
+    /// wear `c` is `base_rate · (1 + accel · c/(n−1))` — worn machines
+    /// fail faster, shortening sojourns and *raising* γ(c, run).
+    pub accel: f64,
+    /// Probability that a degradation step jumps two levels (shock).
+    pub shock_prob: f64,
+    /// Completion rate of a repair (sojourn `Exp(repair_rate)`).
+    pub repair_rate: f64,
+    /// Operating-cost rate at wear `c`: `operating_base + slope · (c/(n−1))²`.
+    pub operating_base: f64,
+    /// Slope of the convex operating-cost-rate curve.
+    pub operating_slope: f64,
+    /// Cost rate while a repair is in progress (parts + downtime).
+    pub repair_cost_rate: f64,
+    /// Extra cost rate of running a failed machine (outage).
+    pub outage_cost_rate: f64,
+}
+
+impl MaintenanceSpec {
+    /// The standard benchmark parameterization with `n_conditions` levels.
+    pub fn standard(n_conditions: usize) -> MaintenanceSpec {
+        assert!(n_conditions >= 3);
+        MaintenanceSpec {
+            n_conditions,
+            base_rate: 0.5,
+            accel: 4.0,
+            shock_prob: 0.1,
+            repair_rate: 2.0,
+            operating_base: 0.2,
+            operating_slope: 5.0,
+            repair_cost_rate: 6.0,
+            outage_cost_rate: 4.0,
+        }
+    }
+
+    fn failed(&self) -> usize {
+        self.n_conditions - 1
+    }
+
+    /// Sojourn rate `r(c, a)` (a = 0 run, a = 1 repair).
+    pub fn sojourn_rate(&self, c: usize, a: usize) -> f64 {
+        if a == 1 {
+            self.repair_rate
+        } else {
+            let frac = c as f64 / (self.n_conditions - 1) as f64;
+            self.base_rate * (1.0 + self.accel * frac)
+        }
+    }
+
+    /// Continuous discount rate `ρ = −ln γ` for the per-unit-time `gamma`.
+    pub fn rho(gamma: f64) -> f64 {
+        -gamma.ln()
+    }
+
+    /// Cost *rate* while in wear level `c` under action `a`.
+    pub fn cost_rate(&self, c: usize, a: usize) -> f64 {
+        if a == 1 {
+            self.repair_cost_rate
+        } else {
+            let frac = c as f64 / (self.n_conditions - 1) as f64;
+            let run = self.operating_base + self.operating_slope * frac * frac;
+            if c == self.failed() {
+                run + self.outage_cost_rate
+            } else {
+                run
+            }
+        }
+    }
+}
+
+impl ModelGenerator for MaintenanceSpec {
+    fn n_states(&self) -> usize {
+        self.n_conditions
+    }
+
+    fn n_actions(&self) -> usize {
+        2
+    }
+
+    fn prob_row(&self, c: usize, a: usize) -> Vec<(usize, f64)> {
+        if a == 1 {
+            // repair completes to a new machine
+            return vec![(0, 1.0)];
+        }
+        if c == self.failed() {
+            // a failed machine stays failed until repaired
+            return vec![(c, 1.0)];
+        }
+        let one = (c + 1).min(self.failed());
+        let two = (c + 2).min(self.failed());
+        if one == two {
+            vec![(one, 1.0)]
+        } else {
+            vec![(one, 1.0 - self.shock_prob), (two, self.shock_prob)]
+        }
+    }
+
+    fn cost(&self, c: usize, a: usize) -> f64 {
+        // expected undiscounted sojourn cost c_rate(c,a) · E[τ] — see the
+        // module docs for why the ρ → 0 limit is the stage cost here
+        self.cost_rate(c, a) / self.sojourn_rate(c, a)
+    }
+
+    fn discount(&self, c: usize, a: usize, gamma: f64) -> f64 {
+        let r = self.sojourn_rate(c, a);
+        r / (r + Self::rho(gamma))
+    }
+
+    fn has_discounts(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mdp::{Discount, DiscountMode};
+    use crate::models::check_generator;
+    use crate::solver::{solve_serial, Method, SolveOptions};
+
+    #[test]
+    fn generator_valid() {
+        check_generator(&MaintenanceSpec::standard(12));
+    }
+
+    #[test]
+    fn effective_discount_formula() {
+        let spec = MaintenanceSpec::standard(10);
+        let gamma = 0.9;
+        let rho = -0.9f64.ln();
+        for c in 0..10 {
+            for a in 0..2 {
+                let r = spec.sojourn_rate(c, a);
+                let want = r / (r + rho);
+                assert!((spec.discount(c, a, gamma) - want).abs() < 1e-15);
+                assert!(spec.discount(c, a, gamma) < 1.0);
+            }
+        }
+        // worn machines transition faster → larger effective discount
+        assert!(spec.discount(9, 0, gamma) > spec.discount(0, 0, gamma));
+    }
+
+    #[test]
+    fn builds_a_per_state_action_semi_mdp() {
+        let spec = MaintenanceSpec::standard(8);
+        let mdp = spec.build_serial(0.9);
+        assert_eq!(mdp.discount().mode(), DiscountMode::PerStateAction);
+        match mdp.discount() {
+            Discount::PerStateAction(v) => {
+                assert_eq!(v.len(), 16);
+                assert_eq!(v[0], spec.discount(0, 0, 0.9));
+                assert_eq!(v[15], spec.discount(7, 1, 0.9));
+            }
+            other => panic!("unexpected discount {other:?}"),
+        }
+        // the contraction bound is the max over all pairs
+        let gmax = (0..8)
+            .flat_map(|c| (0..2).map(move |a| (c, a)))
+            .map(|(c, a)| spec.discount(c, a, 0.9))
+            .fold(0.0f64, f64::max);
+        assert_eq!(mdp.gamma(), gmax);
+    }
+
+    #[test]
+    fn optimal_policy_is_control_limit() {
+        let spec = MaintenanceSpec::standard(16);
+        let mdp = spec.build_serial(0.95);
+        let r = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::ipi_gmres(),
+                atol: 1e-10,
+                ..Default::default()
+            },
+        );
+        assert!(r.converged);
+        // run when new, repair when failed
+        assert_eq!(r.policy[0], 0);
+        assert_eq!(r.policy[15], 1);
+        // monotone threshold structure: once repair, always repair
+        let first = r.policy.iter().position(|&a| a == 1).unwrap();
+        for c in first..16 {
+            assert_eq!(r.policy[c], 1, "not a control limit: {:?}", r.policy);
+        }
+        // value increasing in wear
+        for c in 1..16 {
+            assert!(r.value[c] >= r.value[c - 1] - 1e-9);
+        }
+    }
+
+    #[test]
+    fn semi_mdp_differs_from_scalar_collapse() {
+        // The point of per-transition discounting: collapsing γ(c,a) to
+        // the scalar bound γ̄ solves a *different* model — the values move
+        // substantially (a new machine's future is over-discounted by the
+        // failed machine's short sojourns), so the scenario class is
+        // genuinely unreachable with one scalar.
+        let spec = MaintenanceSpec::standard(16);
+        let semi = spec.build_serial(0.95);
+        let scalar = crate::mdp::Mdp::new(
+            16,
+            2,
+            semi.transitions().clone(),
+            semi.costs().to_vec(),
+            semi.gamma(),
+        )
+        .unwrap();
+        let opts = SolveOptions {
+            method: Method::ipi_gmres(),
+            atol: 1e-10,
+            ..Default::default()
+        };
+        let r_semi = solve_serial(&semi, &opts);
+        let r_scalar = solve_serial(&scalar, &opts);
+        assert!(r_semi.converged && r_scalar.converged);
+        let max_diff = r_semi
+            .value
+            .iter()
+            .zip(&r_scalar.value)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_diff > 0.1, "scalar collapse barely moved the values (max diff {max_diff})");
+    }
+}

@@ -13,6 +13,7 @@
 pub mod garnet;
 pub mod gridworld;
 pub mod inventory;
+pub mod maintenance;
 pub mod queueing;
 pub mod replacement;
 pub mod sis;
@@ -28,6 +29,12 @@ use std::path::Path;
 /// `cost(s, a)` the stage cost. Implementations must be pure functions of
 /// `(spec, s, a)` so that distributed construction is reproducible and
 /// rank-independent.
+///
+/// Semi-MDP generators additionally override [`Self::discount`] (and set
+/// [`Self::has_discounts`]): given the base per-unit-time discount
+/// `gamma`, they return the *effective* per-transition factor `γ(s,a)` —
+/// e.g. `r/(r+ρ)` for exponential sojourn times with rate `r` under
+/// continuous discount rate `ρ = −ln γ` ([`maintenance`]).
 pub trait ModelGenerator: Sync {
     /// Number of states of the generated MDP.
     fn n_states(&self) -> usize;
@@ -38,33 +45,91 @@ pub trait ModelGenerator: Sync {
     /// The stage cost of `(s, a)`.
     fn cost(&self, s: usize, a: usize) -> f64;
 
-    /// Build the full serial MDP.
+    /// The effective discount of `(s, a)` given the base discount `gamma`.
+    /// Classic discounted models keep the default (the scalar itself);
+    /// semi-MDP generators override it with their per-transition factor
+    /// (a pure function of `(spec, s, a, gamma)`).
+    fn discount(&self, s: usize, a: usize, gamma: f64) -> f64 {
+        let _ = (s, a);
+        gamma
+    }
+
+    /// Whether [`Self::discount`] is non-uniform — i.e. the generated
+    /// model is a semi-MDP with a per-state-action discount vector.
+    fn has_discounts(&self) -> bool {
+        false
+    }
+
+    /// Fallible [`Self::build_serial`]. Well-formed generators only fail
+    /// for extreme inputs — e.g. a semi-MDP with a base gamma so close to
+    /// 1 that an effective `r/(r+ρ)` rounds to exactly 1.0 — and those
+    /// surface as typed errors here (the infallible wrapper panics).
+    fn try_build_serial(&self, gamma: f64) -> Result<Mdp, String> {
+        if self.has_discounts() {
+            Mdp::try_from_fillers_semi(
+                self.n_states(),
+                self.n_actions(),
+                |s, a| self.discount(s, a, gamma),
+                |s, a| self.prob_row(s, a),
+                |s, a| self.cost(s, a),
+            )
+        } else {
+            Mdp::try_from_fillers(
+                self.n_states(),
+                self.n_actions(),
+                gamma,
+                |s, a| self.prob_row(s, a),
+                |s, a| self.cost(s, a),
+            )
+        }
+    }
+
+    /// Build the full serial MDP (a semi-MDP when
+    /// [`Self::has_discounts`]). Panics on invalid generator output — use
+    /// [`Self::try_build_serial`] for the fallible variant.
     fn build_serial(&self, gamma: f64) -> Mdp {
-        Mdp::from_fillers(
-            self.n_states(),
-            self.n_actions(),
-            gamma,
-            |s, a| self.prob_row(s, a),
-            |s, a| self.cost(s, a),
-        )
+        self.try_build_serial(gamma)
+            .unwrap_or_else(|e| panic!("generator produced an invalid MDP: {e}"))
+    }
+
+    /// Fallible [`Self::build_dist`] — see [`Self::try_build_serial`] for
+    /// when generators fail. Collective (errors agree across ranks).
+    fn try_build_dist(&self, comm: &Comm, gamma: f64) -> Result<DistMdp, String> {
+        if self.has_discounts() {
+            DistMdp::try_from_fillers_semi(
+                comm,
+                self.n_states(),
+                self.n_actions(),
+                |s, a| self.discount(s, a, gamma),
+                |s, a| self.prob_row(s, a),
+                |s, a| self.cost(s, a),
+            )
+        } else {
+            DistMdp::try_from_fillers(
+                comm,
+                self.n_states(),
+                self.n_actions(),
+                gamma,
+                |s, a| self.prob_row(s, a),
+                |s, a| self.cost(s, a),
+            )
+        }
     }
 
     /// Build the rank-local block of the distributed MDP. Collective.
+    /// Panics on invalid generator output — use [`Self::try_build_dist`]
+    /// for the fallible variant.
     fn build_dist(&self, comm: &Comm, gamma: f64) -> DistMdp {
-        DistMdp::from_fillers(
-            comm,
-            self.n_states(),
-            self.n_actions(),
-            gamma,
-            |s, a| self.prob_row(s, a),
-            |s, a| self.cost(s, a),
-        )
+        self.try_build_dist(comm, gamma)
+            .unwrap_or_else(|e| panic!("generator produced an invalid distributed MDP: {e}"))
     }
 
-    /// Stream the generated MDP straight to a `.mdpb` v2 file without
+    /// Stream the generated MDP straight to a `.mdpb` v3 file without
     /// materializing it: rank-parallel, O(chunk) memory per rank, bytes
     /// identical for every world size (the offline pipeline behind
-    /// `madupite generate`). Collective; see [`io::write_streaming`].
+    /// `madupite generate`). Semi-MDP generators stream their discount
+    /// payload chunk-wise alongside the rows. Collective; see
+    /// [`io::write_streaming`] / [`io::write_streaming_discounted`].
     fn write_mdpb(
         &self,
         comm: &Comm,
@@ -73,17 +138,32 @@ pub trait ModelGenerator: Sync {
         path: &Path,
         chunk_rows: usize,
     ) -> std::io::Result<io::Header> {
-        io::write_streaming(
-            comm,
-            path,
-            self.n_states(),
-            self.n_actions(),
-            gamma,
-            objective,
-            chunk_rows,
-            |s, a| self.prob_row(s, a),
-            |s, a| self.cost(s, a),
-        )
+        if self.has_discounts() {
+            let disc = |s: usize, a: usize| self.discount(s, a, gamma);
+            io::write_streaming_discounted(
+                comm,
+                path,
+                self.n_states(),
+                self.n_actions(),
+                objective,
+                chunk_rows,
+                io::StreamDiscount::PerStateAction(&disc),
+                |s, a| self.prob_row(s, a),
+                |s, a| self.cost(s, a),
+            )
+        } else {
+            io::write_streaming(
+                comm,
+                path,
+                self.n_states(),
+                self.n_actions(),
+                gamma,
+                objective,
+                chunk_rows,
+                |s, a| self.prob_row(s, a),
+                |s, a| self.cost(s, a),
+            )
+        }
     }
 }
 
@@ -110,6 +190,11 @@ pub(crate) fn check_generator(g: &dyn ModelGenerator) {
                 "row ({s},{a}) sums to {sum}, not 1"
             );
             assert!(g.cost(s, a).is_finite(), "non-finite cost at ({s},{a})");
+            for gamma in [0.5, 0.99] {
+                crate::mdp::validate_gamma(g.discount(s, a, gamma)).unwrap_or_else(|e| {
+                    panic!("bad discount at ({s},{a}) for gamma {gamma}: {e}")
+                });
+            }
         }
     }
 }

@@ -196,7 +196,9 @@ pub struct SolveResult {
     /// solve itself — model distribution/assembly and result gathering are
     /// excluded (counters are snapshotted at `solve_dist` entry and exit).
     pub comm_bytes: u64,
-    /// Discount factor of the solved MDP (for the certificate below).
+    /// Uniform discount bound γ̄ = max γ(s,a) of the solved MDP — equal to
+    /// the discount factor for classic scalar-discount MDPs; for semi-MDPs
+    /// it is the contraction modulus used by the certificate below.
     pub gamma: f64,
     /// World size (SPMD ranks) the solve ran on.
     pub ranks: usize,
@@ -209,8 +211,10 @@ pub struct SolveResult {
 
 impl SolveResult {
     /// Certified sup-norm suboptimality bound from the contraction
-    /// argument: `‖V − V*‖∞ ≤ ‖TV − V‖∞ / (1 − γ)` (the returned iterate
-    /// is the *pre-backup* V, so the bound uses 1/(1−γ), not γ/(1−γ)).
+    /// argument: `‖V − V*‖∞ ≤ ‖TV − V‖∞ / (1 − γ̄)` (the returned iterate
+    /// is the *pre-backup* V, so the bound uses 1/(1−γ̄), not γ̄/(1−γ̄)).
+    /// `γ̄ = max γ(s,a)` is the contraction modulus of the generalized
+    /// Bellman operator, so the certificate holds for semi-MDPs too.
     pub fn error_bound(&self) -> f64 {
         self.residual / (1.0 - self.gamma)
     }
@@ -246,7 +250,8 @@ pub struct LocalSolveResult {
     pub value: Vec<f64>,
     /// Rank-local block of the greedy policy.
     pub policy: Vec<usize>,
-    /// Discount factor of the solved MDP.
+    /// Uniform discount bound γ̄ of the solved MDP (scalar γ for classic
+    /// MDPs).
     pub gamma: f64,
     /// Outer iterations executed.
     pub outer_iterations: usize,
@@ -303,9 +308,12 @@ pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolve
     // Policy-system cache: rebuilding P_π (ghost plan + CSR assembly) is a
     // large fixed cost per outer iteration; when the greedy policy did not
     // change we reuse the previous system (common near convergence and in
-    // wavefront-style problems like mazes).
+    // wavefront-style problems like mazes). For semi-MDPs the per-state
+    // policy discounts γ_π ride along (None under scalar discounting).
     let mut prev_policy: Vec<usize> = Vec::new();
-    let mut cached_system: Option<(crate::linalg::dist::DistCsr, Vec<f64>)> = None;
+    #[allow(clippy::type_complexity)]
+    let mut cached_system: Option<(crate::linalg::dist::DistCsr, Vec<f64>, Option<Vec<f64>>)> =
+        None;
     let mut prev_residual = f64::INFINITY;
 
     for outer in 0..opts.max_outer {
@@ -341,7 +349,8 @@ pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolve
             let changed_local = prev_policy != policy;
             let changed = comm.max(if changed_local { 1.0 } else { 0.0 }) > 0.0;
             if changed || cached_system.is_none() {
-                cached_system = Some(mdp.policy_system(comm, &policy));
+                let (p_pi, g) = mdp.policy_system(comm, &policy);
+                cached_system = Some((p_pi, g, mdp.policy_discounts(&policy)));
                 prev_policy.clear();
                 prev_policy.extend_from_slice(&policy);
             }
@@ -362,8 +371,12 @@ pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolve
                     (&mf_op, &mf_g)
                 }
                 EvalBackend::Assembled => {
-                    let (p_pi, g) = cached_system.as_ref().unwrap();
-                    asm_op = LinOp::new(p_pi, mdp.gamma());
+                    let (p_pi, g, gammas) = cached_system.as_ref().unwrap();
+                    asm_op = match gammas {
+                        // Semi-MDP: the assembled system is I − diag(γ_π) P_π.
+                        Some(gp) => LinOp::with_row_discounts(p_pi, gp),
+                        None => LinOp::new(p_pi, mdp.gamma()),
+                    };
                     (&asm_op, g.as_slice())
                 }
             };

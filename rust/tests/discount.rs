@@ -1,0 +1,515 @@
+//! Generalized-discounting (semi-MDP) test suite — DESIGN.md §12.
+//!
+//! Pins the load-bearing invariants of the `Discount` layer:
+//!
+//! - **Representation invariance**: `Discount::Scalar(g)` and a constant
+//!   per-state / per-state-action vector filled with `g` produce **bitwise
+//!   identical** values, policies and residual traces across the full
+//!   method × eval-backend × ranks × threads matrix.
+//! - **Offline format**: `.mdpb` v3 round-trips the discount payload
+//!   through the serial, distributed and streaming writers (byte-identical
+//!   files for every world size); v1/v2 files keep loading.
+//! - **Typed-error surface**: out-of-range / wrong-length / non-finite
+//!   discounts and conflicting `-discount_mode` combinations are errors
+//!   with the offending entry named — never panics or deadlocks.
+//! - **Semi-MDP semantics**: a hand-computed two-state fixture shows the
+//!   per-transition discount flipping the optimal policy relative to any
+//!   scalar collapse, and the `maintenance` catalog model solves end to
+//!   end (model → solve, model → .mdpb → solve).
+
+use madupite::api::{self, MdpBuilder, Solver};
+use madupite::comm::World;
+use madupite::mdp::{io, Discount, DiscountMode, Mdp};
+use madupite::models::{garnet::GarnetSpec, maintenance::MaintenanceSpec, ModelGenerator};
+use madupite::solver::{solve_world, EvalBackend, Method, SolveOptions, SolveResult};
+use madupite::util::args::Options;
+use madupite::util::par;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// `par::set_threads` is process-global; tests that sweep it serialize on
+/// this lock.
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    THREADS_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tmpfile(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("madupite_discount_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{name}", std::process::id()))
+}
+
+fn db(toks: &[&str]) -> Options {
+    Options::parse(toks.iter().map(|s| s.to_string()))
+}
+
+/// Exact-bits fingerprint of everything the discount representation must
+/// not change: values, policy, counters, residual trace.
+#[allow(clippy::type_complexity)]
+fn fingerprint(r: &SolveResult) -> (Vec<u64>, Vec<usize>, bool, usize, Vec<(u64, usize)>) {
+    (
+        r.value.iter().map(|v| v.to_bits()).collect(),
+        r.policy.clone(),
+        r.converged,
+        r.outer_iterations,
+        r.trace
+            .iter()
+            .map(|t| (t.residual.to_bits(), t.inner_iterations))
+            .collect(),
+    )
+}
+
+fn methods() -> Vec<Method> {
+    vec![
+        Method::Vi,
+        Method::Mpi { sweeps: 5 },
+        Method::ExactPi,
+        Method::ipi_gmres(),
+        Method::ipi_bicgstab(),
+        Method::ipi_tfqmr(),
+    ]
+}
+
+/// The acceptance invariant: a constant discount vector (either shape) is
+/// bitwise indistinguishable from the scalar, for every method, both
+/// evaluation backends, serial and multi-rank worlds, and thread counts
+/// 1 and 4.
+#[test]
+fn scalar_equals_constant_vector_bitwise() {
+    let _guard = lock();
+    let (n, m, g) = (40usize, 3usize, 0.95);
+    let scalar = Arc::new(GarnetSpec::new(n, m, 4, 7).build_serial(g));
+    for mode in [DiscountMode::PerState, DiscountMode::PerStateAction] {
+        let vector = Arc::new(
+            Mdp::new_discounted(
+                n,
+                m,
+                scalar.transitions().clone(),
+                scalar.costs().to_vec(),
+                Discount::constant(mode, g, n, m),
+            )
+            .unwrap(),
+        );
+        assert_eq!(vector.gamma(), g, "constant bound collapses to the scalar");
+        for method in methods() {
+            for backend in [EvalBackend::MatFree, EvalBackend::Assembled] {
+                for ranks in [1usize, 3] {
+                    for threads in [1usize, 4] {
+                        par::set_threads(threads);
+                        let opts = SolveOptions {
+                            method: method.clone(),
+                            eval_backend: backend,
+                            atol: 1e-9,
+                            ..Default::default()
+                        };
+                        let a = solve_world(Arc::clone(&scalar), ranks, &opts);
+                        let b = solve_world(Arc::clone(&vector), ranks, &opts);
+                        assert!(a.converged, "{}", method.name());
+                        assert_eq!(
+                            fingerprint(&a),
+                            fingerprint(&b),
+                            "{:?}/{}/{}/ranks={ranks}/threads={threads} diverged",
+                            mode,
+                            method.name(),
+                            backend.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+    par::set_threads(1);
+}
+
+/// The same invariance holds through the options database: forcing
+/// `-discount_mode per_state(_action)` on a scalar catalog model solves
+/// bitwise identically to the plain scalar run.
+#[test]
+fn forced_discount_mode_matches_scalar_through_api() {
+    let _guard = lock();
+    par::set_threads(1);
+    let run = |mode: &str| {
+        let params = db(&["-num_states", "60", "-seed", "3"]);
+        let builder = MdpBuilder::from_model_name("garnet", &params).unwrap();
+        let mut solver = Solver::with_database(builder, params);
+        solver
+            .set_options_from_str("-gamma 0.95 -method ipi -ksp_type gmres -atol 1e-9 -ranks 2")
+            .unwrap();
+        if mode != "auto" {
+            solver.set_option("-discount_mode", mode).unwrap();
+        }
+        solver.solve().unwrap()
+    };
+    let base = run("auto");
+    assert_eq!(base.discount_mode, DiscountMode::Scalar);
+    for mode in ["scalar", "per_state", "per_state_action"] {
+        let forced = run(mode);
+        assert_eq!(
+            forced.discount_mode,
+            DiscountMode::parse(mode).unwrap(),
+            "-discount_mode {mode}"
+        );
+        assert_eq!(forced.policy(), base.policy(), "-discount_mode {mode}");
+        for (a, b) in base.value().iter().zip(forced.value()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "-discount_mode {mode}");
+        }
+        assert_eq!(forced.gamma, base.gamma);
+    }
+}
+
+/// Hand-computed two-state semi-MDP: per-action discounts flip the optimal
+/// policy relative to the scalar collapse.
+///
+/// State 1 absorbs at cost 0. From state 0: action 0 self-loops at cost 1
+/// with γ(0,0) = 0.5 → staying forever costs 1/(1−0.5) = 2; action 1 jumps
+/// to the absorbing state at cost 3 with γ(0,1) = 0.9 → total 3. So the
+/// semi-MDP optimum is *stay* (V*(0) = 2), while collapsing to the scalar
+/// bound γ̄ = 0.9 makes staying cost 1/(1−0.9) = 10 and flips the optimum
+/// to *jump* (V*(0) = 3). One scalar cannot represent this model.
+#[test]
+fn semi_mdp_fixture_flips_policy_vs_scalar() {
+    let prob = |s: usize, a: usize| match (s, a) {
+        (0, 0) => vec![(0, 1.0)],
+        (0, 1) => vec![(1, 1.0)],
+        _ => vec![(1, 1.0)],
+    };
+    let cost = |s: usize, a: usize| match (s, a) {
+        (0, 0) => 1.0,
+        (0, 1) => 3.0,
+        _ => 0.0,
+    };
+    let disc = |s: usize, a: usize| match (s, a) {
+        (0, 0) => 0.5,
+        (0, 1) => 0.9,
+        _ => 0.5,
+    };
+    let semi = Mdp::try_from_fillers_semi(2, 2, disc, prob, cost).unwrap();
+    assert_eq!(semi.gamma(), 0.9, "bound is the max entry");
+    let scalar = Mdp::try_from_fillers(2, 2, 0.9, prob, cost).unwrap();
+
+    for method in methods() {
+        let opts = SolveOptions {
+            method: method.clone(),
+            atol: 1e-11,
+            ..Default::default()
+        };
+        let rs = solve_world(Arc::new(semi.clone()), 1, &opts);
+        assert!(rs.converged, "{}", method.name());
+        assert_eq!(rs.policy[0], 0, "{}: semi-MDP stays", method.name());
+        assert!((rs.value[0] - 2.0).abs() < 1e-8, "{}", method.name());
+        assert!(rs.value[1].abs() < 1e-8);
+
+        let rc = solve_world(Arc::new(scalar.clone()), 1, &opts);
+        assert!(rc.converged);
+        assert_eq!(rc.policy[0], 1, "{}: scalar collapse jumps", method.name());
+        assert!((rc.value[0] - 3.0).abs() < 1e-8);
+    }
+
+    // ...and the same fixture through the builder's discount_filler, on
+    // serial and multi-rank worlds (rank-local validation + collective
+    // agreement under the hood).
+    for ranks in ["1", "3"] {
+        let builder = MdpBuilder::from_fillers(2, 2, prob, cost).discount_filler(disc);
+        let mut solver = Solver::new(builder);
+        solver
+            .set_options_from_str("-method ipi -atol 1e-11")
+            .unwrap();
+        solver.set_option("-ranks", ranks).unwrap();
+        let outcome = solver.solve().unwrap();
+        assert_eq!(outcome.discount_mode, DiscountMode::PerStateAction);
+        assert_eq!(outcome.policy()[0], 0, "ranks={ranks}");
+        assert!((outcome.value()[0] - 2.0).abs() < 1e-8, "ranks={ranks}");
+        assert_eq!(outcome.gamma, 0.9);
+    }
+}
+
+/// `.mdpb` v3 round-trips the discount payload: serial save/load, and the
+/// distributed reader slices the vector per rank.
+#[test]
+fn mdpb_v3_roundtrips_discount_payload() {
+    let spec = MaintenanceSpec::standard(17);
+    let semi = spec.build_serial(0.9);
+    assert_eq!(semi.discount().mode(), DiscountMode::PerStateAction);
+    let path = tmpfile("maintenance_v3.mdpb");
+    io::save(&semi, &path).unwrap();
+
+    // header carries mode + bound
+    let mut f = std::fs::File::open(&path).unwrap();
+    let h = io::read_header(&mut f).unwrap();
+    assert_eq!(h.version, io::VERSION);
+    assert_eq!(h.discount_mode, DiscountMode::PerStateAction);
+    assert_eq!(h.gamma, semi.gamma());
+
+    // serial reader restores the exact discount vector
+    let loaded = io::load(&path).unwrap();
+    assert_eq!(loaded.discount(), semi.discount());
+    let v0 = vec![0.0; 17];
+    let (tv0, pol0) = semi.bellman(&v0);
+    let (tv1, pol1) = loaded.bellman(&v0);
+    assert_eq!(pol0, pol1);
+    for (a, b) in tv0.iter().zip(&tv1) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // distributed reader: each rank holds its slice; solves agree with the
+    // serial model at every world size
+    let opts = SolveOptions {
+        method: Method::ipi_gmres(),
+        atol: 1e-10,
+        ..Default::default()
+    };
+    let serial = solve_world(Arc::new(semi.clone()), 1, &opts);
+    for ranks in [1usize, 3] {
+        let p = path.clone();
+        let o = opts.clone();
+        let out = World::run(ranks, move |comm| {
+            let d = io::load_dist(&comm, &p).unwrap();
+            assert_eq!(d.discount().mode(), DiscountMode::PerStateAction);
+            let local = madupite::solver::solve_dist(&comm, &d, &o);
+            madupite::solver::gather_result(&comm, local)
+        });
+        assert_eq!(out[0].policy, serial.policy, "ranks={ranks}");
+        for (a, b) in out[0].value.iter().zip(&serial.value) {
+            assert!((a - b).abs() < 1e-8, "ranks={ranks}: {a} vs {b}");
+        }
+        assert_eq!(out[0].gamma, serial.gamma, "ranks={ranks}");
+    }
+
+    // v3 without a payload: scalar files still declare mode scalar and
+    // carry no trailing section
+    let scalar = GarnetSpec::new(9, 2, 3, 1).build_serial(0.8);
+    let spath = tmpfile("scalar_v3.mdpb");
+    io::save(&scalar, &spath).unwrap();
+    let mut f = std::fs::File::open(&spath).unwrap();
+    let hs = io::read_header(&mut f).unwrap();
+    assert_eq!(hs.discount_mode, DiscountMode::Scalar);
+    assert_eq!(
+        hs.expected_file_len(),
+        std::fs::metadata(&spath).unwrap().len() as u128
+    );
+    assert_eq!(io::load(&spath).unwrap().discount(), &Discount::Scalar(0.8));
+}
+
+/// All three v3 producers — serial save, rank-parallel save_dist, and the
+/// two-pass streaming writer — emit byte-identical files for a semi-MDP,
+/// at every world size.
+#[test]
+fn v3_writers_byte_identical_across_ranks() {
+    let spec = Arc::new(MaintenanceSpec::standard(23));
+    let gamma = 0.93;
+    let ref_path = tmpfile("semi_ref.mdpb");
+    io::save(&spec.build_serial(gamma), &ref_path).unwrap();
+    let want = std::fs::read(&ref_path).unwrap();
+
+    for ranks in [1usize, 2, 3] {
+        // streaming writer (generate path), deliberately odd chunk size
+        let stream_path = tmpfile(&format!("semi_stream_r{ranks}.mdpb"));
+        let spec2 = Arc::clone(&spec);
+        let p = stream_path.clone();
+        World::run(ranks, move |comm| {
+            spec2
+                .write_mdpb(&comm, gamma, madupite::mdp::Objective::Min, &p, 5)
+                .unwrap();
+        });
+        assert!(
+            std::fs::read(&stream_path).unwrap() == want,
+            "ranks={ranks}: streamed bytes differ"
+        );
+
+        // save_dist (load_dist → write back)
+        let dist_path = tmpfile(&format!("semi_dist_r{ranks}.mdpb"));
+        let rp = ref_path.clone();
+        let dp = dist_path.clone();
+        World::run(ranks, move |comm| {
+            let d = io::load_dist(&comm, &rp).unwrap();
+            io::save_dist(&comm, &d, &dp).unwrap();
+        });
+        assert!(
+            std::fs::read(&dist_path).unwrap() == want,
+            "ranks={ranks}: save_dist bytes differ"
+        );
+    }
+}
+
+/// A forced constant payload (`write_streaming_constant` — the generate
+/// command's `-discount_mode` expansion) loads back as the constant vector
+/// and solves bitwise identically to the scalar file.
+#[test]
+fn constant_streamed_payload_matches_scalar() {
+    let spec = Arc::new(GarnetSpec::new(30, 2, 3, 9));
+    let scalar_path = tmpfile("const_scalar.mdpb");
+    let psa_path = tmpfile("const_psa.mdpb");
+    for (path, mode) in [
+        (scalar_path.clone(), DiscountMode::Scalar),
+        (psa_path.clone(), DiscountMode::PerStateAction),
+    ] {
+        let s2 = Arc::clone(&spec);
+        World::run(2, move |comm| {
+            io::write_streaming_constant(
+                &comm,
+                &path,
+                s2.n_states(),
+                s2.n_actions(),
+                mode,
+                0.9,
+                madupite::mdp::Objective::Min,
+                7,
+                |s, a| s2.prob_row(s, a),
+                |s, a| s2.cost(s, a),
+            )
+            .unwrap();
+        });
+    }
+    let a = io::load(&scalar_path).unwrap();
+    let b = io::load(&psa_path).unwrap();
+    assert_eq!(a.discount(), &Discount::Scalar(0.9));
+    assert_eq!(b.discount(), &Discount::PerStateAction(vec![0.9; 60]));
+    let opts = SolveOptions {
+        atol: 1e-9,
+        ..Default::default()
+    };
+    let ra = solve_world(Arc::new(a), 1, &opts);
+    let rb = solve_world(Arc::new(b), 1, &opts);
+    assert_eq!(fingerprint(&ra), fingerprint(&rb));
+}
+
+/// Typed-error surface: bad vector discounts are errors with the offending
+/// entry named, everywhere they can enter — constructors, fillers, the
+/// options database, and distributed builds (collective agreement, no
+/// deadlock).
+#[test]
+fn bad_discounts_are_typed_errors() {
+    let t = |n: usize| GarnetSpec::new(n, 2, 2, 5).build_serial(0.9);
+
+    // wrong length
+    let m9 = t(9);
+    let err = Mdp::new_discounted(
+        9,
+        2,
+        m9.transitions().clone(),
+        m9.costs().to_vec(),
+        Discount::PerStateAction(vec![0.9; 5]),
+    )
+    .unwrap_err();
+    assert!(err.contains("5 entries"), "{err}");
+
+    // out of range, entry named
+    let mut v = vec![0.5; 18];
+    v[7] = 1.0;
+    let err = Mdp::new_discounted(
+        9,
+        2,
+        m9.transitions().clone(),
+        m9.costs().to_vec(),
+        Discount::PerStateAction(v),
+    )
+    .unwrap_err();
+    assert!(err.contains("s=3, a=1"), "{err}");
+
+    // non-finite through the serial filler
+    let err = Mdp::try_from_fillers_semi(
+        4,
+        1,
+        |s, _| if s == 2 { f64::NAN } else { 0.9 },
+        |s, _| vec![(s, 1.0)],
+        |_, _| 1.0,
+    )
+    .unwrap_err();
+    assert!(err.contains("s=2"), "{err}");
+
+    // distributed: the bad entry lives on the last rank only — every rank
+    // must error (agreement), not deadlock or panic
+    for ranks in ["1", "3"] {
+        let builder = MdpBuilder::from_fillers(30, 1, |s, _| vec![(s, 1.0)], |_, _| 1.0)
+            .discount_filler(|s, _| if s == 29 { 1.5 } else { 0.9 });
+        let mut solver = Solver::new(builder);
+        solver.set_option("-ranks", ranks).unwrap();
+        let err = solver.solve().unwrap_err();
+        assert!(err.0.contains("s=29"), "ranks={ranks}: {err}");
+    }
+
+    // options-database surface: typo'd value gets a did-you-mean; file
+    // sources reject -discount_mode; semi models reject narrowing; a
+    // scalar gamma conflicts with a discount filler
+    let mut s = Solver::new(MdpBuilder::from_model_name("garnet", &db(&[])).unwrap());
+    s.set_option("-discount_mode", "per_stat").unwrap();
+    let err = s.solve().unwrap_err();
+    assert!(err.0.contains("per_state"), "{err}");
+
+    let mut s = Solver::new(MdpBuilder::from_file("x.mdpb"));
+    s.set_option("-discount_mode", "scalar").unwrap();
+    let err = s.solve().unwrap_err();
+    assert!(err.0.contains("header"), "{err}");
+
+    let mut s = Solver::new(MdpBuilder::from_model_name("maintenance", &db(&[])).unwrap());
+    s.set_option("-discount_mode", "scalar").unwrap();
+    let err = s.solve().unwrap_err();
+    assert!(err.0.contains("semi-MDP"), "{err}");
+
+    let builder = MdpBuilder::from_fillers(2, 1, |s, _| vec![(s, 1.0)], |_, _| 1.0)
+        .discount_filler(|_, _| 0.9)
+        .gamma(0.5);
+    let err = Solver::new(builder).solve().unwrap_err();
+    assert!(err.0.contains("conflicts"), "{err}");
+}
+
+/// The maintenance catalog model is reachable end to end from the options
+/// database, and the offline pipeline (generate → solve-from-file) agrees
+/// with the direct model solve.
+#[test]
+fn maintenance_model_end_to_end() {
+    let params = db(&["-num_states", "20"]);
+    let builder = MdpBuilder::from_model_name("maintenance", &params).unwrap();
+    let mut solver = Solver::with_database(builder, params);
+    solver
+        .set_options_from_str("-gamma 0.95 -method ipi -ksp_type gmres -atol 1e-9 -ranks 2")
+        .unwrap();
+    let direct = solver.solve().unwrap();
+    assert!(direct.result.converged);
+    assert_eq!(direct.discount_mode, DiscountMode::PerStateAction);
+    assert_eq!(direct.policy().len(), 20);
+
+    // offline: stream the same model to disk, solve from the file
+    let path = tmpfile("maintenance_pipeline.mdpb");
+    let spec = Arc::new(MaintenanceSpec::standard(20));
+    let p = path.clone();
+    let spec2 = Arc::clone(&spec);
+    World::run(2, move |comm| {
+        spec2
+            .write_mdpb(
+                &comm,
+                0.95,
+                madupite::mdp::Objective::Min,
+                &p,
+                io::DEFAULT_CHUNK_ROWS,
+            )
+            .unwrap();
+    });
+    let mut from_file = Solver::new(MdpBuilder::from_file(path.to_str().unwrap()));
+    from_file
+        .set_options_from_str("-method ipi -ksp_type gmres -atol 1e-9 -ranks 2")
+        .unwrap();
+    let offline = from_file.solve().unwrap();
+    assert_eq!(offline.discount_mode, DiscountMode::PerStateAction);
+    assert_eq!(offline.policy(), direct.policy());
+    for (a, b) in offline.value().iter().zip(direct.value()) {
+        assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+    }
+
+    // metadata reports the discount mode
+    let j = direct.metadata_json();
+    assert_eq!(
+        j.get("model")
+            .unwrap()
+            .get("discount_mode")
+            .unwrap()
+            .as_str(),
+        Some("per_state_action")
+    );
+    let _ = api::MODEL_CATALOG
+        .iter()
+        .find(|m| m.name == "maintenance")
+        .expect("maintenance is in the catalog");
+}

@@ -1,0 +1,113 @@
+//! Documentation parity gates.
+//!
+//! The narrative guide (`docs/guide.md`) is doctested via the
+//! `madupite::docs::guide` module, so its code cannot rot; this suite
+//! pins the *prose* against the code the same way:
+//!
+//! - the guide's options-reference table must list exactly the keys of
+//!   `OPTION_TABLE` (a new `-flag` cannot ship undocumented, a removed
+//!   one cannot linger in the docs);
+//! - the generated `madupite help` output must cover the same keys and
+//!   every model-catalog entry (help is generated from the table, so this
+//!   pins the whole chain guide ↔ table ↔ help);
+//! - README.md must mention every catalog model and link the guide.
+
+use madupite::api::options::OPTION_TABLE;
+use madupite::api::MODEL_CATALOG;
+use std::collections::BTreeSet;
+
+fn repo_file(rel: &str) -> String {
+    let path = format!("{}/../{rel}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path}: {e}"))
+}
+
+/// The `-key` cells of the guide's "Options reference" table.
+fn guide_option_keys() -> BTreeSet<String> {
+    let guide = repo_file("docs/guide.md");
+    let section = guide
+        .split("## Options reference")
+        .nth(1)
+        .expect("docs/guide.md must keep its '## Options reference' section");
+    let section = section.split("\n## ").next().unwrap();
+    let mut keys = BTreeSet::new();
+    for line in section.lines() {
+        let line = line.trim();
+        if let Some(rest) = line.strip_prefix("| `-") {
+            let key = rest
+                .split('`')
+                .next()
+                .expect("table row must close its backtick");
+            keys.insert(key.to_string());
+        }
+    }
+    keys
+}
+
+#[test]
+fn guide_table_matches_option_table() {
+    let documented = guide_option_keys();
+    let actual: BTreeSet<String> = OPTION_TABLE.iter().map(|s| s.key.to_string()).collect();
+    let missing: Vec<_> = actual.difference(&documented).collect();
+    let stale: Vec<_> = documented.difference(&actual).collect();
+    assert!(
+        missing.is_empty() && stale.is_empty(),
+        "docs/guide.md options table drifted from OPTION_TABLE: \
+         undocumented {missing:?}, stale {stale:?}"
+    );
+}
+
+#[test]
+fn generated_help_covers_table_and_catalog() {
+    let exe = env!("CARGO_BIN_EXE_madupite");
+    let out = std::process::Command::new(exe)
+        .arg("help")
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let help = String::from_utf8_lossy(&out.stdout);
+    for spec in OPTION_TABLE {
+        assert!(
+            help.contains(&format!("-{}", spec.key)),
+            "help output is missing -{}",
+            spec.key
+        );
+    }
+    for model in MODEL_CATALOG {
+        assert!(
+            help.contains(model.name),
+            "help output is missing model '{}'",
+            model.name
+        );
+    }
+}
+
+#[test]
+fn guide_documents_every_model_dimension() {
+    let guide = repo_file("docs/guide.md");
+    // the semi-MDP chapter is the load-bearing narrative of the
+    // generalized-discounting layer — keep its anchors present
+    for needle in [
+        "Beyond scalar discounting",
+        "maintenance",
+        "discount_filler",
+        "per_state_action",
+    ] {
+        assert!(guide.contains(needle), "guide lost its '{needle}' chapter");
+    }
+}
+
+#[test]
+fn readme_mentions_catalog_and_guide() {
+    let readme = repo_file("README.md");
+    for model in MODEL_CATALOG {
+        assert!(
+            readme.contains(model.name),
+            "README model catalog is missing '{}'",
+            model.name
+        );
+    }
+    assert!(
+        readme.contains("docs/guide.md"),
+        "README must link the user guide"
+    );
+}
