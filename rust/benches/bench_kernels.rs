@@ -11,6 +11,11 @@
 //! - Policy operator `I − γ P_π`: fused matrix-free application off the
 //!   stacked kernel vs assembly + apply of an explicit `P_π` CSR — the
 //!   per-policy-change setup cost and memory the `MatFree` backend removes.
+//! - Kernel-backend ablation (DESIGN.md §13): the same SpMV and Bellman
+//!   backup with the SIMD lane kernels forced off (`scalar`) vs on
+//!   (`simd`) — the per-backend entries the CI perf-smoke publishes.
+//! - Eval-backend ablation on a banded model: fused matrix-free vs the
+//!   lane-blocked `bsr` copy vs the compressed `f32` operator, per apply.
 //! - PJRT artifact execution (Pallas kernel via HLO) vs native dense Rust:
 //!   dispatch overhead + crossover block size, and artifact compile time.
 //!
@@ -21,11 +26,15 @@
 
 use madupite::comm::World;
 use madupite::ksp::{Apply, LinOp};
-use madupite::mdp::{Discount, DiscountMode, DistMdp, MatFreePolicyOp, Mdp};
+use madupite::linalg::Csr;
+use madupite::mdp::{
+    BsrPolicyOp, Discount, DiscountMode, DistMdp, F32PolicyOp, MatFreePolicyOp, Mdp,
+};
 use madupite::models::{garnet::GarnetSpec, ModelGenerator};
 use madupite::runtime::{bellman_dense_native, random_block, DenseBellman, Engine};
 use madupite::util::benchkit::{fmt_time, thread_counts, Suite};
 use madupite::util::par;
+use madupite::util::simd::{self, KernelBackend};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -115,6 +124,118 @@ fn main() {
         }
     }
     par::set_threads(1);
+
+    // --- kernel-backend ablation: SIMD lanes forced off vs on --------------
+    // Same workload, process-global kernel switch (DESIGN.md §13.1). These
+    // are the per-backend entries CI's perf-smoke merges into BENCH_CI.json.
+    for n in [100_000usize] {
+        if n > max_n {
+            println!("kernels/n={n}: skipped (MADUPITE_BENCH_MAX_N={max_n})");
+            continue;
+        }
+        let mdp = random_mdp_bench(7, n, 4, 0.99, 5);
+        let t = mdp.transitions();
+        let x = vec![1.0f64; n];
+        let mut y = vec![0.0f64; t.nrows()];
+        let nnz = t.nnz();
+        for backend in [KernelBackend::Scalar, KernelBackend::Simd] {
+            simd::set_kernel_backend(backend);
+            suite.case(&format!("spmv_kernels/n={n}/k={}", backend.name()), || {
+                t.spmv(&x, &mut y);
+                vec![("nnz".to_string(), nnz as f64)]
+            });
+            suite.case(
+                &format!("bellman_kernels/n={n}/k={}", backend.name()),
+                || {
+                    let v = vec![0.0f64; n];
+                    let (tv, _) = mdp.bellman(&v);
+                    vec![("checksum".to_string(), tv[0])]
+                },
+            );
+        }
+        simd::set_kernel_backend(KernelBackend::Simd);
+    }
+
+    // --- eval-backend ablation: matfree vs bsr vs f32 per apply ------------
+    // Banded transitions (successors s, s+1, s+2): the clustered-column
+    // structure the 1×LANES blocks are built for, so the `bsr` heuristic
+    // keeps its packed copy instead of falling back.
+    for n in [100_000usize] {
+        if n > max_n {
+            println!("policy_op_backends/n={n}: skipped (MADUPITE_BENCH_MAX_N={max_n})");
+            continue;
+        }
+        let m = 4usize;
+        let mut trips = Vec::with_capacity(n * m * 3);
+        for s in 0..n {
+            for a in 0..m {
+                let r = s * m + a;
+                trips.push((r, s, 0.5));
+                trips.push((r, (s + 1) % n, 0.3));
+                trips.push((r, (s + 2) % n, 0.2));
+            }
+        }
+        let trans = Csr::from_triplets(n * m, n, &trips);
+        let costs: Vec<f64> = (0..n * m).map(|i| (i % 17) as f64 * 0.1).collect();
+        let mdp = Arc::new(Mdp::new(n, m, trans, costs, 0.99).unwrap());
+        suite.case(&format!("policy_op_backends/n={n}"), move || {
+            let mdp2 = Arc::clone(&mdp);
+            let mut out = World::run(1, move |comm| {
+                let d = DistMdp::from_serial(&comm, &mdp2);
+                let nl = d.local_states();
+                let policy: Vec<usize> = (0..nl).map(|s| s % d.n_actions()).collect();
+                let x: Vec<f64> = (0..nl).map(|i| (i as f64 * 0.01).sin()).collect();
+                let mut y = vec![0.0; nl];
+
+                let mf = MatFreePolicyOp::new(&d, &policy);
+                let mut buf = mf.make_buffer();
+                let t0 = Instant::now();
+                for _ in 0..10 {
+                    mf.apply(&comm, &x, &mut y, &mut buf);
+                }
+                let mf_apply = t0.elapsed().as_secs_f64() / 10.0;
+                let y_mf = y.clone();
+
+                let bsr = BsrPolicyOp::new(&d, &policy);
+                assert!(bsr.uses_blocks(), "banded rows must pass the fill heuristic");
+                let mut buf = bsr.make_buffer();
+                let t0 = Instant::now();
+                for _ in 0..10 {
+                    bsr.apply(&comm, &x, &mut y, &mut buf);
+                }
+                let bsr_apply = t0.elapsed().as_secs_f64() / 10.0;
+                let max_diff = y
+                    .iter()
+                    .zip(&y_mf)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f64, f64::max);
+                assert!(max_diff < 1e-12, "bsr apply diverged: max|Δ| = {max_diff}");
+
+                let f32op = F32PolicyOp::new(&d, &policy);
+                let mut buf = f32op.make_buffer();
+                let t0 = Instant::now();
+                for _ in 0..10 {
+                    f32op.apply(&comm, &x, &mut y, &mut buf);
+                }
+                let f32_apply = t0.elapsed().as_secs_f64() / 10.0;
+                let max_diff = y
+                    .iter()
+                    .zip(&y_mf)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f64, f64::max);
+                assert!(max_diff < 1e-5, "f32 apply off its envelope: max|Δ| = {max_diff}");
+
+                (mf_apply, bsr_apply, f32_apply, f32op.storage_bytes())
+            });
+            let (mf_apply, bsr_apply, f32_apply, f32_bytes) = out.swap_remove(0);
+            vec![
+                ("mf_apply_ms".to_string(), mf_apply * 1e3),
+                ("bsr_apply_ms".to_string(), bsr_apply * 1e3),
+                ("f32_apply_ms".to_string(), f32_apply * 1e3),
+                ("f32_MiB".to_string(), f32_bytes as f64 / (1 << 20) as f64),
+            ]
+        });
+    }
 
     // --- policy operator: fused matrix-free vs assembled P_π ---------------
     // Setup = what a policy change costs before the first inner iteration;

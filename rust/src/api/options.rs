@@ -16,7 +16,7 @@
 use crate::ksp::precond::PcType;
 use crate::ksp::KspType;
 use crate::mdp::{DiscountMode, Objective};
-use crate::solver::{EvalBackend, Method, SolveOptions};
+use crate::solver::{EvalBackend, InnerPrecision, Method, SolveOptions};
 use crate::util::args::Options;
 
 use super::ApiError;
@@ -202,8 +202,16 @@ pub const OPTION_TABLE: &[OptionSpec] = &[
     },
     OptionSpec {
         key: "eval_backend",
-        value: "matfree|assembled",
-        help: "policy-evaluation operator: fused matrix-free vs cached P_pi CSR",
+        value: "matfree|assembled|bsr",
+        help: "policy-evaluation operator: fused matrix-free, cached P_pi CSR, \
+                or lane-blocked rows (falls back to matfree on sparse fill)",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "inner_precision",
+        value: "f64|f32",
+        help: "inner KSP precision (ipi): f32 runs the Krylov iterations on a \
+                compressed copy inside an f64 refinement loop",
         scope: OptionScope::Solve,
     },
     OptionSpec {
@@ -403,7 +411,10 @@ pub fn resolve_solve_options(db: &Options) -> Result<SolveOptions, ApiError> {
     let method = resolve_method(db)?;
     let backend_name = db.get_str("eval_backend", "matfree");
     let eval_backend = EvalBackend::parse(&backend_name)
-        .map_err(|e| with_value_suggestion(e, &backend_name, &["matfree", "assembled"]))?;
+        .map_err(|e| with_value_suggestion(e, &backend_name, &["matfree", "assembled", "bsr"]))?;
+    let precision_name = db.get_str("inner_precision", "f64");
+    let inner_precision = InnerPrecision::parse(&precision_name)
+        .map_err(|e| with_value_suggestion(e, &precision_name, &["f64", "f32"]))?;
     let atol = db.get_f64("atol", 1e-8)?;
     if !(atol.is_finite() && atol > 0.0) {
         return Err(ApiError(format!(
@@ -427,6 +438,7 @@ pub fn resolve_solve_options(db: &Options) -> Result<SolveOptions, ApiError> {
     Ok(SolveOptions {
         method,
         eval_backend,
+        inner_precision,
         atol,
         max_outer,
         alpha,
@@ -671,6 +683,19 @@ mod tests {
     }
 
     #[test]
+    fn kernel_backend_and_precision_resolution() {
+        let so = resolve_solve_options(&db(&[])).unwrap();
+        assert_eq!(so.eval_backend, EvalBackend::MatFree);
+        assert_eq!(so.inner_precision, InnerPrecision::F64);
+        let so = resolve_solve_options(&db(&["-eval_backend", "bsr"])).unwrap();
+        assert_eq!(so.eval_backend, EvalBackend::Bsr);
+        let so = resolve_solve_options(&db(&["-inner_precision", "f32"])).unwrap();
+        assert_eq!(so.inner_precision, InnerPrecision::F32);
+        // both keys round-trip through validate_keys
+        assert!(validate_keys(&db(&["-eval_backend", "bsr", "-inner_precision", "f32"])).is_ok());
+    }
+
+    #[test]
     fn discount_mode_resolution() {
         assert_eq!(resolve_discount_mode(&db(&[])).unwrap(), None);
         assert_eq!(
@@ -704,5 +729,7 @@ mod tests {
         assert!(err.0.contains("gmres"), "{err}");
         let err = resolve_solve_options(&db(&["-eval_backend", "matfre"])).unwrap_err();
         assert!(err.0.contains("matfree"), "{err}");
+        let err = resolve_solve_options(&db(&["-inner_precision", "f23"])).unwrap_err();
+        assert!(err.0.contains("f32"), "{err}");
     }
 }

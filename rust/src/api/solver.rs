@@ -451,6 +451,10 @@ impl SolveOutcome {
                 Json::obj(vec![
                     ("method", Json::str(self.options.method.name())),
                     ("eval_backend", Json::str(self.options.eval_backend.name())),
+                    (
+                        "inner_precision",
+                        Json::str(self.options.inner_precision.name()),
+                    ),
                     ("ranks", Json::int(self.ranks as i64)),
                     ("threads", Json::int(self.threads as i64)),
                     ("atol", Json::num(self.options.atol)),

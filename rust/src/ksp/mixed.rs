@@ -1,0 +1,267 @@
+//! Mixed-precision inner solves: f32 Krylov iterations inside an f64
+//! iterative-refinement loop (`-inner_precision f32`).
+//!
+//! Classic refinement, specialized to the policy-evaluation system. The
+//! expensive Krylov iterations run on a compressed single-precision copy
+//! `A₃₂` of the operator ([`crate::mdp::F32PolicyOp`] — half the bytes
+//! per nonzero on the bandwidth-bound apply), while every accepted step
+//! is certified against the full-precision operator `A₆₄`:
+//!
+//! ```text
+//! r ← b − A₆₄ x                (f64 residual)
+//! repeat: solve A₃₂ d = r      (f32 storage, f64 accumulation)
+//!         x ← x + d
+//!         r ← b − A₆₄ x        (f64 residual, the convergence measure)
+//! ```
+//!
+//! Error bound: one inner solve leaves a true residual of order
+//! `ε₃₂·κ(A)·‖r‖` (the f32 representation error of the matrix acting on
+//! the current correction), so each pass contracts the f64 residual by
+//! roughly `ε₃₂·κ(A) ≈ 1e-7·κ(A)` until it either meets the target or
+//! stalls at the f64 rounding floor. For the diagonally dominant policy
+//! systems here (`κ` modest, bounded via `1/(1−γ̄)`), two to three passes
+//! reach `atol = 1e-10` comfortably; the loop is capped at
+//! [`MAX_REFINE_PASSES`] and exits early on stagnation. The reported
+//! [`KspStats::final_residual`] is always the **f64** residual — the
+//! outer iPI certificate never sees single precision (DESIGN.md §13).
+
+use super::{Apply, KspStats, KspType, Precond, Tolerance};
+use crate::comm::Comm;
+
+/// Refinement-pass cap: each pass contracts the residual by ~`ε₃₂·κ(A)`,
+/// so well-conditioned systems need 2–3; hitting the cap means the f32
+/// floor sits above the requested tolerance and more passes cannot help.
+pub const MAX_REFINE_PASSES: usize = 8;
+
+/// A pass must shrink the f64 residual below this fraction of the
+/// previous one to continue; anything slower is stagnation at the f32
+/// floor and the loop exits with the best certified iterate.
+const STAGNATION_FACTOR: f64 = 0.9;
+
+/// Solve `A₆₄ x = b` to the f64 tolerance `tol`, running the inner
+/// Krylov method on `a32`. `x` holds the warm start on entry and the
+/// refined solution on exit. Collective across the world.
+///
+/// `a32` must be (an approximation of) the same linear map as `a64` —
+/// the refinement loop converges at a rate governed by how close; see the
+/// module docs for the bound. Iteration/spmv counts accumulate across
+/// passes, with the f64 residual recomputations counted as spmvs.
+pub fn solve_mixed(
+    method: &KspType,
+    pc: &Precond,
+    comm: &Comm,
+    a64: &dyn Apply,
+    a32: &dyn Apply,
+    b: &[f64],
+    x: &mut [f64],
+    tol: &Tolerance,
+) -> KspStats {
+    let nl = a64.local_rows();
+    assert_eq!(b.len(), nl);
+    assert_eq!(x.len(), nl);
+    let mut buf = a64.make_buffer();
+    let mut r = vec![0.0; nl];
+    let mut rnorm = a64.residual(comm, b, x, &mut r, &mut buf);
+    let mut stats = KspStats {
+        iterations: 0,
+        spmvs: 1,
+        initial_residual: rnorm,
+        final_residual: rnorm,
+        converged: false,
+    };
+    let target = tol.threshold(rnorm);
+    if rnorm <= target {
+        stats.converged = true;
+        return stats;
+    }
+    let mut d = vec![0.0; nl];
+    for _pass in 0..MAX_REFINE_PASSES {
+        let remaining = tol.max_iters.saturating_sub(stats.iterations);
+        if remaining == 0 {
+            break;
+        }
+        // Inner correction system A₃₂ d = r, from a zero start. The
+        // relative target 1e-6 matches the f32 floor — tighter inner
+        // tolerances only burn iterations the refinement cannot use.
+        d.iter_mut().for_each(|v| *v = 0.0);
+        let inner_tol = Tolerance {
+            atol: target,
+            rtol: 1e-6,
+            max_iters: remaining,
+        };
+        let inner = super::solve(method, pc, comm, a32, &r, &mut d, &inner_tol);
+        stats.iterations += inner.iterations;
+        stats.spmvs += inner.spmvs;
+        crate::linalg::axpy(1.0, &d, x);
+        let prev = rnorm;
+        rnorm = a64.residual(comm, b, x, &mut r, &mut buf);
+        stats.spmvs += 1;
+        stats.final_residual = rnorm;
+        if rnorm <= target {
+            stats.converged = true;
+            break;
+        }
+        if rnorm > STAGNATION_FACTOR * prev {
+            // f32 floor reached (or the inner solve made no progress):
+            // further passes re-solve the same system to the same floor.
+            break;
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::World;
+    use crate::mdp::fixtures::random_mdp;
+    use crate::mdp::{DistMdp, F32PolicyOp, MatFreePolicyOp};
+    use crate::util::prop;
+    use std::sync::Arc;
+
+    fn policy_for(n: usize, m: usize) -> Vec<usize> {
+        (0..n).map(|s| (s * 7 + 3) % m).collect()
+    }
+
+    /// Refinement reaches the same f64 tolerance as a pure f64 solve,
+    /// certified by the f64 operator — while a single f32 inner solve
+    /// alone stalls above it.
+    #[test]
+    fn refinement_reaches_f64_tolerance() {
+        for &method in &["gmres", "bicgstab", "richardson"] {
+            let mdp = Arc::new(random_mdp(97, 33, 3, 0.9));
+            let m = KspType::parse(method).unwrap();
+            World::run(2, move |comm| {
+                let d = DistMdp::from_serial(&comm, &mdp);
+                let part = d.partition();
+                let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+                let nl = hi - lo;
+                let policy: Vec<usize> = policy_for(33, 3)[lo..hi].to_vec();
+                let g = d.policy_costs(&policy);
+                let a64 = MatFreePolicyOp::new(&d, &policy);
+                let a32 = F32PolicyOp::new(&d, &policy);
+                let tol = Tolerance {
+                    atol: 1e-10,
+                    rtol: 0.0,
+                    max_iters: 10_000,
+                };
+
+                let mut x_mixed = vec![0.0; nl];
+                let s = solve_mixed(
+                    &m,
+                    &Precond::None,
+                    &comm,
+                    &a64,
+                    &a32,
+                    &g,
+                    &mut x_mixed,
+                    &tol,
+                );
+                assert!(s.converged, "{method}: final={}", s.final_residual);
+                assert!(s.final_residual <= 1e-10, "{method}");
+
+                // Certify with an independent f64 residual evaluation.
+                let mut buf = a64.make_buffer();
+                let mut r = vec![0.0; nl];
+                let true_res = a64.residual(&comm, &g, &x_mixed, &mut r, &mut buf);
+                assert!(true_res <= 2e-10, "{method}: true residual {true_res}");
+
+                // Pure f64 solve agrees on the solution.
+                let mut x64 = vec![0.0; nl];
+                crate::ksp::solve(&m, &Precond::None, &comm, &a64, &g, &mut x64, &tol);
+                prop::close_slices(&x_mixed, &x64, 1e-7).unwrap();
+
+                // A lone f32 inner solve cannot certify 1e-10: its *true*
+                // f64 residual stalls at the representation floor.
+                let mut x32 = vec![0.0; nl];
+                crate::ksp::solve(&m, &Precond::None, &comm, &a32, &g, &mut x32, &tol);
+                let res32 = a64.residual(&comm, &g, &x32, &mut r, &mut buf);
+                assert!(
+                    res32 > 1e-12,
+                    "{method}: f32-only residual {res32} suspiciously exact"
+                );
+            });
+        }
+    }
+
+    /// A warm start already at the solution returns immediately with the
+    /// converged certificate and one residual evaluation.
+    #[test]
+    fn converged_warm_start_short_circuits() {
+        let mdp = Arc::new(random_mdp(13, 21, 2, 0.85));
+        World::run(1, move |comm| {
+            let d = DistMdp::from_serial(&comm, &mdp);
+            let policy = policy_for(21, 2);
+            let g = d.policy_costs(&policy);
+            let a64 = MatFreePolicyOp::new(&d, &policy);
+            let a32 = F32PolicyOp::new(&d, &policy);
+            let tol = Tolerance {
+                atol: 1e-10,
+                rtol: 0.0,
+                max_iters: 10_000,
+            };
+            let mut x = vec![0.0; 21];
+            crate::ksp::solve(
+                &KspType::Gmres { restart: 20 },
+                &Precond::None,
+                &comm,
+                &a64,
+                &g,
+                &mut x,
+                &tol,
+            );
+            // Looser target than the pre-solve so the warm start is
+            // unambiguously inside the threshold.
+            let loose = Tolerance {
+                atol: 1e-8,
+                rtol: 0.0,
+                max_iters: 10_000,
+            };
+            let s = solve_mixed(
+                &KspType::Gmres { restart: 20 },
+                &Precond::None,
+                &comm,
+                &a64,
+                &a32,
+                &g,
+                &mut x,
+                &loose,
+            );
+            assert!(s.converged);
+            assert_eq!(s.iterations, 0);
+            assert_eq!(s.spmvs, 1);
+        });
+    }
+
+    /// Jacobi preconditioning (built from the f64 diagonal) composes with
+    /// the mixed loop.
+    #[test]
+    fn preconditioned_mixed_converges() {
+        let mdp = Arc::new(random_mdp(29, 25, 2, 0.93));
+        World::run(1, move |comm| {
+            let d = DistMdp::from_serial(&comm, &mdp);
+            let policy = policy_for(25, 2);
+            let g = d.policy_costs(&policy);
+            let a64 = MatFreePolicyOp::new(&d, &policy);
+            let a32 = F32PolicyOp::new(&d, &policy);
+            let pc = Precond::build(crate::ksp::precond::PcType::Jacobi, &a64);
+            let tol = Tolerance {
+                atol: 1e-10,
+                rtol: 0.0,
+                max_iters: 10_000,
+            };
+            let mut x = vec![0.0; 25];
+            let s = solve_mixed(
+                &KspType::BiCgStab,
+                &pc,
+                &comm,
+                &a64,
+                &a32,
+                &g,
+                &mut x,
+                &tol,
+            );
+            assert!(s.converged, "final={}", s.final_residual);
+        });
+    }
+}

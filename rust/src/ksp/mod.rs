@@ -14,6 +14,9 @@
 //! - [`bicgstab`]: BiCGStab (van der Vorst).
 //! - [`tfqmr`]: transpose-free QMR (Freund).
 //! - [`direct`]: gathered dense LU (exact policy iteration on small MDPs).
+//! - [`mixed`]: mixed-precision driver — any of the above run on an f32
+//!   operator copy inside an f64 iterative-refinement loop
+//!   (`-inner_precision f32`).
 //!
 //! All solvers are generic over the [`Apply`] operator trait (PETSc's shell
 //! `Mat`): they never see a concrete matrix, only `y ← A x`, which is what
@@ -29,6 +32,7 @@
 pub mod bicgstab;
 pub mod direct;
 pub mod gmres;
+pub mod mixed;
 pub mod precond;
 pub mod richardson;
 pub mod tfqmr;
@@ -36,6 +40,7 @@ pub mod tfqmr;
 use crate::comm::Comm;
 use crate::linalg::dist::{dist_norm2, DistCsr, GhostBuf, Partition};
 use crate::linalg::{Csr, DenseMat};
+pub use mixed::solve_mixed;
 pub use precond::Precond;
 
 /// A distributed square linear operator `A` with the shape of a policy

@@ -1,0 +1,275 @@
+//! 1×[`LANES`] column-blocked sparse rows (a "BSR-lite" layout).
+//!
+//! The stacked `(n·m) × n` transition matrix and the per-policy `n × n`
+//! operator it induces are sparse, but their nonzeros often cluster in
+//! column index: catalog models with local dynamics (chains, mazes,
+//! epidemic lattices) put a row's entries into a handful of *adjacent*
+//! columns. A flat CSR gather (`x[col]` per entry) cannot exploit that —
+//! each entry costs an indexed load. This layout groups a row's entries
+//! into aligned blocks of [`LANES`] consecutive columns, each stored as a
+//! dense `[f64; LANES]` mini-row, so the dot against `x` becomes
+//! contiguous lane loads with one block-column lookup per [`LANES`]
+//! columns.
+//!
+//! The trade-off is fill: absent columns inside a touched block are stored
+//! as explicit zeros. [`Bsr::fill_ratio`] measures `nnz / (blocks·LANES)`;
+//! the backend-selection heuristic in [`crate::mdp::blocked`] only uses
+//! this layout when the ratio is high enough to win (DESIGN.md §13).
+//!
+//! Determinism: [`Bsr::row_dot`] accumulates one lane-sum per lane across
+//! all blocks of the row and folds them in the fixed order
+//! `(s0+s1)+(s2+s3)` — the same shape as [`crate::util::simd`] — so the
+//! result depends only on the matrix, never on thread count or chunking.
+
+use crate::util::simd::LANES;
+
+/// Sparse matrix stored as 1×[`LANES`] column blocks per row.
+///
+/// Block `b` of a row covers global columns `b·LANES .. b·LANES+LANES`
+/// (the final block may run past `ncols`; its trailing lanes are stored as
+/// zeros and never read from `x`). Block columns within a row are sorted
+/// and unique, mirroring the CSR invariant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bsr {
+    nrows: usize,
+    ncols: usize,
+    nnz: usize,
+    indptr: Vec<usize>,
+    bcols: Vec<usize>,
+    blocks: Vec<[f64; LANES]>,
+}
+
+impl Bsr {
+    /// Empty builder with no rows yet; grow with [`Self::push_row`].
+    pub fn new(ncols: usize) -> Bsr {
+        Bsr {
+            nrows: 0,
+            ncols,
+            nnz: 0,
+            indptr: vec![0],
+            bcols: Vec::new(),
+            blocks: Vec::new(),
+        }
+    }
+
+    /// Append one row from sorted-unique `(cols, vals)` (the CSR row
+    /// layout; see [`super::Csr::row`]). Consecutive columns landing in
+    /// the same [`LANES`]-aligned block share one stored block.
+    ///
+    /// Panics if `cols` and `vals` differ in length, a column is out of
+    /// bounds, or columns are not strictly increasing.
+    pub fn push_row(&mut self, cols: &[usize], vals: &[f64]) {
+        assert_eq!(cols.len(), vals.len(), "push_row: cols/vals length");
+        for w in cols.windows(2) {
+            assert!(w[0] < w[1], "push_row: columns not sorted-unique");
+        }
+        let row_start = *self.indptr.last().unwrap();
+        for (&c, &v) in cols.iter().zip(vals) {
+            assert!(c < self.ncols, "push_row: column {c} >= ncols {}", self.ncols);
+            let b = c / LANES;
+            let need_new =
+                self.bcols.len() == row_start || *self.bcols.last().unwrap() != b;
+            if need_new {
+                self.bcols.push(b);
+                self.blocks.push([0.0; LANES]);
+            }
+            self.blocks.last_mut().unwrap()[c % LANES] = v;
+            self.nnz += 1;
+        }
+        self.nrows += 1;
+        self.indptr.push(self.bcols.len());
+    }
+
+    /// Convert a whole [`super::Csr`] (convenience for tests/benches).
+    pub fn from_csr(m: &super::Csr) -> Bsr {
+        let mut out = Bsr::new(m.ncols());
+        for r in 0..m.nrows() {
+            let (cols, vals) = m.row(r);
+            out.push_row(cols, vals);
+        }
+        out
+    }
+
+    /// Number of rows.
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    /// Number of columns.
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Number of *logical* nonzeros (as pushed, excluding block padding).
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Number of stored 1×[`LANES`] blocks.
+    pub fn nblocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Logical nonzeros over stored lane slots: `nnz / (nblocks·LANES)`.
+    ///
+    /// 1.0 means every stored lane is a real entry (perfectly clustered
+    /// columns); small ratios mean the layout mostly stores padding zeros
+    /// and a gather-based kernel is the better choice. Returns 1.0 for an
+    /// empty matrix so the heuristic treats it as "no penalty".
+    pub fn fill_ratio(&self) -> f64 {
+        if self.blocks.is_empty() {
+            return 1.0;
+        }
+        self.nnz as f64 / (self.blocks.len() * LANES) as f64
+    }
+
+    /// Dot of row `r` with `x` (`x.len()` must be `ncols`).
+    ///
+    /// Lane `l` accumulates `block[l] · x[base+l]` across the row's
+    /// blocks; the four lane sums fold as `(s0+s1)+(s2+s3)`. The final
+    /// block of the matrix may extend past `ncols`; its out-of-range lanes
+    /// are skipped (they hold explicit zeros and have no `x` entry).
+    pub fn row_dot(&self, r: usize, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.ncols, "row_dot: x len");
+        let (a, b) = (self.indptr[r], self.indptr[r + 1]);
+        let mut s = [0.0f64; LANES];
+        for k in a..b {
+            let base = self.bcols[k] * LANES;
+            let blk = &self.blocks[k];
+            if base + LANES <= x.len() {
+                for (l, sl) in s.iter_mut().enumerate() {
+                    *sl += blk[l] * x[base + l];
+                }
+            } else {
+                for l in 0..x.len() - base {
+                    s[l] += blk[l] * x[base + l];
+                }
+            }
+        }
+        (s[0] + s[1]) + (s[2] + s[3])
+    }
+
+    /// y ← A·x (serial; tests and small systems).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols, "spmv: x len");
+        assert_eq!(y.len(), self.nrows, "spmv: y len");
+        for (r, yr) in y.iter_mut().enumerate() {
+            *yr = self.row_dot(r, x);
+        }
+    }
+
+    /// Bytes of storage (memory accounting, cf. [`super::Csr::storage_bytes`]).
+    pub fn storage_bytes(&self) -> usize {
+        self.indptr.len() * 8 + self.bcols.len() * 8 + self.blocks.len() * LANES * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Csr;
+    use crate::prop_assert;
+    use crate::util::prng::Xoshiro256pp;
+    use crate::util::prop;
+
+    #[test]
+    fn blocks_group_adjacent_columns() {
+        // Row [_, 1, 2, _, _, _, _, 3]: cols 1,2 share block 0; col 7 is block 1.
+        let mut m = Bsr::new(8);
+        m.push_row(&[1, 2, 7], &[1.0, 2.0, 3.0]);
+        assert_eq!(m.nrows(), 1);
+        assert_eq!(m.nnz(), 3);
+        assert_eq!(m.nblocks(), 2);
+        assert!((m.fill_ratio() - 3.0 / 8.0).abs() < 1e-15);
+        let x = [10.0, 1.0, 2.0, 10.0, 10.0, 10.0, 10.0, 4.0];
+        assert_eq!(m.row_dot(0, &x), 1.0 + 4.0 + 12.0);
+    }
+
+    #[test]
+    fn empty_rows_and_empty_matrix() {
+        let mut m = Bsr::new(5);
+        m.push_row(&[], &[]);
+        m.push_row(&[2], &[7.0]);
+        m.push_row(&[], &[]);
+        let x = [1.0; 5];
+        let mut y = [f64::NAN; 3];
+        m.spmv(&x, &mut y);
+        assert_eq!(y, [0.0, 7.0, 0.0]);
+        assert_eq!(Bsr::new(3).fill_ratio(), 1.0);
+    }
+
+    #[test]
+    fn final_partial_block_is_guarded() {
+        // ncols = 6 with LANES = 4: block 1 covers cols 4..8, but x has 6.
+        let mut m = Bsr::new(6);
+        m.push_row(&[0, 5], &[1.0, 2.0]);
+        let x = [3.0, 0.0, 0.0, 0.0, 0.0, 4.0];
+        assert_eq!(m.row_dot(0, &x), 3.0 + 8.0);
+    }
+
+    #[test]
+    fn fill_ratio_dense_rows_is_one() {
+        let mut m = Bsr::new(LANES * 2);
+        let cols: Vec<usize> = (0..LANES * 2).collect();
+        let vals = vec![1.0; LANES * 2];
+        m.push_row(&cols, &vals);
+        assert_eq!(m.fill_ratio(), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not sorted-unique")]
+    fn unsorted_columns_rejected() {
+        Bsr::new(4).push_row(&[2, 1], &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn prop_matches_csr_spmv() {
+        prop::forall("bsr spmv == csr spmv", |rng: &mut Xoshiro256pp| {
+            let nrows = 1 + rng.index(10);
+            // Sizes straddle the lane width to exercise the partial block.
+            let ncols = 1 + rng.index(3 * LANES + 2);
+            let nnz = rng.index(nrows * ncols + 1);
+            let trips: Vec<(usize, usize, f64)> = (0..nnz)
+                .map(|_| (rng.index(nrows), rng.index(ncols), rng.range_f64(-2.0, 2.0)))
+                .collect();
+            let c = Csr::from_triplets(nrows, ncols, &trips);
+            let b = Bsr::from_csr(&c);
+            prop_assert!(b.nnz() == c.nnz(), "nnz mismatch");
+            let x: Vec<f64> = (0..ncols).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let yc = c.mul_vec(&x);
+            let mut yb = vec![f64::NAN; nrows];
+            b.spmv(&x, &mut yb);
+            prop::close_slices(&yc, &yb, 1e-12)
+        });
+    }
+
+    #[test]
+    fn prop_extreme_and_denormal_values_track_reference() {
+        prop::forall("bsr handles extreme values", |rng: &mut Xoshiro256pp| {
+            let ncols = 1 + rng.index(2 * LANES + 1);
+            let mut cols = Vec::new();
+            let mut vals = Vec::new();
+            for c in 0..ncols {
+                if rng.index(2) == 0 {
+                    cols.push(c);
+                    vals.push(match rng.index(3) {
+                        0 => f64::MIN_POSITIVE / 4.0,
+                        1 => 1e300,
+                        _ => rng.range_f64(-1.0, 1.0),
+                    });
+                }
+            }
+            let mut b = Bsr::new(ncols);
+            b.push_row(&cols, &vals);
+            let x = vec![1.0; ncols];
+            let reference: f64 = vals.iter().sum();
+            let got = b.row_dot(0, &x);
+            // Same additions, possibly different association: relative check.
+            prop_assert!(
+                (got - reference).abs() <= 1e-12 * reference.abs().max(1.0),
+                "extreme-value row_dot mismatch: {got} vs {reference}"
+            );
+            Ok(())
+        });
+    }
+}

@@ -188,12 +188,14 @@ impl Csr {
     /// y ← A·x
     ///
     /// Hot path of every solver iteration. Rows are parallelized over the
-    /// rank's worker pool ([`crate::util::par`]); each row's accumulation
-    /// stays serial, so the result is bitwise identical for every thread
-    /// count. The gather `x[col]` uses an unchecked read: column indices
-    /// are validated `< ncols` by every constructor (`from_parts` rejects
-    /// violations, the builders assert), and `values_mut` cannot alter
-    /// indices — see EXPERIMENTS.md §Perf.
+    /// rank's worker pool ([`crate::util::par`]); each row's gather runs
+    /// through [`crate::util::simd::gather_dot_unchecked`], whose lane
+    /// fold is fixed per kernel backend, so the result is bitwise
+    /// identical for every thread count. The unchecked reads are sound
+    /// because column indices are validated `< ncols` by every
+    /// constructor (`from_parts` rejects violations, the builders
+    /// assert), and `values_mut` cannot alter indices — see
+    /// EXPERIMENTS.md §Perf.
     pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.ncols, "spmv: x len");
         assert_eq!(y.len(), self.nrows, "spmv: y len");
@@ -201,13 +203,15 @@ impl Csr {
             for (i, yr) in chunk.iter_mut().enumerate() {
                 let r = offset + i;
                 let (a, b) = (self.indptr[r], self.indptr[r + 1]);
-                let mut acc = 0.0;
-                for (&c, &v) in self.indices[a..b].iter().zip(&self.values[a..b]) {
-                    debug_assert!(c < self.ncols);
-                    // SAFETY: c < ncols == x.len(), enforced at construction.
-                    acc += v * unsafe { *x.get_unchecked(c) };
-                }
-                *yr = acc;
+                // SAFETY: every index in `indices` is < ncols == x.len(),
+                // enforced at construction.
+                *yr = unsafe {
+                    crate::util::simd::gather_dot_unchecked(
+                        &self.indices[a..b],
+                        &self.values[a..b],
+                        x,
+                    )
+                };
             }
         });
     }
@@ -221,6 +225,10 @@ impl Csr {
 
     /// y ← α·A·x + β·y (row-parallel like [`Self::spmv`], same bitwise
     /// thread-count independence).
+    ///
+    /// `beta == 0.0` is special-cased as an **overwrite** of `y`, matching
+    /// BLAS convention: stale `NaN`/`Inf` in the output buffer must not
+    /// leak through `0.0 * y` (which would yield `NaN`).
     pub fn spmv_acc(&self, alpha: f64, x: &[f64], beta: f64, y: &mut [f64]) {
         assert_eq!(x.len(), self.ncols);
         assert_eq!(y.len(), self.nrows);
@@ -228,11 +236,20 @@ impl Csr {
             for (i, yr) in chunk.iter_mut().enumerate() {
                 let r = offset + i;
                 let (a, b) = (self.indptr[r], self.indptr[r + 1]);
-                let mut acc = 0.0;
-                for k in a..b {
-                    acc += self.values[k] * x[self.indices[k]];
+                // SAFETY: every index in `indices` is < ncols == x.len(),
+                // enforced at construction.
+                let acc = unsafe {
+                    crate::util::simd::gather_dot_unchecked(
+                        &self.indices[a..b],
+                        &self.values[a..b],
+                        x,
+                    )
+                };
+                if beta == 0.0 {
+                    *yr = alpha * acc;
+                } else {
+                    *yr = alpha * acc + beta * *yr;
                 }
-                *yr = alpha * acc + beta * *yr;
             }
         });
     }
@@ -384,6 +401,16 @@ mod tests {
         let mut y = vec![1.0, 1.0];
         m.spmv_acc(2.0, &[1.0, 10.0, 100.0], -1.0, &mut y);
         assert_eq!(y, vec![401.0, 59.0]);
+    }
+
+    #[test]
+    fn spmv_acc_beta_zero_overwrites_stale_nan() {
+        // Regression: beta == 0.0 must overwrite y, not scale it —
+        // otherwise 0.0 * NaN = NaN leaks stale garbage into results.
+        let m = small();
+        let mut y = vec![f64::NAN, f64::INFINITY];
+        m.spmv_acc(2.0, &[1.0, 10.0, 100.0], 0.0, &mut y);
+        assert_eq!(y, vec![402.0, 60.0]);
     }
 
     #[test]

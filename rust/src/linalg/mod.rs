@@ -1,32 +1,39 @@
 //! Sparse/dense linear algebra substrate (the PETSc `Mat`/`Vec` equivalent).
 //!
 //! - [`csr`]: serial CSR matrices + SpMV kernels (PETSc `SeqAIJ`).
+//! - [`bsr`]: 1×[`crate::util::simd::LANES`] column-blocked rows for the
+//!   dense-ish policy systems (DESIGN.md §13).
 //! - [`dense`]: small dense matrices + LU with partial pivoting (exact
 //!   policy evaluation, tests).
 //! - [`dist`]: row-partitioned distributed CSR with precomputed
 //!   ghost-exchange plans (PETSc `MPIAIJ` + `VecScatter`).
+//!
+//! The vector kernels below (`dot`/`norm2`/`norm_inf`/`axpy`/`aypx`/
+//! `scale`) thread through [`crate::util::simd`]: parallel over the fixed
+//! chunk grid of [`crate::util::par`], lane-unrolled inside each chunk,
+//! with partials folded in chunk order — bitwise identical for every
+//! thread count per selected kernel backend.
 
+pub mod bsr;
 pub mod csr;
 pub mod dense;
 pub mod dist;
 
+pub use bsr::Bsr;
 pub use csr::Csr;
 pub use dense::DenseMat;
 pub use dist::{DistCsr, Partition};
 
 use crate::util::par;
+use crate::util::simd;
 
 /// ∞-norm of a slice.
 ///
 /// Parallel over the fixed chunk grid for large slices; `max` is exact, so
-/// the result is identical to the serial fold for every thread count.
+/// the result is identical to the serial fold for every thread count and
+/// kernel backend.
 pub fn norm_inf(xs: &[f64]) -> f64 {
-    par::par_reduce(
-        xs.len(),
-        |lo, hi| xs[lo..hi].iter().fold(0.0f64, |m, &x| m.max(x.abs())),
-        f64::max,
-    )
-    .unwrap_or(0.0)
+    par::par_reduce(xs.len(), |lo, hi| simd::max_abs(&xs[lo..hi]), f64::max).unwrap_or(0.0)
 }
 
 /// 2-norm of a slice.
@@ -37,22 +44,18 @@ pub fn norm2(xs: &[f64]) -> f64 {
 /// Dot product.
 ///
 /// Large slices reduce over the fixed chunk grid of [`crate::util::par`]
-/// (per-chunk serial sums combined in chunk order), so the value is
+/// (per-chunk lane-unrolled sums combined in chunk order), so the value is
 /// **bitwise identical for every thread count** — the KSP inner products
-/// this feeds stay deterministic under `-threads`.
+/// this feeds stay deterministic under `-threads`. The per-chunk kernel is
+/// [`crate::util::simd::dot`].
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     par::par_reduce(
         a.len(),
-        |lo, hi| dot_serial(&a[lo..hi], &b[lo..hi]),
+        |lo, hi| simd::dot(&a[lo..hi], &b[lo..hi]),
         |x, y| x + y,
     )
     .unwrap_or(0.0)
-}
-
-/// Plain left-to-right dot product (one grid chunk's worth of work).
-fn dot_serial(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
 /// y ← a·x + y
@@ -62,10 +65,7 @@ fn dot_serial(a: &[f64], b: &[f64]) -> f64 {
 pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     par::par_for_rows(y, |offset, chunk| {
-        let xs = &x[offset..offset + chunk.len()];
-        for (yi, xi) in chunk.iter_mut().zip(xs) {
-            *yi += a * xi;
-        }
+        simd::axpy(a, &x[offset..offset + chunk.len()], chunk);
     });
 }
 
@@ -73,19 +73,14 @@ pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
 pub fn aypx(b: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     par::par_for_rows(y, |offset, chunk| {
-        let xs = &x[offset..offset + chunk.len()];
-        for (yi, xi) in chunk.iter_mut().zip(xs) {
-            *yi = xi + b * *yi;
-        }
+        simd::aypx(b, &x[offset..offset + chunk.len()], chunk);
     });
 }
 
 /// x ← a·x
 pub fn scale(a: f64, x: &mut [f64]) {
     par::par_for_rows(x, |_offset, chunk| {
-        for xi in chunk {
-            *xi *= a;
-        }
+        simd::scale(a, chunk);
     });
 }
 

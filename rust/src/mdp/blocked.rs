@@ -1,0 +1,268 @@
+//! Block-CSR policy-evaluation operator (the `Bsr` eval backend).
+//!
+//! Same operator as [`super::matfree::MatFreePolicyOp`] — the policy
+//! system `A = I − diag(γ_π) P_π` applied off the stacked transition
+//! kernel — but the selected rows are repacked into the 1×LANES
+//! column-blocked layout of [`crate::linalg::Bsr`] so each apply streams
+//! contiguous lane loads instead of per-entry gathers. Construction is
+//! rank-local and communication-free like the matrix-free backend, but it
+//! is O(local nnz of P_π): the repack happens once per policy change and
+//! pays for itself over the inner Krylov iterations that reuse it.
+//!
+//! Whether blocking wins depends on column clustering:
+//! [`crate::linalg::Bsr::fill_ratio`] measures how many stored lane slots
+//! are real entries. When the ratio is below [`BSR_FILL_THRESHOLD`] the
+//! padding zeros would cost more bandwidth than the gathers they replace,
+//! so the operator keeps the packed matrix only when blocking is
+//! profitable and otherwise falls back to the gather kernel — same
+//! results either way (DESIGN.md §13 has the heuristic's derivation).
+//!
+//! Determinism: both the blocked and the fallback row kernels use a fixed
+//! lane-fold order and rows are computed independently, so results are
+//! bitwise identical for every thread count — the same invariant the
+//! other backends keep ([`crate::util::par`]).
+
+use super::{DistMdp, MatFreePolicyOp};
+use crate::comm::Comm;
+use crate::ksp::Apply;
+use crate::linalg::dist::{GhostBuf, Partition};
+use crate::linalg::{Bsr, Csr};
+
+/// Minimum [`Bsr::fill_ratio`] at which the blocked layout is kept.
+///
+/// Below this, more than ~2 of every 3 stored lanes would be padding
+/// zeros: the blocked row pass reads `blocks·LANES` values where the
+/// gather reads `nnz` values plus `nnz` indices, so blocking stops paying
+/// once `LANES/fill > 2` entries move per real nonzero. 0.35 sits just
+/// above that break-even with a small margin for the removed index
+/// traffic.
+pub const BSR_FILL_THRESHOLD: f64 = 0.35;
+
+/// `A = I − diag(γ_π) P_π` over a block-packed copy of the selected
+/// policy rows (`-eval_backend bsr`).
+///
+/// Holds the packed rows only when the fill heuristic accepts them
+/// ([`Self::uses_blocks`]); the fallback path is the same fused gather as
+/// the matrix-free backend. Non-apply hooks (diagonal, local block,
+/// materialization) delegate to [`MatFreePolicyOp`] — they are setup-time
+/// paths where the layout does not matter.
+pub struct BsrPolicyOp<'a> {
+    mdp: &'a DistMdp,
+    policy: &'a [usize],
+    /// Selected policy rows in blocked layout (buffer-space columns, one
+    /// row per local state), or `None` when the fill heuristic rejected
+    /// the packing.
+    blocks: Option<Bsr>,
+}
+
+impl<'a> BsrPolicyOp<'a> {
+    /// Pack the selected rows of `mdp` under `policy`, keeping the packed
+    /// form only if its fill ratio clears [`BSR_FILL_THRESHOLD`].
+    pub fn new(mdp: &'a DistMdp, policy: &'a [usize]) -> Self {
+        assert_eq!(
+            policy.len(),
+            mdp.local_states(),
+            "policy must cover the rank-local states"
+        );
+        debug_assert!(policy.iter().all(|&a| a < mdp.n_actions()));
+        let local = mdp.transitions().local();
+        let m = mdp.n_actions();
+        let mut packed = Bsr::new(local.ncols());
+        for (s, &a) in policy.iter().enumerate() {
+            let (cols, vals) = local.row(s * m + a);
+            packed.push_row(cols, vals);
+        }
+        let blocks = (packed.fill_ratio() >= BSR_FILL_THRESHOLD).then_some(packed);
+        BsrPolicyOp { mdp, policy, blocks }
+    }
+
+    /// Whether the blocked layout passed the fill heuristic (false means
+    /// applies run the gather fallback).
+    pub fn uses_blocks(&self) -> bool {
+        self.blocks.is_some()
+    }
+
+    /// The matrix-free twin used for the setup-time hooks.
+    fn matfree(&self) -> MatFreePolicyOp<'a> {
+        MatFreePolicyOp::new(self.mdp, self.policy)
+    }
+
+    /// The stacked-CSR row index backing local state `s` under π.
+    #[inline]
+    fn row_of(&self, s: usize) -> usize {
+        s * self.mdp.n_actions() + self.policy[s]
+    }
+}
+
+impl Apply for BsrPolicyOp<'_> {
+    fn local_rows(&self) -> usize {
+        self.mdp.local_states()
+    }
+
+    fn partition(&self) -> Partition {
+        self.mdp.partition()
+    }
+
+    fn make_buffer(&self) -> GhostBuf {
+        self.mdp.make_buffer()
+    }
+
+    fn apply(&self, comm: &Comm, x: &[f64], y: &mut [f64], buf: &mut GhostBuf) {
+        let nl = self.local_rows();
+        assert_eq!(x.len(), nl);
+        assert_eq!(y.len(), nl);
+        let trans = self.mdp.transitions();
+        trans.update_ghosts(comm, x, buf);
+        let local = trans.local();
+        let xb = buf.x();
+        let m = self.mdp.n_actions();
+        let disc = self.mdp.discount();
+        // Row-parallel; each row's fold order is fixed per kernel →
+        // bitwise identical for any thread count.
+        crate::util::par::par_for_rows(y, |offset, chunk| {
+            for (i, ys) in chunk.iter_mut().enumerate() {
+                let s = offset + i;
+                let row = self.row_of(s);
+                let px = match &self.blocks {
+                    Some(b) => b.row_dot(s, xb),
+                    None => {
+                        let (cols, vals) = local.row(row);
+                        // SAFETY: DistCsr remaps every stored column into
+                        // buffer space [0, nlocal + nghost) == xb.len().
+                        unsafe { crate::util::simd::gather_dot_unchecked(cols, vals, xb) }
+                    }
+                };
+                *ys = x[s] - disc.at_row(row, m) * px;
+            }
+        });
+    }
+
+    fn diag(&self, out: &mut [f64]) {
+        self.matfree().diag(out)
+    }
+
+    fn local_block(&self) -> Csr {
+        self.matfree().local_block()
+    }
+
+    fn materialize_rows(&self) -> Vec<Vec<(usize, f64)>> {
+        self.matfree().materialize_rows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::World;
+    use crate::mdp::fixtures::random_mdp;
+    use crate::util::prng::Xoshiro256pp;
+    use crate::util::prop;
+    use std::sync::Arc;
+
+    fn random_local_policy(lo: usize, hi: usize, m: usize, seed: u64) -> Vec<usize> {
+        (lo..hi)
+            .map(|s| {
+                let mut rng = Xoshiro256pp::new(seed ^ (s as u64).wrapping_mul(0x5851));
+                rng.index(m)
+            })
+            .collect()
+    }
+
+    /// The blocked operator and the matrix-free operator are the same
+    /// linear map: identical apply/diag/residual for random policies,
+    /// whichever side of the fill heuristic the model lands on.
+    #[test]
+    fn matches_matfree_any_world_size() {
+        for (seed, size) in [(41u64, 1usize), (42, 2), (43, 3)] {
+            let mdp = Arc::new(random_mdp(seed, 31, 4, 0.92));
+            let out = World::run(size, move |comm| {
+                let d = DistMdp::from_serial(&comm, &mdp);
+                let part = d.partition();
+                let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+                let nl = hi - lo;
+                let policy = random_local_policy(lo, hi, 4, seed);
+                let x: Vec<f64> = (lo..hi).map(|i| (i as f64 * 0.6).sin()).collect();
+                let b: Vec<f64> = (lo..hi).map(|i| (i as f64 * 0.4).cos()).collect();
+
+                let mf = MatFreePolicyOp::new(&d, &policy);
+                let bs = BsrPolicyOp::new(&d, &policy);
+                assert_eq!(bs.local_rows(), nl);
+                let mut buf_m = mf.make_buffer();
+                let mut buf_b = bs.make_buffer();
+                let mut y_m = vec![0.0; nl];
+                let mut y_b = vec![0.0; nl];
+                mf.apply(&comm, &x, &mut y_m, &mut buf_m);
+                bs.apply(&comm, &x, &mut y_b, &mut buf_b);
+                let mut d_m = vec![0.0; nl];
+                let mut d_b = vec![0.0; nl];
+                mf.diag(&mut d_m);
+                bs.diag(&mut d_b);
+                let mut r = vec![0.0; nl];
+                let res_m = mf.residual(&comm, &b, &x, &mut r, &mut buf_m);
+                let res_b = bs.residual(&comm, &b, &x, &mut r, &mut buf_b);
+
+                prop::close_slices(&y_m, &y_b, 1e-13).unwrap();
+                prop::close_slices(&d_m, &d_b, 1e-13).unwrap();
+                assert!((res_m - res_b).abs() < 1e-12, "{res_m} vs {res_b}");
+            });
+            assert_eq!(out.len(), size);
+        }
+    }
+
+    /// Property sweep over random shapes — includes single-action models
+    /// (dense column clusters → blocked path) and wide random ones
+    /// (scattered columns → gather fallback).
+    #[test]
+    fn prop_apply_equals_matfree() {
+        prop::forall("bsr apply == matfree apply", |rng| {
+            let n = 3 + rng.index(24);
+            let m = 1 + rng.index(4);
+            let gamma = rng.range_f64(0.0, 0.99);
+            let seed = rng.next_u64();
+            let pol_seed = rng.next_u64();
+            let mdp = Arc::new(random_mdp(seed, n, m, gamma));
+            let out = World::run(1, move |comm| {
+                let d = DistMdp::from_serial(&comm, &mdp);
+                let policy = random_local_policy(0, n, m, pol_seed);
+                let x: Vec<f64> = (0..n).map(|i| ((i * 5 + 2) as f64).sin()).collect();
+                let mf = MatFreePolicyOp::new(&d, &policy);
+                let bs = BsrPolicyOp::new(&d, &policy);
+                let mut y_m = vec![0.0; n];
+                let mut y_b = vec![0.0; n];
+                let mut buf_m = mf.make_buffer();
+                let mut buf_b = bs.make_buffer();
+                mf.apply(&comm, &x, &mut y_m, &mut buf_m);
+                bs.apply(&comm, &x, &mut y_b, &mut buf_b);
+                (y_m, y_b)
+            });
+            let (y_m, y_b) = &out[0];
+            prop::close_slices(y_m, y_b, 1e-12)
+        });
+    }
+
+    /// Clustered columns (a chain model: each row hits adjacent states)
+    /// must pass the fill heuristic and take the blocked path.
+    #[test]
+    fn chain_model_packs_blocks() {
+        let n = 40;
+        let mdp = Arc::new(
+            crate::mdp::Mdp::from_fillers(
+                n,
+                1,
+                0.9,
+                |s, _| {
+                    let hi = (s + 3).min(n - 1);
+                    let k = hi - s + 1;
+                    (s..=hi).map(|t| (t, 1.0 / k as f64)).collect()
+                },
+                |_, _| 1.0,
+            ),
+        );
+        World::run(1, move |comm| {
+            let d = DistMdp::from_serial(&comm, &mdp);
+            let policy = vec![0usize; n];
+            let bs = BsrPolicyOp::new(&d, &policy);
+            assert!(bs.uses_blocks(), "adjacent-column rows must pack well");
+        });
+    }
+}

@@ -1,0 +1,230 @@
+//! Single-precision policy-evaluation operator (`-inner_precision f32`).
+//!
+//! The inner Krylov iterations of iPI are memory-bound: every apply
+//! streams the selected policy rows once. Storing that copy in `f32`
+//! (values) + `u32` (column ids) halves the bytes per nonzero, which on
+//! bandwidth-bound hardware is a direct throughput win — the classic
+//! mixed-precision iterative-refinement trade (DESIGN.md §13).
+//!
+//! Precision contract: the **operator storage** is f32, but every product
+//! is widened to f64 before accumulation
+//! ([`crate::util::simd::gather_dot_f32_unchecked`]), the subtraction
+//! `x − γ·px` is f64, and all Krylov vectors stay f64. A single apply
+//! therefore carries only the `f32` *representation* error of the matrix
+//! entries (relative ~1e-7·‖row‖); by itself that floors the achievable
+//! residual near 1e-7, which is why [`crate::ksp::mixed`] wraps the inner
+//! solve in an f64 refinement loop — the outer convergence certificate is
+//! computed with the full-precision operator and reaches the same f64
+//! tolerance.
+//!
+//! Setup-time hooks (diagonal, local block, materialization) delegate to
+//! the f64 [`MatFreePolicyOp`]: preconditioners are built from exact
+//! values, only the hot apply runs on the compressed copy.
+
+use super::{DistMdp, MatFreePolicyOp};
+use crate::comm::Comm;
+use crate::ksp::Apply;
+use crate::linalg::dist::{GhostBuf, Partition};
+use crate::linalg::Csr;
+
+/// `A = I − diag(γ_π) P_π` applied from an f32/u32 copy of the selected
+/// policy rows. See the module docs for the precision contract.
+pub struct F32PolicyOp<'a> {
+    mdp: &'a DistMdp,
+    policy: &'a [usize],
+    /// Row offsets into `cols`/`vals` (one row per local state).
+    indptr: Vec<usize>,
+    /// Buffer-space column ids, narrowed to u32.
+    cols: Vec<u32>,
+    /// Transition probabilities, narrowed to f32.
+    vals: Vec<f32>,
+    /// Per-local-row discounts `γ_π(s)`, kept in f64.
+    gammas: Vec<f64>,
+}
+
+impl<'a> F32PolicyOp<'a> {
+    /// Compress the selected rows of `mdp` under `policy` to f32/u32.
+    pub fn new(mdp: &'a DistMdp, policy: &'a [usize]) -> Self {
+        let nl = mdp.local_states();
+        assert_eq!(policy.len(), nl, "policy must cover the rank-local states");
+        debug_assert!(policy.iter().all(|&a| a < mdp.n_actions()));
+        let local = mdp.transitions().local();
+        assert!(
+            local.ncols() <= u32::MAX as usize,
+            "buffer space too large for u32 column ids"
+        );
+        let m = mdp.n_actions();
+        let mut indptr = Vec::with_capacity(nl + 1);
+        let mut cols: Vec<u32> = Vec::new();
+        let mut vals: Vec<f32> = Vec::new();
+        let mut gammas = Vec::with_capacity(nl);
+        indptr.push(0);
+        for (s, &a) in policy.iter().enumerate() {
+            let row = s * m + a;
+            let (rc, rv) = local.row(row);
+            cols.extend(rc.iter().map(|&c| c as u32));
+            vals.extend(rv.iter().map(|&v| v as f32));
+            indptr.push(cols.len());
+            gammas.push(mdp.discount().at_row(row, m));
+        }
+        F32PolicyOp {
+            mdp,
+            policy,
+            indptr,
+            cols,
+            vals,
+            gammas,
+        }
+    }
+
+    /// Bytes of the compressed operator copy (4 per value + 4 per column
+    /// id, versus 8 + 8 for the f64 paths) — memory accounting.
+    pub fn storage_bytes(&self) -> usize {
+        self.indptr.len() * 8 + self.cols.len() * 4 + self.vals.len() * 4 + self.gammas.len() * 8
+    }
+
+    /// The f64 matrix-free twin used for the setup-time hooks.
+    fn matfree(&self) -> MatFreePolicyOp<'a> {
+        MatFreePolicyOp::new(self.mdp, self.policy)
+    }
+}
+
+impl Apply for F32PolicyOp<'_> {
+    fn local_rows(&self) -> usize {
+        self.mdp.local_states()
+    }
+
+    fn partition(&self) -> Partition {
+        self.mdp.partition()
+    }
+
+    fn make_buffer(&self) -> GhostBuf {
+        self.mdp.make_buffer()
+    }
+
+    fn apply(&self, comm: &Comm, x: &[f64], y: &mut [f64], buf: &mut GhostBuf) {
+        let nl = self.local_rows();
+        assert_eq!(x.len(), nl);
+        assert_eq!(y.len(), nl);
+        self.mdp.transitions().update_ghosts(comm, x, buf);
+        // Narrow the exchanged vector once per apply; the row pass then
+        // streams f32 end to end. (A fresh Vec keeps the operator Sync —
+        // the allocation is one O(n) pass against m·n row work.)
+        let xf: Vec<f32> = buf.x().iter().map(|&v| v as f32).collect();
+        crate::util::par::par_for_rows(y, |offset, chunk| {
+            for (i, ys) in chunk.iter_mut().enumerate() {
+                let s = offset + i;
+                let (a, b) = (self.indptr[s], self.indptr[s + 1]);
+                // SAFETY: cols are DistCsr buffer-space columns, all
+                // < nlocal + nghost == xf.len(), narrowed loss-free
+                // (checked against u32::MAX at construction).
+                let px = unsafe {
+                    crate::util::simd::gather_dot_f32_unchecked(
+                        &self.cols[a..b],
+                        &self.vals[a..b],
+                        &xf,
+                    )
+                };
+                *ys = x[s] - self.gammas[s] * px;
+            }
+        });
+    }
+
+    fn diag(&self, out: &mut [f64]) {
+        self.matfree().diag(out)
+    }
+
+    fn local_block(&self) -> Csr {
+        self.matfree().local_block()
+    }
+
+    fn materialize_rows(&self) -> Vec<Vec<(usize, f64)>> {
+        self.matfree().materialize_rows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::World;
+    use crate::mdp::fixtures::random_mdp;
+    use crate::util::prng::Xoshiro256pp;
+    use crate::util::prop;
+    use std::sync::Arc;
+
+    fn random_local_policy(lo: usize, hi: usize, m: usize, seed: u64) -> Vec<usize> {
+        (lo..hi)
+            .map(|s| {
+                let mut rng = Xoshiro256pp::new(seed ^ (s as u64).wrapping_mul(0x5851));
+                rng.index(m)
+            })
+            .collect()
+    }
+
+    /// The f32 apply tracks the f64 matrix-free apply within single
+    /// precision of the operand scale, for any world size.
+    #[test]
+    fn tracks_matfree_within_f32_precision() {
+        for (seed, size) in [(51u64, 1usize), (52, 2), (53, 3)] {
+            let mdp = Arc::new(random_mdp(seed, 27, 3, 0.94));
+            World::run(size, move |comm| {
+                let d = DistMdp::from_serial(&comm, &mdp);
+                let part = d.partition();
+                let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+                let nl = hi - lo;
+                let policy = random_local_policy(lo, hi, 3, seed);
+                let x: Vec<f64> = (lo..hi).map(|i| (i as f64 * 0.8).sin()).collect();
+                let mf = MatFreePolicyOp::new(&d, &policy);
+                let lp = F32PolicyOp::new(&d, &policy);
+                assert_eq!(lp.local_rows(), nl);
+                // Compressed copy: 4+4 bytes per nonzero vs 8+8 for f64.
+                let f64_bytes =
+                    lp.indptr.len() * 8 + (lp.cols.len() + lp.vals.len()) * 8 + lp.gammas.len() * 8;
+                assert!(lp.storage_bytes() < f64_bytes);
+                let mut buf_m = mf.make_buffer();
+                let mut buf_l = lp.make_buffer();
+                let mut y_m = vec![0.0; nl];
+                let mut y_l = vec![0.0; nl];
+                mf.apply(&comm, &x, &mut y_m, &mut buf_m);
+                lp.apply(&comm, &x, &mut y_l, &mut buf_l);
+                prop::close_slices(&y_m, &y_l, 1e-5).unwrap();
+                // Setup hooks stay full precision: diagonals are bitwise equal.
+                let mut d_m = vec![0.0; nl];
+                let mut d_l = vec![0.0; nl];
+                mf.diag(&mut d_m);
+                lp.diag(&mut d_l);
+                assert_eq!(d_m, d_l);
+            });
+        }
+    }
+
+    /// Property sweep: random shapes/policies, f32 image within a
+    /// single-precision relative envelope of the f64 image.
+    #[test]
+    fn prop_apply_tracks_f64() {
+        prop::forall("f32 apply ~= f64 apply", |rng| {
+            let n = 3 + rng.index(20);
+            let m = 1 + rng.index(4);
+            let gamma = rng.range_f64(0.0, 0.99);
+            let seed = rng.next_u64();
+            let pol_seed = rng.next_u64();
+            let mdp = Arc::new(random_mdp(seed, n, m, gamma));
+            let out = World::run(1, move |comm| {
+                let d = DistMdp::from_serial(&comm, &mdp);
+                let policy = random_local_policy(0, n, m, pol_seed);
+                let x: Vec<f64> = (0..n).map(|i| ((i * 3 + 1) as f64).cos()).collect();
+                let mf = MatFreePolicyOp::new(&d, &policy);
+                let lp = F32PolicyOp::new(&d, &policy);
+                let mut y_m = vec![0.0; n];
+                let mut y_l = vec![0.0; n];
+                let mut buf_m = mf.make_buffer();
+                let mut buf_l = lp.make_buffer();
+                mf.apply(&comm, &x, &mut y_m, &mut buf_m);
+                lp.apply(&comm, &x, &mut y_l, &mut buf_l);
+                (y_m, y_l)
+            });
+            let (y_m, y_l) = &out[0];
+            prop::close_slices(y_m, y_l, 1e-5)
+        });
+    }
+}

@@ -95,16 +95,16 @@ impl Apply for MatFreePolicyOp<'_> {
         let local = trans.local();
         let xb = buf.x();
         // Row-parallel over the rank's worker pool; each selected row's
-        // accumulation is serial → bitwise identical for any thread count.
+        // gather goes through the lane-unrolled kernel with a fixed fold
+        // order → bitwise identical for any thread count per backend.
         crate::util::par::par_for_rows(y, |offset, chunk| {
             for (i, ys) in chunk.iter_mut().enumerate() {
                 let s = offset + i;
                 let row = self.row_of(s);
                 let (cols, vals) = local.row(row);
-                let mut px = 0.0;
-                for (&c, &v) in cols.iter().zip(vals) {
-                    px += v * xb[c];
-                }
+                // SAFETY: DistCsr remaps every stored column into buffer
+                // space [0, nlocal + nghost) == xb.len() at assembly.
+                let px = unsafe { crate::util::simd::gather_dot_unchecked(cols, vals, xb) };
                 *ys = x[s] - self.gamma_at(row) * px;
             }
         });

@@ -16,11 +16,15 @@
 //!   generation/saving ([`io::write_streaming`], [`io::save_dist`]) that
 //!   never materialize the full model on one rank.
 
+pub mod blocked;
 pub mod discount;
 pub mod io;
+pub mod lowprec;
 pub mod matfree;
 
+pub use blocked::BsrPolicyOp;
 pub use discount::{Discount, DiscountMode};
+pub use lowprec::F32PolicyOp;
 pub use matfree::MatFreePolicyOp;
 
 use crate::comm::Comm;

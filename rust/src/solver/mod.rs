@@ -20,7 +20,7 @@
 use crate::comm::{Comm, World};
 use crate::ksp::precond::PcType;
 use crate::ksp::{self, Apply, KspType, LinOp, Precond, Tolerance};
-use crate::mdp::{DistMdp, MatFreePolicyOp, Mdp};
+use crate::mdp::{BsrPolicyOp, DistMdp, F32PolicyOp, MatFreePolicyOp, Mdp};
 use crate::util::json::Json;
 use std::sync::Arc;
 use std::time::Instant;
@@ -93,6 +93,11 @@ pub enum EvalBackend {
     /// plan) and cache it across outer iterations while the greedy policy
     /// is unchanged ([`LinOp`] over [`DistMdp::policy_system`]).
     Assembled,
+    /// Repack the selected policy rows into 1×LANES column blocks for
+    /// lane-parallel applies ([`BsrPolicyOp`]); falls back to the gather
+    /// kernel per-matrix when the block fill ratio is too low
+    /// (DESIGN.md §13).
+    Bsr,
 }
 
 impl EvalBackend {
@@ -101,6 +106,7 @@ impl EvalBackend {
         Ok(match name {
             "matfree" | "matrix-free" | "mat_free" => EvalBackend::MatFree,
             "assembled" | "explicit" => EvalBackend::Assembled,
+            "bsr" | "blocked" => EvalBackend::Bsr,
             other => return Err(format!("unknown eval_backend '{other}'")),
         })
     }
@@ -110,6 +116,42 @@ impl EvalBackend {
         match self {
             EvalBackend::MatFree => "matfree",
             EvalBackend::Assembled => "assembled",
+            EvalBackend::Bsr => "bsr",
+        }
+    }
+}
+
+/// Arithmetic precision of the inner KSP iterations (`-inner_precision`,
+/// DESIGN.md §13). Only the iPI evaluation step is affected; Bellman
+/// backups, the outer residual, and the convergence certificate always
+/// run in f64.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum InnerPrecision {
+    /// Full double precision everywhere (the default).
+    #[default]
+    F64,
+    /// Inner Krylov iterations on an f32/u32 copy of the policy operator
+    /// ([`F32PolicyOp`]) inside an f64 iterative-refinement loop
+    /// ([`ksp::mixed`]) — half the memory traffic on the dominant kernel,
+    /// same f64 outer tolerance.
+    F32,
+}
+
+impl InnerPrecision {
+    /// Parse the `-inner_precision` option string.
+    pub fn parse(name: &str) -> Result<InnerPrecision, String> {
+        Ok(match name {
+            "f64" | "double" => InnerPrecision::F64,
+            "f32" | "single" | "mixed" => InnerPrecision::F32,
+            other => return Err(format!("unknown inner_precision '{other}'")),
+        })
+    }
+
+    /// Canonical option-string form (inverse of [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            InnerPrecision::F64 => "f64",
+            InnerPrecision::F32 => "f32",
         }
     }
 }
@@ -121,6 +163,10 @@ pub struct SolveOptions {
     pub method: Method,
     /// Operator realization for the evaluation step (`-eval_backend`).
     pub eval_backend: EvalBackend,
+    /// Precision of the inner KSP iterations (`-inner_precision`): `F32`
+    /// runs them on a compressed operator copy inside an f64 refinement
+    /// loop. iPI only; other methods always evaluate in f64.
+    pub inner_precision: InnerPrecision,
     /// Outer stop: ‖TV − V‖∞ < `atol`.
     pub atol: f64,
     /// Outer iteration cap (`-max_iter_pi`).
@@ -145,6 +191,7 @@ impl Default for SolveOptions {
         SolveOptions {
             method: Method::ipi_gmres(),
             eval_backend: EvalBackend::MatFree,
+            inner_precision: InnerPrecision::F64,
             atol: 1e-8,
             max_outer: 1_000,
             alpha: 1e-4,
@@ -362,6 +409,7 @@ pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolve
             // Realize the evaluation operator + RHS for the configured
             // backend; every method below sees only `&dyn Apply`.
             let mf_op: MatFreePolicyOp<'_>;
+            let bsr_op: BsrPolicyOp<'_>;
             let mf_g: Vec<f64>;
             let asm_op: LinOp<'_>;
             let (a, g_pi): (&dyn Apply, &[f64]) = match opts.eval_backend {
@@ -369,6 +417,11 @@ pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolve
                     mf_g = mdp.policy_costs(&policy);
                     mf_op = MatFreePolicyOp::new(mdp, &policy);
                     (&mf_op, &mf_g)
+                }
+                EvalBackend::Bsr => {
+                    mf_g = mdp.policy_costs(&policy);
+                    bsr_op = BsrPolicyOp::new(mdp, &policy);
+                    (&bsr_op, &mf_g)
                 }
                 EvalBackend::Assembled => {
                     let (p_pi, g, gammas) = cached_system.as_ref().unwrap();
@@ -411,7 +464,19 @@ pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolve
                     };
                     // warm start from TV (one backup ahead of V)
                     v.copy_from_slice(&tv);
-                    let stats = ksp::solve(ktype, &precond, comm, a, g_pi, &mut v, &tol);
+                    let stats = match opts.inner_precision {
+                        InnerPrecision::F64 => {
+                            ksp::solve(ktype, &precond, comm, a, g_pi, &mut v, &tol)
+                        }
+                        InnerPrecision::F32 => {
+                            // Inner iterations on the compressed copy, f64
+                            // refinement certified against `a`. The copy is
+                            // independent of the eval backend (it compresses
+                            // the selected policy rows directly).
+                            let a32 = F32PolicyOp::new(mdp, &policy);
+                            ksp::solve_mixed(ktype, &precond, comm, a, &a32, g_pi, &mut v, &tol)
+                        }
+                    };
                     (stats.iterations, stats.spmvs)
                 }
             }
@@ -757,7 +822,11 @@ mod tests {
         let mdp = random_mdp(23, 35, 3, 0.95);
         for method in methods_under_test() {
             let mut values: Vec<Vec<f64>> = Vec::new();
-            for backend in [EvalBackend::MatFree, EvalBackend::Assembled] {
+            for backend in [
+                EvalBackend::MatFree,
+                EvalBackend::Assembled,
+                EvalBackend::Bsr,
+            ] {
                 let r = solve_serial(
                     &mdp,
                     &SolveOptions {
@@ -775,8 +844,10 @@ mod tests {
                 );
                 values.push(r.value);
             }
-            prop::close_slices(&values[0], &values[1], 1e-7)
-                .unwrap_or_else(|e| panic!("{} backends disagree: {e}", method.name()));
+            for v in &values[1..] {
+                prop::close_slices(&values[0], v, 1e-7)
+                    .unwrap_or_else(|e| panic!("{} backends disagree: {e}", method.name()));
+            }
         }
     }
 
@@ -787,8 +858,62 @@ mod tests {
             EvalBackend::parse("assembled").unwrap(),
             EvalBackend::Assembled
         );
+        assert_eq!(EvalBackend::parse("bsr").unwrap(), EvalBackend::Bsr);
+        assert_eq!(EvalBackend::parse("blocked").unwrap(), EvalBackend::Bsr);
         assert!(EvalBackend::parse("gpu").is_err());
         assert_eq!(EvalBackend::default().name(), "matfree");
+    }
+
+    #[test]
+    fn inner_precision_parse() {
+        assert_eq!(InnerPrecision::parse("f64").unwrap(), InnerPrecision::F64);
+        assert_eq!(InnerPrecision::parse("f32").unwrap(), InnerPrecision::F32);
+        assert_eq!(InnerPrecision::parse("mixed").unwrap(), InnerPrecision::F32);
+        assert!(InnerPrecision::parse("f16").is_err());
+        assert_eq!(InnerPrecision::default().name(), "f64");
+    }
+
+    #[test]
+    fn f32_inner_reaches_f64_outer_tolerance() {
+        // The mixed-precision evaluation must converge to the *same* f64
+        // outer certificate, on every eval backend, and agree with the
+        // all-f64 solution well below the f32 representation floor.
+        let mdp = random_mdp(67, 45, 3, 0.97);
+        let f64_ref = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::ipi_gmres(),
+                atol: 1e-9,
+                ..Default::default()
+            },
+        );
+        assert!(f64_ref.converged);
+        for backend in [
+            EvalBackend::MatFree,
+            EvalBackend::Assembled,
+            EvalBackend::Bsr,
+        ] {
+            let r = solve_serial(
+                &mdp,
+                &SolveOptions {
+                    method: Method::ipi_gmres(),
+                    eval_backend: backend,
+                    inner_precision: InnerPrecision::F32,
+                    atol: 1e-9,
+                    ..Default::default()
+                },
+            );
+            assert!(r.converged, "{} f32-inner did not converge", backend.name());
+            // The certificate is the f64 Bellman residual — verify it
+            // independently of the solver's own bookkeeping.
+            assert!(
+                mdp.bellman_residual(&r.value) < 1e-8,
+                "{} certificate violated",
+                backend.name()
+            );
+            prop::close_slices(&f64_ref.value, &r.value, 1e-7)
+                .unwrap_or_else(|e| panic!("{} f32-inner disagrees: {e}", backend.name()));
+        }
     }
 
     #[test]

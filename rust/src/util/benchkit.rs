@@ -4,6 +4,36 @@
 //! `rust/benches/` use this small harness instead: warmup, fixed-count or
 //! time-budgeted repetition, median/mean/stddev/min, aligned-table printing,
 //! and JSON export so EXPERIMENTS.md tables can be regenerated verbatim.
+//!
+//! ## Baseline capture protocol (`BENCH_0.json`)
+//!
+//! The repo-root `BENCH_0.json` pins the kernel-performance baseline the
+//! §13 backend work is measured against. To (re)capture it, run the two
+//! kernel-adjacent suites in quick mode with a pinned shape, then merge
+//! their JSON exports:
+//!
+//! ```text
+//! cd rust
+//! MADUPITE_BENCH_SAMPLES=5 MADUPITE_BENCH_BUDGET_MS=1000 \
+//!   MADUPITE_BENCH_THREADS=1,4 MADUPITE_BENCH_MAX_N=100000 \
+//!   cargo bench --bench bench_kernels
+//! MADUPITE_BENCH_SAMPLES=5 MADUPITE_BENCH_BUDGET_MS=1000 \
+//!   cargo bench --bench bench_solvers
+//! jq -s '{schema: "madupite-bench-baseline/v1",
+//!         captured: (now | todate),
+//!         pinned_config: {samples: 5, budget_ms: 1000,
+//!                         threads: "1,4", max_n: 100000},
+//!         suites: .}' \
+//!   target/bench-json/e6-kernels.json \
+//!   target/bench-json/e1-method-comparison.json > ../BENCH_0.json
+//! ```
+//!
+//! (The slug of each suite's JSON file is printed by [`Suite::finish`];
+//! adjust the paths if suite titles change.) Workloads are deterministic
+//! in their seeds, so a recapture on the same machine measures the same
+//! work; compare `median_s` per case name. The committed file records
+//! `status: "pending-capture"` when it was produced on a machine without
+//! a usable toolchain — treat the first real capture as the baseline.
 
 use crate::util::json::Json;
 use std::time::{Duration, Instant};

@@ -10,3 +10,4 @@ pub mod json;
 pub mod par;
 pub mod prng;
 pub mod prop;
+pub mod simd;

@@ -21,6 +21,12 @@
 //! The result is bitwise identical for `threads = 1..N` — proven by
 //! `tests/par_determinism.rs` across the full method × backend matrix.
 //!
+//! Inside each chunk, the arithmetic itself runs through the
+//! [`crate::util::simd`] lane kernels (DESIGN.md §13), which fold their
+//! `LANES` partial sums in a fixed order too — so the two layers compose:
+//! the chunk grid fixes the outer association, the lane fold fixes the
+//! inner one, and neither depends on the thread count.
+//!
 //! # Pool lifecycle
 //!
 //! Each rank-thread lazily owns one persistent [`ThreadPool`], created on

@@ -1,0 +1,441 @@
+//! Explicit multi-lane kernels for the hot numeric loops (DESIGN.md §13).
+//!
+//! The solver's wall-clock is dominated by memory-bound sparse kernels —
+//! `Csr::spmv`, the fused policy-operator row pass, the Bellman backup and
+//! the KSP vector kernels. `std::simd` is nightly-only and the build is
+//! offline/stable, so this module implements the classic manual-lane
+//! idiom instead: [`LANES`] independent accumulators walked in a fixed
+//! stride-`LANES` pattern with a serial remainder loop, which LLVM lowers
+//! to packed vector instructions on every mainstream target.
+//!
+//! Two invariants the rest of the crate leans on:
+//!
+//! - **Fixed fold order.** Lane partials always combine as
+//!   `(s0 + s1) + (s2 + s3)` and the remainder is always appended last.
+//!   Together with the fixed chunk grid of [`crate::util::par`] this keeps
+//!   every reduction **bitwise identical for every thread count** per
+//!   selected backend (`tests/par_determinism.rs`).
+//! - **Scalar fallback.** [`KernelBackend::Scalar`] routes every kernel
+//!   through the plain left-to-right reference loop. It is selectable at
+//!   runtime ([`set_kernel_backend`]) and from the environment
+//!   (`MADUPITE_KERNELS=scalar|simd`), which is how CI's `kernels-matrix`
+//!   leg runs the whole suite against both implementations. The two
+//!   backends differ only by floating-point reassociation; the property
+//!   tests in this module pin them together within accumulation error.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Accumulator lane count of the manual-lane kernels (f64x4-style: one
+/// AVX2 register of doubles, two NEON registers).
+pub const LANES: usize = 4;
+
+/// Which implementation the numeric kernels use (process-global).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelBackend {
+    /// Plain left-to-right scalar loops — the reference implementation.
+    Scalar,
+    /// Manual [`LANES`]-lane unrolled kernels (default).
+    #[default]
+    Simd,
+}
+
+impl KernelBackend {
+    /// Parse a `MADUPITE_KERNELS` value.
+    pub fn parse(name: &str) -> Result<KernelBackend, String> {
+        match name {
+            "scalar" => Ok(KernelBackend::Scalar),
+            "simd" => Ok(KernelBackend::Simd),
+            other => Err(format!("unknown kernel backend '{other}' (scalar|simd)")),
+        }
+    }
+
+    /// Canonical option-string form (inverse of [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Simd => "simd",
+        }
+    }
+}
+
+/// Sentinel meaning "not initialized yet — consult the environment".
+const UNSET: usize = usize::MAX;
+
+static BACKEND: AtomicUsize = AtomicUsize::new(UNSET);
+
+fn env_backend() -> KernelBackend {
+    match std::env::var("MADUPITE_KERNELS") {
+        Ok(s) => KernelBackend::parse(s.trim()).unwrap_or_default(),
+        Err(_) => KernelBackend::default(),
+    }
+}
+
+/// The currently selected kernel backend. First call resolves
+/// `MADUPITE_KERNELS` (default `simd`); [`set_kernel_backend`] overrides.
+#[inline]
+pub fn kernel_backend() -> KernelBackend {
+    match BACKEND.load(Ordering::Relaxed) {
+        0 => KernelBackend::Scalar,
+        1 => KernelBackend::Simd,
+        _ => {
+            let b = env_backend();
+            BACKEND.store(b as usize, Ordering::Relaxed);
+            b
+        }
+    }
+}
+
+/// Select the kernel backend process-wide (benches and the test matrix
+/// flip this; production code leaves the default).
+pub fn set_kernel_backend(b: KernelBackend) {
+    BACKEND.store(b as usize, Ordering::Relaxed);
+}
+
+/// Dot product with [`LANES`] accumulators and fixed fold order
+/// `(s0 + s1) + (s2 + s3)` + serial remainder. Falls back to the scalar
+/// reference loop under [`KernelBackend::Scalar`].
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    if kernel_backend() == KernelBackend::Scalar {
+        return a.iter().zip(b).map(|(x, y)| x * y).sum();
+    }
+    let mut s = [0.0f64; LANES];
+    let whole = a.len() - a.len() % LANES;
+    let mut i = 0;
+    while i < whole {
+        for (l, sl) in s.iter_mut().enumerate() {
+            *sl += a[i + l] * b[i + l];
+        }
+        i += LANES;
+    }
+    let mut acc = (s[0] + s[1]) + (s[2] + s[3]);
+    for k in whole..a.len() {
+        acc += a[k] * b[k];
+    }
+    acc
+}
+
+/// Max |x| over a slice, lane-unrolled. `max` is associative and
+/// commutative over the values that occur here, so both backends return
+/// identical results.
+#[inline]
+pub fn max_abs(xs: &[f64]) -> f64 {
+    if kernel_backend() == KernelBackend::Scalar {
+        return xs.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+    }
+    let mut s = [0.0f64; LANES];
+    let whole = xs.len() - xs.len() % LANES;
+    let mut i = 0;
+    while i < whole {
+        for (l, sl) in s.iter_mut().enumerate() {
+            *sl = sl.max(xs[i + l].abs());
+        }
+        i += LANES;
+    }
+    let mut m = (s[0].max(s[1])).max(s[2].max(s[3]));
+    for k in whole..xs.len() {
+        m = m.max(xs[k].abs());
+    }
+    m
+}
+
+/// `y += a·x`. Elementwise, so there is nothing to reassociate: the
+/// straight-line loop vectorizes cleanly and is bitwise identical on
+/// every backend.
+#[inline]
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// `y = x + b·y`. Elementwise — bitwise identical on every backend.
+#[inline]
+pub fn aypx(b: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi = xi + b * *yi;
+    }
+}
+
+/// `x *= a`. Elementwise — bitwise identical on every backend.
+#[inline]
+pub fn scale(a: f64, x: &mut [f64]) {
+    for xi in x {
+        *xi *= a;
+    }
+}
+
+/// Sparse gather dot `Σ vals[k] · x[cols[k]]` — the inner loop of every
+/// CSR row kernel (`spmv`, `spmv_acc`, the fused policy operator). Same
+/// lane discipline as [`dot`].
+///
+/// # Safety
+///
+/// Every entry of `cols` must be `< x.len()`. CSR construction
+/// (`Csr::from_parts`/`from_row_lists`) validates column bounds, so row
+/// slices of a CSR paired with an `x` of length `ncols` satisfy this.
+#[inline]
+pub unsafe fn gather_dot_unchecked(cols: &[usize], vals: &[f64], x: &[f64]) -> f64 {
+    debug_assert_eq!(cols.len(), vals.len());
+    if kernel_backend() == KernelBackend::Scalar {
+        let mut acc = 0.0;
+        for (&c, &v) in cols.iter().zip(vals) {
+            debug_assert!(c < x.len());
+            acc += v * *x.get_unchecked(c);
+        }
+        return acc;
+    }
+    let mut s = [0.0f64; LANES];
+    let whole = cols.len() - cols.len() % LANES;
+    let mut i = 0;
+    while i < whole {
+        for (l, sl) in s.iter_mut().enumerate() {
+            let c = *cols.get_unchecked(i + l);
+            debug_assert!(c < x.len());
+            *sl += *vals.get_unchecked(i + l) * *x.get_unchecked(c);
+        }
+        i += LANES;
+    }
+    let mut acc = (s[0] + s[1]) + (s[2] + s[3]);
+    for k in whole..cols.len() {
+        let c = *cols.get_unchecked(k);
+        debug_assert!(c < x.len());
+        acc += *vals.get_unchecked(k) * *x.get_unchecked(c);
+    }
+    acc
+}
+
+/// Single-precision sparse gather dot for the mixed-precision inner
+/// operator (`-inner_precision f32`): `f32` storage for values, columns
+/// and the gathered vector (half the memory traffic of the f64 kernel),
+/// products widened to `f64` before accumulation so only the *inputs*
+/// are rounded, not the running sum.
+///
+/// # Safety
+///
+/// Every entry of `cols` must be `< x.len()`.
+#[inline]
+pub unsafe fn gather_dot_f32_unchecked(cols: &[u32], vals: &[f32], x: &[f32]) -> f64 {
+    debug_assert_eq!(cols.len(), vals.len());
+    if kernel_backend() == KernelBackend::Scalar {
+        let mut acc = 0.0f64;
+        for (&c, &v) in cols.iter().zip(vals) {
+            debug_assert!((c as usize) < x.len());
+            acc += v as f64 * *x.get_unchecked(c as usize) as f64;
+        }
+        return acc;
+    }
+    let mut s = [0.0f64; LANES];
+    let whole = cols.len() - cols.len() % LANES;
+    let mut i = 0;
+    while i < whole {
+        for (l, sl) in s.iter_mut().enumerate() {
+            let c = *cols.get_unchecked(i + l) as usize;
+            debug_assert!(c < x.len());
+            *sl += *vals.get_unchecked(i + l) as f64 * *x.get_unchecked(c) as f64;
+        }
+        i += LANES;
+    }
+    let mut acc = (s[0] + s[1]) + (s[2] + s[3]);
+    for k in whole..cols.len() {
+        let c = *cols.get_unchecked(k) as usize;
+        debug_assert!(c < x.len());
+        acc += *vals.get_unchecked(k) as f64 * *x.get_unchecked(c) as f64;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prng::Xoshiro256pp;
+    use crate::util::prop;
+
+    /// The backend is process-global; tests that flip it serialize here so
+    /// concurrent tests never observe a mid-flight switch.
+    static FLIP_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    /// Run `f` under both backends, restoring the previous selection.
+    fn with_backends(mut f: impl FnMut(KernelBackend)) {
+        let _guard = FLIP_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        let prev = kernel_backend();
+        for b in [KernelBackend::Scalar, KernelBackend::Simd] {
+            set_kernel_backend(b);
+            f(b);
+        }
+        set_kernel_backend(prev);
+    }
+
+    fn scalar_dot(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        for b in [KernelBackend::Scalar, KernelBackend::Simd] {
+            assert_eq!(KernelBackend::parse(b.name()).unwrap(), b);
+        }
+        assert!(KernelBackend::parse("avx512").is_err());
+    }
+
+    #[test]
+    fn dot_small_and_empty_match_scalar_exactly() {
+        // below one lane chunk both backends run the identical remainder
+        // loop, so even the bits agree
+        with_backends(|_| {
+            assert_eq!(dot(&[], &[]), 0.0);
+            assert_eq!(dot(&[2.0], &[3.0]), 6.0);
+            assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        });
+    }
+
+    #[test]
+    fn prop_dot_matches_scalar_all_lengths() {
+        // odd lengths, non-multiple-of-lane remainders, empty — the lane
+        // kernel may reassociate, so compare within accumulation error
+        prop::forall("simd dot == scalar dot", |rng| {
+            let n = rng.index(67); // 0..=66 covers 0, <LANES, odd remainders
+            let a: Vec<f64> = (0..n).map(|_| rng.range_f64(-10.0, 10.0)).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.range_f64(-10.0, 10.0)).collect();
+            let reference = scalar_dot(&a, &b);
+            let mut got = f64::NAN;
+            with_backends(|_| got = dot(&a, &b));
+            prop_assert!(
+                (got - reference).abs() <= 1e-10 * (1.0 + reference.abs()),
+                "n={n}: {got} vs {reference}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dot_handles_denormal_and_extreme_values() {
+        with_backends(|_| {
+            let tiny = f64::MIN_POSITIVE / 4.0; // denormal
+            let a = [tiny, -tiny, tiny, tiny, tiny];
+            let b = [1.0, 1.0, 1.0, 1.0, 1.0];
+            assert_eq!(dot(&a, &b), 3.0 * tiny);
+            let big = [1e300, -1e300, 1e300, -1e300, 0.0];
+            let ones = [1.0; 5];
+            assert_eq!(dot(&big, &ones), 0.0);
+        });
+    }
+
+    #[test]
+    fn max_abs_is_backend_independent() {
+        prop::forall("max_abs backend equivalence", |rng| {
+            let n = rng.index(50);
+            let xs: Vec<f64> = (0..n).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+            let reference = xs.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+            let mut vals = Vec::new();
+            with_backends(|_| vals.push(max_abs(&xs)));
+            prop_assert!(
+                vals.iter().all(|&v| v.to_bits() == reference.to_bits()),
+                "max_abs diverged: {vals:?} vs {reference}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn elementwise_kernels_match_reference_bitwise() {
+        prop::forall("axpy/aypx/scale bitwise", |rng| {
+            let n = rng.index(40);
+            let x: Vec<f64> = (0..n).map(|_| rng.range_f64(-3.0, 3.0)).collect();
+            let y0: Vec<f64> = (0..n).map(|_| rng.range_f64(-3.0, 3.0)).collect();
+            let a = rng.range_f64(-2.0, 2.0);
+
+            let mut want = y0.clone();
+            for (yi, xi) in want.iter_mut().zip(&x) {
+                *yi += a * xi;
+            }
+            let mut got = y0.clone();
+            axpy(a, &x, &mut got);
+            prop_assert!(got == want, "axpy diverged");
+
+            let mut want = y0.clone();
+            for (yi, xi) in want.iter_mut().zip(&x) {
+                *yi = xi + a * *yi;
+            }
+            let mut got = y0.clone();
+            aypx(a, &x, &mut got);
+            prop_assert!(got == want, "aypx diverged");
+
+            let want: Vec<f64> = y0.iter().map(|v| v * a).collect();
+            let mut got = y0.clone();
+            scale(a, &mut got);
+            prop_assert!(got == want, "scale diverged");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_gather_dot_matches_dense_reference() {
+        prop::forall("gather dot == dense reference", |rng| {
+            let ncols = 1 + rng.index(30);
+            let len = rng.index(20); // includes empty rows
+            let cols: Vec<usize> = (0..len).map(|_| rng.index(ncols)).collect();
+            let vals: Vec<f64> = (0..len).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+            let x: Vec<f64> = (0..ncols).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+            let reference: f64 = cols.iter().zip(&vals).map(|(&c, &v)| v * x[c]).sum();
+            let mut results = Vec::new();
+            with_backends(|_| results.push(unsafe { gather_dot_unchecked(&cols, &vals, &x) }));
+            for got in results {
+                prop_assert!(
+                    (got - reference).abs() <= 1e-12 * (1.0 + reference.abs()),
+                    "len={len}: {got} vs {reference}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_f32_gather_tracks_f64_within_single_precision() {
+        prop::forall("f32 gather ~= f64 gather", |rng| {
+            let ncols = 1 + rng.index(30);
+            let len = rng.index(20);
+            let cols: Vec<usize> = (0..len).map(|_| rng.index(ncols)).collect();
+            let vals: Vec<f64> = (0..len).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let x: Vec<f64> = (0..ncols).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let cols32: Vec<u32> = cols.iter().map(|&c| c as u32).collect();
+            let vals32: Vec<f32> = vals.iter().map(|&v| v as f32).collect();
+            let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+            let reference = unsafe { gather_dot_unchecked(&cols, &vals, &x) };
+            let mut results = Vec::new();
+            with_backends(|_| {
+                results.push(unsafe { gather_dot_f32_unchecked(&cols32, &vals32, &x32) })
+            });
+            for got in results {
+                // inputs rounded to f32: error ~ len · eps_f32 · |terms|
+                let bound = 1e-6 * (1.0 + len as f64);
+                prop_assert!(
+                    (got - reference).abs() <= bound,
+                    "len={len}: {got} vs {reference}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gather_dot_seeded_large_row_exercises_lane_path() {
+        // one deterministic large case so the lane loop (not just the
+        // remainder) is definitely on the line
+        let mut rng = Xoshiro256pp::new(42);
+        let ncols = 1000;
+        let len = 4 * LANES + 3;
+        let cols: Vec<usize> = (0..len).map(|_| rng.index(ncols)).collect();
+        let vals: Vec<f64> = (0..len).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let x: Vec<f64> = (0..ncols).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+        let reference: f64 = cols.iter().zip(&vals).map(|(&c, &v)| v * x[c]).sum();
+        with_backends(|_| {
+            let got = unsafe { gather_dot_unchecked(&cols, &vals, &x) };
+            assert!((got - reference).abs() < 1e-12, "{got} vs {reference}");
+        });
+    }
+}

@@ -1,7 +1,9 @@
-//! Evaluation-backend equivalence: the fused matrix-free policy operator
-//! and the assembled `P_π` CSR must be *indistinguishable* through the
-//! public API — same values, same policies, for every bundled model family
-//! and every outer method, serial and distributed.
+//! Evaluation-backend equivalence: the fused matrix-free policy operator,
+//! the assembled `P_π` CSR, and the lane-blocked BSR backend must be
+//! *indistinguishable* through the public API — same values, same
+//! policies, for every bundled model family and every outer method,
+//! serial and distributed — and the `f32` inner-precision mode must reach
+//! the same f64 outer certificate.
 
 use madupite::comm::World;
 use madupite::ksp::precond::PcType;
@@ -12,7 +14,7 @@ use madupite::models::{
     replacement::ReplacementSpec, sis::SisSpec, traffic::TrafficSpec, ModelGenerator,
 };
 use madupite::solver::{
-    gather_result, solve_dist, solve_serial, EvalBackend, Method, SolveOptions,
+    gather_result, solve_dist, solve_serial, EvalBackend, InnerPrecision, Method, SolveOptions,
 };
 use madupite::util::prng::Xoshiro256pp;
 use std::sync::Arc;
@@ -71,7 +73,11 @@ fn backends_identical_per_model_per_method() {
         for method in &methods() {
             let mut values: Vec<Vec<f64>> = Vec::new();
             let mut policies: Vec<Vec<usize>> = Vec::new();
-            for backend in [EvalBackend::MatFree, EvalBackend::Assembled] {
+            for backend in [
+                EvalBackend::MatFree,
+                EvalBackend::Assembled,
+                EvalBackend::Bsr,
+            ] {
                 let r = solve_serial(
                     &mdp,
                     &SolveOptions {
@@ -98,18 +104,22 @@ fn backends_identical_per_model_per_method() {
                 values.push(r.value);
                 policies.push(r.policy);
             }
-            close(
-                &values[0],
-                &values[1],
-                1e-7,
-                &format!("{name}/{}", method.name()),
-            );
-            assert_eq!(
-                policies[0],
-                policies[1],
-                "{name}/{}: greedy policies differ between backends",
-                method.name()
-            );
+            for (k, v) in values.iter().enumerate().skip(1) {
+                close(
+                    &values[0],
+                    v,
+                    1e-7,
+                    &format!("{name}/{} backend #{k}", method.name()),
+                );
+            }
+            for p in &policies[1..] {
+                assert_eq!(
+                    &policies[0],
+                    p,
+                    "{name}/{}: greedy policies differ between backends",
+                    method.name()
+                );
+            }
         }
     }
 }
@@ -122,7 +132,11 @@ fn backends_identical_distributed() {
     let spec = Arc::new(GarnetSpec::new(120, 3, 5, 13));
     let mut reference: Option<Vec<f64>> = None;
     for ranks in [1usize, 3] {
-        for backend in [EvalBackend::MatFree, EvalBackend::Assembled] {
+        for backend in [
+            EvalBackend::MatFree,
+            EvalBackend::Assembled,
+            EvalBackend::Bsr,
+        ] {
             let spec2 = Arc::clone(&spec);
             let opts = SolveOptions {
                 method: Method::ipi_gmres(),
@@ -199,6 +213,40 @@ fn matfree_apply_equals_assembled_apply_random_policies() {
                 assert_eq!(g_asm, g_mf, "{name2}: g_pi differs");
             });
         }
+    }
+}
+
+/// Mixed-precision inner solves (`-inner_precision f32`) must reach the
+/// same f64 outer certificate as full-precision runs on every bundled
+/// model family — the refinement loop certifies against the f64 operator,
+/// so the outer residual is a real f64 Bellman residual, not an f32 one.
+#[test]
+fn f32_inner_matches_f64_on_catalog() {
+    let atol = 1e-9;
+    for (name, gen, gamma) in &models() {
+        let mdp = gen.build_serial(*gamma);
+        let base = SolveOptions {
+            method: Method::ipi_gmres(),
+            atol,
+            max_outer: 100_000,
+            ..Default::default()
+        };
+        let r64 = solve_serial(&mdp, &base);
+        let r32 = solve_serial(
+            &mdp,
+            &SolveOptions {
+                inner_precision: InnerPrecision::F32,
+                ..base
+            },
+        );
+        assert!(r32.converged, "{name}: f32-inner did not converge");
+        assert!(
+            r32.residual < atol,
+            "{name}: f32-inner residual {}",
+            r32.residual
+        );
+        close(&r64.value, &r32.value, 1e-7, &format!("{name}: f32 vs f64"));
+        assert_eq!(r64.policy, r32.policy, "{name}: policies differ");
     }
 }
 

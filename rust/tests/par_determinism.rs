@@ -13,7 +13,9 @@ use madupite::api::{MdpBuilder, Solver};
 use madupite::ksp::precond::PcType;
 use madupite::ksp::KspType;
 use madupite::models::{garnet::GarnetSpec, ModelGenerator};
-use madupite::solver::{solve_world, EvalBackend, Method, SolveOptions, SolveResult};
+use madupite::solver::{
+    solve_world, EvalBackend, InnerPrecision, Method, SolveOptions, SolveResult,
+};
 use madupite::util::args::Options;
 use madupite::util::par;
 use std::sync::{Arc, Mutex};
@@ -78,7 +80,11 @@ fn solver_bitwise_identical_across_thread_counts() {
     let mdp = Arc::new(GarnetSpec::new(400, 4, 5, 99).build_serial(0.95));
     for ranks in [1usize, 3] {
         for method in methods() {
-            for backend in [EvalBackend::MatFree, EvalBackend::Assembled] {
+            for backend in [
+                EvalBackend::MatFree,
+                EvalBackend::Assembled,
+                EvalBackend::Bsr,
+            ] {
                 let opts = SolveOptions {
                     method: method.clone(),
                     eval_backend: backend,
@@ -132,7 +138,11 @@ fn solver_bitwise_identical_above_the_parallel_threshold() {
         Method::ipi_tfqmr(),
     ];
     for method in methods {
-        for backend in [EvalBackend::MatFree, EvalBackend::Assembled] {
+        for backend in [
+            EvalBackend::MatFree,
+            EvalBackend::Assembled,
+            EvalBackend::Bsr,
+        ] {
             let opts = SolveOptions {
                 method: method.clone(),
                 eval_backend: backend,
@@ -158,6 +168,52 @@ fn solver_bitwise_identical_above_the_parallel_threshold() {
                         &fp,
                         "{}/{}: threads={threads} diverged from threads=1",
                         method.name(),
+                        backend.name()
+                    ),
+                }
+            }
+        }
+    }
+    par::set_threads(1);
+}
+
+/// The mixed-precision path (`-inner_precision f32`) shares the fixed
+/// chunk grid: the f32 narrowing, the widened-accumulation gathers, and
+/// the f64 refinement residuals are all functions of the problem alone,
+/// so its results are bitwise thread-count independent too.
+#[test]
+fn f32_inner_bitwise_identical_across_thread_counts() {
+    let _guard = lock();
+    let mdp = Arc::new(GarnetSpec::new(400, 4, 5, 99).build_serial(0.95));
+    for ranks in [1usize, 3] {
+        for backend in [
+            EvalBackend::MatFree,
+            EvalBackend::Assembled,
+            EvalBackend::Bsr,
+        ] {
+            let opts = SolveOptions {
+                method: Method::ipi_gmres(),
+                eval_backend: backend,
+                inner_precision: InnerPrecision::F32,
+                atol: 1e-9,
+                ..Default::default()
+            };
+            let mut reference = None;
+            for threads in [1usize, 4] {
+                par::set_threads(threads);
+                let r = solve_world(Arc::clone(&mdp), ranks, &opts);
+                assert!(
+                    r.converged,
+                    "f32-inner/{}/ranks={ranks}/threads={threads} did not converge",
+                    backend.name()
+                );
+                let fp = fingerprint(&r);
+                match &reference {
+                    None => reference = Some(fp),
+                    Some(re) => assert_eq!(
+                        re,
+                        &fp,
+                        "f32-inner/{}/ranks={ranks}: threads={threads} diverged",
                         backend.name()
                     ),
                 }
