@@ -12,10 +12,21 @@
 //! per-rank balance stays near 1, and — thread-count independence — every
 //! `ranks=R` row reports the identical outer/spmv counts for every `t`.
 //!
+//! The grid also carries a **comm-overlap** dimension (DESIGN.md §14):
+//! every `(ranks, t)` point runs with `-comm_overlap off` and `on`.
+//! Overlap must leave every result/counter column bitwise identical —
+//! including `comm_bytes`, since the split-phase exchange moves the same
+//! ghost f64s — and only `comm_time_us` / wall time may move. The
+//! solve-only `comm_bytes` and per-outer-iteration `comm_KiB_per_iter`
+//! columns make the ghost-subset exchange win (policy matrices fetch only
+//! the ghost entries the selected policy references) visible per
+//! iteration; CI's perf-smoke job fails if these fields drop out of
+//! `BENCH_CI.json`.
+//!
 //! Environment knobs: `MADUPITE_SCALING_ROWS` (maze side, default 512) and
 //! `MADUPITE_BENCH_THREADS` (comma-separated thread counts, default 1,2).
 
-use madupite::comm::World;
+use madupite::comm::{overlap, OverlapMode, World};
 use madupite::models::{gridworld::GridSpec, ModelGenerator};
 use madupite::solver::{gather_result, solve_dist, Method, SolveOptions};
 use madupite::util::benchkit::{thread_counts, Suite};
@@ -35,48 +46,63 @@ fn main() {
 
     for ranks in [1usize, 2, 4, 8] {
         for &t in &threads {
-            par::set_threads(t);
-            let spec2 = Arc::clone(&spec);
-            suite.case(&format!("ranks={ranks}/t={t}"), move || {
-                let spec3 = Arc::clone(&spec2);
-                let opts = SolveOptions {
-                    method: Method::ipi_gmres(),
-                    atol: 1e-8,
-                    alpha: 1e-2,
-                    max_outer: 100_000,
-                    ..Default::default()
-                };
-                let mut out = World::run(ranks, move |comm| {
-                    let mdp = spec3.build_dist(&comm, 0.9);
-                    let local_bytes = mdp.storage_bytes();
-                    let local = solve_dist(&comm, &mdp, &opts);
-                    let snap = comm.stats().snapshot();
-                    let r = gather_result(&comm, local);
-                    (r, snap, local_bytes)
+            for ov in [OverlapMode::Off, OverlapMode::On] {
+                par::set_threads(t);
+                let spec2 = Arc::clone(&spec);
+                let name = format!("ranks={ranks}/t={t}/overlap={}", ov.name());
+                suite.case(&name, move || {
+                    overlap::set_mode(ov);
+                    let spec3 = Arc::clone(&spec2);
+                    let opts = SolveOptions {
+                        method: Method::ipi_gmres(),
+                        atol: 1e-8,
+                        alpha: 1e-2,
+                        max_outer: 100_000,
+                        ..Default::default()
+                    };
+                    let mut out = World::run(ranks, move |comm| {
+                        let mdp = spec3.build_dist(&comm, 0.9);
+                        let local_bytes = mdp.storage_bytes();
+                        let local = solve_dist(&comm, &mdp, &opts);
+                        let snap = comm.stats().snapshot();
+                        let r = gather_result(&comm, local);
+                        (r, snap, local_bytes)
+                    });
+                    let (r, snap, local_bytes) = out.swap_remove(0);
+                    assert!(r.converged);
+                    vec![
+                        ("cores".to_string(), (r.ranks * r.threads) as f64),
+                        ("outer".to_string(), r.outer_iterations as f64),
+                        ("spmvs".to_string(), r.total_spmvs as f64),
+                        // Solve-only comm accounting from SolveResult (the
+                        // snapshot also counts the model build).
+                        ("comm_bytes".to_string(), r.comm_bytes as f64),
+                        ("comm_time_us".to_string(), r.comm_time_us as f64),
+                        (
+                            "comm_KiB_per_iter".to_string(),
+                            r.comm_bytes as f64
+                                / (1 << 10) as f64
+                                / r.outer_iterations.max(1) as f64,
+                        ),
+                        (
+                            "comm_MiB".to_string(),
+                            snap.total_bytes() as f64 / (1 << 20) as f64,
+                        ),
+                        ("msgs".to_string(), snap.total_msgs() as f64),
+                        (
+                            "balance".to_string(),
+                            if ranks > 1 { snap.imbalance() } else { 1.0 },
+                        ),
+                        (
+                            "rank0_MiB".to_string(),
+                            local_bytes as f64 / (1 << 20) as f64,
+                        ),
+                    ]
                 });
-                let (r, snap, local_bytes) = out.swap_remove(0);
-                assert!(r.converged);
-                vec![
-                    ("cores".to_string(), (r.ranks * r.threads) as f64),
-                    ("outer".to_string(), r.outer_iterations as f64),
-                    ("spmvs".to_string(), r.total_spmvs as f64),
-                    (
-                        "comm_MiB".to_string(),
-                        snap.total_bytes() as f64 / (1 << 20) as f64,
-                    ),
-                    ("msgs".to_string(), snap.total_msgs() as f64),
-                    (
-                        "balance".to_string(),
-                        if ranks > 1 { snap.imbalance() } else { 1.0 },
-                    ),
-                    (
-                        "rank0_MiB".to_string(),
-                        local_bytes as f64 / (1 << 20) as f64,
-                    ),
-                ]
-            });
+            }
         }
     }
+    overlap::set_mode(OverlapMode::Auto);
     par::set_threads(1);
     suite.finish();
 }

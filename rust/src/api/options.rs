@@ -13,6 +13,7 @@
 //! [`crate::api::Solver`] — proven identical by the parity test in
 //! `tests/api.rs`.
 
+use crate::comm::OverlapMode;
 use crate::ksp::precond::PcType;
 use crate::ksp::KspType;
 use crate::mdp::{DiscountMode, Objective};
@@ -244,6 +245,28 @@ pub const OPTION_TABLE: &[OptionSpec] = &[
         help: "inner iteration cap (default 10000)",
         scope: OptionScope::Solve,
     },
+    OptionSpec {
+        key: "comm_overlap",
+        value: "on|off|auto",
+        help: "split-phase ghost exchange overlapping interior-row compute \
+                (bitwise identical to off; auto = on for multi-rank worlds; \
+                env MADUPITE_COMM_OVERLAP)",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "async_vi",
+        value: "",
+        help: "bounded-staleness asynchronous value iteration (requires -method vi): \
+                local Bellman sweeps between synchronized certified backups",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "async_vi_staleness",
+        value: "<n>",
+        help: "ghost refresh period k for -async_vi: 1 synchronized + k-1 local \
+                sweeps (default 4; k=1 degenerates to synchronous vi)",
+        scope: OptionScope::Solve,
+    },
     // -- output -------------------------------------------------------------
     OptionSpec {
         key: "json",
@@ -435,6 +458,27 @@ pub fn resolve_solve_options(db: &Options) -> Result<SolveOptions, ApiError> {
     if max_inner == 0 {
         return Err(ApiError("-max_iter_ksp must be >= 1".into()));
     }
+    let async_vi = db.get_bool("async_vi", false)?;
+    if async_vi && !matches!(method, Method::Vi) {
+        return Err(ApiError(format!(
+            "-async_vi requires -method vi (got '{}'); the evaluation methods \
+             synchronize inside the inner solve, so stale sweeps do not apply",
+            method.name()
+        )));
+    }
+    if db.has("async_vi_staleness") && !async_vi {
+        return Err(ApiError(
+            "-async_vi_staleness requires -async_vi (it is the ghost refresh \
+             period of the asynchronous sweeps)"
+            .into(),
+        ));
+    }
+    let async_vi_staleness = db.get_usize("async_vi_staleness", 4)?;
+    if async_vi_staleness == 0 {
+        return Err(ApiError(
+            "-async_vi_staleness must be >= 1 (1 = synchronous vi)".into(),
+        ));
+    }
     Ok(SolveOptions {
         method,
         eval_backend,
@@ -446,7 +490,23 @@ pub fn resolve_solve_options(db: &Options) -> Result<SolveOptions, ApiError> {
         max_inner,
         v0: None,
         verbose: db.get_bool("verbose", false)?,
+        async_vi,
+        async_vi_staleness,
     })
+}
+
+/// Resolve `-comm_overlap`: `Some(mode)` when the option was given (the
+/// caller applies it process-globally via [`crate::comm::overlap::set_mode`]
+/// before the world starts), `None` when absent — the effective mode then
+/// falls back to any earlier `set_mode` call, the `MADUPITE_COMM_OVERLAP`
+/// environment variable, or `auto` (see [`crate::comm::overlap::current`]).
+pub fn resolve_comm_overlap(db: &Options) -> Result<Option<OverlapMode>, ApiError> {
+    match db.get("comm_overlap") {
+        Some(name) => OverlapMode::parse(name)
+            .map(Some)
+            .map_err(|e| with_value_suggestion(e, name, &["on", "off", "auto"])),
+        None => Ok(None),
+    }
 }
 
 /// Resolve `-threads`, the intra-rank worker thread count of the hybrid
@@ -721,6 +781,64 @@ mod tests {
         assert!(validate_keys(&db(&["-discount_mode", "auto"])).is_ok());
         let err = check_key("discount_mod").unwrap_err();
         assert!(err.0.contains("discount_mode"), "{err}");
+    }
+
+    #[test]
+    fn comm_overlap_resolution() {
+        assert_eq!(resolve_comm_overlap(&db(&[])).unwrap(), None);
+        assert_eq!(
+            resolve_comm_overlap(&db(&["-comm_overlap", "on"])).unwrap(),
+            Some(OverlapMode::On)
+        );
+        assert_eq!(
+            resolve_comm_overlap(&db(&["-comm_overlap", "off"])).unwrap(),
+            Some(OverlapMode::Off)
+        );
+        assert_eq!(
+            resolve_comm_overlap(&db(&["-comm_overlap", "auto"])).unwrap(),
+            Some(OverlapMode::Auto)
+        );
+        let err = resolve_comm_overlap(&db(&["-comm_overlap", "onn"])).unwrap_err();
+        assert!(err.0.contains("on"), "{err}");
+        assert!(validate_keys(&db(&["-comm_overlap", "on"])).is_ok());
+    }
+
+    #[test]
+    fn async_vi_resolution_and_validation() {
+        let so = resolve_solve_options(&db(&["-method", "vi", "-async_vi"])).unwrap();
+        assert!(so.async_vi);
+        assert_eq!(so.async_vi_staleness, 4);
+        let so = resolve_solve_options(&db(&[
+            "-method",
+            "vi",
+            "-async_vi",
+            "-async_vi_staleness",
+            "8",
+        ]))
+        .unwrap();
+        assert_eq!(so.async_vi_staleness, 8);
+        // default stays off
+        let so = resolve_solve_options(&db(&["-method", "vi"])).unwrap();
+        assert!(!so.async_vi);
+        // typed errors: wrong method, orphaned staleness, zero staleness
+        let err = resolve_solve_options(&db(&["-async_vi"])).unwrap_err();
+        assert!(err.0.contains("-method vi"), "{err}");
+        let err = resolve_solve_options(&db(&["-method", "mpi", "-async_vi"])).unwrap_err();
+        assert!(err.0.contains("-method vi"), "{err}");
+        let err =
+            resolve_solve_options(&db(&["-method", "vi", "-async_vi_staleness", "4"])).unwrap_err();
+        assert!(err.0.contains("requires -async_vi"), "{err}");
+        let err = resolve_solve_options(&db(&[
+            "-method",
+            "vi",
+            "-async_vi",
+            "-async_vi_staleness",
+            "0",
+        ]))
+        .unwrap_err();
+        assert!(err.0.contains(">= 1"), "{err}");
+        // keys round-trip through validate_keys
+        assert!(validate_keys(&db(&["-async_vi", "-async_vi_staleness", "2"])).is_ok());
     }
 
     #[test]

@@ -202,6 +202,15 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
     // `util::par`) picks it up. Results are thread-count independent.
     let threads = options::resolve_threads(db)?;
     crate::util::par::set_threads(threads);
+    // Communication overlap: an explicit -comm_overlap installs the
+    // process-global mode before the world spawns; otherwise any earlier
+    // set_mode / MADUPITE_COMM_OVERLAP / auto stays in effect. Either way
+    // the schedule is a pure scheduling knob — results are bitwise
+    // identical (tests/par_determinism.rs).
+    if let Some(mode) = options::resolve_comm_overlap(db)? {
+        crate::comm::overlap::set_mode(mode);
+    }
+    let overlap_mode = crate::comm::overlap::current();
     let source = builder.resolved_source()?.clone();
     let discount_filler = builder.discount_filler_value().cloned();
     let dmode = options::resolve_discount_mode(db)?;
@@ -367,6 +376,7 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
         options: solve_opts,
         ranks,
         threads,
+        comm_overlap: overlap_mode,
         result,
     };
     // The output keys are part of the shared surface: whichever front end
@@ -416,6 +426,9 @@ pub struct SolveOutcome {
     /// Intra-rank worker threads per rank (`-threads`) — the second
     /// dimension of the hybrid `ranks × threads` execution.
     pub threads: usize,
+    /// Effective communication-overlap mode the solve ran under
+    /// (`-comm_overlap` / `MADUPITE_COMM_OVERLAP` / auto).
+    pub comm_overlap: crate::comm::OverlapMode,
     /// The gathered global solve result (value, policy, trace).
     pub result: SolveResult,
 }
@@ -462,6 +475,12 @@ impl SolveOutcome {
                     ("adaptive_forcing", Json::Bool(self.options.adaptive_forcing)),
                     ("max_iter_pi", Json::int(self.options.max_outer as i64)),
                     ("max_iter_ksp", Json::int(self.options.max_inner as i64)),
+                    ("comm_overlap", Json::str(self.comm_overlap.name())),
+                    ("async_vi", Json::Bool(self.options.async_vi)),
+                    (
+                        "async_vi_staleness",
+                        Json::int(self.options.async_vi_staleness as i64),
+                    ),
                 ]),
             ),
             ("result", self.result.to_json(&self.options.method.name())),
@@ -639,5 +658,33 @@ mod tests {
             j.get("result").unwrap().get("converged").unwrap().as_bool(),
             Some(true)
         );
+        // comm/async knobs are part of the reported configuration
+        let s = j.get("solver").unwrap();
+        assert!(s.get("comm_overlap").unwrap().as_str().is_some());
+        assert_eq!(s.get("async_vi").unwrap().as_bool(), Some(false));
+        assert_eq!(s.get("async_vi_staleness").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn async_vi_through_api() {
+        let mut solver = Solver::new(two_state_builder());
+        solver
+            .set_options_from_str(
+                "-method vi -async_vi -async_vi_staleness 3 -ranks 2 -atol 1e-10",
+            )
+            .unwrap();
+        let outcome = solver.solve().unwrap();
+        assert!(outcome.result.converged);
+        prop::close_slices(outcome.value(), &[1.5, 0.0], 1e-8).unwrap();
+        assert_eq!(outcome.policy()[0], 1);
+        let s = outcome.metadata_json();
+        let s = s.get("solver").unwrap();
+        assert_eq!(s.get("async_vi").unwrap().as_bool(), Some(true));
+        assert_eq!(s.get("async_vi_staleness").unwrap().as_f64(), Some(3.0));
+        // the orphaned-staleness error surfaces through the shared path too
+        let mut bad = Solver::new(two_state_builder());
+        bad.set_options_from_str("-async_vi").unwrap();
+        let err = bad.solve().unwrap_err();
+        assert!(err.0.contains("-method vi"), "{err}");
     }
 }

@@ -319,6 +319,75 @@ mod tests {
     }
 
     #[test]
+    fn allgatherv_zero_length_payloads() {
+        // Ranks may legitimately contribute nothing (empty partitions).
+        let out = World::run(3, |comm: Comm| {
+            let mine = if comm.rank() == 1 { vec![5u8] } else { vec![] };
+            comm.allgatherv(mine)
+        });
+        for recv in out {
+            assert_eq!(recv, vec![vec![], vec![5u8], vec![]]);
+        }
+    }
+
+    #[test]
+    fn alltoallv_single_rank_world() {
+        // Degenerate exchange: one rank sends only to itself.
+        let out = World::run(1, |comm: Comm| {
+            let recv = comm.alltoallv(vec![vec![1u8, 2, 3]]);
+            let empty = comm.alltoallv(vec![vec![]]);
+            (recv, empty)
+        });
+        assert_eq!(out[0].0, vec![vec![1u8, 2, 3]]);
+        assert_eq!(out[0].1, vec![Vec::<u8>::new()]);
+    }
+
+    #[test]
+    fn scatterv_empty_parts() {
+        // Root may have nothing for some (or all) ranks.
+        let out = World::run(3, |comm: Comm| {
+            let parts = if comm.rank() == 0 {
+                Some(vec![vec![], vec![7u8], vec![]])
+            } else {
+                None
+            };
+            comm.scatterv(0, parts)
+        });
+        assert_eq!(out[0], Vec::<u8>::new());
+        assert_eq!(out[1], vec![7u8]);
+        assert_eq!(out[2], Vec::<u8>::new());
+    }
+
+    #[test]
+    fn allreduce_vector_matches_scalar_bitwise_across_world_sizes() {
+        // The batched reductions the KSP loops rely on: fusing k scalar
+        // Sum-allreduces into one length-k vector allreduce must be
+        // *bitwise* identical per component, for every world size, because
+        // both fold the board in ascending rank order from the identity.
+        // Values are chosen so fold order matters in f64.
+        for size in 1..=4 {
+            let out = World::run(size, move |comm: Comm| {
+                let r = comm.rank() as f64;
+                let xs = [0.1 * (r + 1.0), 1e16 + r, (-1.0f64).powi(comm.rank() as i32) * 0.3];
+                let fused = comm.allreduce_f64s(&xs, Reduce::Sum);
+                let scalar: Vec<f64> = xs.iter().map(|&x| comm.allreduce_f64(x, Reduce::Sum)).collect();
+                (fused, scalar)
+            });
+            for (fused, scalar) in &out {
+                for (a, b) in fused.iter().zip(scalar) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "size={size}");
+                }
+            }
+            // All ranks must agree bit-for-bit on the fused result too.
+            for (fused, _) in &out[1..] {
+                for (a, b) in fused.iter().zip(&out[0].0) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
     fn bytes_accounted_for_allreduce() {
         let out = World::run(2, |comm: Comm| {
             let _ = comm.sum(1.0);

@@ -17,12 +17,17 @@
 
 pub mod codec;
 pub mod collectives;
+pub mod overlap;
 pub mod stats;
 
+pub use collectives::Reduce;
+pub use overlap::OverlapMode;
 pub use stats::CommStats;
 
+use std::cell::RefCell;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Barrier, Mutex};
+use std::time::Instant;
 
 /// A tagged point-to-point message.
 struct Msg {
@@ -43,13 +48,25 @@ struct WorldShared {
     stats: CommStats,
 }
 
+/// This rank's receive side: the channel endpoint plus messages parked by
+/// `recv` while waiting for a different (source, tag).
+struct Mailbox {
+    inbox: Receiver<Msg>,
+    parked: Vec<Msg>,
+}
+
 /// Per-rank communicator handle (the `MPI_Comm` equivalent).
+///
+/// `recv` takes `&self` (interior mutability over the rank-private
+/// [`Mailbox`]) so the split-phase ghost exchange can complete receives
+/// through the same shared `&Comm` the compute path holds. The `RefCell`
+/// makes `Comm` `!Sync`, which is exactly the contract: each rank-thread
+/// owns its communicator exclusively; worker threads of the intra-rank
+/// pool never touch it.
 pub struct Comm {
     rank: usize,
     shared: Arc<WorldShared>,
-    inbox: Receiver<Msg>,
-    /// Out-of-order messages parked by `recv` while waiting for a tag.
-    parked: Vec<Msg>,
+    mailbox: RefCell<Mailbox>,
 }
 
 impl Comm {
@@ -87,32 +104,42 @@ impl Comm {
     }
 
     /// Blocking receive of a message with matching `from` and `tag`.
-    pub fn recv(&mut self, from: usize, tag: u64) -> Vec<u8> {
+    pub fn recv(&self, from: usize, tag: u64) -> Vec<u8> {
+        let mut mb = self.mailbox.borrow_mut();
         // Check parked messages first. `remove` (not `swap_remove`)
         // preserves arrival order so per-(source, tag) delivery stays FIFO
         // like MPI; parked lists are short, O(n) removal is irrelevant.
-        if let Some(i) = self
+        if let Some(i) = mb
             .parked
             .iter()
             .position(|m| m.from == from && m.tag == tag)
         {
-            return self.parked.remove(i).bytes;
+            return mb.parked.remove(i).bytes;
         }
-        loop {
-            let msg = self
+        let t0 = Instant::now();
+        let bytes = loop {
+            let msg = mb
                 .inbox
                 .recv()
                 .expect("world torn down during recv");
             if msg.from == from && msg.tag == tag {
-                return msg.bytes;
+                break msg.bytes;
             }
-            self.parked.push(msg);
-        }
+            mb.parked.push(msg);
+        };
+        self.shared
+            .stats
+            .add_time(self.rank, t0.elapsed().as_micros() as u64);
+        bytes
     }
 
     /// Synchronize all ranks.
     pub fn barrier(&self) {
+        let t0 = Instant::now();
         self.shared.barrier.wait();
+        self.shared
+            .stats
+            .add_time(self.rank, t0.elapsed().as_micros() as u64);
     }
 
     /// Internal: run one board-based rendezvous. Each rank deposits
@@ -126,6 +153,10 @@ impl Comm {
         contribution: Option<Vec<u8>>,
         read: impl FnOnce(&[Option<Vec<u8>>]) -> R,
     ) -> R {
+        // The whole epoch (deposit, publish barrier, read, release barrier)
+        // is attributed to this rank's communication time: barrier waits
+        // are exactly the synchronization cost the overlap mode hides.
+        let t0 = Instant::now();
         {
             let mut board = self.shared.board.lock().unwrap();
             board[self.rank] = contribution;
@@ -136,6 +167,9 @@ impl Comm {
             read(&board)
         };
         self.shared.barrier.wait();
+        self.shared
+            .stats
+            .add_time(self.rank, t0.elapsed().as_micros() as u64);
         out
     }
 }
@@ -183,8 +217,10 @@ impl World {
                         let comm = Comm {
                             rank,
                             shared,
-                            inbox,
-                            parked: Vec::new(),
+                            mailbox: RefCell::new(Mailbox {
+                                inbox,
+                                parked: Vec::new(),
+                            }),
                         };
                         f(comm)
                     })
@@ -231,7 +267,7 @@ mod tests {
     #[test]
     fn p2p_ring() {
         // Each rank sends its rank id to the next rank; receives from prev.
-        let out = World::run(4, |mut comm: Comm| {
+        let out = World::run(4, |comm: Comm| {
             let next = (comm.rank() + 1) % comm.size();
             let prev = (comm.rank() + comm.size() - 1) % comm.size();
             comm.send(next, 7, vec![comm.rank() as u8]);
@@ -243,7 +279,7 @@ mod tests {
 
     #[test]
     fn recv_filters_by_tag() {
-        let out = World::run(2, |mut comm: Comm| {
+        let out = World::run(2, |comm: Comm| {
             if comm.rank() == 0 {
                 // Send tag 2 first, then tag 1; receiver asks for 1 first.
                 comm.send(1, 2, vec![20]);
@@ -274,7 +310,7 @@ mod tests {
 
     #[test]
     fn p2p_bytes_counted() {
-        let out = World::run(2, |mut comm: Comm| {
+        let out = World::run(2, |comm: Comm| {
             if comm.rank() == 0 {
                 comm.send(1, 0, vec![0u8; 100]);
             } else {

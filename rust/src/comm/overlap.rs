@@ -1,0 +1,150 @@
+//! Communication/compute overlap capability layer (`-comm_overlap`).
+//!
+//! The distributed kernels ([`crate::linalg::dist::DistCsr::spmv`], the
+//! policy operators, the Bellman backup) can run their ghost exchange in
+//! two phases: `start` posts the point-to-point sends, interior rows (rows
+//! that touch no ghost column) are computed while the exchange is in
+//! flight, `finish` drains the receives, and boundary rows run last. Both
+//! schedules compute every output row with the identical per-row kernel
+//! over the identical [`crate::util::par`] chunk grid, so results are
+//! **bitwise identical** — the mode is a pure scheduling knob (pinned by
+//! `tests/par_determinism.rs`).
+//!
+//! The mode is process-global, like the kernel backend in
+//! [`crate::util::simd`] and the thread count in [`crate::util::par`]:
+//! resolution order is an explicit [`set_mode`] (the options database /
+//! `-comm_overlap` flag, applied by `api::run_solve` before the world
+//! starts) > the `MADUPITE_COMM_OVERLAP` environment variable > `auto`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Overlap capability mode (`-comm_overlap on|off|auto`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OverlapMode {
+    /// Always use the split-phase (overlapped) ghost exchange.
+    On,
+    /// Always use the bulk-synchronous exchange.
+    Off,
+    /// Overlap whenever the world has more than one rank (the default;
+    /// a single-rank world has no exchange to hide).
+    #[default]
+    Auto,
+}
+
+impl OverlapMode {
+    /// Parse the `-comm_overlap` option string.
+    pub fn parse(name: &str) -> Result<OverlapMode, String> {
+        Ok(match name {
+            "on" | "true" | "1" => OverlapMode::On,
+            "off" | "false" | "0" => OverlapMode::Off,
+            "auto" => OverlapMode::Auto,
+            other => return Err(format!("unknown comm_overlap '{other}'")),
+        })
+    }
+
+    /// Canonical option-string form (inverse of [`Self::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            OverlapMode::On => "on",
+            OverlapMode::Off => "off",
+            OverlapMode::Auto => "auto",
+        }
+    }
+
+    /// Whether this mode enables the split-phase exchange for a world of
+    /// `size` ranks.
+    pub fn enabled_for(self, size: usize) -> bool {
+        match self {
+            OverlapMode::On => true,
+            OverlapMode::Off => false,
+            OverlapMode::Auto => size > 1,
+        }
+    }
+
+    fn to_code(self) -> u8 {
+        match self {
+            OverlapMode::On => 1,
+            OverlapMode::Off => 2,
+            OverlapMode::Auto => 3,
+        }
+    }
+
+    fn from_code(code: u8) -> Option<OverlapMode> {
+        match code {
+            1 => Some(OverlapMode::On),
+            2 => Some(OverlapMode::Off),
+            3 => Some(OverlapMode::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// 0 = not configured (fall back to env / auto), else `OverlapMode::to_code`.
+static CONFIGURED: AtomicU8 = AtomicU8::new(0);
+static ENV_DEFAULT: OnceLock<OverlapMode> = OnceLock::new();
+
+fn env_default() -> OverlapMode {
+    *ENV_DEFAULT.get_or_init(|| {
+        match std::env::var("MADUPITE_COMM_OVERLAP") {
+            // A malformed env value falls back to auto rather than erroring:
+            // the env var is a deploy-time default, the checked path for
+            // typed errors is the `-comm_overlap` option.
+            Ok(v) => OverlapMode::parse(v.trim()).unwrap_or(OverlapMode::Auto),
+            Err(_) => OverlapMode::Auto,
+        }
+    })
+}
+
+/// Select the process-global overlap mode (the options database calls this
+/// with the resolved `-comm_overlap` value before the world starts).
+pub fn set_mode(mode: OverlapMode) {
+    CONFIGURED.store(mode.to_code(), Ordering::SeqCst);
+}
+
+/// Currently effective mode: [`set_mode`] > `MADUPITE_COMM_OVERLAP` > auto.
+pub fn current() -> OverlapMode {
+    OverlapMode::from_code(CONFIGURED.load(Ordering::SeqCst)).unwrap_or_else(env_default)
+}
+
+/// Whether the split-phase exchange is active for a world of `size` ranks
+/// under the currently effective mode. The distributed kernels consult
+/// this at apply time, so a mode change takes effect on the next apply.
+pub fn enabled(size: usize) -> bool {
+    current().enabled_for(size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips() {
+        for mode in [OverlapMode::On, OverlapMode::Off, OverlapMode::Auto] {
+            assert_eq!(OverlapMode::parse(mode.name()).unwrap(), mode);
+        }
+        assert_eq!(OverlapMode::parse("true").unwrap(), OverlapMode::On);
+        assert_eq!(OverlapMode::parse("0").unwrap(), OverlapMode::Off);
+        assert!(OverlapMode::parse("maybe").is_err());
+        assert_eq!(OverlapMode::default(), OverlapMode::Auto);
+    }
+
+    #[test]
+    fn enabled_for_world_sizes() {
+        assert!(OverlapMode::On.enabled_for(1));
+        assert!(OverlapMode::On.enabled_for(4));
+        assert!(!OverlapMode::Off.enabled_for(4));
+        assert!(!OverlapMode::Auto.enabled_for(1));
+        assert!(OverlapMode::Auto.enabled_for(2));
+    }
+
+    #[test]
+    fn code_round_trips() {
+        // The atomic encoding must be lossless; 0 is reserved for "unset".
+        for mode in [OverlapMode::On, OverlapMode::Off, OverlapMode::Auto] {
+            assert_eq!(OverlapMode::from_code(mode.to_code()), Some(mode));
+            assert_ne!(mode.to_code(), 0);
+        }
+        assert_eq!(OverlapMode::from_code(0), None);
+    }
+}

@@ -64,12 +64,17 @@ impl Op {
     }
 }
 
-/// Shared counters: per rank × per op, messages and bytes.
+/// Shared counters: per rank × per op, messages and bytes, plus per-rank
+/// time spent blocked inside communication calls.
 pub struct CommStats {
     size: usize,
     /// msgs[rank * NOPS + op]
     msgs: Vec<AtomicU64>,
     bytes: Vec<AtomicU64>,
+    /// time_us[rank] — microseconds spent inside collectives, blocking
+    /// receives and barriers (includes synchronization wait, which is the
+    /// cost communication overlap hides).
+    time_us: Vec<AtomicU64>,
 }
 
 impl CommStats {
@@ -80,6 +85,7 @@ impl CommStats {
             size,
             msgs: (0..n).map(|_| AtomicU64::new(0)).collect(),
             bytes: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            time_us: (0..size).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
@@ -93,6 +99,18 @@ impl CommStats {
     /// Record a point-to-point send of `nbytes` from `rank`.
     pub fn count_p2p(&self, rank: usize, nbytes: usize) {
         self.count(rank, Op::P2p, nbytes);
+    }
+
+    /// Accumulate `us` microseconds of communication time on `rank`.
+    pub fn add_time(&self, rank: usize, us: u64) {
+        self.time_us[rank].fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Total communication time across all ranks, microseconds. Wall-clock
+    /// overlapped across ranks (each rank accrues independently), so this
+    /// is a work measure like `total_bytes`, not elapsed time.
+    pub fn total_time_us(&self) -> u64 {
+        self.time_us.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
 
     /// Total bytes across all ranks and ops.
@@ -115,6 +133,11 @@ impl CommStats {
                 .iter()
                 .map(|a| a.load(Ordering::Relaxed))
                 .collect(),
+            time_us: self
+                .time_us
+                .iter()
+                .map(|a| a.load(Ordering::Relaxed))
+                .collect(),
         }
     }
 
@@ -124,6 +147,9 @@ impl CommStats {
             a.store(0, Ordering::Relaxed);
         }
         for a in &self.bytes {
+            a.store(0, Ordering::Relaxed);
+        }
+        for a in &self.time_us {
             a.store(0, Ordering::Relaxed);
         }
     }
@@ -136,6 +162,7 @@ pub struct StatsSnapshot {
     pub size: usize,
     msgs: Vec<u64>,
     bytes: Vec<u64>,
+    time_us: Vec<u64>,
 }
 
 impl StatsSnapshot {
@@ -162,6 +189,26 @@ impl StatsSnapshot {
     /// Total messages across all ranks and operations.
     pub fn total_msgs(&self) -> u64 {
         self.msgs.iter().sum()
+    }
+
+    /// World-total message count of one operation class (all ranks).
+    pub fn op_msgs(&self, op: Op) -> u64 {
+        (0..self.size).map(|r| self.msgs(r, op)).sum()
+    }
+
+    /// World-total byte count of one operation class (all ranks).
+    pub fn op_bytes(&self, op: Op) -> u64 {
+        (0..self.size).map(|r| self.bytes(r, op)).sum()
+    }
+
+    /// Communication time accrued by `rank`, microseconds.
+    pub fn rank_time_us(&self, rank: usize) -> u64 {
+        self.time_us[rank]
+    }
+
+    /// Total communication time across all ranks, microseconds.
+    pub fn total_time_us(&self) -> u64 {
+        self.time_us.iter().sum()
     }
 
     /// Largest/smallest per-rank byte volume ratio (load-balance measure;
@@ -202,6 +249,7 @@ impl StatsSnapshot {
         Json::obj(vec![
             ("total_bytes", Json::int(self.total_bytes() as i64)),
             ("total_msgs", Json::int(self.total_msgs() as i64)),
+            ("comm_time_us", Json::int(self.total_time_us() as i64)),
             ("per_rank", Json::Arr(ranks)),
         ])
     }
@@ -229,9 +277,37 @@ mod tests {
     fn reset_zeroes() {
         let s = CommStats::new(1);
         s.count(0, Op::Broadcast, 42);
+        s.add_time(0, 17);
         s.reset();
         assert_eq!(s.total_bytes(), 0);
         assert_eq!(s.total_msgs(), 0);
+        assert_eq!(s.total_time_us(), 0);
+    }
+
+    #[test]
+    fn time_accumulates_per_rank() {
+        let s = CommStats::new(2);
+        s.add_time(0, 5);
+        s.add_time(0, 7);
+        s.add_time(1, 100);
+        assert_eq!(s.total_time_us(), 112);
+        let snap = s.snapshot();
+        assert_eq!(snap.rank_time_us(0), 12);
+        assert_eq!(snap.rank_time_us(1), 100);
+        assert_eq!(snap.total_time_us(), 112);
+    }
+
+    #[test]
+    fn op_totals_sum_over_ranks() {
+        let s = CommStats::new(3);
+        s.count(0, Op::Allreduce, 8);
+        s.count(1, Op::Allreduce, 8);
+        s.count(2, Op::P2p, 32);
+        let snap = s.snapshot();
+        assert_eq!(snap.op_msgs(Op::Allreduce), 2);
+        assert_eq!(snap.op_bytes(Op::Allreduce), 16);
+        assert_eq!(snap.op_msgs(Op::P2p), 1);
+        assert_eq!(snap.op_bytes(Op::Alltoall), 0);
     }
 
     #[test]

@@ -4,10 +4,21 @@
 //! (vs GMRES's growing basis). The iPI companion paper finds it competitive
 //! with GMRES on many MDP instances, occasionally better when the spectrum
 //! of `I − γ P_π` is well clustered.
+//!
+//! Reduction pipelining (DESIGN.md §14): the textbook loop issues six
+//! scalar reductions per iteration. Two pairs are *adjacent* — no vector
+//! update separates them — so they fuse into single
+//! [`Comm::allreduce_f64s`] calls: `[‖r‖², (r̂,r)]` at the loop head (the
+//! convergence check and the next iteration's ρ share one rendezvous) and
+//! `[(t,t), (t,s)]` for the stabilization step. Four reductions per
+//! iteration remain. The fused collective folds each component in the same
+//! rank order as the scalar collective, so every iterate, iteration count,
+//! and returned residual is bitwise identical to the unfused loop.
 
 use super::{Apply, KspStats, Precond, Tolerance};
-use crate::comm::Comm;
+use crate::comm::{Comm, Reduce};
 use crate::linalg::dist::{dist_dot, dist_norm2};
+use crate::linalg::dot;
 
 /// Solve `A x = b` with preconditioned BiCGStab. `x` carries the warm start.
 pub fn solve(
@@ -46,11 +57,24 @@ pub fn solve(
     let mut s = vec![0.0; nl];
     let mut shat = vec![0.0; nl];
     let mut t = vec![0.0; nl];
-    let mut rnorm = r0norm;
+    let mut rnorm;
+    let mut omega_breakdown = false;
 
-    while stats.iterations < tol.max_iters {
+    loop {
+        // Fused head reduction: ‖r‖² for the convergence check and the
+        // next ρ = (r̂, r) share one collective. On the exit passes ρ is
+        // computed one reduction early and discarded — the fold itself is
+        // identical, so nothing observable changes.
+        let head = comm.allreduce_f64s(&[dot(&r, &r), dot(&rhat, &r)], Reduce::Sum);
+        rnorm = head[0].sqrt();
+        if rnorm <= target {
+            break;
+        }
+        if omega_breakdown || stats.iterations >= tol.max_iters {
+            break;
+        }
         stats.iterations += 1;
-        let rho_new = dist_dot(comm, &rhat, &r);
+        let rho_new = head[1];
         if rho_new.abs() < 1e-300 {
             break; // breakdown — return best so far
         }
@@ -81,22 +105,20 @@ pub fn solve(
         pc.apply(&s, &mut shat);
         a.apply(comm, &shat, &mut t, &mut buf);
         stats.spmvs += 1;
-        let tt = dist_dot(comm, &t, &t);
+        // Fused stabilization reduction: (t,t) and (t,s) are adjacent.
+        let st = comm.allreduce_f64s(&[dot(&t, &t), dot(&t, &s)], Reduce::Sum);
+        let tt = st[0];
         if tt.abs() < 1e-300 {
             break;
         }
-        omega = dist_dot(comm, &t, &s) / tt;
+        omega = st[1] / tt;
         for i in 0..nl {
             x[i] += alpha * phat[i] + omega * shat[i];
             r[i] = s[i] - omega * t[i];
         }
-        rnorm = dist_norm2(comm, &r);
-        if rnorm <= target {
-            break;
-        }
-        if omega.abs() < 1e-300 {
-            break;
-        }
+        // ω-breakdown exits *after* next head's convergence check — the
+        // same check order as the unfused loop.
+        omega_breakdown = omega.abs() < 1e-300;
     }
     stats.final_residual = rnorm;
     stats.converged = rnorm <= target;

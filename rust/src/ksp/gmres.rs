@@ -6,10 +6,43 @@
 //! All inner products are distributed reductions; each Arnoldi step costs
 //! one SpMV + one ghost exchange, matching the cost model the iPI paper
 //! counts.
+//!
+//! Reduction pipelining (DESIGN.md §14): at initialization and at every
+//! restart the raw residual norm ‖b − Ax‖ and the preconditioned norm
+//! ‖M⁻¹(b − Ax)‖ are needed back to back with only local work between
+//! them, so [`residual_pair`] fuses both into a single
+//! [`Comm::allreduce_f64s`] — square roots taken *after* the reduction, so
+//! each norm is bit-for-bit the value the unfused pair of collectives
+//! produced. The modified Gram–Schmidt projections are sequentially
+//! dependent (h_{ij} feeds the very next vector update) and cannot fuse.
 
 use super::{Apply, KspStats, Precond, Tolerance};
-use crate::comm::Comm;
+use crate::comm::{Comm, Reduce};
 use crate::linalg::dist::{dist_dot, dist_norm2};
+use crate::linalg::dot;
+
+/// Compute `r = b − Ax` and `z = M⁻¹ r`, returning `(‖r‖₂, ‖z‖₂)` with the
+/// two norm reductions fused into one collective. Bitwise identical to
+/// [`Apply::residual`] followed by a separate `dist_norm2(z)`.
+#[allow(clippy::too_many_arguments)]
+fn residual_pair(
+    comm: &Comm,
+    a: &dyn Apply,
+    pc: &Precond,
+    b: &[f64],
+    x: &[f64],
+    r: &mut [f64],
+    z: &mut [f64],
+    buf: &mut crate::linalg::dist::GhostBuf,
+) -> (f64, f64) {
+    a.apply(comm, x, r, buf);
+    for (ri, bi) in r.iter_mut().zip(b) {
+        *ri = bi - *ri;
+    }
+    pc.apply(r, z);
+    let sums = comm.allreduce_f64s(&[dot(r, r), dot(z, z)], Reduce::Sum);
+    (sums[0].sqrt(), sums[1].sqrt())
+}
 
 /// Solve `A x = b` with restarted GMRES(m). `x` carries the warm start.
 pub fn solve(
@@ -39,11 +72,9 @@ pub fn solve(
     let (mut cs, mut sn) = (vec![0.0; m], vec![0.0; m]);
     let mut g = vec![0.0; m + 1];
 
-    // Initial (preconditioned) residual.
-    let raw0 = a.residual(comm, b, x, &mut r, &mut buf);
+    // Initial (preconditioned) residual — both norms in one reduction.
+    let (raw0, mut beta) = residual_pair(comm, a, pc, b, x, &mut r, &mut z, &mut buf);
     stats.spmvs += 1;
-    pc.apply(&r, &mut z);
-    let mut beta = dist_norm2(comm, &z);
     stats.initial_residual = raw0;
     // Threshold in the preconditioned norm; for PC=None they coincide.
     let target = tol.threshold(if pc.is_identity() { raw0 } else { beta });
@@ -127,11 +158,11 @@ pub fn solve(
             }
         }
 
-        // true residual for the restart / convergence decision
-        let raw = a.residual(comm, b, x, &mut r, &mut buf);
+        // true residual for the restart / convergence decision — raw and
+        // preconditioned norms fused into one reduction
+        let (raw, beta_new) = residual_pair(comm, a, pc, b, x, &mut r, &mut z, &mut buf);
+        beta = beta_new;
         stats.spmvs += 1;
-        pc.apply(&r, &mut z);
-        beta = dist_norm2(comm, &z);
         let check = if pc.is_identity() { raw } else { beta };
         stats.final_residual = raw;
         if check <= target {

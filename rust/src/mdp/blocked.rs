@@ -25,8 +25,9 @@
 use super::{DistMdp, MatFreePolicyOp};
 use crate::comm::Comm;
 use crate::ksp::Apply;
-use crate::linalg::dist::{GhostBuf, Partition};
+use crate::linalg::dist::{GhostBuf, GhostSubPlan, Partition};
 use crate::linalg::{Bsr, Csr};
+use std::sync::OnceLock;
 
 /// Minimum [`Bsr::fill_ratio`] at which the blocked layout is kept.
 ///
@@ -53,6 +54,10 @@ pub struct BsrPolicyOp<'a> {
     /// row per local state), or `None` when the fill heuristic rejected
     /// the packing.
     blocks: Option<Bsr>,
+    /// Policy-selected ghost sub-plan, built lazily on the first (collective)
+    /// apply — like [`MatFreePolicyOp`], construction stays communication-free
+    /// because the non-apply hooks run in non-collective contexts.
+    plan: OnceLock<GhostSubPlan>,
 }
 
 impl<'a> BsrPolicyOp<'a> {
@@ -73,7 +78,12 @@ impl<'a> BsrPolicyOp<'a> {
             packed.push_row(cols, vals);
         }
         let blocks = (packed.fill_ratio() >= BSR_FILL_THRESHOLD).then_some(packed);
-        BsrPolicyOp { mdp, policy, blocks }
+        BsrPolicyOp {
+            mdp,
+            policy,
+            blocks,
+            plan: OnceLock::new(),
+        }
     }
 
     /// Whether the blocked layout passed the fill heuristic (false means
@@ -91,6 +101,52 @@ impl<'a> BsrPolicyOp<'a> {
     #[inline]
     fn row_of(&self, s: usize) -> usize {
         s * self.mdp.n_actions() + self.policy[s]
+    }
+
+    /// The lazily built policy-selected ghost sub-plan (collective on
+    /// first use — callers must be on the collective apply path).
+    fn plan(&self, comm: &Comm) -> &GhostSubPlan {
+        self.plan.get_or_init(|| {
+            let nl = self.mdp.local_states();
+            self.mdp
+                .transitions()
+                .build_sub_plan(comm, (0..nl).map(|s| self.row_of(s)))
+        })
+    }
+
+    /// Fused row pass (blocked or gather fallback). `pass = Some(b)` writes
+    /// only rows whose boundary flag equals `b` — the two-pass overlapped
+    /// schedule; `None` evaluates every row. Bitwise identical either way.
+    fn apply_rows(&self, x: &[f64], y: &mut [f64], buf: &GhostBuf, pass: Option<bool>) {
+        let trans = self.mdp.transitions();
+        let local = trans.local();
+        let flags = trans.boundary_flags();
+        let xb = buf.x();
+        let m = self.mdp.n_actions();
+        let disc = self.mdp.discount();
+        // Row-parallel; each row's fold order is fixed per kernel →
+        // bitwise identical for any thread count.
+        crate::util::par::par_for_rows(y, |offset, chunk| {
+            for (i, ys) in chunk.iter_mut().enumerate() {
+                let s = offset + i;
+                let row = self.row_of(s);
+                if let Some(want) = pass {
+                    if flags[row] != want {
+                        continue;
+                    }
+                }
+                let px = match &self.blocks {
+                    Some(b) => b.row_dot(s, xb),
+                    None => {
+                        let (cols, vals) = local.row(row);
+                        // SAFETY: DistCsr remaps every stored column into
+                        // buffer space [0, nlocal + nghost) == xb.len().
+                        unsafe { crate::util::simd::gather_dot_unchecked(cols, vals, xb) }
+                    }
+                };
+                *ys = x[s] - disc.at_row(row, m) * px;
+            }
+        });
     }
 }
 
@@ -112,29 +168,16 @@ impl Apply for BsrPolicyOp<'_> {
         assert_eq!(x.len(), nl);
         assert_eq!(y.len(), nl);
         let trans = self.mdp.transitions();
-        trans.update_ghosts(comm, x, buf);
-        let local = trans.local();
-        let xb = buf.x();
-        let m = self.mdp.n_actions();
-        let disc = self.mdp.discount();
-        // Row-parallel; each row's fold order is fixed per kernel →
-        // bitwise identical for any thread count.
-        crate::util::par::par_for_rows(y, |offset, chunk| {
-            for (i, ys) in chunk.iter_mut().enumerate() {
-                let s = offset + i;
-                let row = self.row_of(s);
-                let px = match &self.blocks {
-                    Some(b) => b.row_dot(s, xb),
-                    None => {
-                        let (cols, vals) = local.row(row);
-                        // SAFETY: DistCsr remaps every stored column into
-                        // buffer space [0, nlocal + nghost) == xb.len().
-                        unsafe { crate::util::simd::gather_dot_unchecked(cols, vals, xb) }
-                    }
-                };
-                *ys = x[s] - disc.at_row(row, m) * px;
-            }
-        });
+        let plan = self.plan(comm);
+        if comm.size() > 1 && crate::comm::overlap::enabled(comm.size()) {
+            trans.start_ghost_exchange_subset(comm, plan, x, buf);
+            self.apply_rows(x, y, buf, Some(false));
+            trans.finish_ghost_exchange_subset(comm, plan, buf);
+            self.apply_rows(x, y, buf, Some(true));
+        } else {
+            trans.update_ghosts_subset(comm, plan, x, buf);
+            self.apply_rows(x, y, buf, None);
+        }
     }
 
     fn diag(&self, out: &mut [f64]) {

@@ -24,8 +24,9 @@
 use super::{DistMdp, MatFreePolicyOp};
 use crate::comm::Comm;
 use crate::ksp::Apply;
-use crate::linalg::dist::{GhostBuf, Partition};
+use crate::linalg::dist::{GhostBuf, GhostSubPlan, Partition};
 use crate::linalg::Csr;
+use std::sync::OnceLock;
 
 /// `A = I − diag(γ_π) P_π` applied from an f32/u32 copy of the selected
 /// policy rows. See the module docs for the precision contract.
@@ -40,6 +41,9 @@ pub struct F32PolicyOp<'a> {
     vals: Vec<f32>,
     /// Per-local-row discounts `γ_π(s)`, kept in f64.
     gammas: Vec<f64>,
+    /// Policy-selected ghost sub-plan, built lazily on the first
+    /// (collective) apply; the exchange moves only the entries π reads.
+    plan: OnceLock<GhostSubPlan>,
 }
 
 impl<'a> F32PolicyOp<'a> {
@@ -74,6 +78,7 @@ impl<'a> F32PolicyOp<'a> {
             cols,
             vals,
             gammas,
+            plan: OnceLock::new(),
         }
     }
 
@@ -86,6 +91,48 @@ impl<'a> F32PolicyOp<'a> {
     /// The f64 matrix-free twin used for the setup-time hooks.
     fn matfree(&self) -> MatFreePolicyOp<'a> {
         MatFreePolicyOp::new(self.mdp, self.policy)
+    }
+
+    /// The lazily built policy-selected ghost sub-plan (collective on
+    /// first use — callers must be on the collective apply path).
+    fn plan(&self, comm: &Comm) -> &GhostSubPlan {
+        self.plan.get_or_init(|| {
+            let m = self.mdp.n_actions();
+            self.mdp.transitions().build_sub_plan(
+                comm,
+                self.policy.iter().enumerate().map(|(s, &a)| s * m + a),
+            )
+        })
+    }
+
+    /// Compressed row pass over the narrowed vector `xf`. `pass = Some(b)`
+    /// writes only rows whose boundary flag equals `b` (the overlapped
+    /// schedule); `None` evaluates every row.
+    fn apply_rows(&self, x: &[f64], y: &mut [f64], xf: &[f32], pass: Option<bool>) {
+        let m = self.mdp.n_actions();
+        let flags = self.mdp.transitions().boundary_flags();
+        crate::util::par::par_for_rows(y, |offset, chunk| {
+            for (i, ys) in chunk.iter_mut().enumerate() {
+                let s = offset + i;
+                if let Some(want) = pass {
+                    if flags[s * m + self.policy[s]] != want {
+                        continue;
+                    }
+                }
+                let (a, b) = (self.indptr[s], self.indptr[s + 1]);
+                // SAFETY: cols are DistCsr buffer-space columns, all
+                // < nlocal + nghost == xf.len(), narrowed loss-free
+                // (checked against u32::MAX at construction).
+                let px = unsafe {
+                    crate::util::simd::gather_dot_f32_unchecked(
+                        &self.cols[a..b],
+                        &self.vals[a..b],
+                        xf,
+                    )
+                };
+                *ys = x[s] - self.gammas[s] * px;
+            }
+        });
     }
 }
 
@@ -106,28 +153,28 @@ impl Apply for F32PolicyOp<'_> {
         let nl = self.local_rows();
         assert_eq!(x.len(), nl);
         assert_eq!(y.len(), nl);
-        self.mdp.transitions().update_ghosts(comm, x, buf);
+        let trans = self.mdp.transitions();
+        let plan = self.plan(comm);
         // Narrow the exchanged vector once per apply; the row pass then
         // streams f32 end to end. (A fresh Vec keeps the operator Sync —
         // the allocation is one O(n) pass against m·n row work.)
-        let xf: Vec<f32> = buf.x().iter().map(|&v| v as f32).collect();
-        crate::util::par::par_for_rows(y, |offset, chunk| {
-            for (i, ys) in chunk.iter_mut().enumerate() {
-                let s = offset + i;
-                let (a, b) = (self.indptr[s], self.indptr[s + 1]);
-                // SAFETY: cols are DistCsr buffer-space columns, all
-                // < nlocal + nghost == xf.len(), narrowed loss-free
-                // (checked against u32::MAX at construction).
-                let px = unsafe {
-                    crate::util::simd::gather_dot_f32_unchecked(
-                        &self.cols[a..b],
-                        &self.vals[a..b],
-                        &xf,
-                    )
-                };
-                *ys = x[s] - self.gammas[s] * px;
+        if comm.size() > 1 && crate::comm::overlap::enabled(comm.size()) {
+            trans.start_ghost_exchange_subset(comm, plan, x, buf);
+            let mut xf: Vec<f32> = buf.x().iter().map(|&v| v as f32).collect();
+            // Interior rows read only owned slots (< nlocal), which are
+            // already fresh; the stale ghost tail is never touched here.
+            self.apply_rows(x, y, &xf, Some(false));
+            trans.finish_ghost_exchange_subset(comm, plan, buf);
+            let nlocal = buf.nlocal();
+            for (dst, &v) in xf[nlocal..].iter_mut().zip(&buf.x()[nlocal..]) {
+                *dst = v as f32;
             }
-        });
+            self.apply_rows(x, y, &xf, Some(true));
+        } else {
+            trans.update_ghosts_subset(comm, plan, x, buf);
+            let xf: Vec<f32> = buf.x().iter().map(|&v| v as f32).collect();
+            self.apply_rows(x, y, &xf, None);
+        }
     }
 
     fn diag(&self, out: &mut [f64]) {

@@ -19,27 +19,36 @@
 //!   `alltoallv` plus O(nnz/m) copying on every outer iteration in which
 //!   the greedy policy moved).
 //!
-//! The price is the ghost exchange: each apply refreshes the ghosts of the
-//! *stacked* matrix's plan (the union over all `m` actions), which can move
-//! more entries than the assembled `P_π`-only plan. The `bench_ablation`
-//! "eval-backend" cases measure exactly this trade; DESIGN.md §4 has the
-//! selection matrix.
+//! The ghost exchange uses a policy-selected sub-plan of the stacked
+//! matrix's plan, built lazily on first apply (one collective `alltoallv`
+//! of request lists): only the ghost entries the selected rows `s·m + π(s)`
+//! actually read are moved, matching the assembled `P_π`-only plan's
+//! volume without the assembly. The `bench_ablation` "eval-backend" cases
+//! measure the remaining trade; DESIGN.md §4 has the selection matrix.
 
 use super::DistMdp;
 use crate::comm::Comm;
 use crate::ksp::Apply;
-use crate::linalg::dist::{GhostBuf, Partition};
+use crate::linalg::dist::{GhostBuf, GhostSubPlan, Partition};
 use crate::linalg::Csr;
+use std::sync::OnceLock;
 
 /// `A = I − diag(γ_π) P_π` applied matrix-free off a [`DistMdp`]'s stacked
 /// kernel (`γ_π(s) = γ(s, π(s))`; plain `I − γ P_π` for scalar discounts).
 ///
 /// Borrows the MDP and the rank-local greedy policy; construction is O(1)
-/// and communication-free (the ghost plan of the stacked matrix is reused,
-/// which is also what [`DistMdp::bellman_backup`] exchanges through).
+/// and communication-free. The first `apply` lazily builds (one collective
+/// `alltoallv` of request lists) a [`GhostSubPlan`] restricted to the
+/// selected rows `s·m + π(s)`, so each exchange moves only the ghost
+/// entries π actually reads instead of the stacked matrix's union over all
+/// `m` actions — same f64s for the selected rows, strictly fewer bytes
+/// whenever other actions reference extra ghosts. Laziness matters: the
+/// non-collective hooks (`diag`, `local_block`, `materialize_rows`) are
+/// called from transient contexts where a collective would deadlock.
 pub struct MatFreePolicyOp<'a> {
     mdp: &'a DistMdp,
     policy: &'a [usize],
+    plan: OnceLock<GhostSubPlan>,
 }
 
 impl<'a> MatFreePolicyOp<'a> {
@@ -51,7 +60,11 @@ impl<'a> MatFreePolicyOp<'a> {
             "policy must cover the rank-local states"
         );
         debug_assert!(policy.iter().all(|&a| a < mdp.n_actions()));
-        MatFreePolicyOp { mdp, policy }
+        MatFreePolicyOp {
+            mdp,
+            policy,
+            plan: OnceLock::new(),
+        }
     }
 
     /// The stacked-CSR row index backing local state `s` under π.
@@ -69,6 +82,48 @@ impl<'a> MatFreePolicyOp<'a> {
     #[inline]
     fn gamma_at(&self, row: usize) -> f64 {
         self.mdp.discount().at_row(row, self.mdp.n_actions())
+    }
+
+    /// The lazily built policy-selected ghost sub-plan (collective on
+    /// first use — callers must be on the collective apply path).
+    fn plan(&self, comm: &Comm) -> &GhostSubPlan {
+        self.plan.get_or_init(|| {
+            let nl = self.mdp.local_states();
+            self.mdp
+                .transitions()
+                .build_sub_plan(comm, (0..nl).map(|s| self.row_of(s)))
+        })
+    }
+
+    /// Fused row pass: `y[s] = x[s] − γ_π(s)·(P_π x)[s]`. With
+    /// `pass = Some(b)` only rows whose boundary flag equals `b` are
+    /// written (the two-pass overlapped schedule); `None` evaluates every
+    /// row. Same chunk grid + same gather kernel in all cases → the
+    /// schedules are bitwise identical.
+    fn apply_rows(&self, x: &[f64], y: &mut [f64], buf: &GhostBuf, pass: Option<bool>) {
+        let trans = self.mdp.transitions();
+        let local = trans.local();
+        let flags = trans.boundary_flags();
+        let xb = buf.x();
+        // Row-parallel over the rank's worker pool; each selected row's
+        // gather goes through the lane-unrolled kernel with a fixed fold
+        // order → bitwise identical for any thread count per backend.
+        crate::util::par::par_for_rows(y, |offset, chunk| {
+            for (i, ys) in chunk.iter_mut().enumerate() {
+                let s = offset + i;
+                let row = self.row_of(s);
+                if let Some(want) = pass {
+                    if flags[row] != want {
+                        continue;
+                    }
+                }
+                let (cols, vals) = local.row(row);
+                // SAFETY: DistCsr remaps every stored column into buffer
+                // space [0, nlocal + nghost) == xb.len() at assembly.
+                let px = unsafe { crate::util::simd::gather_dot_unchecked(cols, vals, xb) };
+                *ys = x[s] - self.gamma_at(row) * px;
+            }
+        });
     }
 }
 
@@ -91,23 +146,18 @@ impl Apply for MatFreePolicyOp<'_> {
         assert_eq!(x.len(), nl);
         assert_eq!(y.len(), nl);
         let trans = self.mdp.transitions();
-        trans.update_ghosts(comm, x, buf);
-        let local = trans.local();
-        let xb = buf.x();
-        // Row-parallel over the rank's worker pool; each selected row's
-        // gather goes through the lane-unrolled kernel with a fixed fold
-        // order → bitwise identical for any thread count per backend.
-        crate::util::par::par_for_rows(y, |offset, chunk| {
-            for (i, ys) in chunk.iter_mut().enumerate() {
-                let s = offset + i;
-                let row = self.row_of(s);
-                let (cols, vals) = local.row(row);
-                // SAFETY: DistCsr remaps every stored column into buffer
-                // space [0, nlocal + nghost) == xb.len() at assembly.
-                let px = unsafe { crate::util::simd::gather_dot_unchecked(cols, vals, xb) };
-                *ys = x[s] - self.gamma_at(row) * px;
-            }
-        });
+        let plan = self.plan(comm);
+        if comm.size() > 1 && crate::comm::overlap::enabled(comm.size()) {
+            // Split-phase: interior states compute while π's ghost values
+            // are in flight; boundary states after `finish`.
+            trans.start_ghost_exchange_subset(comm, plan, x, buf);
+            self.apply_rows(x, y, buf, Some(false));
+            trans.finish_ghost_exchange_subset(comm, plan, buf);
+            self.apply_rows(x, y, buf, Some(true));
+        } else {
+            trans.update_ghosts_subset(comm, plan, x, buf);
+            self.apply_rows(x, y, buf, None);
+        }
     }
 
     fn diag(&self, out: &mut [f64]) {

@@ -806,6 +806,70 @@ impl DistMdp {
         comm.max(local_res)
     }
 
+    /// One **rank-local** Bellman backup against whatever ghost values are
+    /// already resident in `buf`: same greedy body as
+    /// [`Self::bellman_backup`], but no ghost exchange and no residual
+    /// allreduce — returns the **local** ∞-norm residual only. This is the
+    /// stale sweep of bounded-staleness asynchronous VI (`-async_vi`,
+    /// DESIGN.md §14): ranks iterate on their own block between certified
+    /// synchronized backups, reading boundary-coupled terms at the ghost
+    /// values of the last synchronization.
+    ///
+    /// Non-collective: safe to call a different number of times per rank,
+    /// though the solver keeps the count agreed so traces stay rank-stable.
+    pub fn bellman_backup_local(
+        &self,
+        v_local: &[f64],
+        tv: &mut [f64],
+        policy: &mut [usize],
+        buf: &mut GhostBuf,
+        q_scratch: &mut Vec<f64>,
+    ) -> f64 {
+        let nl = self.local_states();
+        assert_eq!(v_local.len(), nl);
+        assert_eq!(tv.len(), nl);
+        assert_eq!(policy.len(), nl);
+        // q = P_stacked · v with the *current* buffer ghosts (stale between
+        // synchronizations); only the owned block is refreshed.
+        q_scratch.resize(nl * self.n_actions, 0.0);
+        buf.set_owned(v_local);
+        self.trans.spmv_local(buf, q_scratch);
+        let q: &[f64] = q_scratch.as_slice();
+        let m = self.n_actions;
+        let disc = &self.discount;
+        crate::util::par::par_for_rows2(
+            tv,
+            policy,
+            |offset, tv_chunk, pol_chunk| {
+                let mut res = 0.0f64;
+                for (i, (tvs, pols)) in tv_chunk.iter_mut().zip(pol_chunk.iter_mut()).enumerate() {
+                    let s = offset + i;
+                    let base = s * m;
+                    let mut best = self.objective.worst();
+                    let mut best_a = 0usize;
+                    for a in 0..m {
+                        let gv = match disc {
+                            Discount::Scalar(g) => *g,
+                            Discount::PerState(v) => v[s],
+                            Discount::PerStateAction(v) => v[base + a],
+                        };
+                        let qv = self.costs[base + a] + gv * q[base + a];
+                        if self.objective.better(qv, best) {
+                            best = qv;
+                            best_a = a;
+                        }
+                    }
+                    *tvs = best;
+                    *pols = best_a;
+                    res = res.max((best - v_local[s]).abs());
+                }
+                res
+            },
+            f64::max,
+        )
+        .unwrap_or(0.0)
+    }
+
     /// Rank-local policy costs `g_π` (the RHS of the evaluation system) —
     /// the matrix-free counterpart of [`Self::policy_system`]'s second
     /// return: no matrix assembly, no communication.
@@ -1040,6 +1104,35 @@ mod tests {
             for (_, _, r) in &out {
                 assert!((r - res_serial).abs() < 1e-12);
             }
+        }
+    }
+
+    /// With ghosts freshly exchanged, one local sweep is bitwise identical
+    /// to the synchronized backup (same kernel, same fold order); its
+    /// local residuals max-reduce to the collective residual.
+    #[test]
+    fn local_backup_matches_sync_when_ghosts_fresh() {
+        for size in [1usize, 2, 3] {
+            let mdp = Arc::new(random_mdp(78, 23, 3, 0.9));
+            World::run(size, move |comm| {
+                let d = DistMdp::from_serial(&comm, &mdp);
+                let part = d.partition();
+                let (lo, hi) = (part.lo(comm.rank()), part.hi(comm.rank()));
+                let v: Vec<f64> = (lo..hi).map(|i| (i as f64).sin()).collect();
+                let nl = hi - lo;
+                let (mut tv_s, mut pol_s) = (vec![0.0; nl], vec![0usize; nl]);
+                let (mut tv_l, mut pol_l) = (vec![0.0; nl], vec![0usize; nl]);
+                let mut buf = d.make_buffer();
+                let mut q = Vec::new();
+                let res_sync = d.bellman_backup(&comm, &v, &mut tv_s, &mut pol_s, &mut buf, &mut q);
+                // `buf` now holds fresh ghosts for `v`; the local sweep
+                // must reproduce the synchronized backup exactly.
+                let res_local =
+                    d.bellman_backup_local(&v, &mut tv_l, &mut pol_l, &mut buf, &mut q);
+                assert_eq!(tv_s, tv_l, "size={size}");
+                assert_eq!(pol_s, pol_l);
+                assert_eq!(comm.max(res_local), res_sync);
+            });
         }
     }
 

@@ -184,6 +184,19 @@ pub struct SolveOptions {
     pub v0: Option<Vec<f64>>,
     /// Per-iteration residual logging on the root rank (`-verbose`).
     pub verbose: bool,
+    /// Bounded-staleness asynchronous value iteration (`-async_vi`,
+    /// DESIGN.md §14): between synchronized Bellman backups every rank runs
+    /// [`DistMdp::bellman_backup_local`] sweeps against the ghost values of
+    /// the last synchronization. Convergence is still decided only on the
+    /// collectively reduced residual of the synchronized backup, so the
+    /// certificate is rank-identical. Only meaningful with [`Method::Vi`]
+    /// (the options layer rejects other methods); ignored by evaluation
+    /// methods here.
+    pub async_vi: bool,
+    /// Staleness bound `k` for `-async_vi`: ghosts are refreshed every `k`
+    /// Bellman sweeps (1 synchronized + `k−1` local). `k = 1` degenerates
+    /// to synchronous VI with identical iterates.
+    pub async_vi_staleness: usize,
 }
 
 impl Default for SolveOptions {
@@ -199,6 +212,8 @@ impl Default for SolveOptions {
             max_inner: 10_000,
             v0: None,
             verbose: false,
+            async_vi: false,
+            async_vi_staleness: 4,
         }
     }
 }
@@ -243,6 +258,12 @@ pub struct SolveResult {
     /// solve itself — model distribution/assembly and result gathering are
     /// excluded (counters are snapshotted at `solve_dist` entry and exit).
     pub comm_bytes: u64,
+    /// Time spent inside communication calls during the solve (µs, summed
+    /// over ranks): barrier waits, collective rendezvous epochs, and
+    /// blocking receives. Like [`Self::wall_time_s`] this is a timing
+    /// diagnostic — approximate at the µs scale and not bitwise
+    /// rank-identical, so it is excluded from determinism fingerprints.
+    pub comm_time_us: u64,
     /// Uniform discount bound γ̄ = max γ(s,a) of the solved MDP — equal to
     /// the discount factor for classic scalar-discount MDPs; for semi-MDPs
     /// it is the contraction modulus used by the certificate below.
@@ -280,6 +301,7 @@ impl SolveResult {
             ("converged", Json::Bool(self.converged)),
             ("wall_time_s", Json::num(self.wall_time_s)),
             ("comm_bytes", Json::int(self.comm_bytes as i64)),
+            ("comm_time_us", Json::int(self.comm_time_us as i64)),
             ("ranks", Json::int(self.ranks as i64)),
             ("threads", Json::int(self.threads as i64)),
             ("error_bound", Json::num(self.error_bound())),
@@ -316,6 +338,9 @@ pub struct LocalSolveResult {
     pub trace: Vec<IterRecord>,
     /// Global communication bytes counted between solve entry and exit.
     pub comm_bytes: u64,
+    /// Time inside communication calls between solve entry and exit (µs,
+    /// summed over ranks; approximate — see [`SolveResult::comm_time_us`]).
+    pub comm_time_us: u64,
 }
 
 /// Solve a distributed MDP in-world. Collective; every rank receives its
@@ -323,13 +348,16 @@ pub struct LocalSolveResult {
 pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolveResult {
     // Snapshot the (world-shared) comm counters so the result reports the
     // bytes of *this solve*, not everything since world start (model
-    // distribution, assembly, earlier solves). The barrier makes the
-    // snapshot exact: in the SPMD thread world every rank counts an op
-    // before entering the next collective, so once all ranks reach this
-    // barrier, no pre-solve bytes are missing and no solve bytes have
-    // been counted yet.
+    // distribution, assembly, earlier solves). The leading barrier makes
+    // the snapshot complete: every rank counts an op before entering the
+    // next collective, so once all ranks reach it, no pre-solve bytes are
+    // missing. The *trailing* barrier makes it rank-identical: split-phase
+    // ghost sends are point-to-point and count on the sender immediately
+    // (no rendezvous), so without it a fast rank could start the first
+    // exchange before a slow rank has read the counters.
     comm.barrier();
-    let comm_bytes_start = comm.stats().total_bytes();
+    let start_stats = comm.stats().snapshot();
+    comm.barrier();
     let start = Instant::now();
     let nl = mdp.local_states();
     let part = mdp.partition();
@@ -404,7 +432,24 @@ pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolve
         }
         let (inner_iters, inner_spmvs) = if !needs_eval {
             v.copy_from_slice(&tv);
-            (0, 0)
+            if opts.async_vi {
+                // Bounded-staleness sweeps (DESIGN.md §14): `buf` still
+                // holds the ghosts exchanged by the synchronized backup
+                // above, so each rank advances its own block k−1 more times
+                // against that frozen boundary data — no communication at
+                // all between synchronizations. Every rank runs the same
+                // agreed sweep count, so traces and counters stay
+                // rank-identical even though the iterates are not the
+                // synchronous ones.
+                let sweeps = opts.async_vi_staleness.max(1) - 1;
+                for _ in 0..sweeps {
+                    mdp.bellman_backup_local(&v, &mut tv, &mut policy, &mut buf, &mut q_scratch);
+                    v.copy_from_slice(&tv);
+                }
+                (sweeps, sweeps)
+            } else {
+                (0, 0)
+            }
         } else {
             // Realize the evaluation operator + RHS for the configured
             // backend; every method below sees only `&dyn Apply`.
@@ -516,9 +561,15 @@ pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolve
     }
 
     // Closing barrier: every rank has counted all solve collectives once
-    // all ranks arrive, so the delta is exact and rank-identical.
+    // all ranks arrive, so the byte delta is exact and rank-identical.
+    // (The time delta inherits µs-scale per-rank jitter from the barriers
+    // themselves — it is a diagnostic, like wall time.)
     comm.barrier();
-    let comm_bytes = comm.stats().total_bytes() - comm_bytes_start;
+    let end_stats = comm.stats().snapshot();
+    let comm_bytes = end_stats.total_bytes() - start_stats.total_bytes();
+    let comm_time_us = end_stats
+        .total_time_us()
+        .saturating_sub(start_stats.total_time_us());
 
     LocalSolveResult {
         value: v,
@@ -532,6 +583,7 @@ pub fn solve_dist(comm: &Comm, mdp: &DistMdp, opts: &SolveOptions) -> LocalSolve
         wall_time_s: start.elapsed().as_secs_f64(),
         trace,
         comm_bytes,
+        comm_time_us,
     }
 }
 
@@ -556,6 +608,7 @@ pub fn gather_result(comm: &Comm, local: LocalSolveResult) -> SolveResult {
         wall_time_s: local.wall_time_s,
         trace: local.trace,
         comm_bytes: local.comm_bytes,
+        comm_time_us: local.comm_time_us,
         gamma: local.gamma,
         ranks: comm.size(),
         threads: crate::util::par::configured_threads(),
@@ -988,6 +1041,65 @@ mod tests {
         assert_eq!(j.get("label").unwrap().as_str(), Some("test"));
         assert!(j.get("residual_trace").unwrap().as_arr().unwrap().len() >= 1);
         assert_eq!(j.get("converged").unwrap().as_bool(), Some(true));
+        // comm accounting keys the perf-smoke CI gate greps for
+        assert!(j.get("comm_bytes").is_some());
+        assert!(j.get("comm_time_us").is_some());
+    }
+
+    #[test]
+    fn async_vi_reaches_sync_solution_and_certificate() {
+        let mdp = Arc::new(random_mdp(29, 40, 3, 0.95));
+        let sync_opts = SolveOptions {
+            method: Method::Vi,
+            atol: 1e-9,
+            max_outer: 100_000,
+            ..Default::default()
+        };
+        for ranks in [1usize, 3] {
+            // Sync reference at the same rank count: k = 1 must match it
+            // bitwise (distribution itself is not bitwise vs serial — ghost
+            // column remapping changes gather order within rows).
+            let sync = solve_world(Arc::clone(&mdp), ranks, &sync_opts);
+            assert!(sync.converged);
+            for staleness in [1usize, 4, 8] {
+                let r = solve_world(
+                    Arc::clone(&mdp),
+                    ranks,
+                    &SolveOptions {
+                        async_vi: true,
+                        async_vi_staleness: staleness,
+                        ..sync_opts.clone()
+                    },
+                );
+                assert!(r.converged, "ranks={ranks} k={staleness} did not converge");
+                // The certificate is the collectively reduced residual of a
+                // synchronized backup — verify it independently of the
+                // solver's bookkeeping.
+                assert!(
+                    mdp.bellman_residual(&r.value) < 1e-8,
+                    "ranks={ranks} k={staleness} certificate violated"
+                );
+                prop::close_slices(&sync.value, &r.value, 1e-7)
+                    .unwrap_or_else(|e| panic!("ranks={ranks} k={staleness}: {e}"));
+                assert_eq!(r.policy, sync.policy, "ranks={ranks} k={staleness}");
+                // k = 1 runs zero stale sweeps: the path degenerates to
+                // synchronous VI and the iterates are bitwise identical.
+                if staleness == 1 {
+                    assert_eq!(r.value, sync.value, "ranks={ranks}");
+                    assert_eq!(r.outer_iterations, sync.outer_iterations);
+                }
+                // On one rank the "stale" sweeps are exact Bellman sweeps,
+                // so k > 1 must cut the certified outer-iteration count.
+                if ranks == 1 && staleness > 1 {
+                    assert!(
+                        r.outer_iterations < sync.outer_iterations,
+                        "k={staleness}: {} !< {}",
+                        r.outer_iterations,
+                        sync.outer_iterations
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -10,6 +10,7 @@
 
 use madupite::api::options::resolve_threads;
 use madupite::api::{MdpBuilder, Solver};
+use madupite::comm::{overlap, OverlapMode};
 use madupite::ksp::precond::PcType;
 use madupite::ksp::KspType;
 use madupite::models::{garnet::GarnetSpec, ModelGenerator};
@@ -252,6 +253,103 @@ fn nonconverged_trace_is_thread_count_independent_and_complete() {
             Some(re) => assert_eq!(re, &fp, "threads={threads} diverged"),
         }
     }
+    par::set_threads(1);
+}
+
+/// The `-comm_overlap` dimension must change *only* the communication
+/// schedule, never results (DESIGN.md §14): the split-phase exchange moves
+/// the identical ghost f64s and both schedules evaluate every row with the
+/// identical kernel over the identical chunk grid. Pinned bitwise across
+/// the method × backend × ranks × threads matrix. (`overlap::set_mode` is
+/// process-global like `par::set_threads`, hence the shared lock; Auto is
+/// restored on exit so the other tests keep the default behavior.)
+#[test]
+fn comm_overlap_on_off_bitwise_identical() {
+    let _guard = lock();
+    let mdp = Arc::new(GarnetSpec::new(400, 4, 5, 99).build_serial(0.95));
+    for ranks in [1usize, 3] {
+        for method in methods() {
+            for backend in [
+                EvalBackend::MatFree,
+                EvalBackend::Assembled,
+                EvalBackend::Bsr,
+            ] {
+                let opts = SolveOptions {
+                    method: method.clone(),
+                    eval_backend: backend,
+                    atol: 1e-9,
+                    ..Default::default()
+                };
+                for threads in [1usize, 4] {
+                    par::set_threads(threads);
+                    overlap::set_mode(OverlapMode::Off);
+                    let off = solve_world(Arc::clone(&mdp), ranks, &opts);
+                    overlap::set_mode(OverlapMode::On);
+                    let on = solve_world(Arc::clone(&mdp), ranks, &opts);
+                    assert!(
+                        off.converged && on.converged,
+                        "{}/{}/ranks={ranks}/threads={threads} did not converge",
+                        method.name(),
+                        backend.name()
+                    );
+                    assert_eq!(
+                        fingerprint(&off),
+                        fingerprint(&on),
+                        "{}/{}/ranks={ranks}/threads={threads}: overlap on diverged from off",
+                        method.name(),
+                        backend.name()
+                    );
+                }
+            }
+        }
+    }
+    overlap::set_mode(OverlapMode::Auto);
+    par::set_threads(1);
+}
+
+/// Bounded-staleness async VI is deterministic too: the sweep schedule is
+/// collectively agreed, the stale sweeps run on the fixed chunk grid, and
+/// the overlap schedule of the synchronized backups is bitwise-neutral —
+/// so for a fixed (ranks, staleness) the entire solve is bitwise identical
+/// across thread counts and overlap modes.
+#[test]
+fn async_vi_bitwise_across_threads_and_overlap() {
+    let _guard = lock();
+    let mdp = Arc::new(GarnetSpec::new(400, 4, 5, 99).build_serial(0.95));
+    let opts = SolveOptions {
+        method: Method::Vi,
+        async_vi: true,
+        async_vi_staleness: 4,
+        atol: 1e-9,
+        max_outer: 100_000,
+        ..Default::default()
+    };
+    for ranks in [1usize, 3] {
+        let mut reference = None;
+        for threads in [1usize, 4] {
+            for mode in [OverlapMode::Off, OverlapMode::On] {
+                par::set_threads(threads);
+                overlap::set_mode(mode);
+                let r = solve_world(Arc::clone(&mdp), ranks, &opts);
+                assert!(
+                    r.converged,
+                    "async-vi/ranks={ranks}/threads={threads}/overlap={} did not converge",
+                    mode.name()
+                );
+                let fp = fingerprint(&r);
+                match &reference {
+                    None => reference = Some(fp),
+                    Some(re) => assert_eq!(
+                        re,
+                        &fp,
+                        "async-vi/ranks={ranks}: threads={threads}/overlap={} diverged",
+                        mode.name()
+                    ),
+                }
+            }
+        }
+    }
+    overlap::set_mode(OverlapMode::Auto);
     par::set_threads(1);
 }
 
