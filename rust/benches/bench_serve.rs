@@ -1,0 +1,114 @@
+//! E9 — policy-serving saturation (DESIGN.md §15): queries/sec through the
+//! `madupite::serve` stack across the acceptance matrix
+//!
+//!   store backend {memory, disk} × cache entries {0, 64, unbounded}
+//!   × client threads {1, 4}.
+//!
+//! Workload: three solved maze policies persisted to the store; every query
+//! is the full serving path — `PolicyStore::get` (cache hit or sink read +
+//! decode + validation) followed by an `action` and a `value` lookup. With
+//! `cache=0` every query pays the decode, isolating the cache's
+//! contribution; `disk/cache=0` additionally pays the filesystem read, the
+//! worst case a serving deployment can hit.
+//!
+//! Reported metric: `qps` (queries per second), merged into `BENCH_CI.json`
+//! by the perf-smoke job with the same drop-out guard as the other suites.
+
+use madupite::api::{run_solve, MdpBuilder};
+use madupite::serve::{PolicyStore, QueryEngine};
+use madupite::util::args::Options;
+use madupite::util::benchkit::Suite;
+use std::time::Instant;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join("madupite-bench-serve")
+        .join(format!("{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run `clients` threads, each issuing `per_client` full-path queries
+/// (store get + action + value); returns achieved queries/sec.
+fn saturate(store: &PolicyStore, fps: &[String], clients: usize, per_client: usize) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            scope.spawn(move || {
+                // cheap per-thread LCG for state selection
+                let mut x: u64 = 0x9e3779b97f4a7c15 ^ (c as u64);
+                for i in 0..per_client {
+                    let fp = &fps[(c + i) % fps.len()];
+                    let artifact = store.get(fp).unwrap();
+                    let engine = QueryEngine::new(artifact);
+                    x = x
+                        .wrapping_mul(6364136223846793005)
+                        .wrapping_add(1442695040888963407);
+                    let state = (x % engine.artifact().n_states as u64) as usize;
+                    let a = engine.action(state).unwrap();
+                    let v = engine.value(state).unwrap();
+                    assert!(a < engine.artifact().n_actions && v.is_finite());
+                }
+            });
+        }
+    });
+    (clients * per_client) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let mut suite = Suite::new("E9 serve saturation");
+
+    // Three distinct policies (gamma sweep) over a small maze — enough to
+    // exercise cache churn without dominating the run with solve time.
+    let outcomes: Vec<_> = ["0.9", "0.95", "0.99"]
+        .iter()
+        .map(|gamma| {
+            let db = Options::parse(
+                ["-model", "maze", "-rows", "12", "-cols", "12", "-gamma", gamma]
+                    .iter()
+                    .map(|s| s.to_string()),
+            );
+            let builder = MdpBuilder::from_options(&db).unwrap();
+            run_solve(&builder, &db).unwrap()
+        })
+        .collect();
+    println!(
+        "workload: {} maze policies × (get + action + value) per query",
+        outcomes.len()
+    );
+
+    let per_client = 2_000usize;
+    for backend in ["memory", "disk"] {
+        for (cache_label, cache) in [("0", 0usize), ("64", 64), ("unbounded", usize::MAX)] {
+            // One store per (backend, cache) point, shared across the
+            // thread sweep so the disk artifacts are written once.
+            let store = match backend {
+                "memory" => PolicyStore::in_memory(cache),
+                _ => PolicyStore::on_disk(tmpdir(&format!("c{cache_label}")), cache).unwrap(),
+            };
+            let fps: Vec<String> = outcomes
+                .iter()
+                .map(|o| store.put_outcome(o).unwrap())
+                .collect();
+            let store = std::sync::Arc::new(store);
+            for clients in [1usize, 4] {
+                let store = std::sync::Arc::clone(&store);
+                let fps = fps.clone();
+                suite.case(
+                    &format!("serve_qps/backend={backend}/cache={cache_label}/threads={clients}"),
+                    move || {
+                        let qps = saturate(&store, &fps, clients, per_client);
+                        assert!(store.cache_len() <= store.cache_capacity());
+                        vec![
+                            ("qps".to_string(), qps),
+                            ("clients".to_string(), clients as f64),
+                            ("cache_entries".to_string(), store.cache_len() as f64),
+                        ]
+                    },
+                );
+            }
+        }
+    }
+
+    suite.finish();
+}

@@ -38,6 +38,9 @@ pub enum OptionScope {
     Generate,
     /// Tooling commands (`info`, `artifacts`).
     Tools,
+    /// Policy serving (`-serve_store` on `solve`; the `madupite-serve`
+    /// binary).
+    Serve,
 }
 
 /// One entry of the options database schema.
@@ -306,6 +309,25 @@ pub const OPTION_TABLE: &[OptionSpec] = &[
         help: "artifact directory (artifacts)",
         scope: OptionScope::Tools,
     },
+    // -- serve --------------------------------------------------------------
+    OptionSpec {
+        key: "serve_store",
+        value: "<path>",
+        help: "policy store directory: solve persists there, madupite-serve serves from it",
+        scope: OptionScope::Serve,
+    },
+    OptionSpec {
+        key: "serve_cache_entries",
+        value: "<n>",
+        help: "decoded artifacts the serving LRU may hold (0 disables; default 64)",
+        scope: OptionScope::Serve,
+    },
+    OptionSpec {
+        key: "serve_threads",
+        value: "<n>",
+        help: "worker threads for batched serve lookups (default 1)",
+        scope: OptionScope::Serve,
+    },
 ];
 
 /// Look up a key in [`OPTION_TABLE`].
@@ -537,6 +559,24 @@ pub fn resolve_threads(db: &Options) -> Result<usize, ApiError> {
     }
 }
 
+/// Resolve `-serve_cache_entries`: how many decoded artifacts the serving
+/// LRU may hold. 0 disables caching entirely; default 64.
+pub fn resolve_serve_cache_entries(db: &Options) -> Result<usize, ApiError> {
+    db.get_usize("serve_cache_entries", 64).map_err(ApiError::from)
+}
+
+/// Resolve `-serve_threads`: worker threads for batched serve lookups.
+/// Must be >= 1; default 1.
+pub fn resolve_serve_threads(db: &Options) -> Result<usize, ApiError> {
+    let t = db.get_usize("serve_threads", 1)?;
+    if t == 0 {
+        return Err(ApiError(
+            "-serve_threads must be >= 1 (queries cannot run on 0 threads)".into(),
+        ));
+    }
+    Ok(t)
+}
+
 /// Resolve the discount factor: `-gamma` in the database wins, then the
 /// builder-level `fallback`, then the crate default 0.99. Validated to
 /// [0, 1) — a "bad gamma" is an error here, never a panic downstream.
@@ -611,6 +651,32 @@ mod tests {
         keys.sort_unstable();
         keys.dedup();
         assert_eq!(keys.len(), n, "duplicate keys in OPTION_TABLE");
+    }
+
+    #[test]
+    fn serve_options_resolve() {
+        assert_eq!(resolve_serve_cache_entries(&db(&[])).unwrap(), 64);
+        assert_eq!(
+            resolve_serve_cache_entries(&db(&["-serve_cache_entries", "0"])).unwrap(),
+            0
+        );
+        assert_eq!(resolve_serve_threads(&db(&[])).unwrap(), 1);
+        assert_eq!(
+            resolve_serve_threads(&db(&["-serve_threads", "8"])).unwrap(),
+            8
+        );
+        assert!(resolve_serve_threads(&db(&["-serve_threads", "0"])).is_err());
+        assert!(resolve_serve_cache_entries(&db(&["-serve_cache_entries", "many"])).is_err());
+    }
+
+    #[test]
+    fn serve_keys_in_table_with_did_you_mean() {
+        for key in ["serve_store", "serve_cache_entries", "serve_threads"] {
+            assert!(spec_for(key).is_some(), "{key} missing from OPTION_TABLE");
+            assert_eq!(spec_for(key).unwrap().scope, OptionScope::Serve);
+        }
+        let err = check_key("serve_stroe").unwrap_err();
+        assert!(err.0.contains("serve_store"), "{err}");
     }
 
     #[test]

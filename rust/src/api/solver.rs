@@ -398,6 +398,14 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
     if let Some(path) = db.get("write_json_metadata") {
         outcome.write_json_metadata(path)?;
     }
+    if let Some(dir) = db.get("serve_store") {
+        let cache = options::resolve_serve_cache_entries(db)?;
+        let store = crate::serve::PolicyStore::on_disk(dir, cache)
+            .map_err(|e| ApiError(format!("serve store {dir}: {e}")))?;
+        store
+            .put_outcome(&outcome)
+            .map_err(|e| ApiError(format!("serve store {dir}: {e}")))?;
+    }
     Ok(outcome)
 }
 
@@ -446,6 +454,12 @@ impl SolveOutcome {
 
     /// Solve metadata as JSON: model shape, resolved solver configuration,
     /// and the full result report (madupite's `writeJSONmetadata`).
+    ///
+    /// Key order is fixed and documented: [`Json`] objects are `BTreeMap`s,
+    /// so keys serialize in sorted (lexicographic) order at every nesting
+    /// level — top level `madupite_version`, `model`, `result`, `solver`.
+    /// The serialization is therefore byte-deterministic for a given
+    /// outcome; `tests/serve.rs` pins the exact bytes with a golden test.
     pub fn metadata_json(&self) -> Json {
         Json::obj(vec![
             ("madupite_version", Json::str(crate::VERSION)),
@@ -522,11 +536,73 @@ impl SolveOutcome {
     }
 
     /// Write [`Self::metadata_json`] pretty-printed (madupite's
-    /// `writeJSONmetadata`).
+    /// `writeJSONmetadata`). Emitted keys are in the fixed sorted order
+    /// documented on [`Self::metadata_json`], 2-space indented, with a
+    /// trailing newline — the bytes are stable across runs and platforms.
     pub fn write_json_metadata(&self, path: impl AsRef<Path>) -> Result<(), ApiError> {
         let mut text = self.metadata_json().to_string_pretty();
         text.push('\n');
         write_text(path.as_ref(), &text)
+    }
+
+    /// The canonical fingerprint document this outcome is keyed by in a
+    /// [`crate::serve::PolicyStore`]: model shape, the solver configuration
+    /// that determines the result, and FNV-1a digests of the value and
+    /// policy payloads. Serialized compact with sorted keys (top level
+    /// `format`, `model`, `policy_digest`, `solver`, `value_digest`), so
+    /// the bytes — and hence [`Self::fingerprint`] — cannot drift.
+    ///
+    /// The execution shape (`ranks`, `threads`, `comm_overlap`, async-VI
+    /// staleness) is deliberately *excluded*: `tests/par_determinism.rs`
+    /// pins results bitwise identical across all of it, so a policy solved
+    /// on 4 ranks is served under the same key as the single-rank solve.
+    pub fn fingerprint_json(&self) -> Json {
+        use crate::serve::fingerprint::{fnv1a64_f64s, fnv1a64_usizes, hex16};
+        Json::obj(vec![
+            ("format", Json::str("madupite-artifact-fp/v1")),
+            (
+                "model",
+                Json::obj(vec![
+                    ("n_states", Json::int(self.n_states as i64)),
+                    ("n_actions", Json::int(self.n_actions as i64)),
+                    ("gamma", Json::num(self.gamma)),
+                    ("discount_mode", Json::str(self.discount_mode.name())),
+                    ("objective", Json::str(self.objective.name())),
+                ]),
+            ),
+            (
+                "solver",
+                Json::obj(vec![
+                    ("method", Json::str(self.options.method.name())),
+                    ("eval_backend", Json::str(self.options.eval_backend.name())),
+                    (
+                        "inner_precision",
+                        Json::str(self.options.inner_precision.name()),
+                    ),
+                    ("atol", Json::num(self.options.atol)),
+                    ("alpha", Json::num(self.options.alpha)),
+                    ("adaptive_forcing", Json::Bool(self.options.adaptive_forcing)),
+                    ("max_iter_pi", Json::int(self.options.max_outer as i64)),
+                    ("max_iter_ksp", Json::int(self.options.max_inner as i64)),
+                ]),
+            ),
+            (
+                "value_digest",
+                Json::str(hex16(fnv1a64_f64s(&self.result.value))),
+            ),
+            (
+                "policy_digest",
+                Json::str(hex16(fnv1a64_usizes(&self.result.policy))),
+            ),
+        ])
+    }
+
+    /// The 16-hex-digit serving fingerprint of this outcome: FNV-1a over
+    /// the compact serialization of [`Self::fingerprint_json`]. This is the
+    /// artifact key under `-serve_store` and in the serve protocol.
+    pub fn fingerprint(&self) -> String {
+        use crate::serve::fingerprint::{fnv1a64, hex16};
+        hex16(fnv1a64(self.fingerprint_json().to_string().as_bytes()))
     }
 }
 

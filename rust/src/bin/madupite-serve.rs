@@ -1,0 +1,92 @@
+//! madupite-serve — answer policy queries from a persisted policy store.
+//!
+//! A thin shell over [`madupite::serve`]: it opens the on-disk store named
+//! by `-serve_store` and speaks the line-delimited JSON protocol over
+//! stdin/stdout (one request line in, one response line out — see
+//! `madupite::serve::protocol`). Typical loop:
+//!
+//! ```text
+//! madupite solve -model maze -rows 20 -cols 20 -serve_store store/
+//! echo '{"op": "list"}' | madupite-serve -serve_store store/
+//! echo '{"op": "action", "fingerprint": "<fp>", "states": [0, 1]}' \
+//!     | madupite-serve -serve_store store/
+//! ```
+//!
+//! Options come from the same database as the `madupite` CLI (same keys,
+//! same did-you-mean on typos): `-serve_store <dir>` (required),
+//! `-serve_cache_entries <n>`, `-serve_threads <n>`. Pass a model source
+//! (`-model`/`-file`, plus its parameters) to enable `q_values` queries —
+//! without one the server answers `action`/`value`/`meta`/`list` only.
+
+use madupite::api::{options, MdpBuilder};
+use madupite::serve::{PolicyStore, ServeSession};
+use madupite::util::args::Options;
+use std::io::{BufRead, Write};
+use std::sync::Arc;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<(), String> {
+    let db = Options::from_env();
+    if let Some(first) = db.positional().first() {
+        return Err(format!(
+            "stray token '{first}': madupite-serve takes only '-key value' options"
+        ));
+    }
+    options::validate_keys(&db).map_err(|e| e.to_string())?;
+    let dir = db
+        .get("serve_store")
+        .ok_or("madupite-serve requires -serve_store <dir>")?;
+    let cache = options::resolve_serve_cache_entries(&db).map_err(|e| e.to_string())?;
+    let threads = options::resolve_serve_threads(&db).map_err(|e| e.to_string())?;
+    let store = PolicyStore::on_disk(dir, cache).map_err(|e| e.to_string())?;
+    let mut session = ServeSession::new(store, threads);
+
+    // A model source is optional: it only gates q_values. Note the
+    // explicit has() checks — MdpBuilder::from_options defaults to the
+    // maze model, and a default model nobody asked for must not be
+    // silently attached to arbitrary artifacts.
+    if db.has("file") || db.has("model") {
+        let builder = MdpBuilder::from_options(&db).map_err(|e| e.to_string())?;
+        let builder = if db.has("file") {
+            builder // gamma/objective come from the .mdpb header
+        } else {
+            let gamma =
+                options::resolve_gamma(&db, builder.gamma_value()).map_err(|e| e.to_string())?;
+            let objective = options::resolve_objective(&db, builder.objective_value())
+                .map_err(|e| e.to_string())?;
+            builder.gamma(gamma).objective(objective)
+        };
+        let model = builder.build_serial().map_err(|e| e.to_string())?;
+        session = session.with_model(Arc::new(model));
+    }
+
+    let keys = session.store().keys().map_err(|e| e.to_string())?;
+    eprintln!(
+        "madupite-serve {}: store {dir} ({} artifacts, cache {}, {} threads); \
+         one JSON request per stdin line",
+        madupite::VERSION,
+        keys.len(),
+        cache,
+        threads
+    );
+
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    for line in stdin.lock().lines() {
+        let line = line.map_err(|e| format!("reading stdin: {e}"))?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let response = session.handle_line(&line);
+        writeln!(out, "{response}").map_err(|e| format!("writing stdout: {e}"))?;
+        out.flush().map_err(|e| format!("flushing stdout: {e}"))?;
+    }
+    Ok(())
+}

@@ -9,8 +9,9 @@
 //!   world ([`comm`]), row-partitioned sparse linear algebra ([`linalg`]),
 //!   Krylov inner solvers ([`ksp`]), the inexact-policy-iteration outer
 //!   solver family ([`solver`]), benchmark model generators ([`models`]),
-//!   baselines ([`baseline`]) and the PJRT dense-block accelerator
-//!   ([`runtime`]).
+//!   baselines ([`baseline`]), the PJRT dense-block accelerator
+//!   ([`runtime`]) and the policy-serving layer ([`serve`]) that persists
+//!   and queries solved policies.
 //! - **Layer 2**: JAX compute graphs (`python/compile/model.py`) AOT-lowered
 //!   to HLO text artifacts loaded by [`runtime`].
 //! - **Layer 1**: Pallas Bellman kernels (`python/compile/kernels/`)
@@ -33,6 +34,7 @@ pub mod linalg;
 pub mod mdp;
 pub mod models;
 pub mod runtime;
+pub mod serve;
 pub mod solver;
 pub mod util;
 

@@ -13,6 +13,10 @@
 //! madupite artifacts [-dir artifacts]
 //! ```
 //!
+//! Solves can additionally persist to a policy store (`-serve_store <dir>`)
+//! which the companion `madupite-serve` binary answers queries from — see
+//! the "Serving solved policies" guide chapter.
+//!
 //! Options are ingested lowest-priority-first from the `MADUPITE_OPTIONS`
 //! environment variable, then `-options_file <path>`, then the command
 //! line. Unknown `-keys` are hard errors with a nearest-key suggestion.
@@ -158,6 +162,7 @@ fn print_help() {
         (OptionScope::Output, "outputs (solve)"),
         (OptionScope::Generate, "generate"),
         (OptionScope::Tools, "tools"),
+        (OptionScope::Serve, "serving (solve -serve_store; madupite-serve)"),
     ];
     for (scope, title) in sections {
         println!("\n{title} options:");
@@ -210,6 +215,9 @@ fn cmd_solve(opts: &Options) -> Result<(), String> {
         if let Some(path) = opts.get(key) {
             println!("wrote {path}");
         }
+    }
+    if let Some(dir) = opts.get("serve_store") {
+        println!("persisted {} to {dir}", outcome.fingerprint());
     }
     Ok(())
 }

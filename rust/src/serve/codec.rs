@@ -1,0 +1,399 @@
+//! The one serde path for policy artifacts: the `.mdpa` v1 binary format.
+//!
+//! Every sink backend ([`crate::serve::store`]) moves the bytes produced
+//! here — the in-memory map and the on-disk directory (and any future
+//! S3-style object sink) share this single codec, so a round-trip bug
+//! cannot hide in one backend.
+//!
+//! The format follows the `.mdpb` v1/v2/v3 header discipline
+//! (`crate::mdp::io`): little-endian fixed-width fields, a magic + version
+//! prefix, and an *exact* expected-file-length check (computed in `u128` so
+//! a corrupted count cannot overflow the check itself). All failures are
+//! typed [`ServeError`]s.
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------
+//!      0     4  magic "MDPA"
+//!      4     4  version (u32, = 1)
+//!      8     8  fingerprint (u64, FNV-1a of the meta document)
+//!     16     8  n_states (u64)
+//!     24     8  n_actions (u64)
+//!     32     8  gamma (f64)
+//!     40     8  objective code (u64: 0 = min, 1 = max)
+//!     48     8  discount mode code (u64: 0/1/2, as .mdpb v3)
+//!     56     8  meta_len (u64, bytes)
+//!     64    8n  value vector V* (n_states × f64)
+//!   +8n     8n  policy π* (n_states × u64)
+//!  +16n     meta_len  canonical fingerprint JSON (UTF-8)
+//! ```
+//!
+//! Decoding is self-verifying beyond the structural checks: the trailing
+//! meta document embeds FNV-1a digests of the value and policy payloads,
+//! the header fingerprint is the FNV-1a of the meta bytes, and the header's
+//! model fields must agree with the meta's. A flipped byte anywhere —
+//! header, payload, or metadata — therefore surfaces as a typed error, not
+//! a silently wrong decision served to a client.
+
+use crate::api::SolveOutcome;
+use crate::comm::codec::{decode_f64s, decode_usizes, encode_f64s, encode_usizes};
+use crate::mdp::{DiscountMode, Objective};
+use crate::util::json::Json;
+
+use super::fingerprint::{fnv1a64, fnv1a64_f64s, fnv1a64_usizes, hex16};
+use super::ServeError;
+
+/// Artifact magic bytes.
+pub const MAGIC: &[u8; 4] = b"MDPA";
+/// Current artifact format version.
+pub const VERSION: u32 = 1;
+/// Fixed header length in bytes.
+pub const HEADER_LEN: usize = 64;
+
+/// A decoded policy artifact: everything a query engine needs to answer
+/// `(state) → action / value` without the solver or the model in memory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyArtifact {
+    /// FNV-1a fingerprint of [`Self::meta`] — the artifact's store key.
+    pub fingerprint: u64,
+    /// Global state count of the solved MDP.
+    pub n_states: usize,
+    /// Action count of the solved MDP.
+    pub n_actions: usize,
+    /// Uniform discount bound the solve ran with.
+    pub gamma: f64,
+    /// Optimization sense the solve ran with.
+    pub objective: Objective,
+    /// Discount representation the solve ran with.
+    pub discount_mode: DiscountMode,
+    /// Optimal value vector V* (one entry per state).
+    pub value: Vec<f64>,
+    /// Optimal policy π* (one action index per state).
+    pub policy: Vec<usize>,
+    /// Canonical fingerprint JSON (compact, sorted keys) — the document
+    /// whose FNV-1a hash is [`Self::fingerprint`].
+    pub meta: String,
+}
+
+fn objective_code(o: Objective) -> u64 {
+    match o {
+        Objective::Min => 0,
+        Objective::Max => 1,
+    }
+}
+
+fn objective_from_code(code: u64) -> Result<Objective, ServeError> {
+    match code {
+        0 => Ok(Objective::Min),
+        1 => Ok(Objective::Max),
+        other => Err(ServeError::Corrupt(format!(
+            "objective code {other} is not 0 (min) or 1 (max)"
+        ))),
+    }
+}
+
+impl PolicyArtifact {
+    /// Build the artifact for a solve outcome. The meta document is the
+    /// outcome's canonical fingerprint JSON, so the artifact key equals
+    /// [`SolveOutcome::fingerprint`].
+    pub fn from_outcome(outcome: &SolveOutcome) -> PolicyArtifact {
+        let meta = outcome.fingerprint_json().to_string();
+        let fingerprint = fnv1a64(meta.as_bytes());
+        PolicyArtifact {
+            fingerprint,
+            n_states: outcome.n_states,
+            n_actions: outcome.n_actions,
+            gamma: outcome.gamma,
+            objective: outcome.objective,
+            discount_mode: outcome.discount_mode,
+            value: outcome.result.value.clone(),
+            policy: outcome.result.policy.clone(),
+            meta,
+        }
+    }
+
+    /// Canonical 16-hex-digit spelling of [`Self::fingerprint`].
+    pub fn fingerprint_hex(&self) -> String {
+        hex16(self.fingerprint)
+    }
+
+    /// The parsed meta document (model shape, solver configuration,
+    /// payload digests).
+    pub fn meta_json(&self) -> Result<Json, ServeError> {
+        Json::parse(&self.meta)
+            .map_err(|e| ServeError::Corrupt(format!("artifact metadata is not valid JSON: {e}")))
+    }
+
+    /// Encode to `.mdpa` v1 bytes (the inverse of [`decode`]).
+    pub fn encode(&self) -> Vec<u8> {
+        let meta = self.meta.as_bytes();
+        let mut out = Vec::with_capacity(HEADER_LEN + 16 * self.n_states + meta.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.fingerprint.to_le_bytes());
+        out.extend_from_slice(&(self.n_states as u64).to_le_bytes());
+        out.extend_from_slice(&(self.n_actions as u64).to_le_bytes());
+        out.extend_from_slice(&self.gamma.to_le_bytes());
+        out.extend_from_slice(&objective_code(self.objective).to_le_bytes());
+        out.extend_from_slice(&self.discount_mode.code().to_le_bytes());
+        out.extend_from_slice(&(meta.len() as u64).to_le_bytes());
+        out.extend_from_slice(&encode_f64s(&self.value));
+        out.extend_from_slice(&encode_usizes(&self.policy));
+        out.extend_from_slice(meta);
+        out
+    }
+}
+
+fn read_u64(bytes: &[u8], offset: usize) -> u64 {
+    u64::from_le_bytes(bytes[offset..offset + 8].try_into().expect("bounds checked"))
+}
+
+/// Decode and fully validate `.mdpa` v1 bytes. Structural checks (magic,
+/// version, exact length) come first; then the payload digests and the
+/// header/meta cross-checks, so any single flipped byte is caught.
+pub fn decode(bytes: &[u8]) -> Result<PolicyArtifact, ServeError> {
+    if bytes.len() < HEADER_LEN {
+        return Err(ServeError::Corrupt(format!(
+            "truncated artifact: {} bytes, header alone is {HEADER_LEN}",
+            bytes.len()
+        )));
+    }
+    if &bytes[0..4] != MAGIC {
+        return Err(ServeError::Corrupt(format!(
+            "bad magic {:?} (expected {MAGIC:?})",
+            &bytes[0..4]
+        )));
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().expect("bounds checked"));
+    if version != VERSION {
+        return Err(ServeError::BadVersion {
+            found: version,
+            expected: VERSION,
+        });
+    }
+    let fingerprint = read_u64(bytes, 8);
+    let n_states_u64 = read_u64(bytes, 16);
+    let n_actions_u64 = read_u64(bytes, 24);
+    let gamma = f64::from_le_bytes(bytes[32..40].try_into().expect("bounds checked"));
+    let objective = objective_from_code(read_u64(bytes, 40))?;
+    let discount_mode = DiscountMode::from_code(read_u64(bytes, 48))
+        .map_err(ServeError::Corrupt)?;
+    let meta_len = read_u64(bytes, 56);
+
+    // Exact expected-length check, computed in u128 so corrupted counts
+    // cannot overflow the check itself (the .mdpb discipline).
+    let expected = HEADER_LEN as u128 + 16 * n_states_u64 as u128 + meta_len as u128;
+    if bytes.len() as u128 != expected {
+        return Err(ServeError::Corrupt(format!(
+            "length mismatch: file is {} bytes, header implies {expected} \
+             (n_states={n_states_u64}, meta_len={meta_len}) — truncated or corrupted",
+            bytes.len()
+        )));
+    }
+    let n_states = n_states_u64 as usize;
+    let n_actions = n_actions_u64 as usize;
+    if n_actions == 0 {
+        return Err(ServeError::Corrupt("n_actions is 0".into()));
+    }
+
+    let value_end = HEADER_LEN + 8 * n_states;
+    let policy_end = value_end + 8 * n_states;
+    let value = decode_f64s(&bytes[HEADER_LEN..value_end]);
+    let policy = decode_usizes(&bytes[value_end..policy_end]);
+    for (s, &a) in policy.iter().enumerate() {
+        if a >= n_actions {
+            return Err(ServeError::Corrupt(format!(
+                "policy action {a} at state {s} is out of range (n_actions={n_actions})"
+            )));
+        }
+    }
+    let meta_bytes = &bytes[policy_end..];
+    let meta = std::str::from_utf8(meta_bytes)
+        .map_err(|e| ServeError::Corrupt(format!("artifact metadata is not UTF-8: {e}")))?
+        .to_string();
+
+    // Self-verification: the header fingerprint is the hash of the meta
+    // document, and the meta embeds digests of the payload vectors.
+    if fnv1a64(meta_bytes) != fingerprint {
+        return Err(ServeError::Corrupt(format!(
+            "header fingerprint {} does not hash the artifact metadata ({})",
+            hex16(fingerprint),
+            hex16(fnv1a64(meta_bytes))
+        )));
+    }
+    let meta_doc = Json::parse(&meta)
+        .map_err(|e| ServeError::Corrupt(format!("artifact metadata is not valid JSON: {e}")))?;
+    let digest_field = |key: &str| -> Result<String, ServeError> {
+        meta_doc
+            .get(key)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| ServeError::Corrupt(format!("metadata is missing '{key}'")))
+    };
+    if digest_field("value_digest")? != hex16(fnv1a64_f64s(&value)) {
+        return Err(ServeError::Corrupt(
+            "value payload digest mismatch — the value vector was modified".into(),
+        ));
+    }
+    if digest_field("policy_digest")? != hex16(fnv1a64_usizes(&policy)) {
+        return Err(ServeError::Corrupt(
+            "policy payload digest mismatch — the policy vector was modified".into(),
+        ));
+    }
+    // Header/meta cross-checks: the fixed header fields must agree with the
+    // (digest-protected) meta document, so header flips cannot slip by.
+    let model = meta_doc
+        .get("model")
+        .ok_or_else(|| ServeError::Corrupt("metadata is missing 'model'".into()))?;
+    let model_u64 = |key: &str| -> Result<u64, ServeError> {
+        model
+            .get(key)
+            .and_then(Json::as_f64)
+            .map(|x| x as u64)
+            .ok_or_else(|| ServeError::Corrupt(format!("metadata model is missing '{key}'")))
+    };
+    if model_u64("n_states")? != n_states_u64 || model_u64("n_actions")? != n_actions_u64 {
+        return Err(ServeError::Corrupt(
+            "header model shape disagrees with artifact metadata".into(),
+        ));
+    }
+    let meta_gamma = model
+        .get("gamma")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| ServeError::Corrupt("metadata model is missing 'gamma'".into()))?;
+    if meta_gamma.to_bits() != gamma.to_bits() {
+        return Err(ServeError::Corrupt(
+            "header gamma disagrees with artifact metadata".into(),
+        ));
+    }
+    let model_str = |key: &str| -> Result<String, ServeError> {
+        model
+            .get(key)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| ServeError::Corrupt(format!("metadata model is missing '{key}'")))
+    };
+    if model_str("objective")? != objective.name()
+        || model_str("discount_mode")? != discount_mode.name()
+    {
+        return Err(ServeError::Corrupt(
+            "header objective/discount mode disagrees with artifact metadata".into(),
+        ));
+    }
+
+    Ok(PolicyArtifact {
+        fingerprint,
+        n_states,
+        n_actions,
+        gamma,
+        objective,
+        discount_mode,
+        value,
+        policy,
+        meta,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{MdpBuilder, Solver};
+
+    fn solved() -> SolveOutcome {
+        let builder = MdpBuilder::from_fillers(
+            3,
+            2,
+            |s, a| match a {
+                0 => vec![(s, 1.0)],
+                _ => vec![(0, 1.0)],
+            },
+            |s, a| if a == 0 { s as f64 } else { 0.5 },
+        )
+        .gamma(0.5);
+        Solver::new(builder).solve().unwrap()
+    }
+
+    #[test]
+    fn roundtrip_bitwise() {
+        let outcome = solved();
+        let art = PolicyArtifact::from_outcome(&outcome);
+        let bytes = art.encode();
+        let back = decode(&bytes).unwrap();
+        assert_eq!(back, art);
+        // payload bitwise equality against the outcome itself
+        for (a, b) in back.value.iter().zip(outcome.result.value.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.policy, outcome.result.policy);
+        assert_eq!(back.fingerprint_hex(), outcome.fingerprint());
+    }
+
+    #[test]
+    fn truncation_is_typed() {
+        let bytes = PolicyArtifact::from_outcome(&solved()).encode();
+        for cut in [0, 10, HEADER_LEN - 1, HEADER_LEN + 5, bytes.len() - 1] {
+            match decode(&bytes[..cut]) {
+                Err(ServeError::Corrupt(msg)) => {
+                    assert!(
+                        msg.contains("truncated") || msg.contains("length mismatch"),
+                        "cut={cut}: {msg}"
+                    );
+                }
+                other => panic!("cut={cut}: expected Corrupt, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn flipped_version_byte_is_typed() {
+        let mut bytes = PolicyArtifact::from_outcome(&solved()).encode();
+        bytes[4] ^= 0xFF;
+        match decode(&bytes) {
+            Err(ServeError::BadVersion { found, expected }) => {
+                assert_eq!(expected, VERSION);
+                assert_ne!(found, VERSION);
+            }
+            other => panic!("expected BadVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut bytes = PolicyArtifact::from_outcome(&solved()).encode();
+        bytes[0] = b'X';
+        assert!(matches!(decode(&bytes), Err(ServeError::Corrupt(_))));
+    }
+
+    #[test]
+    fn payload_flip_is_caught_by_digest() {
+        let mut bytes = PolicyArtifact::from_outcome(&solved()).encode();
+        bytes[HEADER_LEN + 3] ^= 0x40; // inside the value vector
+        match decode(&bytes) {
+            Err(ServeError::Corrupt(msg)) => assert!(msg.contains("digest"), "{msg}"),
+            other => panic!("expected digest Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_gamma_flip_is_caught_by_cross_check() {
+        let mut bytes = PolicyArtifact::from_outcome(&solved()).encode();
+        bytes[33] ^= 0x01; // inside the header gamma field
+        match decode(&bytes) {
+            Err(ServeError::Corrupt(msg)) => assert!(msg.contains("gamma"), "{msg}"),
+            other => panic!("expected gamma Corrupt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn out_of_range_policy_is_typed() {
+        // Hand-build an outcome whose policy is internally inconsistent:
+        // digests then match the bad payload, so the range check must fire.
+        let mut outcome = solved();
+        outcome.result.policy[0] = 7; // n_actions is 2
+        let bytes = PolicyArtifact::from_outcome(&outcome).encode();
+        match decode(&bytes) {
+            Err(ServeError::Corrupt(msg)) => assert!(msg.contains("out of range"), "{msg}"),
+            other => panic!("expected range Corrupt, got {other:?}"),
+        }
+    }
+}

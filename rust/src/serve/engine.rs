@@ -1,0 +1,242 @@
+//! [`QueryEngine`] — answer `(state) → action / value / q-values` lookups
+//! from a decoded [`PolicyArtifact`].
+//!
+//! The engine is read-only and shares the artifact by `Arc`, so one decoded
+//! artifact serves arbitrarily many concurrent client threads without
+//! copies. Batch queries split the requested states into contiguous chunks
+//! — one per worker thread — and concatenate the chunk results in order, so
+//! the response is byte-identical regardless of `-serve_threads` (the same
+//! thread-count-independence discipline the solver's reductions follow).
+//!
+//! Q-value queries need the transition model (the artifact stores only the
+//! optimal value and policy); attach one with [`QueryEngine::with_model`],
+//! otherwise `q_values` is a typed [`ServeError::BadRequest`].
+
+use std::sync::Arc;
+
+use crate::mdp::Mdp;
+
+use super::codec::PolicyArtifact;
+use super::ServeError;
+
+/// Read-only query engine over one decoded policy artifact.
+#[derive(Clone)]
+pub struct QueryEngine {
+    artifact: Arc<PolicyArtifact>,
+    model: Option<Arc<Mdp>>,
+}
+
+impl QueryEngine {
+    /// Engine over an artifact alone (`action` and `value` queries).
+    pub fn new(artifact: Arc<PolicyArtifact>) -> QueryEngine {
+        QueryEngine {
+            artifact,
+            model: None,
+        }
+    }
+
+    /// Engine with a transition model attached, enabling `q_values`.
+    pub fn with_model(artifact: Arc<PolicyArtifact>, model: Arc<Mdp>) -> QueryEngine {
+        QueryEngine {
+            artifact,
+            model: Some(model),
+        }
+    }
+
+    /// The artifact this engine serves.
+    pub fn artifact(&self) -> &Arc<PolicyArtifact> {
+        &self.artifact
+    }
+
+    fn check_state(&self, state: usize) -> Result<(), ServeError> {
+        if state >= self.artifact.n_states {
+            return Err(ServeError::BadRequest(format!(
+                "state {state} out of range (artifact has {} states)",
+                self.artifact.n_states
+            )));
+        }
+        Ok(())
+    }
+
+    /// Optimal action at `state`.
+    pub fn action(&self, state: usize) -> Result<usize, ServeError> {
+        self.check_state(state)?;
+        Ok(self.artifact.policy[state])
+    }
+
+    /// Optimal value at `state` (bitwise the solver's value).
+    pub fn value(&self, state: usize) -> Result<f64, ServeError> {
+        self.check_state(state)?;
+        Ok(self.artifact.value[state])
+    }
+
+    /// Q-values of every action at `state`, computed against the attached
+    /// model with the artifact's value function: `q(s,a) = c(s,a) +
+    /// γ(s,a) · Σ_j P(s,a,j) v(j)`.
+    pub fn q_values(&self, state: usize) -> Result<Vec<f64>, ServeError> {
+        self.check_state(state)?;
+        let model = self.model.as_ref().ok_or_else(|| {
+            ServeError::BadRequest(
+                "q_values needs a transition model: start the server with a -model/-file source"
+                    .to_string(),
+            )
+        })?;
+        if model.n_states() != self.artifact.n_states
+            || model.n_actions() != self.artifact.n_actions
+        {
+            return Err(ServeError::BadRequest(format!(
+                "attached model shape {}x{} does not match artifact {}x{}",
+                model.n_states(),
+                model.n_actions(),
+                self.artifact.n_states,
+                self.artifact.n_actions
+            )));
+        }
+        Ok((0..self.artifact.n_actions)
+            .map(|a| model.q_value(state, a, &self.artifact.value))
+            .collect())
+    }
+
+    /// Batched [`Self::action`] over `states`, split across `threads`
+    /// workers. Results are in request order and independent of `threads`.
+    pub fn actions_batch(
+        &self,
+        states: &[usize],
+        threads: usize,
+    ) -> Result<Vec<usize>, ServeError> {
+        self.batch(states, threads, |eng, s| eng.action(s))
+    }
+
+    /// Batched [`Self::value`] over `states`, split across `threads`
+    /// workers. Results are in request order and independent of `threads`.
+    pub fn values_batch(&self, states: &[usize], threads: usize) -> Result<Vec<f64>, ServeError> {
+        self.batch(states, threads, |eng, s| eng.value(s))
+    }
+
+    /// Batched [`Self::q_values`] over `states`, split across `threads`
+    /// workers. Results are in request order and independent of `threads`.
+    pub fn q_values_batch(
+        &self,
+        states: &[usize],
+        threads: usize,
+    ) -> Result<Vec<Vec<f64>>, ServeError> {
+        self.batch(states, threads, |eng, s| eng.q_values(s))
+    }
+
+    /// Generic ordered fan-out: contiguous chunks, one worker per chunk,
+    /// results concatenated in chunk order. The first error (lowest request
+    /// index) wins, matching single-threaded behaviour.
+    fn batch<T: Send>(
+        &self,
+        states: &[usize],
+        threads: usize,
+        op: impl Fn(&QueryEngine, usize) -> Result<T, ServeError> + Sync,
+    ) -> Result<Vec<T>, ServeError> {
+        let threads = threads.clamp(1, states.len().max(1));
+        if threads <= 1 {
+            return states.iter().map(|&s| op(self, s)).collect();
+        }
+        let chunk = states.len().div_ceil(threads);
+        let results: Vec<Result<Vec<T>, ServeError>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = states
+                .chunks(chunk)
+                .map(|part| scope.spawn(|| part.iter().map(|&s| op(self, s)).collect()))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut out = Vec::with_capacity(states.len());
+        for chunk_result in results {
+            out.extend(chunk_result?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{MdpBuilder, Solver};
+
+    fn engine_with_model() -> (QueryEngine, crate::api::SolveOutcome) {
+        let builder = MdpBuilder::from_fillers(
+            6,
+            3,
+            |s, a| vec![((s + a) % 6, 1.0)],
+            |s, a| (s * 3 + a) as f64 * 0.125,
+        )
+        .gamma(0.5);
+        let mdp = builder.build_serial().unwrap();
+        let outcome = Solver::new(builder).solve().unwrap();
+        let artifact = Arc::new(PolicyArtifact::from_outcome(&outcome));
+        (QueryEngine::with_model(artifact, Arc::new(mdp)), outcome)
+    }
+
+    #[test]
+    fn point_queries_match_outcome() {
+        let (engine, outcome) = engine_with_model();
+        for s in 0..6 {
+            assert_eq!(engine.action(s).unwrap(), outcome.policy()[s]);
+            assert_eq!(engine.value(s).unwrap().to_bits(), outcome.value()[s].to_bits());
+        }
+    }
+
+    #[test]
+    fn out_of_range_state_is_bad_request() {
+        let (engine, _) = engine_with_model();
+        assert!(matches!(engine.action(6), Err(ServeError::BadRequest(_))));
+        assert!(matches!(engine.value(99), Err(ServeError::BadRequest(_))));
+        assert!(matches!(engine.q_values(6), Err(ServeError::BadRequest(_))));
+    }
+
+    #[test]
+    fn q_values_consistent_with_value() {
+        // min objective: v(s) == min_a q(s,a), and argmin matches policy.
+        let (engine, outcome) = engine_with_model();
+        for s in 0..6 {
+            let q = engine.q_values(s).unwrap();
+            let best = q.iter().enumerate().min_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap();
+            assert_eq!(best.0, outcome.policy()[s]);
+            assert!((best.1 - outcome.value()[s]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn q_values_without_model_is_bad_request() {
+        let (engine, _) = engine_with_model();
+        let bare = QueryEngine::new(Arc::clone(engine.artifact()));
+        assert!(matches!(bare.q_values(0), Err(ServeError::BadRequest(_))));
+    }
+
+    #[test]
+    fn batches_are_thread_count_independent() {
+        let (engine, _) = engine_with_model();
+        let states: Vec<usize> = (0..6).cycle().take(50).collect();
+        let oracle_a = engine.actions_batch(&states, 1).unwrap();
+        let oracle_v = engine.values_batch(&states, 1).unwrap();
+        let oracle_q = engine.q_values_batch(&states, 1).unwrap();
+        for threads in [2, 3, 4, 8, 64] {
+            assert_eq!(engine.actions_batch(&states, threads).unwrap(), oracle_a);
+            let v = engine.values_batch(&states, threads).unwrap();
+            assert_eq!(v.len(), oracle_v.len());
+            for (x, y) in v.iter().zip(&oracle_v) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            assert_eq!(engine.q_values_batch(&states, threads).unwrap(), oracle_q);
+        }
+    }
+
+    #[test]
+    fn batch_error_matches_single_threaded() {
+        let (engine, _) = engine_with_model();
+        let states = vec![0, 1, 99, 2];
+        let single = engine.actions_batch(&states, 1).unwrap_err();
+        let multi = engine.actions_batch(&states, 4).unwrap_err();
+        assert_eq!(single, multi);
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let (engine, _) = engine_with_model();
+        assert!(engine.actions_batch(&[], 4).unwrap().is_empty());
+    }
+}

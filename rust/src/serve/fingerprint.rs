@@ -1,0 +1,120 @@
+//! Deterministic solve fingerprints (FNV-1a over canonical JSON).
+//!
+//! A policy artifact is keyed by a fingerprint of *what was solved*: the
+//! model shape, the resolved solver configuration, and digests of the
+//! result payload itself. Two requirements drive the construction:
+//!
+//! 1. **Byte stability.** The fingerprint hashes the compact serialization
+//!    of a canonical JSON document. [`crate::util::json::Json`] objects are
+//!    `BTreeMap`s, so keys serialize in sorted (lexicographic) order at
+//!    every nesting level and the bytes cannot drift between runs — the
+//!    same property that makes `write_json_metadata` golden-testable.
+//! 2. **Execution-shape independence.** `ranks`, `threads` and the
+//!    communication-overlap mode are deliberately *excluded*: the solver's
+//!    determinism suite (`tests/par_determinism.rs`) pins results bitwise
+//!    identical across all of them, so a policy solved on 4 ranks must be
+//!    served under the same key as the single-rank solve.
+//!
+//! The hash is 64-bit FNV-1a — self-contained (no crates), stable across
+//! platforms, and collision-resistant enough for a cache key that is *also*
+//! verified: the store re-derives payload digests on every decode, so a
+//! colliding-but-different artifact is rejected as corrupt rather than
+//! silently served.
+
+/// 64-bit FNV-1a over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut hash: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(0x100000001b3);
+    }
+    hash
+}
+
+/// 64-bit FNV-1a over the little-endian bytes of an `f64` slice (bitwise:
+/// `-0.0` and `0.0` hash differently, NaN payloads are preserved).
+pub fn fnv1a64_f64s(xs: &[f64]) -> u64 {
+    let mut hash: u64 = 0xcbf29ce484222325;
+    for &x in xs {
+        for b in x.to_le_bytes() {
+            hash ^= b as u64;
+            hash = hash.wrapping_mul(0x100000001b3);
+        }
+    }
+    hash
+}
+
+/// 64-bit FNV-1a over a usize slice, encoded as little-endian u64.
+pub fn fnv1a64_usizes(xs: &[usize]) -> u64 {
+    let mut hash: u64 = 0xcbf29ce484222325;
+    for &x in xs {
+        for b in (x as u64).to_le_bytes() {
+            hash ^= b as u64;
+            hash = hash.wrapping_mul(0x100000001b3);
+        }
+    }
+    hash
+}
+
+/// Canonical 16-hex-digit spelling of a fingerprint hash — the artifact
+/// key used by sinks, caches, and the serve protocol.
+pub fn hex16(hash: u64) -> String {
+    format!("{hash:016x}")
+}
+
+/// Parse the canonical 16-hex-digit fingerprint spelling back to the hash.
+pub fn parse_hex16(s: &str) -> Option<u64> {
+    if s.len() != 16 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_reference_vectors() {
+        // Published FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn f64_hash_is_bitwise() {
+        assert_ne!(fnv1a64_f64s(&[0.0]), fnv1a64_f64s(&[-0.0]));
+        assert_eq!(fnv1a64_f64s(&[1.5, 2.5]), fnv1a64_f64s(&[1.5, 2.5]));
+        assert_ne!(fnv1a64_f64s(&[1.5, 2.5]), fnv1a64_f64s(&[2.5, 1.5]));
+        // matches the byte-level hash of the same encoding
+        let xs = [3.141592653589793, -7.25];
+        let mut bytes = Vec::new();
+        for x in xs {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        assert_eq!(fnv1a64_f64s(&xs), fnv1a64(&bytes));
+    }
+
+    #[test]
+    fn usize_hash_matches_u64_le_bytes() {
+        let xs = [0usize, 1, 42, 1 << 40];
+        let mut bytes = Vec::new();
+        for &x in &xs {
+            bytes.extend_from_slice(&(x as u64).to_le_bytes());
+        }
+        assert_eq!(fnv1a64_usizes(&xs), fnv1a64(&bytes));
+    }
+
+    #[test]
+    fn hex16_roundtrip() {
+        for h in [0u64, 1, 0xdeadbeef, u64::MAX, 0x0123456789abcdef] {
+            let s = hex16(h);
+            assert_eq!(s.len(), 16);
+            assert_eq!(parse_hex16(&s), Some(h));
+        }
+        assert_eq!(parse_hex16("xyz"), None);
+        assert_eq!(parse_hex16("0123456789abcde"), None); // 15 chars
+        assert_eq!(parse_hex16("0123456789abcdeg"), None);
+    }
+}

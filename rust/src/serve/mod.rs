@@ -1,0 +1,124 @@
+//! Policy serving: persist solved policies, answer decision queries.
+//!
+//! The solver half of the crate ends a run with a [`crate::api::SolveOutcome`]
+//! — this module is the consumption half (ROADMAP item 1): the solve →
+//! persist → query loop that turns an offline solve into an online decision
+//! service.
+//!
+//! - [`fingerprint`] keys an outcome by a deterministic model+options
+//!   fingerprint (FNV-1a over canonical sorted-key JSON, excluding the
+//!   execution shape — ranks/threads/overlap never change results).
+//! - [`codec`] is the one serde path: a versioned `.mdpa` binary artifact
+//!   following the `.mdpb` header discipline (magic, version, exact
+//!   expected-length validation, typed errors on corruption), self-verified
+//!   by payload digests on every decode.
+//! - [`store`] is the sink/cache split: [`ArtifactSink`] backends (an
+//!   in-memory map and an on-disk directory today; an S3-style object sink
+//!   slots in behind the same trait) both move *encoded* bytes, so every
+//!   backend exercises the same codec; a [`crate::util::lru::ShardedLru`]
+//!   holds decoded artifacts in front.
+//! - [`engine`] answers `(state) → action / value / q-values` lookups,
+//!   batched across client threads with thread-count-independent results.
+//! - [`protocol`] is the typed JSON request/response surface the
+//!   `madupite-serve` binary speaks over stdin/stdout.
+//!
+//! Everything user-triggerable fails with a typed [`ServeError`] — a
+//! truncated artifact, a flipped version byte, or a stale fingerprint is an
+//! error response, never a panic and never a silently served wrong policy.
+//!
+//! ```
+//! use madupite::api::{MdpBuilder, Solver};
+//! use madupite::serve::{PolicyStore, QueryEngine};
+//!
+//! let builder = MdpBuilder::from_fillers(
+//!     2,
+//!     2,
+//!     |s, a| match (s, a) {
+//!         (0, 0) => vec![(0, 1.0)],
+//!         (0, 1) => vec![(1, 1.0)],
+//!         _ => vec![(1, 1.0)],
+//!     },
+//!     |s, a| match (s, a) {
+//!         (0, 0) => 1.0,
+//!         (0, 1) => 1.5,
+//!         _ => 0.0,
+//!     },
+//! )
+//! .gamma(0.5);
+//! let outcome = Solver::new(builder).solve().unwrap();
+//!
+//! // Persist, then serve from the store (cache up to 64 decoded artifacts).
+//! let store = PolicyStore::in_memory(64);
+//! let fp = store.put_outcome(&outcome).unwrap();
+//! let artifact = store.get(&fp).unwrap();
+//! let engine = QueryEngine::new(artifact);
+//! assert_eq!(engine.action(0).unwrap(), outcome.policy()[0]);
+//! assert_eq!(engine.value(0).unwrap(), outcome.value()[0]);
+//! ```
+
+pub mod codec;
+pub mod engine;
+pub mod fingerprint;
+pub mod protocol;
+pub mod store;
+
+pub use codec::PolicyArtifact;
+pub use engine::QueryEngine;
+pub use protocol::ServeSession;
+pub use store::{ArtifactSink, DirSink, MemorySink, PolicyStore};
+
+use std::fmt;
+
+/// Error type of the serving layer. Every failure mode a client or a
+/// corrupted store can trigger is a distinct typed variant — the
+/// corruption-fault suite in `tests/serve.rs` pins each one.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Underlying I/O failure of a sink (filesystem errors, permissions).
+    Io(String),
+    /// Structurally invalid artifact bytes: bad magic, truncation, length
+    /// mismatch, payload digest mismatch, out-of-range policy actions.
+    Corrupt(String),
+    /// The artifact was written by a different `.mdpa` format version.
+    BadVersion {
+        /// Version found in the artifact header.
+        found: u32,
+        /// Version this build reads.
+        expected: u32,
+    },
+    /// The artifact's self-declared fingerprint does not match the key it
+    /// was requested under — a renamed or stale artifact must not be
+    /// silently served.
+    FingerprintMismatch {
+        /// The fingerprint the client asked for.
+        requested: String,
+        /// The fingerprint the artifact actually carries.
+        found: String,
+    },
+    /// No artifact stored under the requested fingerprint.
+    NotFound(String),
+    /// Malformed query: out-of-range state, unknown operation, missing
+    /// field, non-integer state index.
+    BadRequest(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Io(msg) => write!(f, "io error: {msg}"),
+            ServeError::Corrupt(msg) => write!(f, "corrupt artifact: {msg}"),
+            ServeError::BadVersion { found, expected } => write!(
+                f,
+                "unsupported artifact version {found} (this build reads v{expected})"
+            ),
+            ServeError::FingerprintMismatch { requested, found } => write!(
+                f,
+                "fingerprint mismatch: requested {requested}, artifact carries {found}"
+            ),
+            ServeError::NotFound(fp) => write!(f, "no artifact stored under fingerprint {fp}"),
+            ServeError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}

@@ -1,0 +1,316 @@
+//! The typed JSON request/response protocol the `madupite-serve` binary
+//! speaks over stdin/stdout.
+//!
+//! One request per line, one response line per request (batched
+//! line-delimited framing — a client pipelines by writing N lines and
+//! reading N lines back). Requests:
+//!
+//! ```json
+//! {"id": 7, "op": "action",   "fingerprint": "<16 hex>", "states": [0, 3, 5]}
+//! {"id": 8, "op": "value",    "fingerprint": "<16 hex>", "states": [1]}
+//! {"id": 9, "op": "q_values", "fingerprint": "<16 hex>", "states": [2]}
+//! {"id": 10, "op": "meta",    "fingerprint": "<16 hex>"}
+//! {"id": 11, "op": "list"}
+//! ```
+//!
+//! Responses mirror the `id` back (`null` if the request had none):
+//!
+//! ```json
+//! {"id": 7, "ok": true, "op": "action", "results": [2, 0, 1]}
+//! {"id": 7, "ok": false, "error": "bad request: ..."}
+//! ```
+//!
+//! Every malformed input — unparseable JSON, unknown op (answered with a
+//! did-you-mean, reusing the options-database suggester), missing
+//! fingerprint, fractional or negative state index — is an `ok:false`
+//! response, never a panic and never a dropped line. Numeric results
+//! round-trip exactly: values serialize via the shortest-representation
+//! `f64` formatter and re-parse to the same bits.
+
+use std::sync::Arc;
+
+use crate::api::options;
+use crate::mdp::Mdp;
+use crate::util::json::Json;
+
+use super::engine::QueryEngine;
+use super::store::PolicyStore;
+use super::ServeError;
+
+/// Operations the protocol understands, for did-you-mean suggestions.
+pub const OPS: &[&str] = &["action", "value", "q_values", "meta", "list"];
+
+/// A serve session: one store, an optional transition model (enables
+/// `q_values`), and the worker thread count for batched lookups. Shared
+/// across client threads by reference — `handle_line` takes `&self`.
+pub struct ServeSession {
+    store: PolicyStore,
+    model: Option<Arc<Mdp>>,
+    threads: usize,
+}
+
+impl ServeSession {
+    /// Session over `store` answering with `threads` lookup workers.
+    pub fn new(store: PolicyStore, threads: usize) -> ServeSession {
+        ServeSession {
+            store,
+            model: None,
+            threads: threads.max(1),
+        }
+    }
+
+    /// Attach a transition model, enabling `q_values` queries.
+    pub fn with_model(mut self, model: Arc<Mdp>) -> ServeSession {
+        self.model = Some(model);
+        self
+    }
+
+    /// The underlying store (benchmarks read cache stats through this).
+    pub fn store(&self) -> &PolicyStore {
+        &self.store
+    }
+
+    /// Answer one request line with one response line (no trailing
+    /// newline). Never panics on client input.
+    pub fn handle_line(&self, line: &str) -> String {
+        let (id, outcome) = match Json::parse(line) {
+            Ok(req) => {
+                let id = req.get("id").cloned().unwrap_or(Json::Null);
+                (id, self.dispatch(&req))
+            }
+            Err(e) => (
+                Json::Null,
+                Err(ServeError::BadRequest(format!("unparseable request: {e}"))),
+            ),
+        };
+        let response = match outcome {
+            Ok((op, results)) => Json::obj(vec![
+                ("id", id),
+                ("ok", Json::Bool(true)),
+                ("op", Json::str(op)),
+                ("results", results),
+            ]),
+            Err(e) => Json::obj(vec![
+                ("id", id),
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(e.to_string())),
+            ]),
+        };
+        response.to_string()
+    }
+
+    fn dispatch(&self, req: &Json) -> Result<(&'static str, Json), ServeError> {
+        let op = req
+            .get("op")
+            .and_then(Json::as_str)
+            .ok_or_else(|| ServeError::BadRequest("missing string field 'op'".to_string()))?;
+        match op {
+            "list" => {
+                let keys = self.store.keys()?;
+                Ok(("list", Json::Arr(keys.into_iter().map(Json::str).collect())))
+            }
+            "meta" => {
+                let engine = self.engine_for(req)?;
+                let meta = engine.artifact().meta_json()?;
+                Ok(("meta", meta))
+            }
+            "action" => {
+                let engine = self.engine_for(req)?;
+                let states = parse_states(req)?;
+                let actions = engine.actions_batch(&states, self.threads)?;
+                Ok((
+                    "action",
+                    Json::Arr(actions.into_iter().map(|a| Json::int(a as i64)).collect()),
+                ))
+            }
+            "value" => {
+                let engine = self.engine_for(req)?;
+                let states = parse_states(req)?;
+                let values = engine.values_batch(&states, self.threads)?;
+                Ok(("value", Json::nums(&values)))
+            }
+            "q_values" => {
+                let engine = self.engine_for(req)?;
+                let states = parse_states(req)?;
+                let qs = engine.q_values_batch(&states, self.threads)?;
+                Ok(("q_values", Json::Arr(qs.iter().map(|q| Json::nums(q)).collect())))
+            }
+            unknown => {
+                let hint = match options::suggest(unknown, OPS) {
+                    Some(s) => format!(" (did you mean '{s}'?)"),
+                    None => String::new(),
+                };
+                Err(ServeError::BadRequest(format!(
+                    "unknown op '{unknown}'{hint}; ops: {}",
+                    OPS.join(", ")
+                )))
+            }
+        }
+    }
+
+    fn engine_for(&self, req: &Json) -> Result<QueryEngine, ServeError> {
+        let fp = req
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .ok_or_else(|| {
+                ServeError::BadRequest("missing string field 'fingerprint'".to_string())
+            })?;
+        let artifact = self.store.get(fp)?;
+        Ok(match &self.model {
+            Some(model) => QueryEngine::with_model(artifact, Arc::clone(model)),
+            None => QueryEngine::new(artifact),
+        })
+    }
+}
+
+/// Extract the `states` array: every element must be a non-negative
+/// integer-valued number.
+fn parse_states(req: &Json) -> Result<Vec<usize>, ServeError> {
+    let arr = req
+        .get("states")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| ServeError::BadRequest("missing array field 'states'".to_string()))?;
+    arr.iter()
+        .map(|x| {
+            let f = x.as_f64().ok_or_else(|| {
+                ServeError::BadRequest("'states' entries must be numbers".to_string())
+            })?;
+            if f < 0.0 || f.fract() != 0.0 || f > u32::MAX as f64 {
+                return Err(ServeError::BadRequest(format!(
+                    "state index {f} is not a non-negative integer"
+                )));
+            }
+            Ok(f as usize)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{MdpBuilder, Solver};
+
+    fn session() -> (ServeSession, String, crate::api::SolveOutcome) {
+        let builder = MdpBuilder::from_fillers(
+            5,
+            2,
+            |s, a| vec![((s + a) % 5, 1.0)],
+            |s, a| (s + 2 * a) as f64 * 0.5,
+        )
+        .gamma(0.5);
+        let mdp = builder.build_serial().unwrap();
+        let outcome = Solver::new(builder).solve().unwrap();
+        let store = PolicyStore::in_memory(8);
+        let fp = store.put_outcome(&outcome).unwrap();
+        let session = ServeSession::new(store, 2).with_model(Arc::new(mdp));
+        (session, fp, outcome)
+    }
+
+    fn ok_results(resp: &str) -> Json {
+        let json = Json::parse(resp).unwrap();
+        assert_eq!(json.get("ok").and_then(Json::as_bool), Some(true), "{resp}");
+        json.get("results").cloned().unwrap()
+    }
+
+    #[test]
+    fn action_roundtrip() {
+        let (session, fp, outcome) = session();
+        let resp = session.handle_line(&format!(
+            r#"{{"id": 1, "op": "action", "fingerprint": "{fp}", "states": [0, 1, 2, 3, 4]}}"#
+        ));
+        let results = ok_results(&resp);
+        let got: Vec<usize> = results
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap() as usize)
+            .collect();
+        assert_eq!(got, outcome.policy());
+        assert_eq!(Json::parse(&resp).unwrap().get("id").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn value_roundtrip_is_bitwise() {
+        let (session, fp, outcome) = session();
+        let resp = session.handle_line(&format!(
+            r#"{{"op": "value", "fingerprint": "{fp}", "states": [4, 0]}}"#
+        ));
+        let results = ok_results(&resp);
+        let got: Vec<f64> = results
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_f64().unwrap())
+            .collect();
+        assert_eq!(got[0].to_bits(), outcome.value()[4].to_bits());
+        assert_eq!(got[1].to_bits(), outcome.value()[0].to_bits());
+    }
+
+    #[test]
+    fn q_values_shape() {
+        let (session, fp, _) = session();
+        let resp = session.handle_line(&format!(
+            r#"{{"op": "q_values", "fingerprint": "{fp}", "states": [0, 3]}}"#
+        ));
+        let results = ok_results(&resp);
+        let rows = results.as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].as_arr().unwrap().len(), 2); // n_actions
+    }
+
+    #[test]
+    fn list_and_meta() {
+        let (session, fp, _) = session();
+        let resp = session.handle_line(r#"{"op": "list"}"#);
+        let results = ok_results(&resp);
+        assert_eq!(results.as_arr().unwrap()[0].as_str(), Some(fp.as_str()));
+        let resp = session.handle_line(&format!(r#"{{"op": "meta", "fingerprint": "{fp}"}}"#));
+        let meta = ok_results(&resp);
+        assert!(meta.get("model").is_some());
+    }
+
+    #[test]
+    fn unknown_op_gets_did_you_mean() {
+        let (session, fp, _) = session();
+        let resp = session.handle_line(&format!(
+            r#"{{"op": "actoin", "fingerprint": "{fp}", "states": [0]}}"#
+        ));
+        let json = Json::parse(&resp).unwrap();
+        assert_eq!(json.get("ok").and_then(Json::as_bool), Some(false));
+        let err = json.get("error").and_then(Json::as_str).unwrap();
+        assert!(err.contains("did you mean 'action'"), "{err}");
+    }
+
+    #[test]
+    fn malformed_inputs_are_typed_not_panics() {
+        let (session, fp, _) = session();
+        for bad in [
+            "not json at all",
+            "{}",
+            r#"{"op": "action"}"#,
+            r#"{"op": "action", "fingerprint": "0000000000000000", "states": [0]}"#,
+            &format!(r#"{{"op": "action", "fingerprint": "{fp}", "states": [1.5]}}"#),
+            &format!(r#"{{"op": "action", "fingerprint": "{fp}", "states": [-1]}}"#),
+            &format!(r#"{{"op": "action", "fingerprint": "{fp}", "states": [999]}}"#),
+            &format!(r#"{{"op": "action", "fingerprint": "{fp}", "states": "zero"}}"#),
+        ] {
+            let json = Json::parse(&session.handle_line(bad)).unwrap();
+            assert_eq!(json.get("ok").and_then(Json::as_bool), Some(false), "{bad}");
+            assert!(json.get("error").is_some(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn q_values_without_model_is_error_response() {
+        let (session_with_model, fp, outcome) = session();
+        drop(session_with_model);
+        let store = PolicyStore::in_memory(8);
+        store.put_outcome(&outcome).unwrap();
+        let bare = ServeSession::new(store, 1);
+        let resp = bare.handle_line(&format!(
+            r#"{{"op": "q_values", "fingerprint": "{fp}", "states": [0]}}"#
+        ));
+        let json = Json::parse(&resp).unwrap();
+        assert_eq!(json.get("ok").and_then(Json::as_bool), Some(false));
+    }
+}

@@ -7,6 +7,7 @@
 pub mod args;
 pub mod benchkit;
 pub mod json;
+pub mod lru;
 pub mod par;
 pub mod prng;
 pub mod prop;

@@ -1,0 +1,502 @@
+//! Serving-grade integration suite for `madupite::serve` (DESIGN.md §15).
+//!
+//! - **Catalog acceptance matrix**: for *every* catalog model, querying the
+//!   persisted artifact returns the same `(action, value)` per state as the
+//!   in-memory `SolveOutcome`, bitwise, under both store backends and cache
+//!   sizes {0, 64, unbounded}. The params table is asserted to cover the
+//!   whole catalog, so a new model breaks this test loudly.
+//! - **Corruption faults**: truncated artifact, flipped version byte,
+//!   flipped payload byte, mismatched fingerprint → distinct typed errors;
+//!   no panic, and never a silently served stale policy.
+//! - **Concurrency soak**: 8 client threads × mixed hit/miss workload,
+//!   every response bitwise-equal to a single-threaded oracle, LRU never
+//!   exceeds its bound.
+//! - **Golden metadata bytes**: `write_json_metadata` emits keys in the
+//!   fixed sorted order, byte-for-byte.
+//! - **Fingerprint invariance**: execution shape (ranks/threads/overlap)
+//!   never changes the serving key; solver tolerances do.
+//! - **Binary round-trip**: solve → `-serve_store` → queries through the
+//!   `madupite-serve` binary match `write_policy` output exactly.
+
+use madupite::api::{run_solve, MdpBuilder, SolveOutcome, MODEL_CATALOG};
+use madupite::comm::OverlapMode;
+use madupite::mdp::{DiscountMode, Objective};
+use madupite::serve::{
+    codec, ArtifactSink, MemorySink, PolicyStore, QueryEngine, ServeError,
+};
+use madupite::solver::{Method, SolveOptions, SolveResult};
+use madupite::util::args::Options;
+use madupite::util::json::Json;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join("madupite-serve-tests")
+        .join(format!("{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn solve_with(args: &[&str]) -> SolveOutcome {
+    let db = Options::parse(args.iter().map(|s| s.to_string()));
+    let builder = MdpBuilder::from_options(&db).unwrap();
+    run_solve(&builder, &db).unwrap()
+}
+
+/// Small-but-nontrivial parameters for every catalog model. The acceptance
+/// matrix asserts this covers the whole catalog.
+fn catalog_params(name: &str) -> Option<&'static [&'static str]> {
+    Some(match name {
+        "maze" | "grid" => &["-rows", "6", "-cols", "6"],
+        "sis" => &["-population", "30", "-num_actions", "2"],
+        "traffic" => &["-capacity", "4"],
+        "garnet" => &["-num_states", "20", "-num_actions", "3", "-branching", "3"],
+        "inventory" | "queueing" => &["-capacity", "6"],
+        "replacement" | "maintenance" => &["-num_states", "8"],
+        _ => return None,
+    })
+}
+
+/// Assert that serving `outcome` through `store` reproduces it bitwise,
+/// twice (cold decode path, then the cached path).
+fn assert_roundtrip_exact(store: &PolicyStore, outcome: &SolveOutcome) {
+    let fp = store.put_outcome(outcome).unwrap();
+    assert_eq!(fp, outcome.fingerprint());
+    for _pass in 0..2 {
+        let artifact = store.get(&fp).unwrap();
+        let engine = QueryEngine::new(artifact);
+        for s in 0..outcome.n_states {
+            assert_eq!(engine.action(s).unwrap(), outcome.policy()[s]);
+            assert_eq!(
+                engine.value(s).unwrap().to_bits(),
+                outcome.value()[s].to_bits()
+            );
+        }
+        assert!(store.cache_len() <= store.cache_capacity());
+    }
+}
+
+#[test]
+fn catalog_roundtrip_exact_across_backends_and_caches() {
+    let dir = tmp("catalog");
+    for m in MODEL_CATALOG {
+        let params = catalog_params(m.name).unwrap_or_else(|| {
+            panic!(
+                "catalog model '{}' has no serve-test params — extend catalog_params \
+                 so the acceptance matrix keeps covering the whole catalog",
+                m.name
+            )
+        });
+        let mut args = vec!["-model", m.name];
+        args.extend_from_slice(params);
+        let outcome = solve_with(&args);
+        for (label, cache) in [("c0", 0usize), ("c64", 64), ("cmax", usize::MAX)] {
+            assert_roundtrip_exact(&PolicyStore::in_memory(cache), &outcome);
+            let disk = PolicyStore::on_disk(dir.join(format!("{}-{label}", m.name)), cache)
+                .unwrap();
+            assert_roundtrip_exact(&disk, &outcome);
+        }
+    }
+}
+
+#[test]
+fn on_disk_corruption_faults_are_typed() {
+    let dir = tmp("corrupt");
+    let outcome = solve_with(&["-model", "maze", "-rows", "5", "-cols", "5"]);
+    let fp = PolicyStore::on_disk(&dir, 0)
+        .unwrap()
+        .put_outcome(&outcome)
+        .unwrap();
+    let path = dir.join(format!("{fp}.mdpa"));
+    let clean = std::fs::read(&path).unwrap();
+
+    // Fresh zero-cache store per fault, so every get takes the decode path.
+    let fresh = || PolicyStore::on_disk(&dir, 0).unwrap();
+
+    // truncated artifact
+    std::fs::write(&path, &clean[..clean.len() / 2]).unwrap();
+    match fresh().get(&fp) {
+        Err(ServeError::Corrupt(msg)) => {
+            assert!(
+                msg.contains("truncated") || msg.contains("length mismatch"),
+                "{msg}"
+            );
+        }
+        other => panic!("truncation: expected Corrupt, got {other:?}"),
+    }
+
+    // flipped version byte
+    let mut bad = clean.clone();
+    bad[4] ^= 0xFF;
+    std::fs::write(&path, &bad).unwrap();
+    match fresh().get(&fp) {
+        Err(ServeError::BadVersion { found, expected }) => {
+            assert_eq!(expected, codec::VERSION);
+            assert_ne!(found, codec::VERSION);
+        }
+        other => panic!("version flip: expected BadVersion, got {other:?}"),
+    }
+
+    // flipped payload byte (caught by the embedded digest)
+    let mut bad = clean.clone();
+    bad[codec::HEADER_LEN + 1] ^= 0x10;
+    std::fs::write(&path, &bad).unwrap();
+    match fresh().get(&fp) {
+        Err(ServeError::Corrupt(msg)) => assert!(msg.contains("digest"), "{msg}"),
+        other => panic!("payload flip: expected Corrupt, got {other:?}"),
+    }
+
+    // mismatched fingerprint: valid bytes under the wrong key
+    std::fs::write(&path, &clean).unwrap();
+    let wrong = if fp == "0123456789abcdef" {
+        "fedcba9876543210"
+    } else {
+        "0123456789abcdef"
+    };
+    std::fs::write(dir.join(format!("{wrong}.mdpa")), &clean).unwrap();
+    match fresh().get(wrong) {
+        Err(ServeError::FingerprintMismatch { requested, found }) => {
+            assert_eq!(requested, wrong);
+            assert_eq!(found, fp);
+        }
+        other => panic!("rename: expected FingerprintMismatch, got {other:?}"),
+    }
+
+    // after all faults, the intact artifact still serves
+    assert_roundtrip_exact(&fresh(), &outcome);
+}
+
+#[test]
+fn memory_sink_corruption_faults_are_typed() {
+    // Same faults through the injected in-memory sink — both backends run
+    // the one codec, so the typed errors must be identical in kind.
+    let outcome = solve_with(&["-model", "grid", "-rows", "5", "-cols", "5"]);
+    let artifact = madupite::serve::PolicyArtifact::from_outcome(&outcome);
+    let fp = artifact.fingerprint_hex();
+    let clean = artifact.encode();
+
+    let with_bytes = |bytes: &[u8]| {
+        let sink = MemorySink::new();
+        sink.put(&fp, bytes).unwrap();
+        PolicyStore::with_sink(Box::new(sink), 0)
+    };
+
+    assert!(matches!(
+        with_bytes(&clean[..codec::HEADER_LEN - 1]).get(&fp),
+        Err(ServeError::Corrupt(_))
+    ));
+    let mut bad = clean.clone();
+    bad[4] ^= 0x01;
+    assert!(matches!(
+        with_bytes(&bad).get(&fp),
+        Err(ServeError::BadVersion { .. })
+    ));
+    let mut bad = clean.clone();
+    *bad.last_mut().unwrap() ^= 0x01; // inside the meta document
+    assert!(matches!(
+        with_bytes(&bad).get(&fp),
+        Err(ServeError::Corrupt(_))
+    ));
+    assert!(matches!(
+        with_bytes(&clean).get("ffffffffffffffff"),
+        Err(ServeError::NotFound(_))
+    ));
+}
+
+#[test]
+fn concurrency_soak_bitwise_oracle_and_cache_bound() {
+    let o1 = solve_with(&["-model", "maze", "-rows", "6", "-cols", "6"]);
+    let o2 = solve_with(&["-model", "grid", "-rows", "6", "-cols", "6"]);
+    let dir = tmp("soak");
+    // cache capacity 1 with two hot artifacts: constant churn, both the
+    // hit and the miss+decode paths run under contention.
+    let store = Arc::new(PolicyStore::on_disk(&dir, 1).unwrap());
+    let fp1 = store.put_outcome(&o1).unwrap();
+    let fp2 = store.put_outcome(&o2).unwrap();
+    assert_ne!(fp1, "ffffffffffffffff");
+    assert_ne!(fp2, "ffffffffffffffff");
+
+    // single-threaded oracle: full response tables per artifact
+    let oracle = |fp: &str| -> (Vec<usize>, Vec<u64>) {
+        let engine = QueryEngine::new(store.get(fp).unwrap());
+        let n = engine.artifact().n_states;
+        (
+            (0..n).map(|s| engine.action(s).unwrap()).collect(),
+            (0..n).map(|s| engine.value(s).unwrap().to_bits()).collect(),
+        )
+    };
+    let oracle1 = oracle(&fp1);
+    let oracle2 = oracle(&fp2);
+
+    std::thread::scope(|scope| {
+        for t in 0..8usize {
+            let store = Arc::clone(&store);
+            let (fp1, fp2) = (&fp1, &fp2);
+            let (oracle1, oracle2) = (&oracle1, &oracle2);
+            scope.spawn(move || {
+                let mut x: u64 = 0x9e3779b97f4a7c15 ^ (t as u64);
+                for i in 0..2_000usize {
+                    if i % 97 == 13 {
+                        // miss workload: absent fingerprints are typed
+                        assert!(matches!(
+                            store.get("ffffffffffffffff"),
+                            Err(ServeError::NotFound(_))
+                        ));
+                    }
+                    let (fp, (actions, value_bits)) = if (t + i) % 2 == 0 {
+                        (fp1, oracle1)
+                    } else {
+                        (fp2, oracle2)
+                    };
+                    let engine = QueryEngine::new(store.get(fp).unwrap());
+                    x = x
+                        .wrapping_mul(6364136223846793005)
+                        .wrapping_add(1442695040888963407);
+                    let s = (x % engine.artifact().n_states as u64) as usize;
+                    assert_eq!(engine.action(s).unwrap(), actions[s]);
+                    assert_eq!(engine.value(s).unwrap().to_bits(), value_bits[s]);
+                    assert!(store.cache_len() <= store.cache_capacity());
+                }
+            });
+        }
+    });
+    assert!(store.cache_len() <= store.cache_capacity());
+}
+
+/// Hand-built outcome with dyadic floats (0.5, 0.25, 0.125 — exact in
+/// `f64` Display), so the expected bytes below are straightforward.
+fn synthetic_outcome() -> SolveOutcome {
+    SolveOutcome {
+        n_states: 2,
+        n_actions: 2,
+        gamma: 0.5,
+        discount_mode: DiscountMode::Scalar,
+        objective: Objective::Min,
+        options: SolveOptions {
+            method: Method::Vi,
+            atol: 0.25,
+            alpha: 0.125,
+            ..SolveOptions::default()
+        },
+        ranks: 1,
+        threads: 1,
+        comm_overlap: OverlapMode::Off,
+        result: SolveResult {
+            value: vec![1.5, 0.25],
+            policy: vec![1, 0],
+            outer_iterations: 3,
+            total_spmvs: 7,
+            total_inner_iterations: 5,
+            residual: 0.25,
+            converged: true,
+            wall_time_s: 0.25,
+            trace: vec![],
+            comm_bytes: 64,
+            comm_time_us: 12,
+            gamma: 0.5,
+            ranks: 1,
+            threads: 1,
+        },
+    }
+}
+
+#[test]
+fn write_json_metadata_golden_bytes() {
+    // Keys serialize sorted at every nesting level (BTreeMap objects), so
+    // the emitted bytes are pinned exactly. If this test fails, the
+    // metadata layout changed — that is a breaking change for downstream
+    // parsers and must be deliberate.
+    let outcome = synthetic_outcome();
+    let path = tmp("golden").join("meta.json");
+    outcome.write_json_metadata(&path).unwrap();
+    let got = std::fs::read_to_string(&path).unwrap();
+    let expected = format!(
+        r#"{{
+  "madupite_version": "{version}",
+  "model": {{
+    "discount_mode": "scalar",
+    "gamma": 0.5,
+    "n_actions": 2,
+    "n_states": 2,
+    "objective": "min"
+  }},
+  "result": {{
+    "comm_bytes": 64,
+    "comm_time_us": 12,
+    "converged": true,
+    "error_bound": 0.5,
+    "label": "vi",
+    "outer_iterations": 3,
+    "ranks": 1,
+    "residual": 0.25,
+    "residual_trace": [],
+    "threads": 1,
+    "total_inner_iterations": 5,
+    "total_spmvs": 7,
+    "wall_time_s": 0.25
+  }},
+  "solver": {{
+    "adaptive_forcing": false,
+    "alpha": 0.125,
+    "async_vi": false,
+    "async_vi_staleness": 4,
+    "atol": 0.25,
+    "comm_overlap": "off",
+    "eval_backend": "matfree",
+    "inner_precision": "f64",
+    "max_iter_ksp": 10000,
+    "max_iter_pi": 1000,
+    "method": "vi",
+    "ranks": 1,
+    "threads": 1
+  }}
+}}
+"#,
+        version = madupite::VERSION
+    );
+    assert_eq!(got, expected);
+}
+
+#[test]
+fn fingerprint_doc_is_canonical_and_excludes_execution_shape() {
+    let outcome = synthetic_outcome();
+    let compact = outcome.fingerprint_json().to_string();
+    // sorted top-level key order of the canonical document
+    assert!(compact.starts_with(r#"{"format":"madupite-artifact-fp/v1","model":{"#));
+    let i_model = compact.find("\"model\"").unwrap();
+    let i_policy = compact.find("\"policy_digest\"").unwrap();
+    let i_solver = compact.find("\"solver\"").unwrap();
+    let i_value = compact.find("\"value_digest\"").unwrap();
+    assert!(i_model < i_policy && i_policy < i_solver && i_solver < i_value);
+    // the execution shape must not appear anywhere in the document
+    for excluded in ["ranks", "threads", "comm_overlap", "async_vi"] {
+        assert!(!compact.contains(excluded), "{excluded} leaked into {compact}");
+    }
+
+    // execution shape never changes the key …
+    let mut shaped = synthetic_outcome();
+    shaped.ranks = 4;
+    shaped.threads = 8;
+    shaped.comm_overlap = OverlapMode::On;
+    assert_eq!(outcome.fingerprint(), shaped.fingerprint());
+    // … while solver tolerances and payloads do
+    let mut tighter = synthetic_outcome();
+    tighter.options.atol = 0.125;
+    assert_ne!(outcome.fingerprint(), tighter.fingerprint());
+    let mut other_value = synthetic_outcome();
+    other_value.result.value[0] = 1.75;
+    assert_ne!(outcome.fingerprint(), other_value.fingerprint());
+}
+
+#[test]
+fn solved_fingerprint_is_rank_invariant() {
+    let base = solve_with(&["-model", "maze", "-rows", "5", "-cols", "5"]);
+    let dist = solve_with(&[
+        "-model", "maze", "-rows", "5", "-cols", "5", "-ranks", "2", "-threads", "2",
+        "-comm_overlap", "on",
+    ]);
+    assert_eq!(base.fingerprint(), dist.fingerprint());
+    let looser = solve_with(&["-model", "maze", "-rows", "5", "-cols", "5", "-atol", "1e-4"]);
+    assert_ne!(base.fingerprint(), looser.fingerprint());
+}
+
+#[test]
+fn serve_binary_roundtrip_matches_write_policy() {
+    use std::io::Write as _;
+    let dir = tmp("bin");
+    let store_dir = dir.join("store");
+    let policy_path = dir.join("pi.txt");
+    let outcome = solve_with(&[
+        "-model",
+        "maze",
+        "-rows",
+        "6",
+        "-cols",
+        "6",
+        "-serve_store",
+        store_dir.to_str().unwrap(),
+        "-write_policy",
+        policy_path.to_str().unwrap(),
+    ]);
+    let fp = outcome.fingerprint();
+    let n = outcome.n_states;
+
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_madupite-serve"))
+        .args([
+            "-serve_store",
+            store_dir.to_str().unwrap(),
+            "-serve_threads",
+            "2",
+        ])
+        .stdin(std::process::Stdio::piped())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .unwrap();
+    let states = (0..n)
+        .map(|s| s.to_string())
+        .collect::<Vec<_>>()
+        .join(", ");
+    {
+        let mut stdin = child.stdin.take().unwrap();
+        writeln!(stdin, r#"{{"id": 1, "op": "list"}}"#).unwrap();
+        writeln!(
+            stdin,
+            r#"{{"id": 2, "op": "action", "fingerprint": "{fp}", "states": [{states}]}}"#
+        )
+        .unwrap();
+        writeln!(
+            stdin,
+            r#"{{"id": 3, "op": "value", "fingerprint": "{fp}", "states": [{states}]}}"#
+        )
+        .unwrap();
+    } // dropping stdin closes the pipe, the server loop ends
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success());
+    let lines: Vec<&str> = std::str::from_utf8(&out.stdout).unwrap().lines().collect();
+    assert_eq!(lines.len(), 3, "{lines:?}");
+
+    let list = Json::parse(lines[0]).unwrap();
+    assert_eq!(list.get("ok").and_then(Json::as_bool), Some(true));
+    assert!(list
+        .get("results")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .any(|k| k.as_str() == Some(fp.as_str())));
+
+    // actions: protocol response == in-memory outcome == write_policy file
+    let actions = Json::parse(lines[1]).unwrap();
+    assert_eq!(actions.get("ok").and_then(Json::as_bool), Some(true));
+    let served: Vec<usize> = actions
+        .get("results")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as usize)
+        .collect();
+    assert_eq!(served, outcome.policy());
+    let file_actions: Vec<usize> = std::fs::read_to_string(&policy_path)
+        .unwrap()
+        .lines()
+        .skip(1) // '#' header
+        .map(|l| l.trim().parse().unwrap())
+        .collect();
+    assert_eq!(served, file_actions);
+
+    // values: JSON f64 round-trip is exact (shortest-repr Display), so the
+    // served numbers are bitwise the solver's
+    let values = Json::parse(lines[2]).unwrap();
+    assert_eq!(values.get("ok").and_then(Json::as_bool), Some(true));
+    let served: Vec<f64> = values
+        .get("results")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap())
+        .collect();
+    assert_eq!(served.len(), n);
+    for (a, b) in served.iter().zip(outcome.value()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
