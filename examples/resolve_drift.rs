@@ -1,0 +1,108 @@
+//! Warm-started re-solve of a drifting model: the maintenance-loop story
+//! from DESIGN.md §16 end to end.
+//!
+//! 1. Solve a maze cold and write a `.mdpa` checkpoint.
+//! 2. Drift the model: ~2% cost perturbation on a slice of the entries.
+//! 3. Re-solve the drifted model cold, then warm-started from the
+//!    checkpoint via `-warm_start` — same tolerance, fewer outer
+//!    iterations.
+//! 4. Re-solve the *unchanged* model warm: one outer iteration, value
+//!    bitwise identical to the checkpoint.
+//!
+//! Run: `cargo run --release --example resolve_drift`
+
+use madupite::api::{MdpBuilder, Solver};
+use madupite::models::gridworld::GridSpec;
+use madupite::models::ModelGenerator;
+use std::sync::Arc;
+
+fn main() -> Result<(), madupite::api::ApiError> {
+    let dir = std::env::temp_dir().join(format!("madupite-resolve-drift-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).map_err(|e| madupite::api::ApiError(e.to_string()))?;
+    let checkpoint_path = dir.join("maze.mdpa");
+
+    // 1. Cold solve + checkpoint. The checkpoint is the same digest-verified
+    // artifact format the policy-serving store uses.
+    let spec = Arc::new(GridSpec::maze(24, 24, 7));
+    let builder = MdpBuilder::from_model(Arc::clone(&spec) as Arc<dyn ModelGenerator + Send + Sync>)
+        .gamma(0.99);
+    let mut solver = Solver::new(builder.clone());
+    solver.set_options_from_str("-method ipi -ksp_type gmres -atol 1e-9")?;
+    let cold = solver.solve()?;
+    cold.write_checkpoint(&checkpoint_path)?;
+    println!(
+        "cold solve:   outer={:3}  residual={:.2e}  checkpoint={} ({})",
+        cold.result.outer_iterations,
+        cold.result.residual,
+        checkpoint_path.display(),
+        cold.fingerprint()
+    );
+
+    // 2. Drift: every 9th state's costs move by up to ±2% (deterministic).
+    let (n, m) = (spec.n_states(), spec.n_actions());
+    let mut x: u64 = 0x9e3779b97f4a7c15;
+    let mut patches = Vec::new();
+    for s in (0..n).step_by(9) {
+        for a in 0..m {
+            x = x
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let u = (x >> 11) as f64 / (1u64 << 53) as f64;
+            patches.push((s, a, spec.cost(s, a) * (1.0 + 0.02 * (2.0 * u - 1.0))));
+        }
+    }
+    println!("drift:        {} of {} cost entries perturbed ±2%", patches.len(), n * m);
+
+    // 3. Cold vs warm on the drifted model. Both paths run to the same
+    // tolerance; `-warm_start` only changes the starting point. The patch
+    // re-validates touched rows only.
+    let drifted = builder.clone().patch_costs(patches);
+    let mut cold_solver = Solver::new(drifted.clone());
+    cold_solver.set_options_from_str("-method ipi -ksp_type gmres -atol 1e-9")?;
+    let drift_cold = cold_solver.solve()?;
+
+    let mut warm_solver = Solver::new(drifted);
+    warm_solver.set_options_from_str("-method ipi -ksp_type gmres -atol 1e-9")?;
+    warm_solver.set_option("-warm_start", checkpoint_path.to_str().unwrap())?;
+    let drift_warm = warm_solver.solve()?;
+
+    println!(
+        "drift cold:   outer={:3}  residual={:.2e}",
+        drift_cold.result.outer_iterations, drift_cold.result.residual
+    );
+    println!(
+        "drift warm:   outer={:3}  residual={:.2e}  (seeded from {})",
+        drift_warm.result.outer_iterations,
+        drift_warm.result.residual,
+        drift_warm.warm_start.as_deref().unwrap_or("-")
+    );
+    assert!(drift_cold.result.converged && drift_warm.result.converged);
+    assert!(
+        drift_warm.result.outer_iterations < drift_cold.result.outer_iterations,
+        "warm start must save outer iterations under small drift"
+    );
+    assert!(drift_warm.result.residual < 1e-9, "same tolerance on both paths");
+
+    // 4. Warm re-solve of the *unchanged* model: the convergence check
+    // fires before any update, so the value comes back bitwise identical
+    // in a single outer iteration.
+    let mut unchanged = Solver::new(builder);
+    unchanged.set_options_from_str("-method ipi -ksp_type gmres -atol 1e-9")?;
+    unchanged.set_option("-warm_start", checkpoint_path.to_str().unwrap())?;
+    let warm = unchanged.solve()?;
+    assert_eq!(warm.result.outer_iterations, 1);
+    assert!(warm
+        .value()
+        .iter()
+        .zip(cold.value())
+        .all(|(a, b)| a.to_bits() == b.to_bits()));
+    assert_eq!(warm.fingerprint(), cold.fingerprint());
+    println!(
+        "no-drift warm: outer={:3}  value bitwise == checkpoint, fingerprint unchanged",
+        warm.result.outer_iterations
+    );
+
+    let saved = drift_cold.result.outer_iterations - drift_warm.result.outer_iterations;
+    println!("\nwarm start saved {saved} outer iterations under drift");
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! E10 — warm-started incremental re-solve (DESIGN.md §16): cold vs warm
+//! outer iterations and wall clock on drifting catalog models.
+//!
+//! Drift protocol per model: solve the base model cold (this is the
+//! checkpoint), perturb a deterministic ~14% of the `(s, a)` cost entries
+//! by up to ±2% (LCG-driven, seed-stable), then re-solve the drifted model
+//! twice through the same `PreparedModel` — once cold, once seeded with the
+//! pre-drift value vector. Both solves run to the *same* tolerance; the
+//! warm one merely starts closer, so `iters_saved = cold_outer −
+//! warm_outer` is the paper's incremental re-solve claim in one number.
+//!
+//! Reported metrics per case: `cold_outer`, `warm_outer`, `iters_saved`,
+//! `cold_s`, `warm_s`, `speedup`. Merged into `BENCH_CI.json` by the
+//! perf-smoke job with the same drop-out guard as the other suites.
+
+use madupite::api::{model_from_options, MdpBuilder, Solver};
+use madupite::util::args::Options;
+use madupite::util::benchkit::Suite;
+use std::time::Instant;
+
+/// Deterministic ±2% multiplicative cost perturbation on every 7th state
+/// (all actions): the drifted inputs are identical run over run, so the
+/// iteration counts in BENCH_CI.json are comparable across commits.
+fn cost_perturbation(name: &str, db: &Options) -> Vec<(usize, usize, f64)> {
+    let generator = model_from_options(name, db).unwrap();
+    let (n, m) = (generator.n_states(), generator.n_actions());
+    let mut x: u64 = 0x9e3779b97f4a7c15;
+    let mut patches = Vec::new();
+    for s in (0..n).step_by(7) {
+        for a in 0..m {
+            x = x
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            let u = (x >> 11) as f64 / (1u64 << 53) as f64; // uniform [0, 1)
+            let factor = 1.0 + 0.02 * (2.0 * u - 1.0);
+            patches.push((s, a, generator.cost(s, a) * factor));
+        }
+    }
+    patches
+}
+
+fn main() {
+    let mut suite = Suite::new("E10 warm resolve");
+
+    // Two outer methods with very different iteration profiles: VI shows
+    // the raw contraction distance, IPI shows the effect on a handful of
+    // expensive outer steps.
+    let models: &[(&str, &[&str])] = &[
+        ("maze", &["-rows", "16", "-cols", "16"]),
+        ("maintenance", &["-num_states", "400"]),
+        ("replacement", &["-num_states", "400"]),
+    ];
+    for (name, params) in models {
+        for method in ["vi", "ipi"] {
+            let mut args = vec!["-model", name, "-method", method, "-atol", "1e-8"];
+            args.extend_from_slice(params);
+            let db = Options::parse(args.iter().map(|s| s.to_string()));
+            let patches = cost_perturbation(name, &db);
+            let builder = MdpBuilder::from_options(&db).unwrap();
+            let solver = Solver::with_database(builder, db);
+
+            // pre-drift checkpoint (the seed), outside the timed region
+            let checkpoint = solver.solve().unwrap();
+
+            suite.case(&format!("resolve/{name}/method={method}"), || {
+                let mut prepared = solver.build().unwrap();
+                prepared.patch_costs(&patches).unwrap();
+
+                let t0 = Instant::now();
+                let cold = solver.solve_prepared(&prepared).unwrap();
+                let cold_s = t0.elapsed().as_secs_f64();
+
+                prepared.warm_start(&checkpoint).unwrap();
+                let t0 = Instant::now();
+                let warm = solver.solve_prepared(&prepared).unwrap();
+                let warm_s = t0.elapsed().as_secs_f64();
+
+                // same model, same tolerance, both converged — the warm
+                // solve only ever starts closer
+                assert!(cold.result.converged && warm.result.converged);
+                assert!(warm.result.outer_iterations <= cold.result.outer_iterations);
+                let (co, wo) = (
+                    cold.result.outer_iterations as f64,
+                    warm.result.outer_iterations as f64,
+                );
+                vec![
+                    ("cold_outer".to_string(), co),
+                    ("warm_outer".to_string(), wo),
+                    ("iters_saved".to_string(), co - wo),
+                    ("cold_s".to_string(), cold_s),
+                    ("warm_s".to_string(), warm_s),
+                    ("speedup".to_string(), cold_s / warm_s.max(1e-12)),
+                ]
+            });
+        }
+    }
+
+    suite.finish();
+}

@@ -9,6 +9,24 @@
 //! conflicting or missing sources are validation *errors* (never panics),
 //! and closure-defined models are checked row-by-row for stochasticity
 //! before any solve starts.
+//!
+//! **Source selection is one surface with one precedence.** The
+//! constructor family (`from_file`/`from_model`/`from_fillers`) is pure
+//! sugar for `MdpBuilder::new()` plus the matching chainer — there is no
+//! second code path and no implicit override: every `file`/`model`/
+//! `fillers` call *adds* a source, and the moment a second one is added
+//! the conflict is recorded **at set time** (naming every kind involved,
+//! in the same typed-error style as the options table's did-you-mean).
+//! The error surfaces at the first fallible call — `build_serial`, a
+//! solve, or `Solver::build` — because the chainers themselves are
+//! infallible by design. The CLI keys `-file`/`-model` feed the exact
+//! same rule through [`MdpBuilder::from_options`].
+//!
+//! For *drifting* models the builder carries two delta surfaces that skip
+//! full re-validation: [`MdpBuilder::patch_costs`] /
+//! [`MdpBuilder::patch_transitions`] re-check only the touched rows, and
+//! [`MdpBuilder::warm_start`] seeds the next solve from a previous
+//! [`crate::api::SolveOutcome`] without a checkpoint file.
 
 use crate::mdp::{self, Mdp, Objective};
 use crate::models::{
@@ -19,7 +37,7 @@ use crate::models::{
 use crate::util::args::Options;
 use std::sync::Arc;
 
-use super::{options, ApiError};
+use super::{checkpoint::WarmStart, options, ApiError, SolveOutcome};
 
 /// Shared sparse-transition closure: `(s, a) → [(s', p), ...]`.
 pub type ProbFn = Arc<dyn Fn(usize, usize) -> Vec<(usize, f64)> + Send + Sync>;
@@ -88,11 +106,23 @@ impl Source {
 #[derive(Clone, Default)]
 pub struct MdpBuilder {
     sources: Vec<Source>,
+    /// Conflict recorded the moment a second source is set (the chainers
+    /// are infallible, so the typed error is raised at the first fallible
+    /// call instead — `build_serial`, a solve, or `Solver::build`).
+    source_conflict: Option<String>,
     gamma: Option<f64>,
     objective: Option<Objective>,
     /// Semi-MDP filler: per-transition discounts `(s, a) → γ(s,a)`,
     /// applicable to closure sources only.
     discount_filler: Option<DiscountFn>,
+    /// In-process warm-start seed ([`Self::warm_start`]).
+    warm: Option<WarmStart>,
+    /// Pending cost deltas `(s, a, new_cost)` applied after the source
+    /// builds, validating only the touched entries.
+    cost_patches: Vec<(usize, usize, f64)>,
+    /// Pending transition-row deltas `(s, a, new_row)` applied after the
+    /// source builds, re-validating only the touched rows.
+    transition_patches: Vec<(usize, usize, Vec<(usize, f64)>)>,
 }
 
 impl MdpBuilder {
@@ -128,19 +158,24 @@ impl MdpBuilder {
         MdpBuilder::new().fillers(n_states, n_actions, prob, cost)
     }
 
-    /// Add a `.mdpb` file source (chainable; at most one source may be set).
+    /// Add a `.mdpb` file source (chainable; at most one source may be set
+    /// — a second source records a conflict at set time).
     pub fn file(mut self, path: impl Into<String>) -> MdpBuilder {
         self.sources.push(Source::File(path.into()));
+        self.note_source_conflict();
         self
     }
 
-    /// Add a generator source (chainable; at most one source may be set).
+    /// Add a generator source (chainable; at most one source may be set
+    /// — a second source records a conflict at set time).
     pub fn model(mut self, generator: Arc<dyn ModelGenerator + Send + Sync>) -> MdpBuilder {
         self.sources.push(Source::Model(generator));
+        self.note_source_conflict();
         self
     }
 
-    /// Add a closure source (chainable; at most one source may be set).
+    /// Add a closure source (chainable; at most one source may be set
+    /// — a second source records a conflict at set time).
     pub fn fillers(
         mut self,
         n_states: usize,
@@ -154,7 +189,21 @@ impl MdpBuilder {
             prob: Arc::new(prob),
             cost: Arc::new(cost),
         });
+        self.note_source_conflict();
         self
+    }
+
+    /// Record the conflicting-sources error the moment it happens, naming
+    /// every kind set so far (the chainers stay infallible; the first
+    /// fallible call raises it).
+    fn note_source_conflict(&mut self) {
+        if self.sources.len() > 1 {
+            let kinds: Vec<&str> = self.sources.iter().map(|s| s.kind()).collect();
+            self.source_conflict = Some(format!(
+                "conflicting model sources: {} are all set — choose exactly one",
+                kinds.join(" and ")
+            ));
+        }
     }
 
     /// Set the discount factor (validated to [0, 1) at build/solve time).
@@ -183,6 +232,60 @@ impl MdpBuilder {
     pub fn objective(mut self, objective: Objective) -> MdpBuilder {
         self.objective = Some(objective);
         self
+    }
+
+    /// Seed the next solve from a previous [`SolveOutcome`] — the
+    /// in-process warm-start path (no checkpoint file involved; for the
+    /// file/store form use `-warm_start <path|fingerprint>`, and setting
+    /// both is a typed conflict error at solve time). Compatibility
+    /// (shape, gamma, objective) is checked against the realized model
+    /// before any iteration runs.
+    pub fn warm_start(mut self, outcome: &SolveOutcome) -> MdpBuilder {
+        self.warm = Some(WarmStart::from_outcome(outcome));
+        self
+    }
+
+    /// The in-process warm-start seed, if set.
+    pub(crate) fn warm_start_value(&self) -> Option<&WarmStart> {
+        self.warm.as_ref()
+    }
+
+    /// Queue stage-cost deltas `(s, a, new_cost)` — the incremental
+    /// update path for drifting models. Applied after the source builds;
+    /// only the touched entries are validated
+    /// ([`crate::mdp::Mdp::patch_costs`]).
+    pub fn patch_costs(
+        mut self,
+        rows: impl IntoIterator<Item = (usize, usize, f64)>,
+    ) -> MdpBuilder {
+        self.cost_patches.extend(rows);
+        self
+    }
+
+    /// Queue transition-row deltas `(s, a, new_row)`. Applied after the
+    /// source builds; only the touched rows are re-validated —
+    /// stochasticity at the construction-time 1e-8 bar, sorted-unique
+    /// columns, bounds ([`crate::mdp::Mdp::patch_transitions`]).
+    pub fn patch_transitions(
+        mut self,
+        blocks: impl IntoIterator<Item = (usize, usize, Vec<(usize, f64)>)>,
+    ) -> MdpBuilder {
+        self.transition_patches.extend(blocks);
+        self
+    }
+
+    /// Whether any cost/transition deltas are queued.
+    pub(crate) fn has_patches(&self) -> bool {
+        !self.cost_patches.is_empty() || !self.transition_patches.is_empty()
+    }
+
+    /// Apply the queued deltas to a built model — transitions first, then
+    /// costs, each batch atomic and touched-rows-only.
+    pub(crate) fn apply_patches(&self, mdp: &mut Mdp) -> Result<(), ApiError> {
+        mdp.patch_transitions(&self.transition_patches)
+            .map_err(ApiError)?;
+        mdp.patch_costs(&self.cost_patches).map_err(ApiError)?;
+        Ok(())
     }
 
     /// Builder-level gamma, if explicitly set.
@@ -229,14 +332,20 @@ impl MdpBuilder {
     }
 
     /// The single configured source — errors on zero or conflicting
-    /// sources.
+    /// sources (the conflict text was recorded at set time by the
+    /// chainers, so it names every kind involved).
     pub(crate) fn resolved_source(&self) -> Result<&Source, ApiError> {
+        if let Some(msg) = &self.source_conflict {
+            return Err(ApiError(msg.clone()));
+        }
         match self.sources.as_slice() {
             [] => Err(ApiError(
                 "no model source set: use one of file/model/fillers (or -file / -model)".into(),
             )),
             [one] => Ok(one),
             many => {
+                // unreachable in practice (the chainers record conflicts),
+                // kept as a defensive fallback with the same message
                 let kinds: Vec<&str> = many.iter().map(|s| s.kind()).collect();
                 Err(ApiError(format!(
                     "conflicting model sources: {} are all set — choose exactly one",
@@ -264,7 +373,18 @@ impl MdpBuilder {
 
     /// Build the full in-memory serial [`Mdp`] (single rank; for the
     /// distributed path hand the builder to a [`crate::api::Solver`]).
+    /// Queued [`Self::patch_costs`] / [`Self::patch_transitions`] deltas
+    /// are applied on top, re-validating only the touched rows.
     pub fn build_serial(&self) -> Result<Mdp, ApiError> {
+        let mut mdp = self.build_serial_unpatched()?;
+        if self.has_patches() {
+            self.apply_patches(&mut mdp)?;
+        }
+        Ok(mdp)
+    }
+
+    /// [`Self::build_serial`] without the queued deltas.
+    fn build_serial_unpatched(&self) -> Result<Mdp, ApiError> {
         let source = self.resolved_source()?;
         self.validate_discount_filler(source, false)?;
         match source {
@@ -527,6 +647,66 @@ mod tests {
         let err = both.resolved_source().unwrap_err();
         assert!(err.0.contains("conflicting"), "{err}");
         assert!(err.0.contains("file and fillers"), "{err}");
+    }
+
+    #[test]
+    fn source_conflict_is_recorded_at_set_time() {
+        // the conflict text is frozen when the second source is added...
+        let both = MdpBuilder::from_file("x.mdpb").model(
+            model_from_options("maze", &db(&["-rows", "2", "-cols", "2"])).unwrap(),
+        );
+        assert!(both.source_conflict.is_some());
+        assert!(both
+            .source_conflict
+            .as_deref()
+            .unwrap()
+            .contains("file and model"));
+        // ...and every fallible call reports it, including build_serial
+        let err = both.build_serial().unwrap_err();
+        assert!(err.0.contains("conflicting"), "{err}");
+        // three sources name all three kinds
+        let three = both.fillers(1, 1, |_, _| vec![(0, 1.0)], |_, _| 0.0);
+        let err = three.resolved_source().unwrap_err();
+        assert!(err.0.contains("file and model and fillers"), "{err}");
+    }
+
+    #[test]
+    fn builder_patches_apply_through_build_serial() {
+        let base = MdpBuilder::from_fillers(
+            2,
+            2,
+            |s, a| match (s, a) {
+                (0, 0) => vec![(0, 1.0)],
+                (0, 1) => vec![(1, 1.0)],
+                _ => vec![(1, 1.0)],
+            },
+            |s, a| match (s, a) {
+                (0, 0) => 1.0,
+                (0, 1) => 1.5,
+                _ => 0.0,
+            },
+        )
+        .gamma(0.5);
+        let patched = base
+            .clone()
+            .patch_costs([(0, 1, 9.0)])
+            .patch_transitions([(0, 0, vec![(0, 0.5), (1, 0.5)])]);
+        assert!(patched.has_patches() && !base.has_patches());
+        let mdp = patched.build_serial().unwrap();
+        assert_eq!(mdp.cost(0, 1), 9.0);
+        assert_eq!(mdp.transitions().row(0).1, &[0.5, 0.5]);
+        // bad deltas are typed errors from the touched-row validators
+        let err = base
+            .clone()
+            .patch_transitions([(0, 0, vec![(0, 0.2)])])
+            .build_serial()
+            .unwrap_err();
+        assert!(err.0.contains("sums to"), "{err}");
+        let err = base
+            .patch_costs([(5, 0, 1.0)])
+            .build_serial()
+            .unwrap_err();
+        assert!(err.0.contains("out of range"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,208 @@
+//! Warm-start checkpoints: re-using a solved value/policy as the seed of
+//! the next solve.
+//!
+//! Production MDPs drift — costs, demand and failure rates change a little
+//! between solves — so the previous optimal value vector is an excellent
+//! initial guess for the next one. This module turns the `.mdpa` policy
+//! artifact ([`crate::serve::codec`]) into that seed: `-warm_start` accepts
+//! either a checkpoint *file path* (written by `-write_checkpoint` or
+//! [`crate::api::SolveOutcome::write_checkpoint`]) or a 16-hex artifact
+//! *fingerprint* resolved against the `-serve_store` directory, closing the
+//! drift loop `solve → serve → patch → warm re-solve` end to end.
+//!
+//! A seed is only usable when it describes the same decision problem:
+//! [`WarmStart::check_compat`] verifies state/action shape, the discount
+//! bound (bitwise — two solves of "the same" model must agree exactly) and
+//! the optimization sense, and every mismatch is a typed [`ApiError`]
+//! naming both sides. The seed itself is the *global* value vector; the
+//! solver scatters it by row range, so the seed is independent of the rank
+//! partition it was produced under (`SolveOptions::v0` slices `[lo, hi)`
+//! per rank).
+
+use std::sync::Arc;
+
+use crate::mdp::Objective;
+use crate::serve::{codec, fingerprint::parse_hex16, PolicyArtifact, PolicyStore};
+use crate::util::args::Options;
+
+use super::{ApiError, SolveOutcome};
+
+/// A resolved warm-start seed: the previous solve's global value vector
+/// plus the model identity it was produced under, so compatibility can be
+/// checked before any iteration runs.
+#[derive(Clone, Debug)]
+pub struct WarmStart {
+    /// Global value vector of the source solve (one entry per state).
+    pub(crate) value: Arc<Vec<f64>>,
+    /// State count of the source model.
+    pub(crate) n_states: usize,
+    /// Action count of the source model.
+    pub(crate) n_actions: usize,
+    /// Discount bound of the source solve.
+    pub(crate) gamma: f64,
+    /// Optimization sense of the source solve.
+    pub(crate) objective: Objective,
+    /// 16-hex artifact fingerprint of the source — recorded as warm-start
+    /// provenance in the metadata JSON (and nowhere near the artifact
+    /// fingerprint, which stays warm-start-neutral).
+    pub(crate) fingerprint: String,
+}
+
+impl WarmStart {
+    /// Build a seed from a decoded `.mdpa` artifact.
+    pub fn from_artifact(artifact: &PolicyArtifact) -> WarmStart {
+        WarmStart {
+            value: Arc::new(artifact.value.clone()),
+            n_states: artifact.n_states,
+            n_actions: artifact.n_actions,
+            gamma: artifact.gamma,
+            objective: artifact.objective,
+            fingerprint: artifact.fingerprint_hex(),
+        }
+    }
+
+    /// Build a seed from an in-process [`SolveOutcome`] — no checkpoint
+    /// file involved (the [`crate::api::MdpBuilder::warm_start`] path).
+    pub fn from_outcome(outcome: &SolveOutcome) -> WarmStart {
+        WarmStart {
+            value: Arc::new(outcome.result.value.clone()),
+            n_states: outcome.n_states,
+            n_actions: outcome.n_actions,
+            gamma: outcome.gamma,
+            objective: outcome.objective,
+            fingerprint: outcome.fingerprint(),
+        }
+    }
+
+    /// The 16-hex fingerprint of the source artifact/outcome.
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    /// Check that this seed may initialize a solve of the given model.
+    /// Shape must match exactly, gamma bitwise, and the objective — a max-
+    /// reward value vector is not a valid seed for a min-cost solve (and
+    /// vice versa). Every mismatch is a typed error naming both sides.
+    pub fn check_compat(
+        &self,
+        n_states: usize,
+        n_actions: usize,
+        gamma: f64,
+        objective: Objective,
+    ) -> Result<(), ApiError> {
+        let fp = &self.fingerprint;
+        if self.n_states != n_states {
+            return Err(ApiError(format!(
+                "warm start {fp} is incompatible: it solved {} states, this model has {n_states}",
+                self.n_states
+            )));
+        }
+        if self.n_actions != n_actions {
+            return Err(ApiError(format!(
+                "warm start {fp} is incompatible: it solved {} actions, this model has {n_actions}",
+                self.n_actions
+            )));
+        }
+        if self.gamma.to_bits() != gamma.to_bits() {
+            return Err(ApiError(format!(
+                "warm start {fp} is incompatible: it solved with gamma {}, this model uses {gamma}",
+                self.gamma
+            )));
+        }
+        if self.objective != objective {
+            return Err(ApiError(format!(
+                "warm start {fp} is incompatible: it solved objective {}, this solve is {}",
+                self.objective.name(),
+                objective.name()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Resolve a `-warm_start` argument to a seed. A 16-hex string is treated
+/// as a store fingerprint and looked up in the `-serve_store` directory
+/// (a typed error when no store is configured); anything else is read as a
+/// `.mdpa` checkpoint file path. Decode failures — truncation, flipped
+/// bytes, digest mismatches — surface as the codec's typed errors wrapped
+/// into [`ApiError`]s.
+pub fn load_warm_start(spec: &str, db: &Options) -> Result<WarmStart, ApiError> {
+    if parse_hex16(spec).is_some() {
+        let Some(dir) = db.get("serve_store") else {
+            return Err(ApiError(format!(
+                "-warm_start {spec} looks like a store fingerprint, but no \
+                 -serve_store directory is set to look it up in — pass a \
+                 checkpoint file path instead, or add -serve_store <dir>"
+            )));
+        };
+        let store = PolicyStore::on_disk(dir, 0)
+            .map_err(|e| ApiError(format!("-warm_start store '{dir}': {e}")))?;
+        let artifact = store
+            .get(spec)
+            .map_err(|e| ApiError(format!("-warm_start {spec}: {e}")))?;
+        Ok(WarmStart::from_artifact(&artifact))
+    } else {
+        let bytes = std::fs::read(spec)
+            .map_err(|e| ApiError(format!("reading -warm_start '{spec}': {e}")))?;
+        let artifact = codec::decode(&bytes)
+            .map_err(|e| ApiError(format!("-warm_start '{spec}': {e}")))?;
+        Ok(WarmStart::from_artifact(&artifact))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::args::Options;
+
+    fn db(toks: &[&str]) -> Options {
+        Options::parse(toks.iter().map(|s| s.to_string()))
+    }
+
+    fn seed() -> WarmStart {
+        WarmStart {
+            value: Arc::new(vec![1.0, 2.0, 3.0]),
+            n_states: 3,
+            n_actions: 2,
+            gamma: 0.5,
+            objective: Objective::Min,
+            fingerprint: "00000000deadbeef".into(),
+        }
+    }
+
+    #[test]
+    fn compat_accepts_matching_model() {
+        assert!(seed().check_compat(3, 2, 0.5, Objective::Min).is_ok());
+    }
+
+    #[test]
+    fn compat_mismatches_are_typed_and_name_both_sides() {
+        let err = seed().check_compat(4, 2, 0.5, Objective::Min).unwrap_err();
+        assert!(err.0.contains("3 states") && err.0.contains('4'), "{err}");
+        let err = seed().check_compat(3, 5, 0.5, Objective::Min).unwrap_err();
+        assert!(err.0.contains("2 actions") && err.0.contains('5'), "{err}");
+        let err = seed().check_compat(3, 2, 0.9, Objective::Min).unwrap_err();
+        assert!(err.0.contains("gamma"), "{err}");
+        let err = seed().check_compat(3, 2, 0.5, Objective::Max).unwrap_err();
+        assert!(err.0.contains("min") && err.0.contains("max"), "{err}");
+        // every message carries the provenance fingerprint
+        for e in [
+            seed().check_compat(4, 2, 0.5, Objective::Min).unwrap_err(),
+            seed().check_compat(3, 2, 0.9, Objective::Min).unwrap_err(),
+        ] {
+            assert!(e.0.contains("00000000deadbeef"), "{e}");
+        }
+    }
+
+    #[test]
+    fn fingerprint_form_requires_store() {
+        let err = load_warm_start("0123456789abcdef", &db(&[])).unwrap_err();
+        assert!(err.0.contains("-serve_store"), "{err}");
+    }
+
+    #[test]
+    fn missing_checkpoint_file_is_typed() {
+        let err = load_warm_start("/no/such/checkpoint.mdpa", &db(&[])).unwrap_err();
+        assert!(err.0.contains("reading -warm_start"), "{err}");
+    }
+}

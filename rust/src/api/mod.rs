@@ -14,8 +14,14 @@
 //!   exact same table and code path the CLI uses, so the two can never
 //!   drift (a parity test compares their JSON output byte for byte).
 //! - [`SolveOutcome`] is the output surface: `write_policy`, `write_cost`,
-//!   `write_json_metadata` — gathered once on the calling thread, so the
-//!   writes are distributed-safe like the originals' root-gather.
+//!   `write_json_metadata`, `write_checkpoint` — gathered once on the
+//!   calling thread, so the writes are distributed-safe like the originals'
+//!   root-gather.
+//! - [`Solver::build`] splits validation from iteration for re-solve
+//!   loops: a [`PreparedModel`] holds the validated model + resolved
+//!   options, accepts `patch_costs`/`patch_transitions` deltas and
+//!   [`WarmStart`] seeds, and solves repeatedly via
+//!   [`Solver::solve_prepared`] without re-validating untouched rows.
 //!
 //! Everything user-triggerable fails with a typed [`ApiError`] (bad gamma,
 //! sub-stochastic closure rows, conflicting sources, unknown `-keys` with
@@ -50,11 +56,13 @@
 //! ```
 
 pub mod builder;
+pub mod checkpoint;
 pub mod options;
 pub mod solver;
 
 pub use builder::{model_from_options, MdpBuilder, ModelInfo, MODEL_CATALOG};
-pub use solver::{run_solve, SolveOutcome, Solver};
+pub use checkpoint::WarmStart;
+pub use solver::{run_solve, PreparedModel, SolveOutcome, Solver};
 
 use std::fmt;
 

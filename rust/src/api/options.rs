@@ -270,6 +270,14 @@ pub const OPTION_TABLE: &[OptionSpec] = &[
                 sweeps (default 4; k=1 degenerates to synchronous vi)",
         scope: OptionScope::Solve,
     },
+    OptionSpec {
+        key: "warm_start",
+        value: "<path|fingerprint>",
+        help: "seed the solve from a checkpoint: a .mdpa file path, or a 16-hex \
+                artifact fingerprint looked up in -serve_store (shape/gamma/\
+                objective compatibility is checked before solving)",
+        scope: OptionScope::Solve,
+    },
     // -- output -------------------------------------------------------------
     OptionSpec {
         key: "json",
@@ -293,6 +301,13 @@ pub const OPTION_TABLE: &[OptionSpec] = &[
         key: "write_json_metadata",
         value: "<path>",
         help: "write solve metadata JSON (model + solver + result)",
+        scope: OptionScope::Output,
+    },
+    OptionSpec {
+        key: "write_checkpoint",
+        value: "<path.mdpa>",
+        help: "write the solved value/policy as a digest-verified .mdpa checkpoint \
+                (re-loadable via -warm_start)",
         scope: OptionScope::Output,
     },
     // -- generate -----------------------------------------------------------

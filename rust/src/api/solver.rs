@@ -9,14 +9,16 @@
 //! produce byte-identical metadata JSON for the same option set.
 
 use crate::comm::World;
-use crate::mdp::{io, DiscountMode, DistMdp, Objective};
+use crate::mdp::{io, Discount, DiscountMode, DistMdp, Mdp, Objective};
 use crate::solver::{gather_result, solve_dist, SolveOptions, SolveResult};
 use crate::util::args::Options;
 use crate::util::json::Json;
 use std::fmt::Write as _;
 use std::path::Path;
+use std::sync::Arc;
 
-use super::builder::{MdpBuilder, Source};
+use super::builder::{DiscountFn, MdpBuilder, Source};
+use super::checkpoint::{self, WarmStart};
 use super::{options, ApiError};
 
 /// An embedded solve handle: a model (from an [`MdpBuilder`]) plus a
@@ -178,12 +180,187 @@ impl Solver {
     pub fn solve(&self) -> Result<SolveOutcome, ApiError> {
         run_solve(&self.builder, &self.db)
     }
+
+    /// Split validation from iteration for re-solve loops: resolve the
+    /// options database, realize and fully validate the model *once*
+    /// (applying any queued builder deltas with touched-row-only
+    /// re-validation), and return a [`PreparedModel`] that
+    /// [`Self::solve_prepared`] can iterate on. Goes through the exact same
+    /// resolution path as [`Self::solve`], so precedence rules, conflict
+    /// checks and error text are identical — only the per-solve
+    /// re-validation cost is gone.
+    pub fn build(&self) -> Result<PreparedModel, ApiError> {
+        let resolved = resolve_inputs(&self.builder, &self.db)?;
+        let mdp = build_patched_serial(
+            &self.builder,
+            &resolved.source,
+            &resolved.discount_filler,
+            resolved.dmode,
+            resolved.gamma,
+            resolved.objective,
+        )?;
+        if let Some(ws) = &resolved.warm {
+            ws.check_compat(mdp.n_states(), mdp.n_actions(), mdp.gamma(), mdp.objective())?;
+        }
+        Ok(PreparedModel {
+            mdp: Arc::new(mdp),
+            options: resolved.solve_opts,
+            ranks: resolved.ranks,
+            threads: resolved.threads,
+            warm: resolved.warm,
+        })
+    }
+
+    /// Solve a [`PreparedModel`] produced by [`Self::build`] — the
+    /// iteration half of a re-solve loop. The model is already validated:
+    /// every rank slices its row block from the prepared model (the slicing
+    /// is partition-independent), the solve is seeded from the prepared
+    /// warm start if one is attached, and the configured `-write_*`
+    /// outputs run exactly as in [`Self::solve`]. The prepared model is
+    /// reusable: repeated calls give bitwise-identical outcomes.
+    pub fn solve_prepared(&self, prepared: &PreparedModel) -> Result<SolveOutcome, ApiError> {
+        crate::util::par::set_threads(prepared.threads);
+        if let Some(mode) = options::resolve_comm_overlap(&self.db)? {
+            crate::comm::overlap::set_mode(mode);
+        }
+        let overlap_mode = crate::comm::overlap::current();
+        let model = Arc::clone(&prepared.mdp);
+        let mut so = prepared.options.clone();
+        if let Some(ws) = &prepared.warm {
+            // Compatibility was checked when the seed was attached; patches
+            // cannot change the model shape afterwards, so it stays valid.
+            so.v0 = Some(ws.value.as_ref().clone());
+        }
+        let ranks = prepared.ranks;
+        let results: Vec<SolveResult> = World::run(ranks, move |comm| {
+            let mdp = DistMdp::from_serial(&comm, &model);
+            let local = solve_dist(&comm, &mdp, &so);
+            gather_result(&comm, local)
+        });
+        let result = results
+            .into_iter()
+            .next()
+            .expect("world returns at least one rank");
+        let outcome = SolveOutcome {
+            n_states: result.value.len(),
+            n_actions: prepared.mdp.n_actions(),
+            gamma: prepared.mdp.gamma(),
+            objective: prepared.mdp.objective(),
+            discount_mode: prepared.mdp.discount().mode(),
+            options: prepared.options.clone(),
+            ranks,
+            threads: prepared.threads,
+            comm_overlap: overlap_mode,
+            warm_start: prepared.warm.as_ref().map(|ws| ws.fingerprint().to_string()),
+            result,
+        };
+        write_outputs(&outcome, &self.db)?;
+        Ok(outcome)
+    }
 }
 
-/// The one shared solve path behind the CLI `solve` command and
-/// [`Solver::solve`]: validate the database, resolve options, realize the
-/// model source on every rank, solve, gather.
-pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, ApiError> {
+/// A validated, ready-to-iterate model: the output of [`Solver::build`].
+///
+/// Separates the fallible, expensive half of a solve (option resolution,
+/// model realization, full stochasticity validation) from the iteration
+/// itself, so a drifting-model loop pays validation once:
+/// patch → warm-start → [`Solver::solve_prepared`] → repeat. Deltas applied
+/// through [`Self::patch_costs`] / [`Self::patch_transitions`] re-validate
+/// only the touched rows — untouched rows are never re-scanned.
+pub struct PreparedModel {
+    mdp: Arc<Mdp>,
+    options: SolveOptions,
+    ranks: usize,
+    threads: usize,
+    warm: Option<WarmStart>,
+}
+
+impl PreparedModel {
+    /// Global state count of the prepared model.
+    pub fn n_states(&self) -> usize {
+        self.mdp.n_states()
+    }
+
+    /// Action count of the prepared model.
+    pub fn n_actions(&self) -> usize {
+        self.mdp.n_actions()
+    }
+
+    /// Uniform discount bound of the prepared model (the scalar γ for
+    /// classic MDPs, `max γ(s,a)` for semi-MDPs).
+    pub fn gamma(&self) -> f64 {
+        self.mdp.gamma()
+    }
+
+    /// Overwrite individual `(state, action, cost)` entries in place. Only
+    /// the patched entries are validated (in range, finite); all-or-nothing
+    /// — on error the model is unchanged.
+    pub fn patch_costs(&mut self, rows: &[(usize, usize, f64)]) -> Result<(), ApiError> {
+        Arc::make_mut(&mut self.mdp)
+            .patch_costs(rows)
+            .map_err(ApiError)
+    }
+
+    /// Replace individual `(state, action)` transition rows in place. Each
+    /// replacement row is validated exactly like a filler row (targets in
+    /// range, probabilities summing to 1 within `1e-8`); rows not named in
+    /// `blocks` are not re-scanned.
+    pub fn patch_transitions(
+        &mut self,
+        blocks: &[(usize, usize, Vec<(usize, f64)>)],
+    ) -> Result<(), ApiError> {
+        Arc::make_mut(&mut self.mdp)
+            .patch_transitions(blocks)
+            .map_err(ApiError)
+    }
+
+    /// Seed the next [`Solver::solve_prepared`] call from a previous
+    /// outcome — typically the pre-drift solve of the same model. Shape,
+    /// gamma and objective compatibility are checked immediately against
+    /// the prepared model: a mismatch is a typed error here, not at solve
+    /// time.
+    pub fn warm_start(&mut self, outcome: &SolveOutcome) -> Result<(), ApiError> {
+        let ws = WarmStart::from_outcome(outcome);
+        ws.check_compat(
+            self.mdp.n_states(),
+            self.mdp.n_actions(),
+            self.mdp.gamma(),
+            self.mdp.objective(),
+        )?;
+        self.warm = Some(ws);
+        Ok(())
+    }
+
+    /// Drop the warm-start seed: the next [`Solver::solve_prepared`] call
+    /// runs cold.
+    pub fn clear_warm_start(&mut self) {
+        self.warm = None;
+    }
+}
+
+/// Everything the pre-model half of a solve derives from a builder plus an
+/// options database — the shared front end of [`run_solve`] and
+/// [`Solver::build`], so the two can never drift in validation, precedence
+/// or error text.
+struct Resolved {
+    solve_opts: SolveOptions,
+    ranks: usize,
+    threads: usize,
+    overlap: Option<crate::comm::OverlapMode>,
+    source: Source,
+    discount_filler: Option<DiscountFn>,
+    dmode: Option<DiscountMode>,
+    gamma: f64,
+    objective: Objective,
+    warm: Option<WarmStart>,
+}
+
+/// Validate the database and resolve every pre-model input of a solve:
+/// solver options, ranks/threads, overlap mode, the model source, discount
+/// semantics, gamma/objective precedence, and the warm-start seed. Pure —
+/// no process-global state is installed here, so [`Solver::build`] can call
+/// it without side effects.
+fn resolve_inputs(builder: &MdpBuilder, db: &Options) -> Result<Resolved, ApiError> {
     options::validate_keys(db)?;
     if db.has("options_file") {
         return Err(ApiError(
@@ -197,20 +374,8 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
     if ranks == 0 {
         return Err(ApiError("-ranks must be >= 1".into()));
     }
-    // Hybrid ranks × threads: install the intra-rank worker-thread count
-    // before the world spawns, so every rank's lazily created pool (see
-    // `util::par`) picks it up. Results are thread-count independent.
     let threads = options::resolve_threads(db)?;
-    crate::util::par::set_threads(threads);
-    // Communication overlap: an explicit -comm_overlap installs the
-    // process-global mode before the world spawns; otherwise any earlier
-    // set_mode / MADUPITE_COMM_OVERLAP / auto stays in effect. Either way
-    // the schedule is a pure scheduling knob — results are bitwise
-    // identical (tests/par_determinism.rs).
-    if let Some(mode) = options::resolve_comm_overlap(db)? {
-        crate::comm::overlap::set_mode(mode);
-    }
-    let overlap_mode = crate::comm::overlap::current();
+    let overlap = options::resolve_comm_overlap(db)?;
     let source = builder.resolved_source()?.clone();
     let discount_filler = builder.discount_filler_value().cloned();
     let dmode = options::resolve_discount_mode(db)?;
@@ -274,10 +439,92 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
         ),
     };
 
+    // Warm start: `-warm_start <path|fingerprint>` and the in-process
+    // builder seed (`MdpBuilder::warm_start`) are one surface — setting
+    // both is a typed conflict, mirroring the model-source rule.
+    let warm: Option<WarmStart> = match (db.get("warm_start"), builder.warm_start_value()) {
+        (Some(spec), Some(_)) => {
+            return Err(ApiError(format!(
+                "conflicting warm-start sources: -warm_start {spec} and \
+                 MdpBuilder::warm_start are both set — choose exactly one"
+            )))
+        }
+        (Some(spec), None) => Some(checkpoint::load_warm_start(spec, db)?),
+        (None, Some(ws)) => Some(ws.clone()),
+        (None, None) => None,
+    };
+
+    Ok(Resolved {
+        solve_opts,
+        ranks,
+        threads,
+        overlap,
+        source,
+        discount_filler,
+        dmode,
+        gamma,
+        objective,
+        warm,
+    })
+}
+
+/// The one shared solve path behind the CLI `solve` command and
+/// [`Solver::solve`]: validate the database, resolve options, realize the
+/// model source on every rank, solve, gather.
+pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, ApiError> {
+    let resolved = resolve_inputs(builder, db)?;
+    // Hybrid ranks × threads: install the intra-rank worker-thread count
+    // before the world spawns, so every rank's lazily created pool (see
+    // `util::par`) picks it up. Results are thread-count independent.
+    crate::util::par::set_threads(resolved.threads);
+    // Communication overlap: an explicit -comm_overlap installs the
+    // process-global mode before the world spawns; otherwise any earlier
+    // set_mode / MADUPITE_COMM_OVERLAP / auto stays in effect. Either way
+    // the schedule is a pure scheduling knob — results are bitwise
+    // identical (tests/par_determinism.rs).
+    if let Some(mode) = resolved.overlap {
+        crate::comm::overlap::set_mode(mode);
+    }
+    let overlap_mode = crate::comm::overlap::current();
+    let Resolved {
+        solve_opts,
+        ranks,
+        threads,
+        source,
+        discount_filler,
+        dmode,
+        gamma,
+        objective,
+        warm,
+        ..
+    } = resolved;
+
+    // Incremental deltas: realize the patched model once on the calling
+    // thread (touched-row re-validation only) and let every rank slice its
+    // block from it. Cold solves (no patches) keep the direct distributed
+    // build paths below untouched — bitwise identical to before the patch
+    // surface existed.
+    let prebuilt: Option<Arc<Mdp>> = if builder.has_patches() {
+        Some(Arc::new(build_patched_serial(
+            builder,
+            &source,
+            &discount_filler,
+            dmode,
+            gamma,
+            objective,
+        )?))
+    } else {
+        None
+    };
+
     let so = solve_opts.clone();
+    let warm_in_world = warm.clone();
     type RankOut = Result<(SolveResult, usize, f64, Objective, DiscountMode), String>;
     let results: Vec<RankOut> = World::run(ranks, move |comm| {
-        let mdp: DistMdp = match &source {
+        let mdp: DistMdp = if let Some(model) = &prebuilt {
+            DistMdp::from_serial(&comm, model)
+        } else {
+            match &source {
             Source::File(path) => io::load_dist(&comm, path.as_str())
                 .map_err(|e| format!("loading {path}: {e}"))?,
             Source::Model(generator) => {
@@ -345,6 +592,23 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
                     .with_objective(objective)
                 }
             }
+            }
+        };
+        // Warm-start compatibility is checked against the *realized* model
+        // (the only place a .mdpb's shape is known), from global quantities
+        // only — every rank reaches the same verdict, so a mismatch is a
+        // typed error on all ranks, never a deadlock. The seed is the
+        // global value vector; solve_dist scatters it by row range, making
+        // the seeding independent of the rank partition.
+        let so = match &warm_in_world {
+            Some(ws) => {
+                ws.check_compat(mdp.n_states(), mdp.n_actions(), mdp.gamma(), mdp.objective())
+                    .map_err(|e| e.0)?;
+                let mut seeded = so.clone();
+                seeded.v0 = Some(ws.value.as_ref().clone());
+                seeded
+            }
+            None => so.clone(),
         };
         let local = solve_dist(&comm, &mdp, &so);
         let shape = (mdp.n_actions(), mdp.gamma(), mdp.objective(), mdp.discount().mode());
@@ -377,11 +641,18 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
         ranks,
         threads,
         comm_overlap: overlap_mode,
+        warm_start: warm.map(|ws| ws.fingerprint),
         result,
     };
-    // The output keys are part of the shared surface: whichever front end
-    // put them in the database, the writes happen on this one path (the
-    // CLI only reports the paths afterwards).
+    write_outputs(&outcome, db)?;
+    Ok(outcome)
+}
+
+/// The one output path shared by [`run_solve`] and
+/// [`Solver::solve_prepared`]: whichever front end put the output keys in
+/// the database, the writes happen here (the CLI only reports the paths
+/// afterwards).
+fn write_outputs(outcome: &SolveOutcome, db: &Options) -> Result<(), ApiError> {
     if let Some(path) = db.get("json") {
         let text = outcome
             .result
@@ -398,15 +669,95 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
     if let Some(path) = db.get("write_json_metadata") {
         outcome.write_json_metadata(path)?;
     }
+    if let Some(path) = db.get("write_checkpoint") {
+        outcome.write_checkpoint(path)?;
+    }
     if let Some(dir) = db.get("serve_store") {
         let cache = options::resolve_serve_cache_entries(db)?;
         let store = crate::serve::PolicyStore::on_disk(dir, cache)
             .map_err(|e| ApiError(format!("serve store {dir}: {e}")))?;
         store
-            .put_outcome(&outcome)
+            .put_outcome(outcome)
             .map_err(|e| ApiError(format!("serve store {dir}: {e}")))?;
     }
-    Ok(outcome)
+    Ok(())
+}
+
+/// Serial twin of the distributed source-realization arms inside
+/// [`run_solve`]'s world closure, used by the patch and
+/// [`Solver::build`] paths: same gamma/objective/discount-mode semantics,
+/// same typed errors, then the queued builder deltas applied on top with
+/// touched-row-only re-validation.
+fn build_patched_serial(
+    builder: &MdpBuilder,
+    source: &Source,
+    discount_filler: &Option<DiscountFn>,
+    dmode: Option<DiscountMode>,
+    gamma: f64,
+    objective: Objective,
+) -> Result<Mdp, ApiError> {
+    let mut mdp = match source {
+        Source::File(path) => {
+            io::load(path).map_err(|e| ApiError(format!("loading {path}: {e}")))?
+        }
+        Source::Model(generator) => match dmode {
+            Some(mode) if mode != DiscountMode::Scalar && !generator.has_discounts() => {
+                Mdp::try_from_fillers_discounted(
+                    generator.n_states(),
+                    generator.n_actions(),
+                    Discount::constant(mode, gamma, generator.n_states(), generator.n_actions()),
+                    |s, a| generator.prob_row(s, a),
+                    |s, a| generator.cost(s, a),
+                )
+                .map_err(ApiError)?
+                .with_objective(objective)
+            }
+            _ => generator
+                .try_build_serial(gamma)
+                .map_err(ApiError)?
+                .with_objective(objective),
+        },
+        Source::Fillers {
+            n_states,
+            n_actions,
+            prob,
+            cost,
+        } => {
+            if let Some(disc) = discount_filler {
+                Mdp::try_from_fillers_semi(
+                    *n_states,
+                    *n_actions,
+                    |s, a| disc(s, a),
+                    |s, a| prob(s, a),
+                    |s, a| cost(s, a),
+                )
+                .map_err(ApiError)?
+                .with_objective(objective)
+            } else if let Some(mode) = dmode.filter(|&m| m != DiscountMode::Scalar) {
+                Mdp::try_from_fillers_discounted(
+                    *n_states,
+                    *n_actions,
+                    Discount::constant(mode, gamma, *n_states, *n_actions),
+                    |s, a| prob(s, a),
+                    |s, a| cost(s, a),
+                )
+                .map_err(ApiError)?
+                .with_objective(objective)
+            } else {
+                Mdp::try_from_fillers(
+                    *n_states,
+                    *n_actions,
+                    gamma,
+                    |s, a| prob(s, a),
+                    |s, a| cost(s, a),
+                )
+                .map_err(ApiError)?
+                .with_objective(objective)
+            }
+        }
+    };
+    builder.apply_patches(&mut mdp)?;
+    Ok(mdp)
 }
 
 /// Gathered result of an embedded solve plus everything needed to report
@@ -437,6 +788,12 @@ pub struct SolveOutcome {
     /// Effective communication-overlap mode the solve ran under
     /// (`-comm_overlap` / `MADUPITE_COMM_OVERLAP` / auto).
     pub comm_overlap: crate::comm::OverlapMode,
+    /// Warm-start provenance: the 16-hex fingerprint of the seed artifact
+    /// or outcome when the solve was warm-started, `None` for cold solves.
+    /// Reported in [`Self::metadata_json`] (only when present, so cold
+    /// metadata bytes are unchanged) and deliberately **excluded** from
+    /// [`Self::fingerprint_json`] — the artifact key is warm-start-neutral.
+    pub warm_start: Option<String>,
     /// The gathered global solve result (value, policy, trace).
     pub result: SolveResult,
 }
@@ -461,6 +818,33 @@ impl SolveOutcome {
     /// The serialization is therefore byte-deterministic for a given
     /// outcome; `tests/serve.rs` pins the exact bytes with a golden test.
     pub fn metadata_json(&self) -> Json {
+        let mut solver_keys = vec![
+            ("method", Json::str(self.options.method.name())),
+            ("eval_backend", Json::str(self.options.eval_backend.name())),
+            (
+                "inner_precision",
+                Json::str(self.options.inner_precision.name()),
+            ),
+            ("ranks", Json::int(self.ranks as i64)),
+            ("threads", Json::int(self.threads as i64)),
+            ("atol", Json::num(self.options.atol)),
+            ("alpha", Json::num(self.options.alpha)),
+            ("adaptive_forcing", Json::Bool(self.options.adaptive_forcing)),
+            ("max_iter_pi", Json::int(self.options.max_outer as i64)),
+            ("max_iter_ksp", Json::int(self.options.max_inner as i64)),
+            ("comm_overlap", Json::str(self.comm_overlap.name())),
+            ("async_vi", Json::Bool(self.options.async_vi)),
+            (
+                "async_vi_staleness",
+                Json::int(self.options.async_vi_staleness as i64),
+            ),
+        ];
+        // Warm-start provenance is emitted only when present: cold solves
+        // keep the exact metadata bytes pinned by the golden test in
+        // tests/serve.rs.
+        if let Some(fp) = &self.warm_start {
+            solver_keys.push(("warm_start", Json::str(fp)));
+        }
         Json::obj(vec![
             ("madupite_version", Json::str(crate::VERSION)),
             (
@@ -473,30 +857,7 @@ impl SolveOutcome {
                     ("objective", Json::str(self.objective.name())),
                 ]),
             ),
-            (
-                "solver",
-                Json::obj(vec![
-                    ("method", Json::str(self.options.method.name())),
-                    ("eval_backend", Json::str(self.options.eval_backend.name())),
-                    (
-                        "inner_precision",
-                        Json::str(self.options.inner_precision.name()),
-                    ),
-                    ("ranks", Json::int(self.ranks as i64)),
-                    ("threads", Json::int(self.threads as i64)),
-                    ("atol", Json::num(self.options.atol)),
-                    ("alpha", Json::num(self.options.alpha)),
-                    ("adaptive_forcing", Json::Bool(self.options.adaptive_forcing)),
-                    ("max_iter_pi", Json::int(self.options.max_outer as i64)),
-                    ("max_iter_ksp", Json::int(self.options.max_inner as i64)),
-                    ("comm_overlap", Json::str(self.comm_overlap.name())),
-                    ("async_vi", Json::Bool(self.options.async_vi)),
-                    (
-                        "async_vi_staleness",
-                        Json::int(self.options.async_vi_staleness as i64),
-                    ),
-                ]),
-            ),
+            ("solver", Json::obj(solver_keys)),
             ("result", self.result.to_json(&self.options.method.name())),
         ])
     }
@@ -543,6 +904,18 @@ impl SolveOutcome {
         let mut text = self.metadata_json().to_string_pretty();
         text.push('\n');
         write_text(path.as_ref(), &text)
+    }
+
+    /// Write this outcome as a digest-verified `.mdpa` checkpoint — the
+    /// same self-verifying codec the serve store uses — re-loadable as a
+    /// warm-start seed via `-warm_start <path>` on the CLI, or via
+    /// [`crate::serve::codec::decode`] plus
+    /// [`super::WarmStart::from_artifact`] in the embedded API. The CLI
+    /// reaches this through `-write_checkpoint <path.mdpa>`.
+    pub fn write_checkpoint(&self, path: impl AsRef<Path>) -> Result<(), ApiError> {
+        let bytes = crate::serve::PolicyArtifact::from_outcome(self).encode();
+        std::fs::write(path.as_ref(), &bytes)
+            .map_err(|e| ApiError(format!("writing {}: {e}", path.as_ref().display())))
     }
 
     /// The canonical fingerprint document this outcome is keyed by in a
@@ -739,6 +1112,73 @@ mod tests {
         assert!(s.get("comm_overlap").unwrap().as_str().is_some());
         assert_eq!(s.get("async_vi").unwrap().as_bool(), Some(false));
         assert_eq!(s.get("async_vi_staleness").unwrap().as_f64(), Some(4.0));
+    }
+
+    #[test]
+    fn build_and_solve_prepared_matches_solve() {
+        let mut solver = Solver::new(two_state_builder());
+        solver
+            .set_options_from_str("-method ipi -atol 1e-10")
+            .unwrap();
+        let cold = solver.solve().unwrap();
+        let prepared = solver.build().unwrap();
+        assert_eq!(prepared.n_states(), 2);
+        assert_eq!(prepared.n_actions(), 2);
+        assert_eq!(prepared.gamma(), 0.5);
+        let a = solver.solve_prepared(&prepared).unwrap();
+        assert!(a.result.converged);
+        prop::close_slices(a.value(), cold.value(), 1e-12).unwrap();
+        assert_eq!(a.policy(), cold.policy());
+        // the prepared model is reusable: a second solve is bitwise equal
+        let b = solver.solve_prepared(&prepared).unwrap();
+        assert_eq!(a.value(), b.value());
+        assert_eq!(a.policy(), b.policy());
+        assert_eq!(a.fingerprint(), b.fingerprint());
+    }
+
+    #[test]
+    fn prepared_patch_and_warm_start_loop() {
+        let mut solver = Solver::new(two_state_builder());
+        solver
+            .set_options_from_str("-method ipi -atol 1e-10")
+            .unwrap();
+        let cold = solver.solve().unwrap();
+        let mut prepared = solver.build().unwrap();
+        prepared.warm_start(&cold).unwrap();
+        let warm = solver.solve_prepared(&prepared).unwrap();
+        // seeded from the converged value: bitwise-identical result,
+        // provenance recorded, serving fingerprint unchanged (neutrality)
+        assert_eq!(warm.value(), cold.value());
+        assert_eq!(warm.policy(), cold.policy());
+        assert_eq!(warm.warm_start.as_deref(), Some(cold.fingerprint().as_str()));
+        assert_eq!(warm.fingerprint(), cold.fingerprint());
+        // drift the model: action 0 in state 0 becomes the cheap one
+        prepared.patch_costs(&[(0, 0, 0.1)]).unwrap();
+        let resolved = solver.solve_prepared(&prepared).unwrap();
+        assert!(resolved.result.converged);
+        assert!((resolved.value()[0] - 0.2).abs() < 1e-8, "{:?}", resolved.value());
+        assert_eq!(resolved.policy()[0], 0);
+        // a bad patch is typed and leaves the model usable
+        let err = prepared.patch_costs(&[(9, 0, 1.0)]).unwrap_err();
+        assert!(err.0.contains("out of range"), "{err}");
+        let again = solver.solve_prepared(&prepared).unwrap();
+        assert_eq!(again.value(), resolved.value());
+    }
+
+    #[test]
+    fn prepared_warm_start_mismatch_is_typed() {
+        let mut solver = Solver::new(two_state_builder());
+        solver.set_option("-atol", "1e-10").unwrap();
+        let outcome = solver.solve().unwrap();
+        let other =
+            MdpBuilder::from_fillers(3, 2, |s, _| vec![(s, 1.0)], |_, _| 1.0).gamma(0.5);
+        let mut prepared = Solver::new(other).build().unwrap();
+        let err = prepared.warm_start(&outcome).unwrap_err();
+        assert!(err.0.contains("states"), "{err}");
+        // a rejected seed leaves the prepared model cold and usable
+        prepared.clear_warm_start();
+        let out = solver.solve_prepared(&solver.build().unwrap()).unwrap();
+        assert!(out.result.converged);
     }
 
     #[test]

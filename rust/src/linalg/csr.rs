@@ -176,6 +176,48 @@ impl Csr {
         (&self.indices[a..b], &self.values[a..b])
     }
 
+    /// Replace one row's entries in place, keeping every other row intact.
+    ///
+    /// The incremental-update primitive behind [`crate::mdp::Mdp`]'s
+    /// `patch_transitions`: only the spliced row is validated (columns
+    /// sorted-unique and `< ncols` — the same invariants [`Self::from_parts`]
+    /// enforces globally), so patching one row of a huge matrix does not
+    /// re-scan the others. The row may grow or shrink; the tail of
+    /// `indptr` is shifted accordingly.
+    pub fn set_row(&mut self, r: usize, entries: &[(usize, f64)]) -> Result<(), String> {
+        if r >= self.nrows {
+            return Err(format!("row {r} out of range ({} rows)", self.nrows));
+        }
+        for w in entries.windows(2) {
+            if w[0].0 >= w[1].0 {
+                return Err(format!("row {r}: columns not sorted-unique"));
+            }
+        }
+        if let Some(&(last, _)) = entries.last() {
+            if last >= self.ncols {
+                return Err(format!("row {r}: column {last} >= ncols {}", self.ncols));
+            }
+        }
+        let (start, end) = (self.indptr[r], self.indptr[r + 1]);
+        self.indices.splice(start..end, entries.iter().map(|&(c, _)| c));
+        self.values.splice(start..end, entries.iter().map(|&(_, v)| v));
+        let old_len = end - start;
+        if entries.len() != old_len {
+            if entries.len() >= old_len {
+                let grow = entries.len() - old_len;
+                for p in self.indptr[r + 1..].iter_mut() {
+                    *p += grow;
+                }
+            } else {
+                let shrink = old_len - entries.len();
+                for p in self.indptr[r + 1..].iter_mut() {
+                    *p -= shrink;
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Entry lookup (binary search within the row).
     pub fn get(&self, r: usize, c: usize) -> f64 {
         let (cols, vals) = self.row(r);
@@ -373,6 +415,44 @@ mod tests {
         assert_eq!(m.get(0, 1), 0.0);
         assert_eq!(m.get(0, 2), 2.0);
         assert_eq!(m.get(1, 1), 3.0);
+    }
+
+    #[test]
+    fn set_row_splices_and_shifts_tail() {
+        // grow row 0 from 2 to 3 entries
+        let mut m = small();
+        m.set_row(0, &[(0, 4.0), (1, 5.0), (2, 6.0)]).unwrap();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.get(0, 1), 5.0);
+        assert_eq!(m.get(1, 1), 3.0, "untouched row must survive the splice");
+        // shrink row 0 to a single entry
+        m.set_row(0, &[(2, 7.0)]).unwrap();
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.get(0, 0), 0.0);
+        assert_eq!(m.get(0, 2), 7.0);
+        assert_eq!(m.get(1, 1), 3.0);
+        // result still passes the full-structure validator
+        let rebuilt = Csr::from_parts(
+            m.nrows(),
+            m.ncols(),
+            m.indptr().to_vec(),
+            m.indices().to_vec(),
+            m.values().to_vec(),
+        );
+        assert!(rebuilt.is_ok(), "{rebuilt:?}");
+    }
+
+    #[test]
+    fn set_row_rejects_bad_rows() {
+        let mut m = small();
+        assert!(m.set_row(2, &[(0, 1.0)]).unwrap_err().contains("out of range"));
+        assert!(m
+            .set_row(0, &[(1, 1.0), (1, 2.0)])
+            .unwrap_err()
+            .contains("sorted-unique"));
+        assert!(m.set_row(0, &[(0, 1.0), (3, 2.0)]).unwrap_err().contains("ncols"));
+        // failed patches leave the matrix unchanged
+        assert_eq!(m, small());
     }
 
     #[test]

@@ -211,7 +211,13 @@ fn cmd_solve(opts: &Options) -> Result<(), String> {
         outcome.result.comm_bytes,
     );
     // run_solve already wrote any requested output files; report them.
-    for key in ["json", "write_policy", "write_cost", "write_json_metadata"] {
+    for key in [
+        "json",
+        "write_policy",
+        "write_cost",
+        "write_json_metadata",
+        "write_checkpoint",
+    ] {
         if let Some(path) = opts.get(key) {
             println!("wrote {path}");
         }

@@ -427,6 +427,58 @@ impl Mdp {
             .fold(0.0, f64::max)
     }
 
+    /// Patch individual stage costs in place — the delta-update path for
+    /// drifting models. Validates **only the touched entries** (index
+    /// bounds and cost finiteness, the same bar construction applies to
+    /// every entry) instead of re-scanning the full cost table; all
+    /// patches are checked before any is applied, so a bad entry leaves
+    /// the model untouched.
+    pub fn patch_costs(&mut self, rows: &[(usize, usize, f64)]) -> Result<(), String> {
+        for &(s, a, c) in rows {
+            if s >= self.n_states || a >= self.n_actions {
+                return Err(format!(
+                    "cost patch (s={s}, a={a}) is out of range for a {}x{} MDP",
+                    self.n_states, self.n_actions
+                ));
+            }
+            if !c.is_finite() {
+                return Err(format!("cost patch (s={s}, a={a}) has non-finite cost {c}"));
+            }
+        }
+        for &(s, a, c) in rows {
+            self.costs[s * self.n_actions + a] = c;
+        }
+        Ok(())
+    }
+
+    /// Patch transition rows in place — each block replaces the successor
+    /// distribution of one `(s, a)` pair. Re-validates **only the touched
+    /// rows** (bounds, finite non-negative probabilities, stochasticity at
+    /// the same 1e-8 bar as construction, with the offending `(s, a)`
+    /// named); untouched rows are not re-scanned. All blocks are checked
+    /// before any row is spliced, so a bad block leaves the model
+    /// untouched.
+    pub fn patch_transitions(
+        &mut self,
+        blocks: &[(usize, usize, Vec<(usize, f64)>)],
+    ) -> Result<(), String> {
+        for (s, a, row) in blocks {
+            if *s >= self.n_states || *a >= self.n_actions {
+                return Err(format!(
+                    "transition patch (s={s}, a={a}) is out of range for a {}x{} MDP",
+                    self.n_states, self.n_actions
+                ));
+            }
+            validate_filler_row(self.n_states, *s, *a, row)?;
+        }
+        for (s, a, row) in blocks {
+            let mut entries = row.clone();
+            Csr::normalize_row_entries(&mut entries);
+            self.transitions.set_row(s * self.n_actions + a, &entries)?;
+        }
+        Ok(())
+    }
+
     /// Total memory of the MDP data (bytes) — reported in E5.
     pub fn storage_bytes(&self) -> usize {
         let disc = self.discount.entries().map_or(0, |v| v.len() * 8);
@@ -1006,6 +1058,54 @@ mod tests {
         assert!(Mdp::new(2, 2, bad, vec![0.0; 4], 0.9).is_err());
         // non-finite cost
         assert!(Mdp::new(2, 2, t4, vec![0.0, f64::NAN, 0.0, 0.0], 0.9).is_err());
+    }
+
+    #[test]
+    fn patch_costs_touched_entries_only() {
+        let mut mdp = two_state(0.5, 1.5);
+        mdp.patch_costs(&[(0, 1, 3.0)]).unwrap();
+        assert_eq!(mdp.cost(0, 1), 3.0);
+        assert_eq!(mdp.cost(0, 0), 1.0, "untouched costs must survive");
+        // patched model solves like one built with the new cost: with
+        // c=3 > 1/(1−γ)=2, staying forever is optimal.
+        let (tv, pol) = mdp.bellman(&[2.0, 0.0]);
+        prop::close_slices(&tv, &[2.0, 0.0], 1e-12).unwrap();
+        assert_eq!(pol[0], 0);
+        // bad patches are typed errors naming the pair, applied atomically
+        let err = mdp.patch_costs(&[(0, 0, 0.5), (2, 0, 1.0)]).unwrap_err();
+        assert!(err.contains("s=2") && err.contains("out of range"), "{err}");
+        assert_eq!(mdp.cost(0, 0), 1.0, "failed batch must not half-apply");
+        let err = mdp.patch_costs(&[(1, 0, f64::NAN)]).unwrap_err();
+        assert!(err.contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn patch_transitions_revalidates_touched_rows() {
+        let mut mdp = two_state(0.5, 1.5);
+        // re-route (0, 1): jump home becomes a lazy 50/50 jump
+        mdp.patch_transitions(&[(0, 1, vec![(0, 0.5), (1, 0.5)])])
+            .unwrap();
+        let (cols, vals) = mdp.transitions().row(1);
+        assert_eq!(cols, &[0, 1]);
+        assert_eq!(vals, &[0.5, 0.5]);
+        // untouched rows intact
+        assert_eq!(mdp.transitions().row(0).0, &[0]);
+        // sub-stochastic rows are rejected with the (s, a) pair named
+        let err = mdp
+            .patch_transitions(&[(1, 0, vec![(0, 0.4)])])
+            .unwrap_err();
+        assert!(err.contains("s=1") && err.contains("sums to"), "{err}");
+        // out-of-range targets too
+        let err = mdp
+            .patch_transitions(&[(0, 0, vec![(5, 1.0)])])
+            .unwrap_err();
+        assert!(err.contains("n_states"), "{err}");
+        // unsorted duplicate input is normalized like the builders do
+        mdp.patch_transitions(&[(1, 1, vec![(1, 0.25), (0, 0.5), (1, 0.25)])])
+            .unwrap();
+        let (cols, vals) = mdp.transitions().row(3);
+        assert_eq!(cols, &[0, 1]);
+        assert_eq!(vals, &[0.5, 0.5]);
     }
 
     #[test]

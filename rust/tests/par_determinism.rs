@@ -307,6 +307,77 @@ fn comm_overlap_on_off_bitwise_identical() {
     par::set_threads(1);
 }
 
+/// Warm starting is result-neutral (DESIGN.md §16): seeding a solve with
+/// the converged value of the same model (`SolveOptions::v0`, the carrier
+/// behind `-warm_start`) must return the *identical* value vector bitwise —
+/// the convergence check fires before any update — plus the identical
+/// greedy policy, in exactly one outer iteration, across the full
+/// method × backend × ranks × threads matrix. The seed is the global
+/// vector and every rank slices its own block, so the equality also pins
+/// rank-partition independence of the scatter.
+#[test]
+fn warm_start_bitwise_equals_cold_across_matrix() {
+    let _guard = lock();
+    let mdp = Arc::new(GarnetSpec::new(400, 4, 5, 99).build_serial(0.95));
+    for ranks in [1usize, 4] {
+        for method in methods() {
+            for backend in [
+                EvalBackend::MatFree,
+                EvalBackend::Assembled,
+                EvalBackend::Bsr,
+            ] {
+                for threads in [1usize, 4] {
+                    par::set_threads(threads);
+                    let opts = SolveOptions {
+                        method: method.clone(),
+                        eval_backend: backend,
+                        atol: 1e-9,
+                        ..Default::default()
+                    };
+                    let cold = solve_world(Arc::clone(&mdp), ranks, &opts);
+                    assert!(
+                        cold.converged,
+                        "{}/{}/ranks={ranks}/threads={threads} did not converge",
+                        method.name(),
+                        backend.name()
+                    );
+                    let warm_opts = SolveOptions {
+                        v0: Some(cold.value.clone()),
+                        ..opts
+                    };
+                    let warm = solve_world(Arc::clone(&mdp), ranks, &warm_opts);
+                    assert!(warm.converged);
+                    assert_eq!(
+                        warm.outer_iterations,
+                        1,
+                        "{}/{}/ranks={ranks}/threads={threads}: a converged seed must \
+                         terminate at the first residual check",
+                        method.name(),
+                        backend.name()
+                    );
+                    let cold_bits: Vec<u64> = cold.value.iter().map(|v| v.to_bits()).collect();
+                    let warm_bits: Vec<u64> = warm.value.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        warm_bits,
+                        cold_bits,
+                        "{}/{}/ranks={ranks}/threads={threads}: warm value diverged from cold",
+                        method.name(),
+                        backend.name()
+                    );
+                    assert_eq!(
+                        warm.policy,
+                        cold.policy,
+                        "{}/{}/ranks={ranks}/threads={threads}: warm policy diverged from cold",
+                        method.name(),
+                        backend.name()
+                    );
+                }
+            }
+        }
+    }
+    par::set_threads(1);
+}
+
 /// Bounded-staleness async VI is deterministic too: the sweep schedule is
 /// collectively agreed, the stale sweeps run on the fixed chunk grid, and
 /// the overlap schedule of the synchronized backups is bitwise-neutral —

@@ -1,0 +1,562 @@
+//! Warm-started incremental re-solve suite (DESIGN.md §16).
+//!
+//! The drift loop `solve → checkpoint → patch → warm re-solve → serve`
+//! end to end:
+//!
+//! - **Checkpoint round-trip**: `-write_checkpoint` then `-warm_start
+//!   <path>` re-solves the unchanged model in exactly one outer iteration
+//!   with the bitwise-identical value/policy, and the serving fingerprint
+//!   is warm-start-neutral (the provenance lives only in the metadata
+//!   JSON, and only on warm solves — cold metadata bytes are untouched).
+//! - **Partition independence**: a checkpoint written on 1 rank seeds a
+//!   3-rank solve bitwise (the seed is the global vector; each rank
+//!   slices its own block).
+//! - **Corruption faults**: truncation, flipped payload bytes and missing
+//!   files surface as typed `ApiError`s through `-warm_start`, mirroring
+//!   the serve-store fault tests.
+//! - **Compatibility**: shape/gamma/objective mismatches are typed errors
+//!   naming both sides, identical on every rank (no deadlock).
+//! - **Delta updates**: builder patches re-solve to the bitwise-identical
+//!   result of rebuilding the drifted model from scratch; invalid patches
+//!   are typed; a `PreparedModel` never re-invokes the fillers after
+//!   `Solver::build`.
+//! - **CLI round-trip**: the `madupite` binary closes the same loop with
+//!   byte-identical `-write_cost`/`-write_policy` outputs.
+
+use madupite::api::{run_solve, ApiError, MdpBuilder, SolveOutcome, Solver};
+use madupite::serve::codec;
+use madupite::util::args::Options;
+use madupite::util::json::Json;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join("madupite-resolve-tests")
+        .join(format!("{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn try_solve(args: &[&str]) -> Result<SolveOutcome, ApiError> {
+    let db = Options::parse(args.iter().map(|s| s.to_string()));
+    let builder = MdpBuilder::from_options(&db).unwrap();
+    run_solve(&builder, &db)
+}
+
+fn solve_with(args: &[&str]) -> SolveOutcome {
+    try_solve(args).unwrap()
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn checkpoint_roundtrip_one_iteration_bitwise_and_fingerprint_neutral() {
+    let dir = tmp("roundtrip");
+    let ck = dir.join("maze.mdpa");
+    let cold = solve_with(&[
+        "-model",
+        "maze",
+        "-rows",
+        "8",
+        "-cols",
+        "8",
+        "-write_checkpoint",
+        ck.to_str().unwrap(),
+    ]);
+    assert_eq!(cold.warm_start, None);
+    assert!(
+        cold.metadata_json()
+            .get("solver")
+            .unwrap()
+            .get("warm_start")
+            .is_none(),
+        "cold metadata must not grow a warm_start key"
+    );
+    // the checkpoint is the self-verifying .mdpa artifact of this outcome
+    let artifact = codec::decode(&std::fs::read(&ck).unwrap()).unwrap();
+    assert_eq!(artifact.fingerprint_hex(), cold.fingerprint());
+    assert_eq!(bits(&artifact.value), bits(cold.value()));
+
+    let warm = solve_with(&[
+        "-model",
+        "maze",
+        "-rows",
+        "8",
+        "-cols",
+        "8",
+        "-warm_start",
+        ck.to_str().unwrap(),
+    ]);
+    assert!(warm.result.converged);
+    assert_eq!(
+        warm.result.outer_iterations, 1,
+        "a converged seed must terminate at the first residual check"
+    );
+    assert!(warm.result.outer_iterations < cold.result.outer_iterations);
+    assert_eq!(bits(warm.value()), bits(cold.value()));
+    assert_eq!(warm.policy(), cold.policy());
+    // provenance is recorded …
+    assert_eq!(warm.warm_start.as_deref(), Some(cold.fingerprint().as_str()));
+    assert_eq!(
+        warm.metadata_json()
+            .get("solver")
+            .unwrap()
+            .get("warm_start")
+            .and_then(Json::as_str),
+        Some(cold.fingerprint().as_str())
+    );
+    // … but the serving fingerprint is warm-start-neutral
+    assert_eq!(warm.fingerprint(), cold.fingerprint());
+}
+
+#[test]
+fn warm_start_is_rank_partition_independent() {
+    let dir = tmp("partition");
+    let ck = dir.join("ck.mdpa");
+    let cold = solve_with(&[
+        "-model",
+        "maintenance",
+        "-num_states",
+        "40",
+        "-write_checkpoint",
+        ck.to_str().unwrap(),
+    ]);
+    // seed written by a 1-rank solve, consumed by 1- and 3-rank solves:
+    // the value vector is global and sliced per rank, so the partition
+    // never changes the result
+    for ranks in ["1", "3"] {
+        let warm = solve_with(&[
+            "-model",
+            "maintenance",
+            "-num_states",
+            "40",
+            "-ranks",
+            ranks,
+            "-warm_start",
+            ck.to_str().unwrap(),
+        ]);
+        assert!(warm.result.converged, "ranks={ranks}");
+        assert_eq!(warm.result.outer_iterations, 1, "ranks={ranks}");
+        assert_eq!(bits(warm.value()), bits(cold.value()), "ranks={ranks}");
+        assert_eq!(warm.policy(), cold.policy(), "ranks={ranks}");
+    }
+}
+
+#[test]
+fn checkpoint_corruption_faults_are_typed() {
+    let dir = tmp("corrupt");
+    let ck = dir.join("ck.mdpa");
+    let model = &["-model", "maze", "-rows", "6", "-cols", "6"];
+    let mut args = model.to_vec();
+    args.extend_from_slice(&["-write_checkpoint", ck.to_str().unwrap()]);
+    solve_with(&args);
+    let clean = std::fs::read(&ck).unwrap();
+
+    let warm_with = |path: &std::path::Path| {
+        let mut args: Vec<String> = model.iter().map(|s| s.to_string()).collect();
+        args.push("-warm_start".into());
+        args.push(path.to_str().unwrap().into());
+        let db = Options::parse(args);
+        let builder = MdpBuilder::from_options(&db).unwrap();
+        run_solve(&builder, &db)
+    };
+
+    // truncated checkpoint
+    std::fs::write(&ck, &clean[..clean.len() / 2]).unwrap();
+    let err = warm_with(&ck).unwrap_err();
+    assert!(
+        err.0.contains("truncated") || err.0.contains("length mismatch"),
+        "{err}"
+    );
+    assert!(err.0.contains("-warm_start"), "{err}");
+
+    // flipped payload byte — caught by the embedded digest, never a
+    // silently wrong seed
+    let mut bad = clean.clone();
+    bad[codec::HEADER_LEN + 1] ^= 0x10;
+    std::fs::write(&ck, &bad).unwrap();
+    let err = warm_with(&ck).unwrap_err();
+    assert!(err.0.contains("digest"), "{err}");
+
+    // missing file
+    let err = warm_with(&dir.join("nope.mdpa")).unwrap_err();
+    assert!(err.0.contains("reading -warm_start"), "{err}");
+
+    // the intact checkpoint still seeds after all faults
+    std::fs::write(&ck, &clean).unwrap();
+    let warm = warm_with(&ck).unwrap();
+    assert_eq!(warm.result.outer_iterations, 1);
+}
+
+#[test]
+fn warm_start_compat_mismatches_are_typed_on_every_rank() {
+    let dir = tmp("compat");
+    let ck = dir.join("ck.mdpa");
+    solve_with(&[
+        "-model",
+        "maze",
+        "-rows",
+        "6",
+        "-cols",
+        "6",
+        "-write_checkpoint",
+        ck.to_str().unwrap(),
+    ]);
+    let ck = ck.to_str().unwrap();
+
+    // wrong shape — and the verdict is collective: the same typed error on
+    // 1 and 3 ranks, never a deadlock
+    for ranks in ["1", "3"] {
+        let err = try_solve(&[
+            "-model", "maze", "-rows", "5", "-cols", "5", "-ranks", ranks, "-warm_start", ck,
+        ])
+        .unwrap_err();
+        assert!(err.0.contains("states"), "ranks={ranks}: {err}");
+        assert!(err.0.contains("incompatible"), "ranks={ranks}: {err}");
+    }
+
+    // wrong gamma (checked bitwise)
+    let err = try_solve(&[
+        "-model", "maze", "-rows", "6", "-cols", "6", "-gamma", "0.5", "-warm_start", ck,
+    ])
+    .unwrap_err();
+    assert!(err.0.contains("gamma"), "{err}");
+
+    // wrong objective
+    let err = try_solve(&[
+        "-model",
+        "maze",
+        "-rows",
+        "6",
+        "-cols",
+        "6",
+        "-objective",
+        "max",
+        "-warm_start",
+        ck,
+    ])
+    .unwrap_err();
+    assert!(err.0.contains("objective"), "{err}");
+}
+
+#[test]
+fn fingerprint_warm_start_resolves_through_the_store() {
+    let dir = tmp("store");
+    let store = dir.join("artifacts");
+    let store = store.to_str().unwrap();
+    let cold = solve_with(&[
+        "-model",
+        "replacement",
+        "-num_states",
+        "30",
+        "-serve_store",
+        store,
+    ]);
+    let fp = cold.fingerprint();
+
+    // fingerprint + store: resolved via the store's verified decode path
+    let warm = solve_with(&[
+        "-model",
+        "replacement",
+        "-num_states",
+        "30",
+        "-serve_store",
+        store,
+        "-warm_start",
+        fp.as_str(),
+    ]);
+    assert_eq!(warm.result.outer_iterations, 1);
+    assert_eq!(bits(warm.value()), bits(cold.value()));
+    assert_eq!(warm.warm_start.as_deref(), Some(fp.as_str()));
+
+    // fingerprint without a store is a typed error, not a file-not-found
+    let err = try_solve(&[
+        "-model",
+        "replacement",
+        "-num_states",
+        "30",
+        "-warm_start",
+        fp.as_str(),
+    ])
+    .unwrap_err();
+    assert!(err.0.contains("-serve_store"), "{err}");
+
+    // absent fingerprint is the store's typed not-found
+    let err = try_solve(&[
+        "-model",
+        "replacement",
+        "-num_states",
+        "30",
+        "-serve_store",
+        store,
+        "-warm_start",
+        "ffffffffffffffff",
+    ])
+    .unwrap_err();
+    assert!(err.0.contains("ffffffffffffffff"), "{err}");
+}
+
+fn chain_builder(n: usize) -> MdpBuilder {
+    MdpBuilder::from_fillers(
+        n,
+        2,
+        move |s, a| {
+            if a == 1 {
+                vec![(0, 1.0)]
+            } else if s + 1 < n {
+                vec![(s, 0.5), (s + 1, 0.5)]
+            } else {
+                vec![(s, 1.0)]
+            }
+        },
+        |s, a| if a == 1 { 2.0 } else { s as f64 * 0.1 },
+    )
+    .gamma(0.9)
+}
+
+#[test]
+fn builder_warm_start_seeds_in_process_and_conflicts_are_typed() {
+    let cold = Solver::new(chain_builder(12)).solve().unwrap();
+
+    // in-process seed: no checkpoint file involved
+    let warm = Solver::new(chain_builder(12).warm_start(&cold))
+        .solve()
+        .unwrap();
+    assert_eq!(warm.result.outer_iterations, 1);
+    assert_eq!(bits(warm.value()), bits(cold.value()));
+    assert_eq!(warm.policy(), cold.policy());
+    assert_eq!(warm.warm_start.as_deref(), Some(cold.fingerprint().as_str()));
+
+    // builder seed + -warm_start is one surface: setting both is a typed
+    // conflict, mirroring the model-source rule
+    let dir = tmp("conflict");
+    let ck = dir.join("ck.mdpa");
+    cold.write_checkpoint(&ck).unwrap();
+    let mut solver = Solver::new(chain_builder(12).warm_start(&cold));
+    solver.set_option("-warm_start", ck.to_str().unwrap()).unwrap();
+    let err = solver.solve().unwrap_err();
+    assert!(err.0.contains("conflicting warm-start sources"), "{err}");
+
+    // an incompatible in-process seed is typed too
+    let err = Solver::new(chain_builder(13).warm_start(&cold))
+        .solve()
+        .unwrap_err();
+    assert!(err.0.contains("states"), "{err}");
+}
+
+#[test]
+fn builder_patches_match_rebuilding_the_drifted_model() {
+    // drift: jumping home gets cheaper, and state 2's drift row changes
+    let patched = Solver::new(
+        chain_builder(12)
+            .patch_costs([(0, 1, 0.5)])
+            .patch_transitions([(2, 0, vec![(2, 0.25), (3, 0.75)])]),
+    )
+    .solve()
+    .unwrap();
+
+    // the same drifted model built from scratch
+    let n = 12usize;
+    let scratch = Solver::new(
+        MdpBuilder::from_fillers(
+            n,
+            2,
+            move |s, a| {
+                if a == 1 {
+                    vec![(0, 1.0)]
+                } else if s == 2 {
+                    vec![(2, 0.25), (3, 0.75)]
+                } else if s + 1 < n {
+                    vec![(s, 0.5), (s + 1, 0.5)]
+                } else {
+                    vec![(s, 1.0)]
+                }
+            },
+            |s, a| {
+                if (s, a) == (0, 1) {
+                    0.5
+                } else if a == 1 {
+                    2.0
+                } else {
+                    s as f64 * 0.1
+                }
+            },
+        )
+        .gamma(0.9),
+    )
+    .solve()
+    .unwrap();
+
+    assert!(patched.result.converged);
+    assert_eq!(bits(patched.value()), bits(scratch.value()));
+    assert_eq!(patched.policy(), scratch.policy());
+
+    // distributed patched solve agrees with the serial one
+    let mut dist = Solver::new(
+        chain_builder(12)
+            .patch_costs([(0, 1, 0.5)])
+            .patch_transitions([(2, 0, vec![(2, 0.25), (3, 0.75)])]),
+    );
+    dist.set_option("-ranks", "3").unwrap();
+    let dist = dist.solve().unwrap();
+    madupite::util::prop::close_slices(dist.value(), patched.value(), 1e-9).unwrap();
+    assert_eq!(dist.policy(), patched.policy());
+}
+
+#[test]
+fn invalid_patches_are_typed_errors() {
+    // sub-stochastic replacement row
+    let err = Solver::new(chain_builder(8).patch_transitions([(1, 0, vec![(0, 0.4)])]))
+        .solve()
+        .unwrap_err();
+    assert!(err.0.contains("sums to"), "{err}");
+
+    // out-of-range cost entry
+    let err = Solver::new(chain_builder(8).patch_costs([(8, 0, 1.0)]))
+        .solve()
+        .unwrap_err();
+    assert!(err.0.contains("out of range"), "{err}");
+
+    // non-finite cost
+    let err = Solver::new(chain_builder(8).patch_costs([(1, 0, f64::NAN)]))
+        .solve()
+        .unwrap_err();
+    assert!(err.0.contains("non-finite"), "{err}");
+}
+
+#[test]
+fn prepared_model_never_reinvokes_fillers_after_build() {
+    let n = 10usize;
+    let prob_calls = Arc::new(AtomicUsize::new(0));
+    let cost_calls = Arc::new(AtomicUsize::new(0));
+    let (pc, cc) = (Arc::clone(&prob_calls), Arc::clone(&cost_calls));
+    let builder = MdpBuilder::from_fillers(
+        n,
+        2,
+        move |s, a| {
+            pc.fetch_add(1, Ordering::Relaxed);
+            if a == 1 {
+                vec![(0, 1.0)]
+            } else if s + 1 < n {
+                vec![(s, 0.5), (s + 1, 0.5)]
+            } else {
+                vec![(s, 1.0)]
+            }
+        },
+        move |s, a| {
+            cc.fetch_add(1, Ordering::Relaxed);
+            if a == 1 {
+                2.0
+            } else {
+                s as f64 * 0.1
+            }
+        },
+    )
+    .gamma(0.9);
+
+    let solver = Solver::new(builder);
+    let mut prepared = solver.build().unwrap();
+    let probs_after_build = prob_calls.load(Ordering::Relaxed);
+    let costs_after_build = cost_calls.load(Ordering::Relaxed);
+    assert!(probs_after_build >= n * 2, "build must realize every row");
+
+    // patching touched rows and re-solving twice never re-invokes the
+    // fillers: untouched rows are not re-scanned, touched rows are
+    // validated from the patch data itself
+    prepared.patch_costs(&[(0, 1, 0.25)]).unwrap();
+    prepared
+        .patch_transitions(&[(3, 0, vec![(3, 0.5), (4, 0.5)])])
+        .unwrap();
+    let a = solver.solve_prepared(&prepared).unwrap();
+    let b = solver.solve_prepared(&prepared).unwrap();
+    assert!(a.result.converged);
+    assert_eq!(bits(a.value()), bits(b.value()));
+    assert_eq!(prob_calls.load(Ordering::Relaxed), probs_after_build);
+    assert_eq!(cost_calls.load(Ordering::Relaxed), costs_after_build);
+}
+
+#[test]
+fn cli_checkpoint_roundtrip_is_byte_identical() {
+    let dir = tmp("cli");
+    let ck = dir.join("ck.mdpa");
+    let p = |name: &str| dir.join(name).to_str().unwrap().to_string();
+    let run = |extra: &[&str]| {
+        let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_madupite"));
+        cmd.args(["solve", "-model", "maze", "-rows", "7", "-cols", "7"]);
+        cmd.args(extra);
+        let out = cmd.output().unwrap();
+        assert!(
+            out.status.success(),
+            "stderr: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8(out.stdout).unwrap()
+    };
+
+    let cold_out = run(&[
+        "-write_checkpoint",
+        ck.to_str().unwrap(),
+        "-write_cost",
+        &p("v1.txt"),
+        "-write_policy",
+        &p("p1.txt"),
+        "-write_json_metadata",
+        &p("m1.json"),
+    ]);
+    assert!(
+        cold_out.contains(&format!("wrote {}", ck.display())),
+        "{cold_out}"
+    );
+
+    run(&[
+        "-warm_start",
+        ck.to_str().unwrap(),
+        "-write_cost",
+        &p("v2.txt"),
+        "-write_policy",
+        &p("p2.txt"),
+        "-write_json_metadata",
+        &p("m2.json"),
+    ]);
+
+    // warm outputs are byte-identical to cold
+    assert_eq!(
+        std::fs::read(p("v1.txt")).unwrap(),
+        std::fs::read(p("v2.txt")).unwrap()
+    );
+    assert_eq!(
+        std::fs::read(p("p1.txt")).unwrap(),
+        std::fs::read(p("p2.txt")).unwrap()
+    );
+
+    // metadata: provenance only on the warm run, one outer iteration
+    let m1 = Json::parse(&std::fs::read_to_string(p("m1.json")).unwrap()).unwrap();
+    let m2 = Json::parse(&std::fs::read_to_string(p("m2.json")).unwrap()).unwrap();
+    assert!(m1.get("solver").unwrap().get("warm_start").is_none());
+    assert!(m2
+        .get("solver")
+        .unwrap()
+        .get("warm_start")
+        .and_then(Json::as_str)
+        .is_some());
+    assert_eq!(
+        m2.get("result")
+            .unwrap()
+            .get("outer_iterations")
+            .unwrap()
+            .as_f64(),
+        Some(1.0)
+    );
+    assert!(
+        m1.get("result")
+            .unwrap()
+            .get("outer_iterations")
+            .unwrap()
+            .as_f64()
+            .unwrap()
+            > 1.0
+    );
+}

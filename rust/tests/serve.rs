@@ -281,6 +281,7 @@ fn synthetic_outcome() -> SolveOutcome {
         ranks: 1,
         threads: 1,
         comm_overlap: OverlapMode::Off,
+        warm_start: None,
         result: SolveResult {
             value: vec![1.5, 0.25],
             policy: vec![1, 0],
