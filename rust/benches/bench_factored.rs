@@ -1,0 +1,120 @@
+//! E11 — ADD compression and structured-solve performance on factored
+//! models (DESIGN.md §17).
+//!
+//! Two claims, one number each:
+//!
+//! - **Compression**: the hash-consed transition ADDs of `sis_factored`
+//!   are at least 10× smaller than the nonzero count of the flat kernel
+//!   they represent (`compression_x = flat_nnz / add_nodes`, asserted
+//!   `>= 10` in-bench so a regression fails the perf smoke, not just
+//!   drifts a number).
+//! - **Solve**: structured value iteration vs. flat VI on the same spec
+//!   at the same tolerance (`svi_s` / `flat_s`), with an in-bench
+//!   agreement check so the timings can never come from diverging
+//!   solutions.
+//!
+//! Reported metrics: `add_nodes`, `flat_nnz`, `compression_x` for the
+//! compress case; `svi_s`, `flat_s`, `svi_iters`, `value_nodes` for the
+//! solve cases. Merged into `BENCH_CI.json` by the perf-smoke job with
+//! the same drop-out guard as the other suites.
+
+use madupite::factored::{solve_svi, FactoredMdp, SviOptions};
+use madupite::mdp::Objective;
+use madupite::models::{factory::FactorySpec, sis_factored::SisFactoredSpec, ModelGenerator};
+use madupite::solver::{solve_serial, Method, SolveOptions};
+use madupite::util::benchkit::Suite;
+use std::time::Instant;
+
+fn main() {
+    let mut suite = Suite::new("E11 factored ADD compression");
+
+    // ---------------------------------------------------------- compress
+    // sis_factored with 10 ring nodes: 1024 flat states whose kernel has
+    // O(100k) nonzeros, against a few hundred shared ADD nodes.
+    let sis10 = SisFactoredSpec::new(10).unwrap().factored_mdp().clone();
+    suite.case("factored/sis_factored/compress", || {
+        let flat_nnz = sis10.flat_nnz() as f64;
+        // one backup is enough: the transition ADDs are built up front
+        let probe = solve_svi(
+            &sis10,
+            0.95,
+            Objective::Min,
+            &SviOptions {
+                max_iter: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let add_nodes = probe.transition_nodes as f64;
+        let compression_x = flat_nnz / add_nodes;
+        assert!(
+            compression_x >= 10.0,
+            "ADD compression regressed below the 10x bar: \
+             {add_nodes} transition nodes vs {flat_nnz} flat nonzeros"
+        );
+        vec![
+            ("add_nodes".to_string(), add_nodes),
+            ("flat_nnz".to_string(), flat_nnz),
+            ("compression_x".to_string(), compression_x),
+        ]
+    });
+
+    // ------------------------------------------------------------- solve
+    let models: Vec<(&str, FactoredMdp)> = vec![
+        (
+            "sis_factored",
+            SisFactoredSpec::new(8).unwrap().factored_mdp().clone(),
+        ),
+        ("factory", FactorySpec::new(4).unwrap().factored_mdp().clone()),
+    ];
+    for (name, fmdp) in models {
+        // flat model built once, outside the timed region
+        let mdp = fmdp.try_build_serial(0.95).unwrap();
+        suite.case(&format!("factored/{name}/solve"), || {
+            let t0 = Instant::now();
+            let svi = solve_svi(
+                &fmdp,
+                0.95,
+                Objective::Min,
+                &SviOptions {
+                    atol: 1e-8,
+                    max_iter: 100_000,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            let svi_s = t0.elapsed().as_secs_f64();
+
+            let t0 = Instant::now();
+            let flat = solve_serial(
+                &mdp,
+                &SolveOptions {
+                    method: Method::Vi,
+                    atol: 1e-8,
+                    max_outer: 100_000,
+                    ..Default::default()
+                },
+            );
+            let flat_s = t0.elapsed().as_secs_f64();
+
+            // the timings are only meaningful if the answers agree
+            assert!(svi.converged && flat.converged);
+            let err = svi
+                .value
+                .iter()
+                .zip(&flat.value)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f64, f64::max);
+            assert!(err < 1e-6, "{name}: svi/flat values diverged by {err:e}");
+
+            vec![
+                ("svi_s".to_string(), svi_s),
+                ("flat_s".to_string(), flat_s),
+                ("svi_iters".to_string(), svi.iterations as f64),
+                ("value_nodes".to_string(), svi.value_nodes as f64),
+            ]
+        });
+    }
+
+    suite.finish();
+}

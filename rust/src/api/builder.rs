@@ -28,11 +28,12 @@
 //! [`MdpBuilder::warm_start`] seeds the next solve from a previous
 //! [`crate::api::SolveOutcome`] without a checkpoint file.
 
+use crate::factored::FactoredMdp;
 use crate::mdp::{self, Mdp, Objective};
 use crate::models::{
-    garnet::GarnetSpec, gridworld::GridSpec, inventory::InventorySpec,
+    factory::FactorySpec, garnet::GarnetSpec, gridworld::GridSpec, inventory::InventorySpec,
     maintenance::MaintenanceSpec, queueing::QueueSpec, replacement::ReplacementSpec, sis::SisSpec,
-    traffic::TrafficSpec, ModelGenerator,
+    sis_factored::SisFactoredSpec, traffic::TrafficSpec, ModelGenerator,
 };
 use crate::util::args::Options;
 use std::sync::Arc;
@@ -49,7 +50,7 @@ pub type CostFn = Arc<dyn Fn(usize, usize) -> f64 + Send + Sync>;
 /// filler alongside [`ProbFn`] / [`CostFn`]).
 pub type DiscountFn = Arc<dyn Fn(usize, usize) -> f64 + Send + Sync>;
 
-/// One of the three model sources the builder accepts.
+/// One of the model sources the builder accepts.
 #[derive(Clone)]
 pub(crate) enum Source {
     /// Offline `.mdpb` file (gamma/objective/discounts come from it).
@@ -64,6 +65,10 @@ pub(crate) enum Source {
         prob: ProbFn,
         cost: CostFn,
     },
+    /// A factored model description (DESIGN.md §17): solved either by
+    /// flattening through the existing builders or by structured value
+    /// iteration (`-factored_mode`).
+    Factored(Arc<FactoredMdp>),
 }
 
 impl Source {
@@ -72,6 +77,7 @@ impl Source {
             Source::File(_) => "file",
             Source::Model(_) => "model",
             Source::Fillers { .. } => "fillers",
+            Source::Factored(_) => "factored",
         }
     }
 }
@@ -158,6 +164,14 @@ impl MdpBuilder {
         MdpBuilder::new().fillers(n_states, n_actions, prob, cost)
     }
 
+    /// Builder over a validated factored model description (DESIGN.md
+    /// §17). The solve path is chosen by `-factored_mode`: `compile`
+    /// (default) flattens through the existing distributed builders;
+    /// `svi` runs structured value iteration on ADDs.
+    pub fn from_factored(fmdp: FactoredMdp) -> MdpBuilder {
+        MdpBuilder::new().factored(fmdp)
+    }
+
     /// Add a `.mdpb` file source (chainable; at most one source may be set
     /// — a second source records a conflict at set time).
     pub fn file(mut self, path: impl Into<String>) -> MdpBuilder {
@@ -189,6 +203,14 @@ impl MdpBuilder {
             prob: Arc::new(prob),
             cost: Arc::new(cost),
         });
+        self.note_source_conflict();
+        self
+    }
+
+    /// Add a factored-model source (chainable; at most one source may be
+    /// set — a second source records a conflict at set time).
+    pub fn factored(mut self, fmdp: FactoredMdp) -> MdpBuilder {
+        self.sources.push(Source::Factored(Arc::new(fmdp)));
         self.note_source_conflict();
         self
     }
@@ -340,7 +362,8 @@ impl MdpBuilder {
         }
         match self.sources.as_slice() {
             [] => Err(ApiError(
-                "no model source set: use one of file/model/fillers (or -file / -model)".into(),
+                "no model source set: use one of file/model/fillers/factored (or -file / -model)"
+                    .into(),
             )),
             [one] => Ok(one),
             many => {
@@ -401,6 +424,12 @@ impl MdpBuilder {
                 let gamma = validate_gamma(self.gamma.unwrap_or(0.99))?;
                 generator
                     .try_build_serial(gamma)
+                    .map(|m| m.with_objective(self.objective.unwrap_or_default()))
+                    .map_err(ApiError)
+            }
+            Source::Factored(fmdp) => {
+                let gamma = validate_gamma(self.gamma.unwrap_or(0.99))?;
+                fmdp.try_build_serial(gamma)
                     .map(|m| m.with_objective(self.objective.unwrap_or_default()))
                     .map_err(ApiError)
             }
@@ -501,6 +530,16 @@ pub const MODEL_CATALOG: &[ModelInfo] = &[
         params: "-num_states 50",
         about: "semi-MDP machine maintenance (exponential sojourns, per-(s,a) discounts)",
     },
+    ModelInfo {
+        name: "sis_factored",
+        params: "-population 8",
+        about: "factored ring-network SIS epidemic control (2^N states, CPT scope 3)",
+    },
+    ModelInfo {
+        name: "factory",
+        params: "-machines 4",
+        about: "factored machine-line maintenance (3^K states, upstream-coupled wear)",
+    },
 ];
 
 /// Require a model-parameter condition, as a typed error (the spec
@@ -587,6 +626,22 @@ pub fn model_from_options(
             require(num_states >= 3, "maintenance needs -num_states >= 3")?;
             Arc::new(MaintenanceSpec::standard(num_states))
         }
+        "sis_factored" => {
+            let population = db.get_usize("population", 8)?;
+            require(
+                (3..=24).contains(&population),
+                format!("sis_factored needs 3 <= -population <= 24 (2^N flat states), got {population}"),
+            )?;
+            Arc::new(SisFactoredSpec::new(population).map_err(ApiError)?)
+        }
+        "factory" => {
+            let machines = db.get_usize("machines", 4)?;
+            require(
+                (2..=12).contains(&machines),
+                format!("factory needs 2 <= -machines <= 12 (3^K flat states), got {machines}"),
+            )?;
+            Arc::new(FactorySpec::new(machines).map_err(ApiError)?)
+        }
         other => {
             let names: Vec<&str> = MODEL_CATALOG.iter().map(|m| m.name).collect();
             return Err(match options::suggest(other, &names) {
@@ -625,6 +680,9 @@ mod tests {
         assert!(model_from_options("replacement", &db(&["-num_states", "2"])).is_err());
         assert!(model_from_options("maze", &db(&["-rows", "1"])).is_err());
         assert!(model_from_options("sis", &db(&["-num_actions", "0"])).is_err());
+        assert!(model_from_options("sis_factored", &db(&["-population", "2"])).is_err());
+        assert!(model_from_options("sis_factored", &db(&["-population", "30"])).is_err());
+        assert!(model_from_options("factory", &db(&["-machines", "1"])).is_err());
     }
 
     #[test]
@@ -734,6 +792,23 @@ mod tests {
             .build_serial()
             .unwrap();
         assert_eq!(ok.n_states(), 2);
+    }
+
+    #[test]
+    fn factored_source_builds_and_conflicts_like_any_other() {
+        let f = crate::models::sis_factored::SisFactoredSpec::new(3)
+            .unwrap()
+            .factored_mdp()
+            .clone();
+        let mdp = MdpBuilder::from_factored(f.clone())
+            .gamma(0.9)
+            .build_serial()
+            .unwrap();
+        assert_eq!(mdp.n_states(), 8);
+        assert_eq!(mdp.n_actions(), 2);
+        let both = MdpBuilder::from_file("x.mdpb").factored(f);
+        let err = both.resolved_source().unwrap_err();
+        assert!(err.0.contains("file and factored"), "{err}");
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! `tests/api.rs`.
 
 use crate::comm::OverlapMode;
+use crate::factored::{FactoredMode, FactoredOrder};
 use crate::ksp::precond::PcType;
 use crate::ksp::KspType;
 use crate::mdp::{DiscountMode, Objective};
@@ -94,7 +95,7 @@ pub const OPTION_TABLE: &[OptionSpec] = &[
     OptionSpec {
         key: "population",
         value: "<n>",
-        help: "population size (sis)",
+        help: "population size (sis) / ring nodes (sis_factored)",
         scope: OptionScope::Model,
     },
     OptionSpec {
@@ -119,6 +120,12 @@ pub const OPTION_TABLE: &[OptionSpec] = &[
         key: "branching",
         value: "<n>",
         help: "successors per (s,a) row (garnet)",
+        scope: OptionScope::Model,
+    },
+    OptionSpec {
+        key: "machines",
+        value: "<n>",
+        help: "machine count in the production line (factory)",
         scope: OptionScope::Model,
     },
     // -- common -------------------------------------------------------------
@@ -276,6 +283,21 @@ pub const OPTION_TABLE: &[OptionSpec] = &[
         help: "seed the solve from a checkpoint: a .mdpa file path, or a 16-hex \
                 artifact fingerprint looked up in -serve_store (shape/gamma/\
                 objective compatibility is checked before solving)",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "factored_mode",
+        value: "compile|svi",
+        help: "consumption path for factored sources: compile flattens through \
+                the distributed builders (default), svi runs SPUDD-style \
+                structured value iteration on ADDs (serial)",
+        scope: OptionScope::Solve,
+    },
+    OptionSpec {
+        key: "factored_order",
+        value: "given|reverse|auto",
+        help: "ADD variable elimination order for -factored_mode svi \
+                (auto sorts by CPT scope size; results are order-independent)",
         scope: OptionScope::Solve,
     },
     // -- output -------------------------------------------------------------
@@ -641,6 +663,40 @@ pub fn check_discount_narrowing(
     Ok(())
 }
 
+/// Resolve `-factored_mode`: `Some(mode)` when the option was given (the
+/// caller checks the source actually is factored), `None` when absent —
+/// factored sources then default to [`FactoredMode::Compile`]. Unknown
+/// values are typed errors with a did-you-mean suggestion.
+pub fn resolve_factored_mode(db: &Options) -> Result<Option<FactoredMode>, ApiError> {
+    match db.get("factored_mode") {
+        None => Ok(None),
+        Some("compile") => Ok(Some(FactoredMode::Compile)),
+        Some("svi") => Ok(Some(FactoredMode::Svi)),
+        Some(other) => Err(with_value_suggestion(
+            format!("-factored_mode: expected compile|svi, got '{other}'"),
+            other,
+            &["compile", "svi"],
+        )),
+    }
+}
+
+/// Resolve `-factored_order`, the ADD variable elimination order of the
+/// structured solver (default: the declared variable order). The order
+/// changes diagram sizes, never results — `tests/factored.rs` pins the
+/// invariance.
+pub fn resolve_factored_order(db: &Options) -> Result<FactoredOrder, ApiError> {
+    match db.get("factored_order") {
+        None | Some("given") => Ok(FactoredOrder::Given),
+        Some("reverse") => Ok(FactoredOrder::Reverse),
+        Some("auto") => Ok(FactoredOrder::Auto),
+        Some(other) => Err(with_value_suggestion(
+            format!("-factored_order: expected given|reverse|auto, got '{other}'"),
+            other,
+            &["given", "reverse", "auto"],
+        )),
+    }
+}
+
 /// Resolve the optimization sense: `-objective` wins over the builder-level
 /// `fallback`, default min-cost.
 pub fn resolve_objective(db: &Options, fallback: Option<Objective>) -> Result<Objective, ApiError> {
@@ -920,6 +976,47 @@ mod tests {
         assert!(err.0.contains(">= 1"), "{err}");
         // keys round-trip through validate_keys
         assert!(validate_keys(&db(&["-async_vi", "-async_vi_staleness", "2"])).is_ok());
+    }
+
+    #[test]
+    fn factored_mode_and_order_resolution() {
+        assert_eq!(resolve_factored_mode(&db(&[])).unwrap(), None);
+        assert_eq!(
+            resolve_factored_mode(&db(&["-factored_mode", "compile"])).unwrap(),
+            Some(FactoredMode::Compile)
+        );
+        assert_eq!(
+            resolve_factored_mode(&db(&["-factored_mode", "svi"])).unwrap(),
+            Some(FactoredMode::Svi)
+        );
+        let err = resolve_factored_mode(&db(&["-factored_mode", "sv"])).unwrap_err();
+        assert!(err.0.contains("svi"), "{err}");
+        assert_eq!(
+            resolve_factored_order(&db(&[])).unwrap(),
+            FactoredOrder::Given
+        );
+        assert_eq!(
+            resolve_factored_order(&db(&["-factored_order", "reverse"])).unwrap(),
+            FactoredOrder::Reverse
+        );
+        assert_eq!(
+            resolve_factored_order(&db(&["-factored_order", "auto"])).unwrap(),
+            FactoredOrder::Auto
+        );
+        let err = resolve_factored_order(&db(&["-factored_order", "revrse"])).unwrap_err();
+        assert!(err.0.contains("reverse"), "{err}");
+        // keys round-trip through validate_keys
+        assert!(validate_keys(&db(&[
+            "-factored_mode",
+            "svi",
+            "-factored_order",
+            "auto",
+            "-machines",
+            "4",
+        ]))
+        .is_ok());
+        let err = check_key("factored_mod").unwrap_err();
+        assert!(err.0.contains("factored_mode"), "{err}");
     }
 
     #[test]

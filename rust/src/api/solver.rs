@@ -9,8 +9,9 @@
 //! produce byte-identical metadata JSON for the same option set.
 
 use crate::comm::World;
+use crate::factored::{solve_svi, FactoredMdp, FactoredMode, FactoredOrder, SviOptions};
 use crate::mdp::{io, Discount, DiscountMode, DistMdp, Mdp, Objective};
-use crate::solver::{gather_result, solve_dist, SolveOptions, SolveResult};
+use crate::solver::{gather_result, solve_dist, IterRecord, SolveOptions, SolveResult};
 use crate::util::args::Options;
 use crate::util::json::Json;
 use std::fmt::Write as _;
@@ -191,6 +192,14 @@ impl Solver {
     /// re-validation cost is gone.
     pub fn build(&self) -> Result<PreparedModel, ApiError> {
         let resolved = resolve_inputs(&self.builder, &self.db)?;
+        if resolved.factored_mode == FactoredMode::Svi {
+            return Err(ApiError(
+                "-factored_mode svi solves on decision diagrams, not a flat \
+                 prepared model — call Solver::solve directly (or use \
+                 -factored_mode compile to prepare the flattened model)"
+                    .into(),
+            ));
+        }
         let mdp = build_patched_serial(
             &self.builder,
             &resolved.source,
@@ -353,6 +362,17 @@ struct Resolved {
     gamma: f64,
     objective: Objective,
     warm: Option<WarmStart>,
+    /// The factored description behind the source, when there is one
+    /// (a [`Source::Factored`], or a catalog model exposing
+    /// `ModelGenerator::factored`).
+    factored: Option<Arc<FactoredMdp>>,
+    /// Effective consumption path for a factored source
+    /// (`-factored_mode`, default compile). Meaningless when `factored`
+    /// is `None`.
+    factored_mode: FactoredMode,
+    /// ADD elimination order for the structured solver
+    /// (`-factored_order`).
+    factored_order: FactoredOrder,
 }
 
 /// Validate the database and resolve every pre-model input of a solve:
@@ -379,6 +399,65 @@ fn resolve_inputs(builder: &MdpBuilder, db: &Options) -> Result<Resolved, ApiErr
     let source = builder.resolved_source()?.clone();
     let discount_filler = builder.discount_filler_value().cloned();
     let dmode = options::resolve_discount_mode(db)?;
+
+    // Factored sources (DESIGN.md §17): a Source::Factored, or a catalog
+    // model that exposes its factored description. `-factored_mode`
+    // selects the consumption path; `svi` is the serial structured solver,
+    // so everything that only makes sense for the flat distributed path
+    // is a typed conflict up front.
+    let factored: Option<Arc<FactoredMdp>> = match &source {
+        Source::Factored(f) => Some(Arc::clone(f)),
+        Source::Model(g) => g.factored().map(|f| Arc::new(f.clone())),
+        _ => None,
+    };
+    let factored_mode = options::resolve_factored_mode(db)?;
+    if factored_mode.is_some() && factored.is_none() {
+        return Err(ApiError(
+            "-factored_mode requires a factored source: MdpBuilder::from_factored, \
+             or a factored catalog model (sis_factored, factory)"
+                .into(),
+        ));
+    }
+    let factored_mode = factored_mode.unwrap_or_default();
+    if db.has("factored_order") && factored_mode != FactoredMode::Svi {
+        return Err(ApiError(
+            "-factored_order is the ADD elimination order of the structured \
+             solver; it requires -factored_mode svi"
+                .into(),
+        ));
+    }
+    let factored_order = options::resolve_factored_order(db)?;
+    if factored_mode == FactoredMode::Svi {
+        if ranks != 1 {
+            return Err(ApiError(format!(
+                "-factored_mode svi runs serially on ADDs (got -ranks {ranks}); \
+                 use -factored_mode compile for the distributed path"
+            )));
+        }
+        if db.has("warm_start") || builder.warm_start_value().is_some() {
+            return Err(ApiError(
+                "-factored_mode svi computes on decision diagrams and cannot \
+                 seed from a flat value vector; drop the warm start or use \
+                 -factored_mode compile"
+                    .into(),
+            ));
+        }
+        if builder.has_patches() {
+            return Err(ApiError(
+                "queued cost/transition patches apply to the flat model; \
+                 -factored_mode svi cannot honor them — use -factored_mode \
+                 compile or rebuild the factored spec"
+                    .into(),
+            ));
+        }
+        if dmode.is_some() && dmode != Some(DiscountMode::Scalar) {
+            return Err(ApiError(format!(
+                "-factored_mode svi solves with the scalar discount; \
+                 -discount_mode {} does not apply",
+                dmode.unwrap().name()
+            )));
+        }
+    }
 
     // Discount-source conflicts (all typed errors, checked before the
     // world spawns): the filler closure belongs to closure sources and
@@ -465,6 +544,9 @@ fn resolve_inputs(builder: &MdpBuilder, db: &Options) -> Result<Resolved, ApiErr
         gamma,
         objective,
         warm,
+        factored,
+        factored_mode,
+        factored_order,
     })
 }
 
@@ -486,6 +568,72 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
         crate::comm::overlap::set_mode(mode);
     }
     let overlap_mode = crate::comm::overlap::current();
+
+    // Structured value iteration (DESIGN.md §17): the factored source
+    // solves entirely on ADDs — serial, no world, no flat model ever
+    // materialized. Every flat-only knob (ranks, warm starts, patches,
+    // vector discount modes) was rejected in resolve_inputs, so from here
+    // the path is straight: solve, adapt the report, share write_outputs.
+    if resolved.factored_mode == FactoredMode::Svi {
+        let fmdp = resolved
+            .factored
+            .as_ref()
+            .expect("resolve_inputs pins svi to factored sources");
+        let svi_opts = SviOptions {
+            atol: resolved.solve_opts.atol,
+            max_iter: resolved.solve_opts.max_outer,
+            order: resolved.factored_order,
+        };
+        let started = std::time::Instant::now();
+        let svi = solve_svi(fmdp, resolved.gamma, resolved.objective, &svi_opts)
+            .map_err(|e| ApiError(format!("structured value iteration: {e}")))?;
+        let wall = started.elapsed().as_secs_f64();
+        let trace: Vec<IterRecord> = svi
+            .residual_trace
+            .iter()
+            .enumerate()
+            .map(|(k, &residual)| IterRecord {
+                outer: k + 1,
+                residual,
+                inner_iterations: 0,
+                spmvs: 0,
+                elapsed_s: 0.0,
+            })
+            .collect();
+        let n_states = svi.value.len();
+        let result = SolveResult {
+            value: svi.value,
+            policy: svi.policy,
+            outer_iterations: svi.iterations,
+            total_spmvs: 0,
+            total_inner_iterations: 0,
+            residual: svi.residual,
+            converged: svi.converged,
+            wall_time_s: wall,
+            trace,
+            comm_bytes: 0,
+            comm_time_us: 0,
+            gamma: resolved.gamma,
+            ranks: 1,
+            threads: resolved.threads,
+        };
+        let outcome = SolveOutcome {
+            n_states,
+            n_actions: fmdp.n_actions(),
+            gamma: resolved.gamma,
+            objective: resolved.objective,
+            discount_mode: DiscountMode::Scalar,
+            options: resolved.solve_opts,
+            ranks: 1,
+            threads: resolved.threads,
+            comm_overlap: overlap_mode,
+            warm_start: None,
+            result,
+        };
+        write_outputs(&outcome, db)?;
+        return Ok(outcome);
+    }
+
     let Resolved {
         solve_opts,
         ranks,
@@ -549,6 +697,29 @@ pub fn run_solve(builder: &MdpBuilder, db: &Options) -> Result<SolveOutcome, Api
                     // extreme gammas (effective factor rounding to 1.0) —
                     // typed error on every rank, not a world panic
                     _ => generator
+                        .try_build_dist(&comm, gamma)?
+                        .with_objective(objective),
+                }
+            }
+            Source::Factored(fmdp) => {
+                match dmode {
+                    // Same forced-vector expansion as the Model arm:
+                    // factored sources carry a scalar discount, so a
+                    // vector mode is a constant expansion, bitwise
+                    // equivalent by the Discount invariant.
+                    Some(mode) if mode != DiscountMode::Scalar => {
+                        DistMdp::try_from_fillers_constant(
+                            &comm,
+                            fmdp.n_states(),
+                            fmdp.n_actions(),
+                            mode,
+                            gamma,
+                            |s, a| fmdp.flat_prob_row(s, a),
+                            |s, a| fmdp.flat_cost(s, a),
+                        )?
+                        .with_objective(objective)
+                    }
+                    _ => fmdp
                         .try_build_dist(&comm, gamma)?
                         .with_objective(objective),
                 }
@@ -713,6 +884,23 @@ fn build_patched_serial(
                 .with_objective(objective)
             }
             _ => generator
+                .try_build_serial(gamma)
+                .map_err(ApiError)?
+                .with_objective(objective),
+        },
+        Source::Factored(fmdp) => match dmode {
+            Some(mode) if mode != DiscountMode::Scalar => {
+                Mdp::try_from_fillers_discounted(
+                    fmdp.n_states(),
+                    fmdp.n_actions(),
+                    Discount::constant(mode, gamma, fmdp.n_states(), fmdp.n_actions()),
+                    |s, a| fmdp.flat_prob_row(s, a),
+                    |s, a| fmdp.flat_cost(s, a),
+                )
+                .map_err(ApiError)?
+                .with_objective(objective)
+            }
+            _ => fmdp
                 .try_build_serial(gamma)
                 .map_err(ApiError)?
                 .with_objective(objective),
@@ -1179,6 +1367,60 @@ mod tests {
         prepared.clear_warm_start();
         let out = solver.solve_prepared(&solver.build().unwrap()).unwrap();
         assert!(out.result.converged);
+    }
+
+    #[test]
+    fn factored_svi_through_api_matches_compile() {
+        let f = crate::models::sis_factored::SisFactoredSpec::new(4)
+            .unwrap()
+            .factored_mdp()
+            .clone();
+        let mut svi = Solver::new(MdpBuilder::from_factored(f.clone()).gamma(0.9));
+        svi.set_options_from_str("-factored_mode svi -atol 1e-12 -max_iter_pi 100000")
+            .unwrap();
+        let svi = svi.solve().unwrap();
+        assert!(svi.result.converged);
+        let mut flat = Solver::new(MdpBuilder::from_factored(f).gamma(0.9));
+        flat.set_options_from_str("-factored_mode compile -atol 1e-12")
+            .unwrap();
+        let flat = flat.solve().unwrap();
+        assert!(flat.result.converged);
+        prop::close_slices(svi.value(), flat.value(), 1e-9).unwrap();
+        assert_eq!(svi.policy(), flat.policy());
+        assert_eq!(svi.discount_mode, DiscountMode::Scalar);
+    }
+
+    #[test]
+    fn factored_knobs_are_validated() {
+        // -factored_mode needs a factored source
+        let mut solver = Solver::new(two_state_builder());
+        solver.set_option("-factored_mode", "svi").unwrap();
+        let err = solver.solve().unwrap_err();
+        assert!(err.0.contains("factored source"), "{err}");
+        // svi is serial; multi-rank is a typed conflict
+        let f = crate::models::sis_factored::SisFactoredSpec::new(3)
+            .unwrap()
+            .factored_mdp()
+            .clone();
+        let mut solver = Solver::new(MdpBuilder::from_factored(f.clone()).gamma(0.9));
+        solver
+            .set_options_from_str("-factored_mode svi -ranks 3")
+            .unwrap();
+        let err = solver.solve().unwrap_err();
+        assert!(err.0.contains("serially"), "{err}");
+        // -factored_order without svi
+        let mut solver = Solver::new(MdpBuilder::from_factored(f.clone()).gamma(0.9));
+        solver.set_option("-factored_order", "auto").unwrap();
+        let err = solver.solve().unwrap_err();
+        assert!(err.0.contains("factored_mode svi"), "{err}");
+        // svi cannot feed a flat PreparedModel, compile can
+        let mut solver = Solver::new(MdpBuilder::from_factored(f.clone()).gamma(0.9));
+        solver.set_option("-factored_mode", "svi").unwrap();
+        assert!(solver.build().unwrap_err().0.contains("prepared"));
+        let prepared = Solver::new(MdpBuilder::from_factored(f).gamma(0.9))
+            .build()
+            .unwrap();
+        assert_eq!(prepared.n_states(), 8);
     }
 
     #[test]

@@ -1,0 +1,602 @@
+//! Hash-consed algebraic decision diagrams (ADDs) — DESIGN.md §17.
+//!
+//! An ADD is an ordered, reduced decision diagram whose terminals carry
+//! `f64` values instead of booleans (a *multi-terminal* BDD, generalized
+//! here to multi-valued variables: a node at level `l` has one child per
+//! element of `domains[l]`). Two invariants make every function's
+//! representation canonical:
+//!
+//! - **ordering**: on every root-to-terminal path, node levels strictly
+//!   increase — a variable is tested at most once and always in the same
+//!   global position;
+//! - **reduction**: a node whose children are all identical is never
+//!   materialized (the shared child stands in for it), and structurally
+//!   equal nodes are *hash-consed* into one physical node.
+//!
+//! Canonicity is what turns structural sharing into compression: the CPTs
+//! of a factored MDP and every Bellman iterate live in one [`AddStore`]
+//! and automatically share equal subfunctions. It is also what the
+//! property tests pin: building the same function along two different
+//! construction orders must yield the *same* [`NodeId`].
+//!
+//! All operations ([`AddStore::apply`], [`AddStore::restrict`],
+//! [`AddStore::marginalize`], [`AddStore::relabel`]) are memoized per
+//! call, so their cost is O(product of operand diagram sizes), never the
+//! size of the exponential flat table they represent.
+
+use std::collections::HashMap;
+
+/// Sentinel level for terminal nodes: deeper than every variable level,
+/// so `min(level(f), level(g))` in `apply` naturally picks the variable
+/// node when one operand is a terminal.
+const TERMINAL_LEVEL: u32 = u32::MAX;
+
+/// Handle to a node inside an [`AddStore`]. Because nodes are
+/// hash-consed, `NodeId` equality *is* function equality (for nodes of
+/// the same store): structurally equal diagrams get pointer-equal ids.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(u32);
+
+/// Pointwise binary operator for [`AddStore::apply`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// `f + g`
+    Add,
+    /// `f - g`
+    Sub,
+    /// `f * g`
+    Mul,
+    /// `min(f, g)`
+    Min,
+    /// `max(f, g)`
+    Max,
+    /// Strict comparison indicator: `1.0` where `f < g`, else `0.0`.
+    Lt,
+    /// Strict comparison indicator: `1.0` where `f > g`, else `0.0`.
+    Gt,
+}
+
+impl Op {
+    fn eval(self, a: f64, b: f64) -> f64 {
+        match self {
+            Op::Add => a + b,
+            Op::Sub => a - b,
+            Op::Mul => a * b,
+            Op::Min => a.min(b),
+            Op::Max => a.max(b),
+            Op::Lt => {
+                if a < b {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Op::Gt => {
+                if a > b {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum NodeData {
+    Terminal(f64),
+    Internal { level: u32, children: Vec<NodeId> },
+}
+
+/// Arena of hash-consed ADD nodes over a fixed level layout.
+///
+/// `domains[l]` is the arity (number of children) of nodes at level `l`.
+/// Nodes are append-only; long-running iterations bound their footprint
+/// with [`AddStore::compact`], which rebuilds a fresh store containing
+/// only the nodes reachable from a chosen set of roots.
+#[derive(Clone, Debug)]
+pub struct AddStore {
+    domains: Vec<usize>,
+    nodes: Vec<NodeData>,
+    terminals: HashMap<u64, NodeId>,
+    internals: HashMap<(u32, Vec<NodeId>), NodeId>,
+}
+
+impl AddStore {
+    /// New empty store with the given per-level arities.
+    pub fn new(domains: Vec<usize>) -> AddStore {
+        assert!(
+            domains.iter().all(|&d| d >= 1),
+            "every ADD level needs arity >= 1"
+        );
+        assert!(
+            domains.len() < TERMINAL_LEVEL as usize,
+            "too many ADD levels"
+        );
+        AddStore {
+            domains,
+            nodes: Vec::new(),
+            terminals: HashMap::new(),
+            internals: HashMap::new(),
+        }
+    }
+
+    /// Number of variable levels.
+    pub fn n_levels(&self) -> usize {
+        self.domains.len()
+    }
+
+    /// Arity of level `l`.
+    pub fn domain(&self, level: usize) -> usize {
+        self.domains[level]
+    }
+
+    /// Total physical nodes ever interned (terminals included).
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Whether no node has been interned yet.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    fn push(&mut self, data: NodeData) -> NodeId {
+        let id = self.nodes.len();
+        assert!(id < TERMINAL_LEVEL as usize, "ADD store overflow");
+        self.nodes.push(data);
+        NodeId(id as u32)
+    }
+
+    /// Intern the constant function `v`. `-0.0` is canonicalized to `0.0`
+    /// so the bit-keyed consing cannot split the two zeros.
+    pub fn terminal(&mut self, v: f64) -> NodeId {
+        assert!(v.is_finite(), "ADD terminals must be finite, got {v}");
+        let v = if v == 0.0 { 0.0 } else { v };
+        if let Some(&id) = self.terminals.get(&v.to_bits()) {
+            return id;
+        }
+        let id = self.push(NodeData::Terminal(v));
+        self.terminals.insert(v.to_bits(), id);
+        id
+    }
+
+    /// Intern an internal node at `level` with the given children (one per
+    /// domain element, in value order). Applies the reduction rule: if all
+    /// children are the same node, that child is returned instead.
+    pub fn node(&mut self, level: usize, children: &[NodeId]) -> NodeId {
+        assert_eq!(
+            children.len(),
+            self.domains[level],
+            "level {level} has arity {}",
+            self.domains[level]
+        );
+        debug_assert!(
+            children.iter().all(|&c| self.level_of(c) > level as u32),
+            "ADD ordering violated at level {level}"
+        );
+        if children.iter().all(|&c| c == children[0]) {
+            return children[0];
+        }
+        let key = (level as u32, children.to_vec());
+        if let Some(&id) = self.internals.get(&key) {
+            return id;
+        }
+        let id = self.push(NodeData::Internal {
+            level: level as u32,
+            children: children.to_vec(),
+        });
+        self.internals.insert(key, id);
+        id
+    }
+
+    fn level_of(&self, id: NodeId) -> u32 {
+        match &self.nodes[id.0 as usize] {
+            NodeData::Terminal(_) => TERMINAL_LEVEL,
+            NodeData::Internal { level, .. } => *level,
+        }
+    }
+
+    /// The constant value of a terminal node, `None` for internal nodes.
+    pub fn terminal_value(&self, id: NodeId) -> Option<f64> {
+        match &self.nodes[id.0 as usize] {
+            NodeData::Terminal(v) => Some(*v),
+            NodeData::Internal { .. } => None,
+        }
+    }
+
+    /// The cofactor of `id` with respect to `level = v`: the child when
+    /// `id` tests exactly that level, `id` itself otherwise (ordering
+    /// guarantees the level then does not occur anywhere below).
+    fn cofactor(&self, id: NodeId, level: u32, v: usize) -> NodeId {
+        match &self.nodes[id.0 as usize] {
+            NodeData::Internal { level: l, children } if *l == level => children[v],
+            _ => id,
+        }
+    }
+
+    /// Pointwise combination `op(f, g)`, memoized over operand pairs.
+    pub fn apply(&mut self, f: NodeId, g: NodeId, op: Op) -> NodeId {
+        let mut memo = HashMap::new();
+        self.apply_rec(f, g, op, &mut memo)
+    }
+
+    fn apply_rec(
+        &mut self,
+        f: NodeId,
+        g: NodeId,
+        op: Op,
+        memo: &mut HashMap<(NodeId, NodeId), NodeId>,
+    ) -> NodeId {
+        if let (Some(a), Some(b)) = (self.terminal_value(f), self.terminal_value(g)) {
+            return self.terminal(op.eval(a, b));
+        }
+        if let Some(&r) = memo.get(&(f, g)) {
+            return r;
+        }
+        let top = self.level_of(f).min(self.level_of(g));
+        let k = self.domains[top as usize];
+        let mut children = Vec::with_capacity(k);
+        for v in 0..k {
+            let fv = self.cofactor(f, top, v);
+            let gv = self.cofactor(g, top, v);
+            children.push(self.apply_rec(fv, gv, op, memo));
+        }
+        let r = self.node(top as usize, &children);
+        memo.insert((f, g), r);
+        r
+    }
+
+    /// Fix `level := val` in `f` (the resulting diagram no longer tests
+    /// that level).
+    pub fn restrict(&mut self, f: NodeId, level: usize, val: usize) -> NodeId {
+        assert!(val < self.domains[level]);
+        let mut memo = HashMap::new();
+        self.restrict_rec(f, level as u32, val, &mut memo)
+    }
+
+    fn restrict_rec(
+        &mut self,
+        f: NodeId,
+        level: u32,
+        val: usize,
+        memo: &mut HashMap<NodeId, NodeId>,
+    ) -> NodeId {
+        let lf = self.level_of(f);
+        if lf > level {
+            return f; // ordered: the level cannot occur below here
+        }
+        if let Some(&r) = memo.get(&f) {
+            return r;
+        }
+        let r = if lf == level {
+            self.cofactor(f, level, val)
+        } else {
+            let k = self.domains[lf as usize];
+            let mut children = Vec::with_capacity(k);
+            for v in 0..k {
+                let c = self.cofactor(f, lf, v);
+                children.push(self.restrict_rec(c, level, val, memo));
+            }
+            self.node(lf as usize, &children)
+        };
+        memo.insert(f, r);
+        r
+    }
+
+    /// Sum `f` over all values of `level`: `Σ_v f[level := v]` — the
+    /// expectation building block of the SPUDD Bellman backup.
+    pub fn marginalize(&mut self, f: NodeId, level: usize) -> NodeId {
+        let mut acc = self.restrict(f, level, 0);
+        for v in 1..self.domains[level] {
+            let r = self.restrict(f, level, v);
+            acc = self.apply(acc, r, Op::Add);
+        }
+        acc
+    }
+
+    /// Move every node of `f` from level `l` to level `map[l]`. The map
+    /// must preserve the relative order of the levels that actually occur
+    /// in `f` (this is how the solver renames current-state variables to
+    /// their primed next-state levels in one O(|f|) pass).
+    pub fn relabel(&mut self, f: NodeId, map: &[u32]) -> NodeId {
+        assert_eq!(map.len(), self.domains.len());
+        let mut memo = HashMap::new();
+        self.relabel_rec(f, map, &mut memo)
+    }
+
+    fn relabel_rec(
+        &mut self,
+        f: NodeId,
+        map: &[u32],
+        memo: &mut HashMap<NodeId, NodeId>,
+    ) -> NodeId {
+        if self.terminal_value(f).is_some() {
+            return f;
+        }
+        if let Some(&r) = memo.get(&f) {
+            return r;
+        }
+        let lf = self.level_of(f) as usize;
+        let new_level = map[lf] as usize;
+        assert_eq!(
+            self.domains[new_level], self.domains[lf],
+            "relabel must preserve arity"
+        );
+        let k = self.domains[lf];
+        let mut children = Vec::with_capacity(k);
+        for v in 0..k {
+            let c = self.cofactor(f, lf as u32, v);
+            children.push(self.relabel_rec(c, map, memo));
+        }
+        let r = self.node(new_level, &children);
+        memo.insert(f, r);
+        r
+    }
+
+    /// Build the ADD of an arbitrary function over a strictly increasing
+    /// set of levels by full enumeration of their joint domain. `f`
+    /// receives the assignment values aligned with `levels`; reduction and
+    /// consing compress the result on the way up. Cost is the product of
+    /// the level arities — intended for *local* functions (CPTs, cost
+    /// terms) whose scopes are small.
+    pub fn build_over(
+        &mut self,
+        levels: &[usize],
+        f: &mut dyn FnMut(&[usize]) -> f64,
+    ) -> NodeId {
+        assert!(
+            levels.windows(2).all(|w| w[0] < w[1]),
+            "build_over levels must be strictly increasing"
+        );
+        let mut asg = Vec::with_capacity(levels.len());
+        self.build_rec(levels, 0, &mut asg, f)
+    }
+
+    fn build_rec(
+        &mut self,
+        levels: &[usize],
+        depth: usize,
+        asg: &mut Vec<usize>,
+        f: &mut dyn FnMut(&[usize]) -> f64,
+    ) -> NodeId {
+        if depth == levels.len() {
+            let v = f(asg);
+            return self.terminal(v);
+        }
+        let l = levels[depth];
+        let k = self.domains[l];
+        let mut children = Vec::with_capacity(k);
+        for v in 0..k {
+            asg.push(v);
+            children.push(self.build_rec(levels, depth + 1, asg, f));
+            asg.pop();
+        }
+        self.node(l, &children)
+    }
+
+    /// Evaluate `f` at a full assignment (`assignment[l]` is the value of
+    /// level `l`; levels the diagram does not test are ignored).
+    pub fn eval(&self, f: NodeId, assignment: &[usize]) -> f64 {
+        let mut id = f;
+        loop {
+            match &self.nodes[id.0 as usize] {
+                NodeData::Terminal(v) => return *v,
+                NodeData::Internal { level, children } => {
+                    id = children[assignment[*level as usize]];
+                }
+            }
+        }
+    }
+
+    /// `max |f|` over all states: in a reduced ordered ADD every terminal
+    /// is reached by some assignment, so the sup-norm of the represented
+    /// function is the max over reachable terminal values.
+    pub fn sup_abs(&self, f: NodeId) -> f64 {
+        let mut best: f64 = 0.0;
+        let mut seen = std::collections::HashSet::new();
+        let mut stack = vec![f];
+        while let Some(id) = stack.pop() {
+            if !seen.insert(id) {
+                continue;
+            }
+            match &self.nodes[id.0 as usize] {
+                NodeData::Terminal(v) => best = best.max(v.abs()),
+                NodeData::Internal { children, .. } => stack.extend(children.iter().copied()),
+            }
+        }
+        best
+    }
+
+    /// Number of distinct nodes (terminals included) reachable from any of
+    /// `roots` — the compression metric reported by `bench_factored`.
+    pub fn reachable(&self, roots: &[NodeId]) -> usize {
+        let mut seen = std::collections::HashSet::new();
+        let mut stack: Vec<NodeId> = roots.to_vec();
+        while let Some(id) = stack.pop() {
+            if !seen.insert(id) {
+                continue;
+            }
+            if let NodeData::Internal { children, .. } = &self.nodes[id.0 as usize] {
+                stack.extend(children.iter().copied());
+            }
+        }
+        seen.len()
+    }
+
+    /// Rebuild a fresh store containing only the nodes reachable from
+    /// `roots`; returns the new store and the translated root ids (same
+    /// order). Used by the structured solver to bound memory across
+    /// iterations: hash-consing never frees, so dead iterates accumulate
+    /// until compaction.
+    pub fn compact(&self, roots: &[NodeId]) -> (AddStore, Vec<NodeId>) {
+        let mut fresh = AddStore::new(self.domains.clone());
+        let mut memo: HashMap<NodeId, NodeId> = HashMap::new();
+        let new_roots = roots
+            .iter()
+            .map(|&r| self.migrate(r, &mut fresh, &mut memo))
+            .collect();
+        (fresh, new_roots)
+    }
+
+    fn migrate(
+        &self,
+        id: NodeId,
+        fresh: &mut AddStore,
+        memo: &mut HashMap<NodeId, NodeId>,
+    ) -> NodeId {
+        if let Some(&r) = memo.get(&id) {
+            return r;
+        }
+        let r = match &self.nodes[id.0 as usize] {
+            NodeData::Terminal(v) => fresh.terminal(*v),
+            NodeData::Internal { level, children } => {
+                let kids: Vec<NodeId> = children
+                    .iter()
+                    .map(|&c| self.migrate(c, fresh, memo))
+                    .collect();
+                fresh.node(*level as usize, &kids)
+            }
+        };
+        memo.insert(id, r);
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force evaluation over every assignment of `levels`.
+    fn for_all_assignments(domains: &[usize], mut f: impl FnMut(&[usize])) {
+        let n = domains.len();
+        let mut asg = vec![0usize; n];
+        loop {
+            f(&asg);
+            let mut i = n;
+            loop {
+                if i == 0 {
+                    return;
+                }
+                i -= 1;
+                asg[i] += 1;
+                if asg[i] < domains[i] {
+                    break;
+                }
+                asg[i] = 0;
+            }
+        }
+    }
+
+    #[test]
+    fn terminals_are_hash_consed() {
+        let mut s = AddStore::new(vec![2, 2]);
+        assert_eq!(s.terminal(1.5), s.terminal(1.5));
+        assert_ne!(s.terminal(1.5), s.terminal(2.5));
+        // -0.0 and 0.0 collapse
+        assert_eq!(s.terminal(0.0), s.terminal(-0.0));
+    }
+
+    #[test]
+    fn constant_children_reduce() {
+        let mut s = AddStore::new(vec![3]);
+        let t = s.terminal(7.0);
+        assert_eq!(s.node(0, &[t, t, t]), t);
+    }
+
+    #[test]
+    fn structural_equality_is_pointer_equality() {
+        let mut s = AddStore::new(vec![2, 2]);
+        // f(x0, x1) = x0 + 2*x1 built two different ways
+        let a = s.build_over(&[0, 1], &mut |asg| (asg[0] + 2 * asg[1]) as f64);
+        // manual bottom-up construction
+        let t = [s.terminal(0.0), s.terminal(2.0), s.terminal(1.0), s.terminal(3.0)];
+        let lo = s.node(1, &[t[0], t[1]]);
+        let hi = s.node(1, &[t[2], t[3]]);
+        let b = s.node(0, &[lo, hi]);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn apply_matches_brute_force() {
+        let domains = vec![2, 3, 2];
+        let mut s = AddStore::new(domains.clone());
+        let f = s.build_over(&[0, 1], &mut |a| (a[0] * 3 + a[1]) as f64);
+        let g = s.build_over(&[1, 2], &mut |a| (a[0] as f64) * 0.5 - a[1] as f64);
+        for op in [Op::Add, Op::Sub, Op::Mul, Op::Min, Op::Max, Op::Lt, Op::Gt] {
+            let h = s.apply(f, g, op);
+            for_all_assignments(&domains, |asg| {
+                let fa = s.eval(f, asg);
+                let ga = s.eval(g, asg);
+                assert_eq!(s.eval(h, asg), op.eval(fa, ga), "{op:?} at {asg:?}");
+            });
+        }
+    }
+
+    #[test]
+    fn restrict_and_marginalize_match_brute_force() {
+        let domains = vec![2, 3, 2];
+        let mut s = AddStore::new(domains.clone());
+        let f = s.build_over(&[0, 1, 2], &mut |a| {
+            (a[0] * 6 + a[1] * 2 + a[2]) as f64 * 0.25
+        });
+        for v in 0..3 {
+            let r = s.restrict(f, 1, v);
+            for_all_assignments(&domains, |asg| {
+                let mut fixed = asg.to_vec();
+                fixed[1] = v;
+                assert_eq!(s.eval(r, asg), s.eval(f, &fixed));
+            });
+        }
+        let m = s.marginalize(f, 1);
+        for_all_assignments(&domains, |asg| {
+            let mut sum = 0.0;
+            for v in 0..3 {
+                let mut fixed = asg.to_vec();
+                fixed[1] = v;
+                sum += s.eval(f, &fixed);
+            }
+            assert!((s.eval(m, asg) - sum).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn relabel_moves_levels() {
+        let mut s = AddStore::new(vec![2, 2, 2, 2]);
+        let f = s.build_over(&[0, 2], &mut |a| (a[0] * 2 + a[1]) as f64);
+        // move levels 0→1, 2→3
+        let g = s.relabel(f, &[1, 1, 3, 3]);
+        for_all_assignments(&[2, 2, 2, 2], |asg| {
+            let shifted = [asg[1], 0, asg[3], 0];
+            assert_eq!(s.eval(g, asg), s.eval(f, &shifted));
+        });
+    }
+
+    #[test]
+    fn compact_preserves_function_and_drops_garbage() {
+        let mut s = AddStore::new(vec![2, 2]);
+        for i in 0..100 {
+            let _ = s.terminal(i as f64); // garbage
+        }
+        let f = s.build_over(&[0, 1], &mut |a| (a[0] + a[1]) as f64);
+        let before = s.len();
+        let (fresh, roots) = s.compact(&[f]);
+        assert!(fresh.len() < before);
+        assert_eq!(fresh.len(), s.reachable(&[f]));
+        for_all_assignments(&[2, 2], |asg| {
+            assert_eq!(fresh.eval(roots[0], asg), s.eval(f, asg));
+        });
+    }
+
+    #[test]
+    fn sup_abs_is_max_over_terminals() {
+        let mut s = AddStore::new(vec![2, 2]);
+        let f = s.build_over(&[0, 1], &mut |a| match (a[0], a[1]) {
+            (0, 0) => -3.5,
+            (0, 1) => 2.0,
+            (1, 0) => 0.0,
+            _ => 1.0,
+        });
+        assert_eq!(s.sup_abs(f), 3.5);
+    }
+}

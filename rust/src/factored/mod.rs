@@ -1,0 +1,65 @@
+//! Factored MDPs and the ADD compression backend (DESIGN.md §17).
+//!
+//! Every flat catalog model enumerates its state space, so combinatorially
+//! structured problems (network epidemics, machine lines) hit memory walls
+//! long before the solver does. This module fights the curse of
+//! dimensionality with *structure* instead of only distribution:
+//!
+//! - [`spec`] — the factored model description: state = tuple of discrete
+//!   variables, transitions as per-variable CPTs over parent scopes,
+//!   costs as sums of local scope functions ([`FactoredMdp`]);
+//! - [`add`] — a hash-consed algebraic decision diagram store with
+//!   `apply` / `restrict` / `marginalize` over shared subgraphs
+//!   ([`AddStore`]);
+//! - [`svi`] — SPUDD-style structured value iteration: the Bellman backup
+//!   runs entirely on ADDs and the greedy policy is extracted as an ADD
+//!   ([`solve_svi`]);
+//! - [`compile`] — the escape hatch to everything that already exists:
+//!   stream the flattened kernel to `.mdpb` in O(chunk) memory
+//!   ([`compile_to_mdpb`]) and solve with any method × backend × rank ×
+//!   thread configuration.
+//!
+//! The two consumption paths are pinned against each other by the
+//! cross-representation conformance suite (`tests/factored.rs`):
+//! structured VI and compile-then-flat-solve must agree to 1e-9 in value
+//! and exactly in policy on every enumerable factored model.
+//!
+//! Front-door integration: `MdpBuilder::from_factored` /
+//! `MdpBuilder::factored` take a [`FactoredMdp`] as a model source, and
+//! the factored catalog models (`sis_factored`, `factory`) expose their
+//! spec through `ModelGenerator::factored`. `-factored_mode svi|compile`
+//! selects the path and `-factored_order` the elimination order.
+
+pub mod add;
+pub mod compile;
+pub mod spec;
+pub mod svi;
+
+pub use add::{AddStore, NodeId, Op};
+pub use compile::compile_to_mdpb;
+pub use spec::{
+    CostTerm, Cpt, FactoredError, FactoredMdp, VarSpec, CPT_TOL, MAX_ENUMERABLE_STATES,
+};
+pub use svi::{solve_svi, FactoredOrder, SviOptions, SviResult};
+
+/// Which consumption path a factored source solves through
+/// (`-factored_mode`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FactoredMode {
+    /// Flatten through the existing distributed builders and solve with
+    /// the configured flat method (the default).
+    #[default]
+    Compile,
+    /// SPUDD-style structured value iteration on ADDs (serial).
+    Svi,
+}
+
+impl FactoredMode {
+    /// Stable option-value name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FactoredMode::Compile => "compile",
+            FactoredMode::Svi => "svi",
+        }
+    }
+}

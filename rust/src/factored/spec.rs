@@ -1,0 +1,739 @@
+//! Factored MDP description: tuple-valued states, per-variable CPTs over
+//! parent scopes, and additively decomposed costs (DESIGN.md §17).
+//!
+//! A [`FactoredMdp`] never materializes its flat state space. The state is
+//! a tuple `(x_0, …, x_{n-1})` of discrete variables; the transition
+//! kernel factorizes as `P(x' | x, a) = Π_i P_i(x_i' | scope_i(x), a)`
+//! (one [`Cpt`] per variable) and the stage cost decomposes as
+//! `c(x, a) = Σ_j c_j(scope_j(x), a)` (a list of [`CostTerm`]s). Both
+//! consumption paths — the SPUDD-style structured solver
+//! ([`crate::factored::solve_svi`]) and the streaming flat compiler
+//! ([`crate::factored::compile_to_mdpb`]) — read this one description.
+//!
+//! Flat-space encoding: variable 0 is the most significant digit of the
+//! mixed-radix state index. This makes the cartesian-product enumeration
+//! in [`FactoredMdp::flat_prob_row`] emit successor columns in ascending
+//! order, which is exactly what the CSR builders and the `.mdpb` writer
+//! require.
+//!
+//! Validation is strict and typed ([`FactoredError`]): malformed scopes,
+//! mis-sized tables, and sub-stochastic CPT columns are rejected at
+//! construction, and every accepted distribution is then *exactly*
+//! normalized (divided by its float sum) so products of `n` per-variable
+//! factors stay within a few ulps of row-stochastic — the flat pipeline
+//! re-validates rows at its own 1e-8 bar and must never trip over
+//! accumulated CPT round-off.
+
+use crate::models::ModelGenerator;
+
+/// Looser-than-float tolerance for *user-provided* CPT columns; accepted
+/// columns are re-normalized exactly, so downstream row sums are tight.
+pub const CPT_TOL: f64 = 1e-8;
+
+/// Largest flat state count the structured solver will flatten results
+/// for (and the conformance suite will enumerate). The factored
+/// *description* itself has no such limit — `compile_to_mdpb` streams.
+pub const MAX_ENUMERABLE_STATES: usize = 1 << 22;
+
+/// One discrete state variable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VarSpec {
+    /// Human-readable name (diagnostics only).
+    pub name: String,
+    /// Domain size (values are `0..domain`).
+    pub domain: usize,
+}
+
+impl VarSpec {
+    /// Convenience constructor.
+    pub fn new(name: &str, domain: usize) -> VarSpec {
+        VarSpec {
+            name: name.to_string(),
+            domain,
+        }
+    }
+}
+
+/// Conditional probability table for one variable: the distribution of
+/// `x_var'` given the current values of the `scope` variables and the
+/// action.
+///
+/// `rows` is indexed `((a * scope_card) + u) * domain(var) + x'`, where
+/// `u` is the mixed-radix index of the scope assignment (`scope[0]` most
+/// significant) and `scope_card = Π domain(scope[j])`. Its length must be
+/// exactly `n_actions · scope_card · domain(var)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cpt {
+    /// The variable whose next value this table distributes.
+    pub var: usize,
+    /// Current-state parent variables (may include `var` itself).
+    pub scope: Vec<usize>,
+    /// Flattened distributions, one per `(action, scope assignment)`.
+    pub rows: Vec<f64>,
+}
+
+/// One additive stage-cost term over a (small) scope of variables.
+///
+/// `values` is indexed `a * scope_card + u` with the same mixed-radix
+/// scope index as [`Cpt`]; its length must be `n_actions · scope_card`.
+/// An empty scope is allowed (a pure per-action cost).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostTerm {
+    /// Variables this term reads.
+    pub scope: Vec<usize>,
+    /// Flattened cost values, one per `(action, scope assignment)`.
+    pub values: Vec<f64>,
+}
+
+/// Typed validation errors surfaced by [`FactoredMdp::new`] and the
+/// structured solver.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FactoredError {
+    /// The model has no state variables.
+    NoVariables,
+    /// The model has no actions.
+    NoActions,
+    /// A variable has an empty domain.
+    EmptyDomain {
+        /// Offending variable index.
+        var: usize,
+    },
+    /// Not exactly one CPT per variable.
+    CptCount {
+        /// Expected count (= number of variables).
+        expected: usize,
+        /// Provided count.
+        got: usize,
+    },
+    /// `cpts[index].var != index` — CPTs must be listed in variable order.
+    CptVar {
+        /// Position in the CPT list.
+        index: usize,
+        /// The `var` field found there.
+        var: usize,
+    },
+    /// A scope mentions a variable that does not exist.
+    ScopeVarOutOfRange {
+        /// `"cpt"` or `"cost term"`.
+        what: &'static str,
+        /// Index of the offending table.
+        index: usize,
+        /// The out-of-range variable.
+        var: usize,
+        /// Number of declared variables.
+        n_vars: usize,
+    },
+    /// A scope mentions the same variable twice.
+    DuplicateScopeVar {
+        /// `"cpt"` or `"cost term"`.
+        what: &'static str,
+        /// Index of the offending table.
+        index: usize,
+        /// The duplicated variable.
+        var: usize,
+    },
+    /// A table's flat length disagrees with its scope/action shape.
+    TableLen {
+        /// `"cpt"` or `"cost term"`.
+        what: &'static str,
+        /// Index of the offending table.
+        index: usize,
+        /// Required length.
+        expected: usize,
+        /// Provided length.
+        got: usize,
+    },
+    /// A CPT entry is negative, above one, or non-finite.
+    BadProbability {
+        /// Variable whose CPT is malformed.
+        var: usize,
+        /// Action index of the column.
+        action: usize,
+        /// Mixed-radix scope assignment index of the column.
+        parent: usize,
+        /// The offending entry.
+        p: f64,
+    },
+    /// A CPT column does not sum to one within [`CPT_TOL`].
+    BadDistributionSum {
+        /// Variable whose CPT is malformed.
+        var: usize,
+        /// Action index of the column.
+        action: usize,
+        /// Mixed-radix scope assignment index of the column.
+        parent: usize,
+        /// The actual column sum.
+        sum: f64,
+    },
+    /// A cost entry is non-finite.
+    NonFiniteCost {
+        /// Index of the offending cost term.
+        term: usize,
+        /// Action index of the entry.
+        action: usize,
+        /// Mixed-radix scope assignment index of the entry.
+        assignment: usize,
+    },
+    /// The flat state space does not fit in a `usize`.
+    StateSpaceOverflow {
+        /// The (truncated) product of domain sizes.
+        n_states: u128,
+    },
+    /// The flat state space exceeds [`MAX_ENUMERABLE_STATES`], so results
+    /// cannot be flattened (the streaming compile path still works).
+    TooLargeToEnumerate {
+        /// The flat state count.
+        n_states: usize,
+        /// The enumeration cap.
+        limit: usize,
+    },
+    /// The discount factor is outside `[0, 1)`.
+    BadGamma {
+        /// The offending value.
+        gamma: f64,
+    },
+}
+
+impl std::fmt::Display for FactoredError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FactoredError::NoVariables => write!(f, "factored model has no state variables"),
+            FactoredError::NoActions => write!(f, "factored model has no actions"),
+            FactoredError::EmptyDomain { var } => {
+                write!(f, "variable {var} has an empty domain")
+            }
+            FactoredError::CptCount { expected, got } => write!(
+                f,
+                "expected exactly one CPT per variable ({expected}), got {got}"
+            ),
+            FactoredError::CptVar { index, var } => write!(
+                f,
+                "CPTs must be listed in variable order: cpts[{index}].var is {var}"
+            ),
+            FactoredError::ScopeVarOutOfRange {
+                what,
+                index,
+                var,
+                n_vars,
+            } => write!(
+                f,
+                "{what} {index}: scope variable {var} is out of range (model has {n_vars} variables)"
+            ),
+            FactoredError::DuplicateScopeVar { what, index, var } => {
+                write!(f, "{what} {index}: scope lists variable {var} twice")
+            }
+            FactoredError::TableLen {
+                what,
+                index,
+                expected,
+                got,
+            } => write!(
+                f,
+                "{what} {index}: table has {got} entries, its action x scope shape requires {expected}"
+            ),
+            FactoredError::BadProbability {
+                var,
+                action,
+                parent,
+                p,
+            } => write!(
+                f,
+                "CPT of variable {var}: probability {p} at (action {action}, scope assignment {parent}) is not in [0, 1]"
+            ),
+            FactoredError::BadDistributionSum {
+                var,
+                action,
+                parent,
+                sum,
+            } => write!(
+                f,
+                "CPT of variable {var}: column (action {action}, scope assignment {parent}) sums to {sum}, not 1 (tolerance {CPT_TOL:e})"
+            ),
+            FactoredError::NonFiniteCost {
+                term,
+                action,
+                assignment,
+            } => write!(
+                f,
+                "cost term {term}: non-finite value at (action {action}, scope assignment {assignment})"
+            ),
+            FactoredError::StateSpaceOverflow { n_states } => write!(
+                f,
+                "flat state space (~{n_states} states) overflows the address space"
+            ),
+            FactoredError::TooLargeToEnumerate { n_states, limit } => write!(
+                f,
+                "flat state space has {n_states} states, above the {limit}-state enumeration cap; use the streaming compile path"
+            ),
+            FactoredError::BadGamma { gamma } => {
+                write!(f, "discount factor {gamma} is outside [0, 1)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FactoredError {}
+
+/// A validated factored MDP (see the module docs for the semantics).
+#[derive(Clone, Debug)]
+pub struct FactoredMdp {
+    vars: Vec<VarSpec>,
+    n_actions: usize,
+    cpts: Vec<Cpt>,
+    costs: Vec<CostTerm>,
+    /// Mixed-radix strides of the flat encoding (`strides[0]` largest).
+    strides: Vec<usize>,
+    n_states: usize,
+}
+
+impl FactoredMdp {
+    /// Validate and build. CPTs must be listed in variable order (one per
+    /// variable); every CPT column is checked against [`CPT_TOL`] and then
+    /// exactly normalized.
+    pub fn new(
+        vars: Vec<VarSpec>,
+        n_actions: usize,
+        mut cpts: Vec<Cpt>,
+        costs: Vec<CostTerm>,
+    ) -> Result<FactoredMdp, FactoredError> {
+        if vars.is_empty() {
+            return Err(FactoredError::NoVariables);
+        }
+        if n_actions == 0 {
+            return Err(FactoredError::NoActions);
+        }
+        for (i, v) in vars.iter().enumerate() {
+            if v.domain == 0 {
+                return Err(FactoredError::EmptyDomain { var: i });
+            }
+        }
+        let mut product: u128 = 1;
+        for v in &vars {
+            product = product.saturating_mul(v.domain as u128);
+        }
+        if product > (usize::MAX / 2) as u128 {
+            return Err(FactoredError::StateSpaceOverflow { n_states: product });
+        }
+        let n_states = product as usize;
+        let mut strides = vec![1usize; vars.len()];
+        for i in (0..vars.len().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * vars[i + 1].domain;
+        }
+
+        if cpts.len() != vars.len() {
+            return Err(FactoredError::CptCount {
+                expected: vars.len(),
+                got: cpts.len(),
+            });
+        }
+        let check_scope =
+            |what: &'static str, index: usize, scope: &[usize]| -> Result<usize, FactoredError> {
+                let mut card = 1usize;
+                for (j, &v) in scope.iter().enumerate() {
+                    if v >= vars.len() {
+                        return Err(FactoredError::ScopeVarOutOfRange {
+                            what,
+                            index,
+                            var: v,
+                            n_vars: vars.len(),
+                        });
+                    }
+                    if scope[..j].contains(&v) {
+                        return Err(FactoredError::DuplicateScopeVar { what, index, var: v });
+                    }
+                    card = card.saturating_mul(vars[v].domain);
+                }
+                Ok(card)
+            };
+
+        for (i, cpt) in cpts.iter_mut().enumerate() {
+            if cpt.var != i {
+                return Err(FactoredError::CptVar {
+                    index: i,
+                    var: cpt.var,
+                });
+            }
+            let card = check_scope("cpt", i, &cpt.scope)?;
+            let dom = vars[i].domain;
+            let expected = n_actions * card * dom;
+            if cpt.rows.len() != expected {
+                return Err(FactoredError::TableLen {
+                    what: "cpt",
+                    index: i,
+                    expected,
+                    got: cpt.rows.len(),
+                });
+            }
+            // validate + exactly normalize every (action, parent) column
+            for a in 0..n_actions {
+                for u in 0..card {
+                    let off = (a * card + u) * dom;
+                    let col = &mut cpt.rows[off..off + dom];
+                    let mut sum = 0.0;
+                    for p in col.iter() {
+                        if !p.is_finite() || *p < -1e-12 || *p > 1.0 + CPT_TOL {
+                            return Err(FactoredError::BadProbability {
+                                var: i,
+                                action: a,
+                                parent: u,
+                                p: *p,
+                            });
+                        }
+                        sum += p.max(0.0);
+                    }
+                    if (sum - 1.0).abs() > CPT_TOL {
+                        return Err(FactoredError::BadDistributionSum {
+                            var: i,
+                            action: a,
+                            parent: u,
+                            sum,
+                        });
+                    }
+                    for p in col.iter_mut() {
+                        *p = p.max(0.0) / sum;
+                    }
+                }
+            }
+        }
+
+        for (j, term) in costs.iter().enumerate() {
+            let card = check_scope("cost term", j, &term.scope)?;
+            let expected = n_actions * card;
+            if term.values.len() != expected {
+                return Err(FactoredError::TableLen {
+                    what: "cost term",
+                    index: j,
+                    expected,
+                    got: term.values.len(),
+                });
+            }
+            for a in 0..n_actions {
+                for u in 0..card {
+                    if !term.values[a * card + u].is_finite() {
+                        return Err(FactoredError::NonFiniteCost {
+                            term: j,
+                            action: a,
+                            assignment: u,
+                        });
+                    }
+                }
+            }
+        }
+
+        Ok(FactoredMdp {
+            vars,
+            n_actions,
+            cpts,
+            costs,
+            strides,
+            n_states,
+        })
+    }
+
+    /// Number of state variables.
+    pub fn n_vars(&self) -> usize {
+        self.vars.len()
+    }
+
+    /// Flat state count (product of domains).
+    pub fn n_states(&self) -> usize {
+        self.n_states
+    }
+
+    /// Action count.
+    pub fn n_actions(&self) -> usize {
+        self.n_actions
+    }
+
+    /// The variable declarations.
+    pub fn vars(&self) -> &[VarSpec] {
+        &self.vars
+    }
+
+    /// The per-variable CPTs (normalized).
+    pub fn cpts(&self) -> &[Cpt] {
+        &self.cpts
+    }
+
+    /// The additive cost terms.
+    pub fn cost_terms(&self) -> &[CostTerm] {
+        &self.costs
+    }
+
+    /// Flat index of a full assignment (variable 0 most significant).
+    pub fn encode(&self, assignment: &[usize]) -> usize {
+        debug_assert_eq!(assignment.len(), self.vars.len());
+        assignment
+            .iter()
+            .zip(&self.strides)
+            .map(|(&x, &st)| x * st)
+            .sum()
+    }
+
+    /// Inverse of [`Self::encode`]: fills `out` with the tuple of `s`.
+    pub fn decode(&self, s: usize, out: &mut Vec<usize>) {
+        debug_assert!(s < self.n_states);
+        out.clear();
+        let mut rem = s;
+        for &st in &self.strides {
+            out.push(rem / st);
+            rem %= st;
+        }
+    }
+
+    /// Cardinality of a scope's joint assignment space.
+    fn scope_card(&self, scope: &[usize]) -> usize {
+        scope.iter().map(|&v| self.vars[v].domain).product()
+    }
+
+    /// Mixed-radix index of `assignment`'s restriction to `scope`
+    /// (`scope[0]` most significant).
+    pub fn scope_index(&self, scope: &[usize], assignment: &[usize]) -> usize {
+        let mut u = 0usize;
+        for &v in scope {
+            u = u * self.vars[v].domain + assignment[v];
+        }
+        u
+    }
+
+    /// The normalized CPT column of `var` under `(action, parent index)`.
+    pub fn dist(&self, var: usize, action: usize, parent: usize) -> &[f64] {
+        let cpt = &self.cpts[var];
+        let card = self.scope_card(&cpt.scope);
+        let dom = self.vars[var].domain;
+        let off = (action * card + parent) * dom;
+        &cpt.rows[off..off + dom]
+    }
+
+    /// The flat sparse successor row of `(s, a)`: the cartesian product of
+    /// the per-variable CPT columns, zero-probability branches pruned,
+    /// columns emitted in ascending order. O(row nnz · n_vars).
+    pub fn flat_prob_row(&self, s: usize, a: usize) -> Vec<(usize, f64)> {
+        let mut asg = Vec::with_capacity(self.vars.len());
+        self.decode(s, &mut asg);
+        let dists: Vec<&[f64]> = (0..self.vars.len())
+            .map(|i| self.dist(i, a, self.scope_index(&self.cpts[i].scope, &asg)))
+            .collect();
+        let mut out = Vec::new();
+        self.product_rec(&dists, 0, 0, 1.0, &mut out);
+        out
+    }
+
+    fn product_rec(
+        &self,
+        dists: &[&[f64]],
+        depth: usize,
+        idx: usize,
+        p: f64,
+        out: &mut Vec<(usize, f64)>,
+    ) {
+        if depth == dists.len() {
+            out.push((idx, p));
+            return;
+        }
+        for (x, &px) in dists[depth].iter().enumerate() {
+            if px > 0.0 {
+                self.product_rec(dists, depth + 1, idx + x * self.strides[depth], p * px, out);
+            }
+        }
+    }
+
+    /// The flat stage cost of `(s, a)`: sum of the local cost terms.
+    pub fn flat_cost(&self, s: usize, a: usize) -> f64 {
+        let mut asg = Vec::with_capacity(self.vars.len());
+        self.decode(s, &mut asg);
+        self.costs
+            .iter()
+            .map(|t| {
+                let card = self.scope_card(&t.scope);
+                t.values[a * card + self.scope_index(&t.scope, &asg)]
+            })
+            .sum()
+    }
+
+    /// Total nonzeros of the flat transition kernel (the denominator of
+    /// the compression ratio): `Σ_{s,a} Π_i |support_i(s, a)|`, computed
+    /// without materializing any row. O(n_states · n_actions · n_vars) —
+    /// intended for enumerable instances only.
+    pub fn flat_nnz(&self) -> u128 {
+        let mut asg = Vec::with_capacity(self.vars.len());
+        let mut total: u128 = 0;
+        for s in 0..self.n_states {
+            self.decode(s, &mut asg);
+            for a in 0..self.n_actions {
+                let mut row: u128 = 1;
+                for i in 0..self.vars.len() {
+                    let support = self
+                        .dist(i, a, self.scope_index(&self.cpts[i].scope, &asg))
+                        .iter()
+                        .filter(|&&p| p > 0.0)
+                        .count();
+                    row *= support as u128;
+                }
+                total += row;
+            }
+        }
+        total
+    }
+}
+
+/// A factored MDP *is* a model generator: its flat row/cost closures feed
+/// the existing serial/distributed builders and the streaming `.mdpb`
+/// writer unchanged — this is the compile path.
+impl ModelGenerator for FactoredMdp {
+    fn n_states(&self) -> usize {
+        self.n_states
+    }
+
+    fn n_actions(&self) -> usize {
+        self.n_actions
+    }
+
+    fn prob_row(&self, s: usize, a: usize) -> Vec<(usize, f64)> {
+        self.flat_prob_row(s, a)
+    }
+
+    fn cost(&self, s: usize, a: usize) -> f64 {
+        self.flat_cost(s, a)
+    }
+
+    fn factored(&self) -> Option<&FactoredMdp> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two binary variables: x1' copies x0, x0' flips with prob 0.25.
+    fn two_var() -> FactoredMdp {
+        FactoredMdp::new(
+            vec![VarSpec::new("x0", 2), VarSpec::new("x1", 2)],
+            1,
+            vec![
+                Cpt {
+                    var: 0,
+                    scope: vec![0],
+                    rows: vec![0.75, 0.25, 0.25, 0.75],
+                },
+                Cpt {
+                    var: 1,
+                    scope: vec![0],
+                    rows: vec![1.0, 0.0, 0.0, 1.0],
+                },
+            ],
+            vec![CostTerm {
+                scope: vec![1],
+                values: vec![0.0, 2.0],
+            }],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let m = two_var();
+        let mut asg = Vec::new();
+        for s in 0..m.n_states() {
+            m.decode(s, &mut asg);
+            assert_eq!(m.encode(&asg), s);
+        }
+        // var 0 is most significant
+        assert_eq!(m.encode(&[1, 0]), 2);
+    }
+
+    #[test]
+    fn flat_rows_are_sorted_stochastic_products() {
+        let m = two_var();
+        for s in 0..4 {
+            let row = m.flat_prob_row(s, 0);
+            assert!(row.windows(2).all(|w| w[0].0 < w[1].0), "unsorted at {s}");
+            let sum: f64 = row.iter().map(|&(_, p)| p).sum();
+            assert!((sum - 1.0).abs() < 1e-12);
+        }
+        // from s=0 (x0=0, x1=0): x1'=x0=0, x0' flips w.p. 0.25
+        assert_eq!(m.flat_prob_row(0, 0), vec![(0, 0.75), (2, 0.25)]);
+    }
+
+    #[test]
+    fn flat_cost_sums_terms() {
+        let m = two_var();
+        assert_eq!(m.flat_cost(0, 0), 0.0); // x1 = 0
+        assert_eq!(m.flat_cost(1, 0), 2.0); // x1 = 1
+    }
+
+    #[test]
+    fn columns_are_exactly_normalized() {
+        // a column off by just under the tolerance is accepted and fixed
+        let m = FactoredMdp::new(
+            vec![VarSpec::new("x", 2)],
+            1,
+            vec![Cpt {
+                var: 0,
+                scope: vec![],
+                rows: vec![0.5 + 4e-9, 0.5],
+            }],
+            vec![],
+        )
+        .unwrap();
+        let d = m.dist(0, 0, 0);
+        assert!(((d[0] + d[1]) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let v = vec![VarSpec::new("x", 2)];
+        let ok_cpt = Cpt {
+            var: 0,
+            scope: vec![],
+            rows: vec![0.5, 0.5],
+        };
+        assert_eq!(
+            FactoredMdp::new(vec![], 1, vec![], vec![]).unwrap_err(),
+            FactoredError::NoVariables
+        );
+        assert_eq!(
+            FactoredMdp::new(v.clone(), 0, vec![ok_cpt.clone()], vec![]).unwrap_err(),
+            FactoredError::NoActions
+        );
+        assert_eq!(
+            FactoredMdp::new(v.clone(), 1, vec![], vec![]).unwrap_err(),
+            FactoredError::CptCount {
+                expected: 1,
+                got: 0
+            }
+        );
+        let bad_scope = Cpt {
+            var: 0,
+            scope: vec![3],
+            rows: vec![0.5, 0.5],
+        };
+        assert!(matches!(
+            FactoredMdp::new(v.clone(), 1, vec![bad_scope], vec![]).unwrap_err(),
+            FactoredError::ScopeVarOutOfRange { var: 3, .. }
+        ));
+        let sub_stochastic = Cpt {
+            var: 0,
+            scope: vec![],
+            rows: vec![0.5, 0.4],
+        };
+        assert!(matches!(
+            FactoredMdp::new(v.clone(), 1, vec![sub_stochastic], vec![]).unwrap_err(),
+            FactoredError::BadDistributionSum { .. }
+        ));
+        let bad_cost = CostTerm {
+            scope: vec![],
+            values: vec![f64::NAN],
+        };
+        assert!(matches!(
+            FactoredMdp::new(v, 1, vec![ok_cpt], vec![bad_cost]).unwrap_err(),
+            FactoredError::NonFiniteCost { .. }
+        ));
+    }
+
+    #[test]
+    fn generator_contract_holds() {
+        crate::models::check_generator(&two_var());
+    }
+}

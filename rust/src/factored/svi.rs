@@ -1,0 +1,475 @@
+//! SPUDD-style structured value iteration over ADDs (DESIGN.md §17).
+//!
+//! The Bellman backup is computed symbolically, never touching the flat
+//! state space: the value function, the per-variable transition CPTs and
+//! the additive cost terms all live as ADDs in one hash-consed store, and
+//! one backup is a sequence of `apply`/`marginalize` operations:
+//!
+//! ```text
+//! W   := V[x → x']                      (relabel current → primed levels)
+//! for each variable i, innermost first:
+//!     W := Σ_{x_i'} P_i(x_i' | scope_i, a) · W        (apply-Mul, marginalize)
+//! Q_a := C_a + γ · W
+//! V'  := min_a Q_a   (or max_a, per objective)
+//! ```
+//!
+//! Level layout: the elimination ordering assigns each variable a
+//! position `p`; its current-state level is `2p` and its primed
+//! (next-state) level `2p+1`. Interleaving keeps each CPT's parents and
+//! its primed child close in the order, which is what lets `apply` stay
+//! polynomial in diagram size on structured models.
+//!
+//! The greedy policy is itself extracted as an ADD, with the exact
+//! tie-break of the flat solver (lowest action index wins, strict
+//! improvement replaces): action 0 seeds the running best, and action `a`
+//! overwrites only where `Q_a` is *strictly* better. The conformance
+//! suite (`tests/factored.rs`) pins structured results against
+//! compile-then-flat-solve to 1e-9 values and identical policies.
+
+use super::add::{AddStore, NodeId, Op};
+use super::spec::{FactoredError, FactoredMdp, MAX_ENUMERABLE_STATES};
+use crate::mdp::Objective;
+
+/// Variable elimination order for the structured solver
+/// (`-factored_order`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FactoredOrder {
+    /// Declaration order (the default).
+    #[default]
+    Given,
+    /// Reversed declaration order.
+    Reverse,
+    /// Cheap heuristic: variables sorted by CPT scope size ascending
+    /// (ties by index) — small-scope variables eliminate first.
+    Auto,
+}
+
+impl FactoredOrder {
+    /// Stable name (options layer / diagnostics).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FactoredOrder::Given => "given",
+            FactoredOrder::Reverse => "reverse",
+            FactoredOrder::Auto => "auto",
+        }
+    }
+}
+
+/// Options for [`solve_svi`].
+#[derive(Clone, Debug)]
+pub struct SviOptions {
+    /// Stop when `‖V_{k+1} − V_k‖∞ < atol`.
+    pub atol: f64,
+    /// Iteration cap.
+    pub max_iter: usize,
+    /// Variable elimination order.
+    pub order: FactoredOrder,
+}
+
+impl Default for SviOptions {
+    fn default() -> Self {
+        SviOptions {
+            atol: 1e-8,
+            max_iter: 10_000,
+            order: FactoredOrder::Given,
+        }
+    }
+}
+
+/// Result of a structured solve, flattened for consumption by the same
+/// pipelines as the flat solver (plus ADD size diagnostics).
+#[derive(Clone, Debug)]
+pub struct SviResult {
+    /// Value vector over the enumerated flat state space.
+    pub value: Vec<f64>,
+    /// Greedy policy over the flat state space (flat-solver tie-break).
+    pub policy: Vec<usize>,
+    /// Backups executed.
+    pub iterations: usize,
+    /// Final `‖V_{k+1} − V_k‖∞`.
+    pub residual: f64,
+    /// Whether the residual dropped below `atol`.
+    pub converged: bool,
+    /// Per-iteration residuals (`trace[k]` is the residual of backup k+1).
+    pub residual_trace: Vec<f64>,
+    /// Reachable node count of the final value ADD.
+    pub value_nodes: usize,
+    /// Reachable node count of the policy ADD.
+    pub policy_nodes: usize,
+    /// Reachable node count over all per-action per-variable CPT ADDs —
+    /// the numerator of the compression ratio vs. the flat kernel nnz.
+    pub transition_nodes: usize,
+    /// The variable elimination ordering actually used.
+    pub ordering: Vec<usize>,
+}
+
+/// Compaction threshold: hash-consing never frees, so once the store
+/// grows past this many physical nodes the live roots are migrated into a
+/// fresh store. Keeps thousand-iteration runs in bounded memory.
+const COMPACT_THRESHOLD: usize = 1 << 20;
+
+/// Structured value iteration on a factored MDP. Runs serially (the ADD
+/// store is a single shared arena); the compile path covers every
+/// distributed configuration. Results are flattened over the enumerable
+/// state space, which caps `n_states` at [`MAX_ENUMERABLE_STATES`].
+pub fn solve_svi(
+    fmdp: &FactoredMdp,
+    gamma: f64,
+    objective: Objective,
+    opts: &SviOptions,
+) -> Result<SviResult, FactoredError> {
+    if !(0.0..1.0).contains(&gamma) {
+        return Err(FactoredError::BadGamma { gamma });
+    }
+    if fmdp.n_states() > MAX_ENUMERABLE_STATES {
+        return Err(FactoredError::TooLargeToEnumerate {
+            n_states: fmdp.n_states(),
+            limit: MAX_ENUMERABLE_STATES,
+        });
+    }
+    let n = fmdp.n_vars();
+    let m = fmdp.n_actions();
+
+    // --- ordering and level layout -------------------------------------
+    let ordering: Vec<usize> = match opts.order {
+        FactoredOrder::Given => (0..n).collect(),
+        FactoredOrder::Reverse => (0..n).rev().collect(),
+        FactoredOrder::Auto => {
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by_key(|&i| (fmdp.cpts()[i].scope.len(), i));
+            idx
+        }
+    };
+    let mut pos = vec![0usize; n]; // variable -> position in the ordering
+    for (p, &i) in ordering.iter().enumerate() {
+        pos[i] = p;
+    }
+    let mut domains = vec![0usize; 2 * n];
+    for (p, &i) in ordering.iter().enumerate() {
+        domains[2 * p] = fmdp.vars()[i].domain;
+        domains[2 * p + 1] = fmdp.vars()[i].domain;
+    }
+    let mut store = AddStore::new(domains);
+
+    // current → primed relabel map (identity on primed levels, which a
+    // value ADD never tests)
+    let prime_map: Vec<u32> = (0..2 * n)
+        .map(|l| if l % 2 == 0 { l as u32 + 1 } else { l as u32 })
+        .collect();
+
+    // --- model ADDs -----------------------------------------------------
+    // trans[a][p]: P(x_i' | scope_i, a) for i = ordering[p], over the
+    // parents' current levels plus the child's primed level
+    let build_model = |store: &mut AddStore| -> (Vec<Vec<NodeId>>, Vec<NodeId>) {
+        let mut trans = Vec::with_capacity(m);
+        let mut costs = Vec::with_capacity(m);
+        for a in 0..m {
+            let mut per_var = Vec::with_capacity(n);
+            for &i in &ordering {
+                let cpt = &fmdp.cpts()[i];
+                let primed = 2 * pos[i] + 1;
+                let mut levels: Vec<usize> =
+                    cpt.scope.iter().map(|&v| 2 * pos[v]).collect();
+                levels.push(primed);
+                levels.sort_unstable();
+                // map each sorted level back to what it encodes
+                let root = store.build_over(&levels, &mut |asg| {
+                    let mut scope_asg = vec![0usize; cpt.scope.len()];
+                    let mut xprime = 0usize;
+                    for (k, &l) in levels.iter().enumerate() {
+                        if l == primed {
+                            xprime = asg[k];
+                        } else {
+                            let var = ordering[l / 2];
+                            let j = cpt.scope.iter().position(|&v| v == var).unwrap();
+                            scope_asg[j] = asg[k];
+                        }
+                    }
+                    let mut u = 0usize;
+                    for (j, &v) in cpt.scope.iter().enumerate() {
+                        u = u * fmdp.vars()[v].domain + scope_asg[j];
+                    }
+                    fmdp.dist(i, a, u)[xprime]
+                });
+                per_var.push(root);
+            }
+            trans.push(per_var);
+
+            let mut c_a = store.terminal(0.0);
+            for term in fmdp.cost_terms() {
+                let levels: Vec<usize> = {
+                    let mut ls: Vec<usize> = term.scope.iter().map(|&v| 2 * pos[v]).collect();
+                    ls.sort_unstable();
+                    ls
+                };
+                let t = store.build_over(&levels, &mut |asg| {
+                    // recover the scope assignment from the sorted levels
+                    let mut u = 0usize;
+                    for &v in &term.scope {
+                        let l = 2 * pos[v];
+                        let k = levels.iter().position(|&x| x == l).unwrap();
+                        u = u * fmdp.vars()[v].domain + asg[k];
+                    }
+                    let card: usize = term
+                        .scope
+                        .iter()
+                        .map(|&v| fmdp.vars()[v].domain)
+                        .product();
+                    term.values[a * card + u]
+                });
+                c_a = store.apply(c_a, t, Op::Add);
+            }
+            costs.push(c_a);
+        }
+        (trans, costs)
+    };
+    let (mut trans, mut costs) = build_model(&mut store);
+    let trans_roots: Vec<NodeId> = trans.iter().flatten().copied().collect();
+    let transition_nodes = store.reachable(&trans_roots);
+
+    // --- value iteration ------------------------------------------------
+    let better_op = match objective {
+        Objective::Min => Op::Lt,
+        Objective::Max => Op::Gt,
+    };
+    let pick_op = match objective {
+        Objective::Min => Op::Min,
+        Objective::Max => Op::Max,
+    };
+    let mut v = store.terminal(0.0);
+    let mut pol = store.terminal(0.0);
+    let mut residual = f64::INFINITY;
+    let mut converged = false;
+    let mut iterations = 0usize;
+    let mut residual_trace = Vec::new();
+
+    for _ in 0..opts.max_iter {
+        let gamma_t = store.terminal(gamma);
+        let one = store.terminal(1.0);
+        let w_base = store.relabel(v, &prime_map);
+        let mut best: Option<NodeId> = None;
+        let mut new_pol = store.terminal(0.0);
+        for (a, per_var) in trans.iter().enumerate() {
+            let mut w = w_base;
+            for p in (0..n).rev() {
+                w = store.apply(per_var[p], w, Op::Mul);
+                w = store.marginalize(w, 2 * p + 1);
+            }
+            let disc = store.apply(gamma_t, w, Op::Mul);
+            let q_a = store.apply(costs[a], disc, Op::Add);
+            match best {
+                None => best = Some(q_a),
+                Some(b) => {
+                    // strict improvement only — flat tie-break (lowest a)
+                    let strictly = store.apply(q_a, b, better_op);
+                    let keep = store.apply(one, strictly, Op::Sub);
+                    let a_t = store.terminal(a as f64);
+                    let take = store.apply(strictly, a_t, Op::Mul);
+                    let hold = store.apply(keep, new_pol, Op::Mul);
+                    new_pol = store.apply(take, hold, Op::Add);
+                    best = Some(store.apply(b, q_a, pick_op));
+                }
+            }
+        }
+        let v_new = best.expect("n_actions >= 1");
+        let diff = store.apply(v_new, v, Op::Sub);
+        residual = store.sup_abs(diff);
+        v = v_new;
+        pol = new_pol;
+        iterations += 1;
+        residual_trace.push(residual);
+        if residual < opts.atol {
+            converged = true;
+            break;
+        }
+        if store.len() > COMPACT_THRESHOLD {
+            // keep only the model ADDs and the live iterate
+            let mut roots: Vec<NodeId> = trans.iter().flatten().copied().collect();
+            roots.extend(costs.iter().copied());
+            roots.push(v);
+            roots.push(pol);
+            let (fresh, new_roots) = store.compact(&roots);
+            store = fresh;
+            let mut it = new_roots.into_iter();
+            for per_var in trans.iter_mut() {
+                for t in per_var.iter_mut() {
+                    *t = it.next().unwrap();
+                }
+            }
+            for c in costs.iter_mut() {
+                *c = it.next().unwrap();
+            }
+            v = it.next().unwrap();
+            pol = it.next().unwrap();
+        }
+    }
+
+    // --- flatten over the enumerable state space ------------------------
+    let n_states = fmdp.n_states();
+    let mut value = Vec::with_capacity(n_states);
+    let mut policy = Vec::with_capacity(n_states);
+    let mut asg = Vec::with_capacity(n);
+    let mut levels = vec![0usize; 2 * n];
+    for s in 0..n_states {
+        fmdp.decode(s, &mut asg);
+        for (i, &x) in asg.iter().enumerate() {
+            levels[2 * pos[i]] = x;
+        }
+        value.push(store.eval(v, &levels));
+        let a = store.eval(pol, &levels);
+        policy.push((a.round() as usize).min(m - 1));
+    }
+
+    Ok(SviResult {
+        value,
+        policy,
+        iterations,
+        residual,
+        converged,
+        residual_trace,
+        value_nodes: store.reachable(&[v]),
+        policy_nodes: store.reachable(&[pol]),
+        transition_nodes,
+        ordering,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::factored::spec::{CostTerm, Cpt, VarSpec};
+    use crate::models::ModelGenerator;
+    use crate::solver::{solve_serial, Method, SolveOptions};
+
+    /// 2-variable, 2-action factored MDP with asymmetric costs.
+    fn toy() -> FactoredMdp {
+        FactoredMdp::new(
+            vec![VarSpec::new("x0", 2), VarSpec::new("x1", 2)],
+            2,
+            vec![
+                Cpt {
+                    var: 0,
+                    scope: vec![0],
+                    // a=0: sticky; a=1: pushed toward 0
+                    rows: vec![
+                        0.9, 0.1, 0.2, 0.8, // a=0: x0=0 -> [.9 .1], x0=1 -> [.2 .8]
+                        0.95, 0.05, 0.7, 0.3, // a=1
+                    ],
+                },
+                Cpt {
+                    var: 1,
+                    scope: vec![0, 1],
+                    rows: vec![
+                        // a=0, (x0,x1) in lex order
+                        0.8, 0.2, 0.6, 0.4, 0.5, 0.5, 0.1, 0.9,
+                        // a=1
+                        0.85, 0.15, 0.7, 0.3, 0.55, 0.45, 0.2, 0.8,
+                    ],
+                },
+            ],
+            vec![
+                CostTerm {
+                    scope: vec![0],
+                    values: vec![0.0, 1.0, 0.3, 1.3],
+                },
+                CostTerm {
+                    scope: vec![1],
+                    values: vec![0.0, 0.7, 0.0, 0.7],
+                },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn svi_matches_flat_vi_on_toy() {
+        let f = toy();
+        let svi = solve_svi(
+            &f,
+            0.9,
+            Objective::Min,
+            &SviOptions {
+                atol: 1e-12,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(svi.converged);
+        let mdp = f.try_build_serial(0.9).unwrap();
+        let flat = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::Vi,
+                atol: 1e-12,
+                max_outer: 100_000,
+                ..Default::default()
+            },
+        );
+        assert!(flat.converged);
+        for s in 0..f.n_states() {
+            assert!(
+                (svi.value[s] - flat.value[s]).abs() < 1e-9,
+                "value mismatch at {s}: {} vs {}",
+                svi.value[s],
+                flat.value[s]
+            );
+        }
+        assert_eq!(svi.policy, flat.policy);
+    }
+
+    #[test]
+    fn orderings_agree() {
+        let f = toy();
+        let base = solve_svi(&f, 0.9, Objective::Min, &SviOptions::default()).unwrap();
+        for order in [FactoredOrder::Reverse, FactoredOrder::Auto] {
+            let r = solve_svi(
+                &f,
+                0.9,
+                Objective::Min,
+                &SviOptions {
+                    order,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            for s in 0..f.n_states() {
+                assert!((r.value[s] - base.value[s]).abs() < 1e-9);
+            }
+            assert_eq!(r.policy, base.policy);
+        }
+    }
+
+    #[test]
+    fn max_objective_flips_the_sense() {
+        let f = toy();
+        let min = solve_svi(&f, 0.9, Objective::Min, &SviOptions::default()).unwrap();
+        let max = solve_svi(&f, 0.9, Objective::Max, &SviOptions::default()).unwrap();
+        assert!(max.value[3] >= min.value[3]);
+        let mdp = f
+            .try_build_serial(0.9)
+            .unwrap()
+            .with_objective(Objective::Max);
+        let flat = solve_serial(
+            &mdp,
+            &SolveOptions {
+                method: Method::Vi,
+                atol: 1e-8,
+                max_outer: 100_000,
+                ..Default::default()
+            },
+        );
+        for s in 0..f.n_states() {
+            assert!((max.value[s] - flat.value[s]).abs() < 1e-6);
+        }
+        assert_eq!(max.policy, flat.policy);
+    }
+
+    #[test]
+    fn bad_gamma_is_typed() {
+        let f = toy();
+        assert_eq!(
+            solve_svi(&f, 1.0, Objective::Min, &SviOptions::default()).unwrap_err(),
+            FactoredError::BadGamma { gamma: 1.0 }
+        );
+    }
+}

@@ -9,6 +9,7 @@
 //!   world ([`comm`]), row-partitioned sparse linear algebra ([`linalg`]),
 //!   Krylov inner solvers ([`ksp`]), the inexact-policy-iteration outer
 //!   solver family ([`solver`]), benchmark model generators ([`models`]),
+//!   factored models with ADD-structured value iteration ([`factored`]),
 //!   baselines ([`baseline`]), the PJRT dense-block accelerator
 //!   ([`runtime`]) and the policy-serving layer ([`serve`]) that persists
 //!   and queries solved policies.
@@ -29,6 +30,7 @@
 pub mod api;
 pub mod baseline;
 pub mod comm;
+pub mod factored;
 pub mod ksp;
 pub mod linalg;
 pub mod mdp;

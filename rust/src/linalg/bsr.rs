@@ -169,7 +169,6 @@ mod tests {
     use super::*;
     use crate::linalg::Csr;
     use crate::prop_assert;
-    use crate::util::prng::Xoshiro256pp;
     use crate::util::prop;
 
     #[test]
@@ -224,7 +223,7 @@ mod tests {
 
     #[test]
     fn prop_matches_csr_spmv() {
-        prop::forall("bsr spmv == csr spmv", |rng: &mut Xoshiro256pp| {
+        prop::forall("bsr spmv == csr spmv", |rng: &mut prop::Gen| {
             let nrows = 1 + rng.index(10);
             // Sizes straddle the lane width to exercise the partial block.
             let ncols = 1 + rng.index(3 * LANES + 2);
@@ -245,7 +244,7 @@ mod tests {
 
     #[test]
     fn prop_extreme_and_denormal_values_track_reference() {
-        prop::forall("bsr handles extreme values", |rng: &mut Xoshiro256pp| {
+        prop::forall("bsr handles extreme values", |rng: &mut prop::Gen| {
             let ncols = 1 + rng.index(2 * LANES + 1);
             let mut cols = Vec::new();
             let mut vals = Vec::new();

@@ -397,7 +397,6 @@ impl fmt::Display for Csr {
 mod tests {
     use super::*;
     use crate::prop_assert;
-    use crate::util::prng::Xoshiro256pp;
     use crate::util::prop;
 
     fn small() -> Csr {
@@ -546,7 +545,7 @@ mod tests {
 
     #[test]
     fn prop_roundtrip_triplets_spmv() {
-        prop::forall("csr spmv == dense matvec", |rng: &mut Xoshiro256pp| {
+        prop::forall("csr spmv == dense matvec", |rng: &mut prop::Gen| {
             let nrows = 1 + rng.index(12);
             let ncols = 1 + rng.index(12);
             let nnz = rng.index(nrows * ncols + 1);

@@ -1,0 +1,197 @@
+//! Factored machine-line maintenance MDP (DESIGN.md §17) — the factory
+//! process-control family of the SPUDD line of work.
+//!
+//! `K` machines form a production line; each is good (0), worn (1) or
+//! failed (2), giving `3^K` flat states. Wear is *directionally coupled*:
+//! a failed upstream machine stresses its successor (higher wear/failure
+//! probability), so machine `i`'s CPT scope is `[i-1, i]` (just `[i]`
+//! for the line head). Actions: `0` runs the line as-is; action `a ≥ 1`
+//! services machine `a-1` (mostly restoring it to good) while the rest of
+//! the line keeps running degraded.
+//!
+//! Costs decompose per machine (production loss by condition, tilted by a
+//! small per-machine factor so Q-values never tie exactly) plus a
+//! per-action service charge — distinct per machine, again to keep the
+//! conformance suite's exact-policy comparison well-posed.
+
+use super::ModelGenerator;
+use crate::factored::{CostTerm, Cpt, FactoredMdp, VarSpec};
+
+/// Wear probability good→worn while running (base / upstream-failed).
+const WEAR: (f64, f64) = (0.20, 0.45);
+/// Failure probability worn→failed while running (base / upstream-failed).
+const FAIL: (f64, f64) = (0.15, 0.35);
+/// Probability a service visit restores the machine to good.
+const SERVICE_OK: f64 = 0.85;
+/// Production loss per period by condition (good, worn, failed).
+const LOSS: [f64; 3] = [0.0, 0.45, 2.2];
+
+/// Factored machine-line specification.
+#[derive(Clone, Debug)]
+pub struct FactorySpec {
+    machines: usize,
+    fmdp: FactoredMdp,
+}
+
+impl FactorySpec {
+    /// Build the factored model for a line of `machines` (`>= 2` so the
+    /// upstream coupling exists). Actions: `machines + 1`.
+    pub fn new(machines: usize) -> Result<FactorySpec, String> {
+        if machines < 2 {
+            return Err(format!(
+                "factory needs at least 2 machines in the line, got {machines}"
+            ));
+        }
+        let m = machines + 1;
+        let vars = (0..machines)
+            .map(|i| VarSpec::new(&format!("m{i}"), 3))
+            .collect();
+        let mut cpts = Vec::with_capacity(machines);
+        for i in 0..machines {
+            let scope: Vec<usize> = if i == 0 { vec![0] } else { vec![i - 1, i] };
+            let card = if i == 0 { 3 } else { 9 };
+            let mut rows = Vec::with_capacity(m * card * 3);
+            for a in 0..m {
+                for u in 0..card {
+                    let (upstream, x) = if i == 0 { (0, u) } else { (u / 3, u % 3) };
+                    let mut dist = [0.0f64; 3];
+                    if a == i + 1 {
+                        // service this machine
+                        dist[0] += SERVICE_OK;
+                        dist[x] += 1.0 - SERVICE_OK;
+                    } else {
+                        // line runs (possibly while another machine is serviced)
+                        let stressed = i > 0 && upstream == 2;
+                        match x {
+                            0 => {
+                                let w = if stressed { WEAR.1 } else { WEAR.0 };
+                                dist[0] = 1.0 - w;
+                                dist[1] = w;
+                            }
+                            1 => {
+                                let f = if stressed { FAIL.1 } else { FAIL.0 };
+                                dist[1] = 1.0 - f;
+                                dist[2] = f;
+                            }
+                            _ => dist[2] = 1.0,
+                        }
+                    }
+                    rows.extend_from_slice(&dist);
+                }
+            }
+            cpts.push(Cpt {
+                var: i,
+                scope,
+                rows,
+            });
+        }
+        let mut costs: Vec<CostTerm> = (0..machines)
+            .map(|i| {
+                let tilt = 1.0 + 0.01 * i as f64;
+                let mut values = Vec::with_capacity(m * 3);
+                for _a in 0..m {
+                    for x in 0..3 {
+                        values.push(tilt * LOSS[x]);
+                    }
+                }
+                CostTerm {
+                    scope: vec![i],
+                    values,
+                }
+            })
+            .collect();
+        costs.push(CostTerm {
+            scope: vec![],
+            values: (0..m)
+                .map(|a| if a == 0 { 0.0 } else { 1.05 + 0.013 * (a - 1) as f64 })
+                .collect(),
+        });
+        let fmdp = FactoredMdp::new(vars, m, cpts, costs).map_err(|e| e.to_string())?;
+        Ok(FactorySpec { machines, fmdp })
+    }
+
+    /// Number of machines in the line (`3^machines` flat states).
+    pub fn machines(&self) -> usize {
+        self.machines
+    }
+
+    /// The underlying factored description.
+    pub fn factored_mdp(&self) -> &FactoredMdp {
+        &self.fmdp
+    }
+}
+
+impl ModelGenerator for FactorySpec {
+    fn n_states(&self) -> usize {
+        self.fmdp.n_states()
+    }
+
+    fn n_actions(&self) -> usize {
+        self.fmdp.n_actions()
+    }
+
+    fn prob_row(&self, s: usize, a: usize) -> Vec<(usize, f64)> {
+        self.fmdp.flat_prob_row(s, a)
+    }
+
+    fn cost(&self, s: usize, a: usize) -> f64 {
+        self.fmdp.flat_cost(s, a)
+    }
+
+    fn factored(&self) -> Option<&FactoredMdp> {
+        Some(&self.fmdp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::check_generator;
+
+    #[test]
+    fn generator_valid() {
+        check_generator(&FactorySpec::new(3).unwrap());
+    }
+
+    #[test]
+    fn line_too_short_is_an_error() {
+        assert!(FactorySpec::new(1).is_err());
+    }
+
+    #[test]
+    fn all_good_line_is_cheap_and_wears_slowly() {
+        let f = FactorySpec::new(3).unwrap();
+        assert_eq!(f.cost(0, 0), 0.0);
+        // from all-good under run, staying all-good has the largest mass
+        let row = f.prob_row(0, 0);
+        let stay = row.iter().find(|&&(t, _)| t == 0).unwrap().1;
+        assert!(stay > 0.5, "stay={stay}");
+    }
+
+    #[test]
+    fn upstream_failure_stresses_downstream() {
+        let f = FactorySpec::new(2).unwrap();
+        // machine 1 good; machine 0 failed (state 2*3+0=6) vs good (0)
+        let p_wear = |s: usize| -> f64 {
+            f.prob_row(s, 0)
+                .iter()
+                .filter(|&&(t, _)| t % 3 == 1)
+                .map(|&(_, p)| p)
+                .sum()
+        };
+        assert!(p_wear(6) > p_wear(0));
+    }
+
+    #[test]
+    fn service_mostly_restores() {
+        let f = FactorySpec::new(2).unwrap();
+        // machine 0 failed, machine 1 good; action 1 services machine 0
+        let row = f.prob_row(6, 1);
+        let back_to_good: f64 = row
+            .iter()
+            .filter(|&&(t, _)| t / 3 == 0)
+            .map(|&(_, p)| p)
+            .sum();
+        assert!(back_to_good >= SERVICE_OK - 1e-12, "p={back_to_good}");
+    }
+}

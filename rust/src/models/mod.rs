@@ -10,6 +10,7 @@
 //! rank-local [`DistMdp`] without ever materializing the global model on
 //! one rank.
 
+pub mod factory;
 pub mod garnet;
 pub mod gridworld;
 pub mod inventory;
@@ -17,6 +18,7 @@ pub mod maintenance;
 pub mod queueing;
 pub mod replacement;
 pub mod sis;
+pub mod sis_factored;
 pub mod traffic;
 
 use crate::comm::Comm;
@@ -58,6 +60,14 @@ pub trait ModelGenerator: Sync {
     /// model is a semi-MDP with a per-state-action discount vector.
     fn has_discounts(&self) -> bool {
         false
+    }
+
+    /// The factored description behind this generator, when there is one
+    /// (DESIGN.md §17). Factored catalog models override this so the
+    /// structured solver (`-factored_mode svi`) can reach their CPT/cost
+    /// decomposition; flat generators keep the default.
+    fn factored(&self) -> Option<&crate::factored::FactoredMdp> {
+        None
     }
 
     /// Fallible [`Self::build_serial`]. Well-formed generators only fail

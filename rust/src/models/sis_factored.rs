@@ -1,0 +1,166 @@
+//! Factored network-SIS epidemic control (DESIGN.md §17): the
+//! combinatorial cousin of the birth–death [`super::sis`] chain.
+//!
+//! `N` individuals sit on a ring contact network; each is susceptible (0)
+//! or infected (1), so the flat state space is `2^N` — out of reach for
+//! any flat catalog generator at modest `N`, but compactly factored: each
+//! node's next state depends only on itself and its two ring neighbors
+//! (CPT scope 3), and the stage cost is a sum of per-node infection
+//! burdens plus a global treatment cost. Two actions: do nothing, or
+//! treat (population-wide: lower contact transmission, faster recovery,
+//! at a fixed cost per period).
+//!
+//! Per-node weights carry a tiny index-dependent tilt (`1 + 0.001·i`) so
+//! optimal Q-values never tie exactly — the cross-representation
+//! conformance suite compares *policies* exactly, which demands tie-free
+//! instances.
+
+use super::ModelGenerator;
+use crate::factored::{CostTerm, Cpt, FactoredMdp, VarSpec};
+
+/// Infection probability per infected ring neighbor, by action.
+const BETA: [f64; 2] = [0.35, 0.12];
+/// Recovery probability of an infected node, by action.
+const RECOVER: [f64; 2] = [0.20, 0.55];
+/// Per-period cost of the treat action (empty-scope cost term).
+const TREAT_COST: f64 = 0.38;
+
+/// Factored ring-SIS specification.
+#[derive(Clone, Debug)]
+pub struct SisFactoredSpec {
+    nodes: usize,
+    fmdp: FactoredMdp,
+}
+
+impl SisFactoredSpec {
+    /// Build the factored model for a ring of `nodes` individuals
+    /// (`nodes >= 3` so the three-variable neighbor scopes are distinct).
+    pub fn new(nodes: usize) -> Result<SisFactoredSpec, String> {
+        if nodes < 3 {
+            return Err(format!(
+                "sis_factored needs at least 3 nodes for a ring, got {nodes}"
+            ));
+        }
+        let vars = (0..nodes)
+            .map(|i| VarSpec::new(&format!("n{i}"), 2))
+            .collect();
+        let mut cpts = Vec::with_capacity(nodes);
+        for i in 0..nodes {
+            let scope = vec![(i + nodes - 1) % nodes, i, (i + 1) % nodes];
+            // scope assignment u = x_prev*4 + x_self*2 + x_next
+            let mut rows = Vec::with_capacity(2 * 8 * 2);
+            for (&beta, &recover) in BETA.iter().zip(RECOVER.iter()) {
+                for u in 0..8usize {
+                    let (x_prev, x_self, x_next) = ((u >> 2) & 1, (u >> 1) & 1, u & 1);
+                    let p_infected = if x_self == 1 {
+                        1.0 - recover
+                    } else {
+                        let k = (x_prev + x_next) as i32;
+                        1.0 - (1.0 - beta).powi(k)
+                    };
+                    rows.push(1.0 - p_infected);
+                    rows.push(p_infected);
+                }
+            }
+            cpts.push(Cpt {
+                var: i,
+                scope,
+                rows,
+            });
+        }
+        let mut costs: Vec<CostTerm> = (0..nodes)
+            .map(|i| {
+                let burden = 1.0 + 0.001 * i as f64;
+                CostTerm {
+                    scope: vec![i],
+                    values: vec![0.0, burden, 0.0, burden],
+                }
+            })
+            .collect();
+        costs.push(CostTerm {
+            scope: vec![],
+            values: vec![0.0, TREAT_COST],
+        });
+        let fmdp = FactoredMdp::new(vars, 2, cpts, costs).map_err(|e| e.to_string())?;
+        Ok(SisFactoredSpec { nodes, fmdp })
+    }
+
+    /// Number of ring nodes (`2^nodes` flat states).
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// The underlying factored description.
+    pub fn factored_mdp(&self) -> &FactoredMdp {
+        &self.fmdp
+    }
+}
+
+impl ModelGenerator for SisFactoredSpec {
+    fn n_states(&self) -> usize {
+        self.fmdp.n_states()
+    }
+
+    fn n_actions(&self) -> usize {
+        self.fmdp.n_actions()
+    }
+
+    fn prob_row(&self, s: usize, a: usize) -> Vec<(usize, f64)> {
+        self.fmdp.flat_prob_row(s, a)
+    }
+
+    fn cost(&self, s: usize, a: usize) -> f64 {
+        self.fmdp.flat_cost(s, a)
+    }
+
+    fn factored(&self) -> Option<&FactoredMdp> {
+        Some(&self.fmdp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::check_generator;
+
+    #[test]
+    fn generator_valid() {
+        check_generator(&SisFactoredSpec::new(6).unwrap());
+    }
+
+    #[test]
+    fn ring_too_small_is_an_error() {
+        assert!(SisFactoredSpec::new(2).is_err());
+    }
+
+    #[test]
+    fn healthy_state_is_absorbing_and_free_without_treatment() {
+        let s = SisFactoredSpec::new(5).unwrap();
+        // state 0 = all susceptible; no neighbors infected → no infection
+        assert_eq!(s.prob_row(0, 0), vec![(0, 1.0)]);
+        assert_eq!(s.cost(0, 0), 0.0);
+        assert!((s.cost(0, 1) - TREAT_COST).abs() < 1e-15);
+    }
+
+    #[test]
+    fn treatment_reduces_infection_pressure() {
+        let s = SisFactoredSpec::new(5).unwrap();
+        let all_infected = s.n_states() - 1;
+        // expected next-period infections drop under treatment
+        let expect = |a: usize| -> f64 {
+            s.prob_row(all_infected, a)
+                .iter()
+                .map(|&(t, p)| p * (t.count_ones() as f64))
+                .sum()
+        };
+        assert!(expect(1) < expect(0));
+    }
+
+    #[test]
+    fn cost_counts_infected_nodes() {
+        let s = SisFactoredSpec::new(4).unwrap();
+        let one_infected = 1usize; // node 3 infected (least significant)
+        let c = s.cost(one_infected, 0);
+        assert!((c - 1.003).abs() < 1e-12, "c={c}");
+    }
+}

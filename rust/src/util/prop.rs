@@ -3,12 +3,19 @@
 //! Offline build → no `proptest`/`quickcheck`. This module provides the
 //! subset the test suite needs: seeded generators built on
 //! [`crate::util::prng::Xoshiro256pp`], a `forall` driver that runs N cases
-//! and reports the failing seed + case index (re-run with
-//! `MADUPITE_PROP_SEED=<seed>` to reproduce), and helpers for the domain
-//! types (probability vectors, sparse rows, random MDP shapes).
+//! (override the count with `MADUPITE_PROP_CASES`), and helpers for the
+//! domain types (probability vectors, sparse rows, random MDP shapes).
 //!
-//! No shrinking: cases are kept small by construction instead, which in
-//! practice localizes failures well enough for this codebase.
+//! **Shrinking.** Properties draw their randomness through a [`Gen`]: in
+//! record mode it wraps the case RNG and logs every raw `u64` draw onto a
+//! tape; when a case fails, the driver greedily shrinks that tape —
+//! shorter prefixes (missing draws replay as 0), zeroed, halved and
+//! decremented entries — re-running the property on each candidate and
+//! keeping it whenever the failure persists. The panic then reports both
+//! the original failure and the minimal counterexample tape, alongside the
+//! `MADUPITE_PROP_SEED` reproduce line. Because every generator method is
+//! a pure function of the `u64` stream, a replayed tape drives the
+//! property through exactly the same values.
 
 use crate::util::prng::Xoshiro256pp;
 
@@ -27,23 +34,270 @@ fn base_seed() -> u64 {
         .unwrap_or(0xC0FFEE)
 }
 
+/// Replay budget for the shrink loop: candidate tapes re-run per failure.
+const SHRINK_BUDGET: usize = 512;
+
+/// The property-test generator: the [`Xoshiro256pp`] surface, recorded.
+///
+/// In **record** mode every raw `u64` draw comes from the wrapped RNG and
+/// is appended to the tape; in **replay** mode draws come from the tape
+/// (exhausted positions yield 0, so shrinking may truncate freely). All
+/// derived samplers (`next_f64`, `index`, `prob_vector`, ...) are pure
+/// functions of the raw stream — identical tape, identical values.
+pub struct Gen {
+    rng: Option<Xoshiro256pp>,
+    tape: Vec<u64>,
+    pos: usize,
+}
+
+impl Gen {
+    /// Recording generator over a fresh case RNG.
+    pub fn record(seed: u64) -> Gen {
+        Gen {
+            rng: Some(Xoshiro256pp::new(seed)),
+            tape: Vec::new(),
+            pos: 0,
+        }
+    }
+
+    /// Replaying generator over a fixed tape (draws past the end are 0).
+    pub fn replay(tape: Vec<u64>) -> Gen {
+        Gen {
+            rng: None,
+            tape,
+            pos: 0,
+        }
+    }
+
+    /// The recorded (or replayed) raw draws so far.
+    pub fn tape(&self) -> &[u64] {
+        &self.tape
+    }
+
+    /// Next raw 64-bit draw — the one primitive everything else derives
+    /// from.
+    pub fn next_u64(&mut self) -> u64 {
+        match &mut self.rng {
+            Some(rng) => {
+                let v = rng.next_u64();
+                self.tape.push(v);
+                v
+            }
+            None => {
+                let v = self.tape.get(self.pos).copied().unwrap_or(0);
+                self.pos += 1;
+                v
+            }
+        }
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of entropy.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` (widening-multiply, bias-free).
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0, "next_below(0)");
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform usize index in `[0, bound)`.
+    pub fn index(&mut self, bound: usize) -> usize {
+        self.next_below(bound as u64) as usize
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller. The uniform is clamped away from 0
+    /// instead of looping (a shrunk tape replays zeros, which must stay
+    /// total) — the clamp moves a ~1e-300 tail, unobservable in tests.
+    pub fn next_gaussian(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle of a slice.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.index(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Random probability vector of length `n` (normalized exponentials —
+    /// i.e. a sample from a flat Dirichlet).
+    pub fn prob_vector(&mut self, n: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..n).map(|_| -self.next_f64().max(1e-300).ln()).collect();
+        let s: f64 = v.iter().sum();
+        for x in &mut v {
+            *x /= s;
+        }
+        v
+    }
+}
+
 /// Run `prop` for `default_cases()` seeded cases. Each case gets its own
-/// deterministic RNG. Panics with the reproducing seed on failure.
+/// deterministic recorded generator. On failure the recorded tape is
+/// shrunk to a minimal counterexample and the panic reports both, plus
+/// the reproducing seed (re-run with `MADUPITE_PROP_SEED=<seed>`).
 pub fn forall<F>(name: &str, mut prop: F)
 where
-    F: FnMut(&mut Xoshiro256pp) -> Result<(), String>,
+    F: FnMut(&mut Gen) -> Result<(), String>,
 {
     let cases = default_cases();
     let seed0 = base_seed();
     for case in 0..cases {
         let seed = seed0 ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
-        let mut rng = Xoshiro256pp::new(seed);
-        if let Err(msg) = prop(&mut rng) {
+        let mut g = Gen::record(seed);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink the recorded tape: keep any candidate that still
+            // fails (an Err *or* a panic — degenerate replays may trip
+            // asserts the original draw never reached).
+            let (tape, replays) = shrink(std::mem::take(&mut g.tape), |cand| {
+                replay_fails(&mut prop, cand).is_some()
+            });
+            let min_msg = replay_fails(&mut prop, &tape)
+                .unwrap_or_else(|| "failure no longer reproduces from the tape".into());
             panic!(
                 "property '{name}' failed at case {case}/{cases}: {msg}\n\
-                 reproduce with MADUPITE_PROP_SEED={seed0} (case seed {seed})"
+                 minimal counterexample after {replays} shrink replays: {min_msg}\n\
+                 tape: {}\n\
+                 reproduce with MADUPITE_PROP_SEED={seed0} (case seed {seed})",
+                format_tape(&tape),
             );
         }
+    }
+}
+
+/// Re-run the property on a replayed tape, mapping both `Err` and panics
+/// to the failure message (`None` = the candidate passes).
+fn replay_fails<F>(prop: &mut F, tape: &[u64]) -> Option<String>
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen::replay(tape.to_vec());
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g))) {
+        Ok(Ok(())) => None,
+        Ok(Err(msg)) => Some(msg),
+        Err(payload) => Some(match payload.downcast::<String>() {
+            Ok(s) => format!("panicked: {s}"),
+            Err(payload) => match payload.downcast::<&'static str>() {
+                Ok(s) => format!("panicked: {s}"),
+                Err(_) => "panicked".into(),
+            },
+        }),
+    }
+}
+
+/// Greedy tape shrinking to a local minimum: shorter prefixes first
+/// (halve, then drop one), then smaller entries (zero, halve, decrement),
+/// repeated to a fixpoint within [`SHRINK_BUDGET`] replays. `fails`
+/// returns whether a candidate tape still fails the property; the
+/// returned tape is the smallest failing one found plus the replay count.
+fn shrink<F>(mut tape: Vec<u64>, mut fails: F) -> (Vec<u64>, usize)
+where
+    F: FnMut(&[u64]) -> bool,
+{
+    let mut replays = 0usize;
+    loop {
+        let mut improved = false;
+
+        // Shorter tapes first: a failing prefix dominates any entry edit.
+        while !tape.is_empty() && replays < SHRINK_BUDGET {
+            let cand = tape[..tape.len() / 2].to_vec();
+            replays += 1;
+            if fails(&cand) {
+                tape = cand;
+                improved = true;
+            } else {
+                break;
+            }
+        }
+        while !tape.is_empty() && replays < SHRINK_BUDGET {
+            let cand = tape[..tape.len() - 1].to_vec();
+            replays += 1;
+            if fails(&cand) {
+                tape = cand;
+                improved = true;
+            } else {
+                break;
+            }
+        }
+
+        // Then smaller entries, each monotone toward 0.
+        let mut i = 0;
+        while i < tape.len() && replays < SHRINK_BUDGET {
+            if tape[i] != 0 {
+                let mut cand = tape.clone();
+                cand[i] = 0;
+                replays += 1;
+                if fails(&cand) {
+                    tape = cand;
+                    improved = true;
+                    i += 1;
+                    continue;
+                }
+                while tape[i] > 1 && replays < SHRINK_BUDGET {
+                    let mut cand = tape.clone();
+                    cand[i] /= 2;
+                    replays += 1;
+                    if fails(&cand) {
+                        tape = cand;
+                        improved = true;
+                    } else {
+                        break;
+                    }
+                }
+                if tape[i] > 1 && replays < SHRINK_BUDGET {
+                    let mut cand = tape.clone();
+                    cand[i] -= 1;
+                    replays += 1;
+                    if fails(&cand) {
+                        tape = cand;
+                        improved = true;
+                    }
+                }
+            }
+            i += 1;
+        }
+
+        if !improved || replays >= SHRINK_BUDGET {
+            break;
+        }
+    }
+    (tape, replays)
+}
+
+/// Compact tape rendering for the failure report (long tapes elided).
+fn format_tape(tape: &[u64]) -> String {
+    const SHOW: usize = 32;
+    let shown: Vec<String> = tape.iter().take(SHOW).map(|v| v.to_string()).collect();
+    if tape.len() > SHOW {
+        format!(
+            "[{}, … {} more] ({} draws)",
+            shown.join(", "),
+            tape.len() - SHOW,
+            tape.len()
+        )
+    } else {
+        format!("[{}] ({} draws)", shown.join(", "), tape.len())
     }
 }
 
@@ -100,6 +354,52 @@ mod tests {
             prop_assert!(x < 0.5, "x={x}");
             Ok(())
         });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn forall_reports_minimal_counterexample() {
+        forall("shrinks", |rng| {
+            let x = rng.next_u64();
+            prop_assert!(x < 1000, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn record_and_replay_agree() {
+        let mut rec = Gen::record(42);
+        let a = (
+            rec.next_f64(),
+            rec.index(10),
+            rec.next_gaussian(),
+            rec.prob_vector(4),
+        );
+        let mut rep = Gen::replay(rec.tape().to_vec());
+        let b = (
+            rep.next_f64(),
+            rep.index(10),
+            rep.next_gaussian(),
+            rep.prob_vector(4),
+        );
+        assert_eq!(a, b);
+        // draws past the tape end replay as zeros, not panics
+        assert_eq!(rep.next_u64(), 0);
+        assert_eq!(rep.next_f64(), 0.0);
+        assert!(rep.next_gaussian().is_finite());
+    }
+
+    #[test]
+    fn shrink_finds_the_boundary() {
+        // fails iff the first draw exceeds 100: the minimal failing tape
+        // is exactly [101]
+        let fails = |t: &[u64]| t.first().copied().unwrap_or(0) > 100;
+        let (tape, replays) = shrink(vec![500_000, 7, 9], fails);
+        assert_eq!(tape, vec![101]);
+        assert!(replays <= SHRINK_BUDGET, "replays={replays}");
+        // an always-failing property shrinks to the empty tape
+        let (tape, _) = shrink(vec![1, 2, 3], |_| true);
+        assert!(tape.is_empty());
     }
 
     #[test]

@@ -1,0 +1,516 @@
+//! Cross-representation conformance suite for factored MDPs
+//! (DESIGN.md §17).
+//!
+//! The headline guarantee of the ADD backend: on every factored model with
+//! an enumerable flat space, SPUDD-style structured value iteration and
+//! compile-then-flat-solve agree to 1e-9 in value and *exactly* in policy,
+//! across ranks × threads on the flat side. The two paths share nothing
+//! past the spec — the structured solver computes on decision diagrams,
+//! the compile path streams the flattened kernel through the `.mdpb`
+//! writer and solves with the distributed flat machinery — so agreement
+//! pins the whole stack: CPT normalization, the mixed-radix flat encoding,
+//! the ADD apply/marginalize algebra, the greedy tie-break, and the
+//! streaming writer.
+//!
+//! Also here: ADD canonicity properties (`util::prop`), elimination-order
+//! invariance, and the typed-error surface of the spec and the options
+//! layer.
+
+use madupite::api::{run_solve, MdpBuilder};
+use madupite::comm::World;
+use madupite::factored::{
+    compile_to_mdpb, solve_svi, AddStore, CostTerm, Cpt, FactoredError, FactoredMdp,
+    FactoredOrder, Op, SviOptions, VarSpec, MAX_ENUMERABLE_STATES,
+};
+use madupite::mdp::{io, Objective};
+use madupite::models::{factory::FactorySpec, sis_factored::SisFactoredSpec};
+use madupite::prop_assert;
+use madupite::solver::{solve_world, Method, SolveOptions};
+use madupite::util::args::Options;
+use madupite::util::par;
+use madupite::util::prop;
+use std::sync::{Arc, Mutex};
+
+/// `par::set_threads` is process-global, so the tests that sweep thread
+/// counts serialize on one lock (same idiom as `tests/par_determinism.rs`).
+static THREADS_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    THREADS_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn db(toks: &[&str]) -> Options {
+    Options::parse(toks.iter().map(|s| s.to_string()))
+}
+
+fn tmpfile(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("madupite-factored");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{}_{name}", std::process::id()))
+}
+
+/// The conformance check itself: structured VI vs compile-then-flat-solve
+/// on one factored model, 1e-9 values and identical policies, flat side
+/// swept over ranks {1, 3} × threads {1, 4}. Caller holds the thread lock.
+fn assert_conformance(tag: &str, fmdp: &FactoredMdp, gamma: f64, objective: Objective) {
+    let svi = solve_svi(
+        fmdp,
+        gamma,
+        objective,
+        &SviOptions {
+            atol: 1e-12,
+            max_iter: 100_000,
+            order: FactoredOrder::Given,
+        },
+    )
+    .unwrap();
+    assert!(svi.converged, "{tag}: structured VI did not converge");
+    assert_eq!(svi.value.len(), fmdp.n_states());
+
+    let path = tmpfile(&format!("{tag}.mdpb"));
+    {
+        let f = Arc::new(fmdp.clone());
+        let path = path.clone();
+        World::run(1, move |comm| {
+            compile_to_mdpb(&f, &comm, &path, gamma, objective, 32).unwrap();
+        });
+    }
+    let mdp = Arc::new(io::load(&path).unwrap());
+    assert_eq!(mdp.n_states(), fmdp.n_states(), "{tag}: compiled state count");
+    assert_eq!(mdp.n_actions(), fmdp.n_actions(), "{tag}: compiled action count");
+
+    let opts = SolveOptions {
+        method: Method::Vi,
+        atol: 1e-12,
+        max_outer: 100_000,
+        ..Default::default()
+    };
+    for ranks in [1usize, 3] {
+        for threads in [1usize, 4] {
+            par::set_threads(threads);
+            let flat = solve_world(Arc::clone(&mdp), ranks, &opts);
+            assert!(
+                flat.converged,
+                "{tag}/ranks={ranks}/threads={threads}: flat solve did not converge"
+            );
+            let err = prop::max_abs_diff(&svi.value, &flat.value);
+            assert!(
+                err < 1e-9,
+                "{tag}/ranks={ranks}/threads={threads}: values differ by {err:e}"
+            );
+            assert_eq!(
+                svi.policy, flat.policy,
+                "{tag}/ranks={ranks}/threads={threads}: policies differ"
+            );
+        }
+    }
+    par::set_threads(1);
+}
+
+/// A handcrafted spec exercising the corners the catalog models do not:
+/// mixed domain sizes, a scope listed out of variable order, an
+/// empty-scope CPT, an empty-scope (pure per-action) cost term, and a
+/// cost term over a non-contiguous scope.
+fn mixed_domains() -> FactoredMdp {
+    let mut cpt1_rows = Vec::new();
+    for a in 0..2usize {
+        for u in 0..6usize {
+            let w = [
+                1.0 + ((a + u) % 3) as f64 * 0.71,
+                2.0 + (u % 2) as f64 * 0.37,
+                1.0 + a as f64 * 0.53,
+            ];
+            let s: f64 = w.iter().sum();
+            cpt1_rows.extend(w.iter().map(|x| x / s));
+        }
+    }
+    FactoredMdp::new(
+        vec![
+            VarSpec::new("x0", 2),
+            VarSpec::new("x1", 3),
+            VarSpec::new("x2", 2),
+        ],
+        2,
+        vec![
+            Cpt {
+                var: 0,
+                scope: vec![2],
+                rows: vec![0.7, 0.3, 0.4, 0.6, 0.9, 0.1, 0.2, 0.8],
+            },
+            Cpt {
+                var: 1,
+                scope: vec![1, 0], // deliberately not in variable order
+                rows: cpt1_rows,
+            },
+            Cpt {
+                var: 2,
+                scope: vec![],
+                rows: vec![0.55, 0.45, 0.35, 0.65],
+            },
+        ],
+        vec![
+            CostTerm {
+                scope: vec![0, 2], // skips x1
+                values: vec![0.0, 1.13, 0.41, 1.79, 0.29, 1.23, 0.67, 1.97],
+            },
+            CostTerm {
+                scope: vec![1],
+                values: vec![0.0, 0.21, 0.77, 0.11, 0.33, 0.93],
+            },
+            CostTerm {
+                scope: vec![],
+                values: vec![0.05, 0.52],
+            },
+        ],
+    )
+    .unwrap()
+}
+
+// ---------------------------------------------------------- conformance
+
+#[test]
+fn structured_vi_matches_compile_then_flat_solve_on_catalog_models() {
+    let _guard = lock();
+    let sis = SisFactoredSpec::new(8).unwrap(); // 2^8 = 256 flat states
+    assert_conformance("sis8", sis.factored_mdp(), 0.95, Objective::Min);
+    let factory = FactorySpec::new(4).unwrap(); // 3^4 = 81 flat states
+    assert_conformance("factory4", factory.factored_mdp(), 0.95, Objective::Min);
+}
+
+#[test]
+fn conformance_holds_for_the_max_objective_too() {
+    let _guard = lock();
+    let factory = FactorySpec::new(3).unwrap();
+    assert_conformance("factory3_max", factory.factored_mdp(), 0.9, Objective::Max);
+}
+
+#[test]
+fn conformance_on_mixed_domains_and_irregular_scopes() {
+    let _guard = lock();
+    let f = mixed_domains();
+    assert_eq!(f.n_states(), 12);
+    assert_conformance("mixed_min", &f, 0.95, Objective::Min);
+    assert_conformance("mixed_max", &f, 0.95, Objective::Max);
+}
+
+/// The API front door reaches the same two paths: `-factored_mode svi`
+/// and `-factored_mode compile` through `run_solve` agree on values and
+/// policies, and both report the factored shape.
+#[test]
+fn api_svi_and_compile_paths_agree_end_to_end() {
+    let _guard = lock();
+    let f = FactorySpec::new(3).unwrap().factored_mdp().clone();
+    let svi = run_solve(
+        &MdpBuilder::from_factored(f.clone()).gamma(0.93),
+        &db(&["-factored_mode", "svi", "-atol", "1e-12", "-max_iter_pi", "100000"]),
+    )
+    .unwrap();
+    let flat = run_solve(
+        &MdpBuilder::from_factored(f.clone()).gamma(0.93),
+        &db(&["-factored_mode", "compile", "-atol", "1e-12"]),
+    )
+    .unwrap();
+    assert!(svi.result.converged && flat.result.converged);
+    assert_eq!(svi.n_states, f.n_states());
+    assert_eq!(svi.n_actions, f.n_actions());
+    let err = prop::max_abs_diff(&svi.result.value, &flat.result.value);
+    assert!(err < 1e-9, "API paths differ by {err:e}");
+    assert_eq!(svi.result.policy, flat.result.policy);
+    par::set_threads(1);
+}
+
+// --------------------------------------------------- ordering invariance
+
+#[test]
+fn elimination_order_never_changes_results() {
+    for fmdp in [
+        SisFactoredSpec::new(5).unwrap().factored_mdp().clone(),
+        FactorySpec::new(3).unwrap().factored_mdp().clone(),
+        mixed_domains(),
+    ] {
+        let base = solve_svi(
+            &fmdp,
+            0.95,
+            Objective::Min,
+            &SviOptions {
+                atol: 1e-11,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(base.converged);
+        for order in [FactoredOrder::Reverse, FactoredOrder::Auto] {
+            let r = solve_svi(
+                &fmdp,
+                0.95,
+                Objective::Min,
+                &SviOptions {
+                    atol: 1e-11,
+                    order,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            assert!(r.converged, "{order:?} did not converge");
+            // the ordering actually used is a permutation of the variables
+            let mut seen = r.ordering.clone();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..fmdp.n_vars()).collect::<Vec<_>>());
+            let err = prop::max_abs_diff(&base.value, &r.value);
+            assert!(err < 1e-9, "{order:?}: values differ by {err:e}");
+            assert_eq!(base.policy, r.policy, "{order:?}: policies differ");
+        }
+    }
+}
+
+// --------------------------------------------------- ADD canonicity props
+
+/// Canonicity is NodeId equality: the same function built along two
+/// different construction routes (pointwise `apply` of two smaller ADDs
+/// vs. direct enumeration of the combined function) must intern to the
+/// *same physical node*.
+#[test]
+fn prop_add_canonicity_across_construction_routes() {
+    prop::forall("add canonicity: apply == direct enumeration", |rng| {
+        let mut s = AddStore::new(vec![2, 3, 2]);
+        let palette = [0.0, 0.5, 1.0, 2.25];
+        let mut fv = [0.0f64; 6]; // f over levels {0, 1}
+        for v in fv.iter_mut() {
+            *v = palette[rng.index(palette.len())];
+        }
+        let mut gv = [0.0f64; 6]; // g over levels {1, 2}
+        for v in gv.iter_mut() {
+            *v = palette[rng.index(palette.len())];
+        }
+        let f = s.build_over(&[0, 1], &mut |a| fv[a[0] * 3 + a[1]]);
+        let g = s.build_over(&[1, 2], &mut |a| gv[a[0] * 2 + a[1]]);
+        for op in [Op::Add, Op::Mul, Op::Min, Op::Max] {
+            let via_apply = s.apply(f, g, op);
+            let direct = s.build_over(&[0, 1, 2], &mut |a| {
+                op_eval(op, fv[a[0] * 3 + a[1]], gv[a[1] * 2 + a[2]])
+            });
+            prop_assert!(
+                via_apply == direct,
+                "{op:?}: two construction routes interned different nodes"
+            );
+            for x0 in 0..2 {
+                for x1 in 0..3 {
+                    for x2 in 0..2 {
+                        let want = op_eval(op, fv[x0 * 3 + x1], gv[x1 * 2 + x2]);
+                        let got = s.eval(via_apply, &[x0, x1, x2]);
+                        prop_assert!(
+                            got == want,
+                            "{op:?}: eval mismatch at ({x0},{x1},{x2}): {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn op_eval(op: Op, a: f64, b: f64) -> f64 {
+    match op {
+        Op::Add => a + b,
+        Op::Mul => a * b,
+        Op::Min => a.min(b),
+        Op::Max => a.max(b),
+        _ => unreachable!("not used by the props"),
+    }
+}
+
+#[test]
+fn prop_restrict_and_marginalize_match_brute_force() {
+    prop::forall("add restrict/marginalize vs brute force", |rng| {
+        let mut s = AddStore::new(vec![2, 3, 2]);
+        let mut hv = [0.0f64; 12];
+        for v in hv.iter_mut() {
+            *v = rng.index(8) as f64 * 0.375;
+        }
+        let h = s.build_over(&[0, 1, 2], &mut |a| hv[(a[0] * 3 + a[1]) * 2 + a[2]]);
+        for val in 0..3 {
+            let r = s.restrict(h, 1, val);
+            for x0 in 0..2 {
+                for x1 in 0..3 {
+                    for x2 in 0..2 {
+                        // the restricted diagram must ignore level 1
+                        prop_assert!(
+                            s.eval(r, &[x0, x1, x2]) == hv[(x0 * 3 + val) * 2 + x2],
+                            "restrict(1:={val}) wrong at ({x0},{x1},{x2})"
+                        );
+                    }
+                }
+            }
+        }
+        let m = s.marginalize(h, 1);
+        for x0 in 0..2 {
+            for x2 in 0..2 {
+                let want: f64 = (0..3).map(|x1| hv[(x0 * 3 + x1) * 2 + x2]).sum();
+                let got = s.eval(m, &[x0, 0, x2]);
+                prop_assert!(
+                    (got - want).abs() < 1e-12,
+                    "marginalize wrong at ({x0},·,{x2}): {got} vs {want}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_constant_functions_reduce_to_one_terminal() {
+    prop::forall("add reduction: constants collapse", |rng| {
+        let mut s = AddStore::new(vec![2, 3, 2]);
+        let c = rng.index(5) as f64 * 0.75 - 1.5;
+        let f = s.build_over(&[0, 1, 2], &mut |_| c);
+        prop_assert!(
+            s.terminal_value(f) == Some(c),
+            "constant {c} did not reduce to its terminal"
+        );
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------ typed errors
+
+#[test]
+fn spec_validation_errors_are_typed_and_comparable() {
+    let v2 = vec![VarSpec::new("x", 2)];
+    let ok = Cpt {
+        var: 0,
+        scope: vec![],
+        rows: vec![0.5, 0.5],
+    };
+    assert_eq!(
+        FactoredMdp::new(vec![], 1, vec![], vec![]).unwrap_err(),
+        FactoredError::NoVariables
+    );
+    assert_eq!(
+        FactoredMdp::new(v2.clone(), 0, vec![ok.clone()], vec![]).unwrap_err(),
+        FactoredError::NoActions
+    );
+    assert_eq!(
+        FactoredMdp::new(
+            vec![VarSpec::new("x", 2), VarSpec::new("y", 0)],
+            1,
+            vec![ok.clone(), ok.clone()],
+            vec![],
+        )
+        .unwrap_err(),
+        FactoredError::EmptyDomain { var: 1 }
+    );
+    assert_eq!(
+        FactoredMdp::new(v2.clone(), 1, vec![], vec![]).unwrap_err(),
+        FactoredError::CptCount {
+            expected: 1,
+            got: 0
+        }
+    );
+    // a mis-shaped table reports exactly what it required
+    let short = Cpt {
+        var: 0,
+        scope: vec![0],
+        rows: vec![0.5, 0.5], // needs 1 action * 2 parents * 2 values = 4
+    };
+    assert_eq!(
+        FactoredMdp::new(v2.clone(), 1, vec![short], vec![]).unwrap_err(),
+        FactoredError::TableLen {
+            what: "cpt",
+            index: 0,
+            expected: 4,
+            got: 2
+        }
+    );
+    let dup = CostTerm {
+        scope: vec![0, 0],
+        values: vec![0.0; 4],
+    };
+    assert_eq!(
+        FactoredMdp::new(v2.clone(), 1, vec![ok.clone()], vec![dup]).unwrap_err(),
+        FactoredError::DuplicateScopeVar {
+            what: "cost term",
+            index: 0,
+            var: 0
+        }
+    );
+    let sub = Cpt {
+        var: 0,
+        scope: vec![],
+        rows: vec![0.6, 0.3],
+    };
+    assert!(matches!(
+        FactoredMdp::new(v2.clone(), 1, vec![sub], vec![]).unwrap_err(),
+        FactoredError::BadDistributionSum {
+            var: 0,
+            action: 0,
+            parent: 0,
+            ..
+        }
+    ));
+    // every error Displays without panicking (the API layer stringifies)
+    let e = FactoredMdp::new(v2, 3, vec![], vec![]).unwrap_err();
+    assert!(e.to_string().contains("CPT"), "{e}");
+}
+
+#[test]
+fn solver_gamma_and_enumeration_limits_are_typed() {
+    let f = SisFactoredSpec::new(3).unwrap().factored_mdp().clone();
+    assert_eq!(
+        solve_svi(&f, 1.0, Objective::Min, &SviOptions::default()).unwrap_err(),
+        FactoredError::BadGamma { gamma: 1.0 }
+    );
+    // 23 binary variables: 2^23 flat states, above the enumeration cap —
+    // the spec itself builds fine (the compile path streams), only result
+    // flattening refuses.
+    let n = 23usize;
+    let big = FactoredMdp::new(
+        (0..n).map(|i| VarSpec::new(&format!("b{i}"), 2)).collect(),
+        1,
+        (0..n)
+            .map(|i| Cpt {
+                var: i,
+                scope: vec![i],
+                rows: vec![0.8, 0.2, 0.3, 0.7],
+            })
+            .collect(),
+        vec![],
+    )
+    .unwrap();
+    assert!(big.n_states() > MAX_ENUMERABLE_STATES);
+    assert_eq!(
+        solve_svi(&big, 0.9, Objective::Min, &SviOptions::default()).unwrap_err(),
+        FactoredError::TooLargeToEnumerate {
+            n_states: 1 << 23,
+            limit: MAX_ENUMERABLE_STATES
+        }
+    );
+}
+
+#[test]
+fn options_layer_rejects_factored_knobs_off_the_factored_path() {
+    let fillers = MdpBuilder::from_fillers(
+        2,
+        1,
+        |_, _| vec![(0, 0.5), (1, 0.5)],
+        |s, _| s as f64,
+    )
+    .gamma(0.9);
+    let err = run_solve(&fillers, &db(&["-factored_mode", "svi"])).unwrap_err();
+    assert!(err.0.contains("factored source"), "{err}");
+
+    let f = SisFactoredSpec::new(3).unwrap().factored_mdp().clone();
+    let err = run_solve(
+        &MdpBuilder::from_factored(f.clone()).gamma(0.9),
+        &db(&["-factored_mode", "svi", "-ranks", "3"]),
+    )
+    .unwrap_err();
+    assert!(err.0.contains("serially"), "{err}");
+
+    let err = run_solve(
+        &MdpBuilder::from_factored(f).gamma(0.9),
+        &db(&["-factored_order", "reverse"]),
+    )
+    .unwrap_err();
+    assert!(err.0.contains("factored_mode svi"), "{err}");
+}

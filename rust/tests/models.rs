@@ -1,0 +1,168 @@
+//! Catalog-wide model validation: every entry of `MODEL_CATALOG` is
+//! instantiated (at test-sized parameters) and held to the generator
+//! contract — stochastic rows, in-range successors, finite costs, valid
+//! per-(s, a) discounts — plus a small solve as an objective sanity check.
+//!
+//! The parameter table below is *deliberately* exhaustive over the
+//! catalog: a model added to `MODEL_CATALOG` without a matching arm here
+//! panics loudly, naming the uncovered model, so catalog growth can never
+//! silently escape validation.
+
+use madupite::api::{model_from_options, MODEL_CATALOG};
+use madupite::models::ModelGenerator;
+use madupite::solver::{solve_serial, Method, SolveOptions};
+use madupite::util::args::Options;
+use std::sync::Arc;
+
+fn db(toks: &[&str]) -> Options {
+    Options::parse(toks.iter().map(|s| s.to_string()))
+}
+
+/// Small instantiation parameters per catalog model, so the exhaustive
+/// row sweep stays test-sized. The catch-all arm is the coverage gate.
+fn small_params(name: &str) -> Vec<&'static str> {
+    match name {
+        "maze" | "grid" => vec!["-rows", "5", "-cols", "5"],
+        "sis" => vec!["-population", "40", "-num_actions", "3"],
+        "traffic" => vec!["-capacity", "5"],
+        "garnet" => vec!["-num_states", "60", "-num_actions", "3", "-branching", "4"],
+        "inventory" => vec!["-capacity", "12"],
+        "queueing" => vec!["-capacity", "12"],
+        "replacement" => vec!["-num_states", "12"],
+        "maintenance" => vec!["-num_states", "12"],
+        "sis_factored" => vec!["-population", "5"],
+        "factory" => vec!["-machines", "3"],
+        other => panic!(
+            "MODEL_CATALOG gained '{other}' but tests/models.rs has no \
+             small-instance parameters for it — add an arm to small_params \
+             so catalog-wide validation covers every model"
+        ),
+    }
+}
+
+fn instantiate(name: &str) -> Arc<dyn ModelGenerator + Send + Sync> {
+    model_from_options(name, &db(&small_params(name)))
+        .unwrap_or_else(|e| panic!("{name}: small instance failed to build: {e}"))
+}
+
+/// Row-level contract on every catalog model: every `(s, a)` row is a
+/// probability distribution (1e-8), targets in range, costs finite, and
+/// the effective discount stays in [0, 1) at representative base gammas.
+#[test]
+fn every_catalog_model_satisfies_the_generator_contract() {
+    for info in MODEL_CATALOG {
+        let g = instantiate(info.name);
+        let (n, m) = (g.n_states(), g.n_actions());
+        assert!(n > 0, "{}: no states", info.name);
+        assert!(m >= 1, "{}: no actions", info.name);
+        for s in 0..n {
+            for a in 0..m {
+                let row = g.prob_row(s, a);
+                assert!(!row.is_empty(), "{}: empty row at ({s},{a})", info.name);
+                let mut sum = 0.0;
+                for &(t, p) in &row {
+                    assert!(
+                        t < n,
+                        "{}: successor {t} out of range at ({s},{a})",
+                        info.name
+                    );
+                    assert!(
+                        p.is_finite() && (0.0..=1.0 + 1e-12).contains(&p),
+                        "{}: bad probability {p} at ({s},{a})",
+                        info.name
+                    );
+                    sum += p;
+                }
+                assert!(
+                    (sum - 1.0).abs() < 1e-8,
+                    "{}: row ({s},{a}) sums to {sum}, not 1 (tol 1e-8)",
+                    info.name
+                );
+                let c = g.cost(s, a);
+                assert!(c.is_finite(), "{}: non-finite cost at ({s},{a})", info.name);
+                for gamma in [0.5, 0.99] {
+                    let d = g.discount(s, a, gamma);
+                    assert!(
+                        d.is_finite() && (0.0..1.0).contains(&d),
+                        "{}: discount {d} outside [0, 1) at ({s},{a}), gamma {gamma}",
+                        info.name
+                    );
+                    if !g.has_discounts() {
+                        assert_eq!(
+                            d, gamma,
+                            "{}: claims no per-(s,a) discounts but returned {d} != {gamma}",
+                            info.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Objective sanity: every catalog model solves at its small size, and
+/// the minimized value at every state is a lower bound on the maximized
+/// one (costs are not all equal across policies for any catalog model).
+#[test]
+fn every_catalog_model_solves_both_objectives() {
+    use madupite::mdp::Objective;
+    for info in MODEL_CATALOG {
+        let g = instantiate(info.name);
+        let opts = SolveOptions {
+            method: Method::Vi,
+            atol: 1e-8,
+            max_outer: 100_000,
+            ..Default::default()
+        };
+        let base = g
+            .try_build_serial(0.9)
+            .unwrap_or_else(|e| panic!("{}: build failed: {e}", info.name));
+        let min = solve_serial(&base, &opts);
+        assert!(min.converged, "{}: min solve did not converge", info.name);
+        let max = solve_serial(
+            &g.try_build_serial(0.9).unwrap().with_objective(Objective::Max),
+            &opts,
+        );
+        assert!(max.converged, "{}: max solve did not converge", info.name);
+        for s in 0..g.n_states() {
+            assert!(
+                min.value[s].is_finite() && max.value[s].is_finite(),
+                "{}: non-finite value at {s}",
+                info.name
+            );
+            assert!(
+                min.value[s] <= max.value[s] + 1e-7,
+                "{}: min value {} exceeds max value {} at state {s}",
+                info.name,
+                min.value[s],
+                max.value[s]
+            );
+        }
+    }
+}
+
+/// The catalog itself is well-formed: unique names, non-empty help text,
+/// and the factored entries the docs promise are present.
+#[test]
+fn catalog_is_well_formed_and_lists_the_factored_models() {
+    let names: Vec<&str> = MODEL_CATALOG.iter().map(|m| m.name).collect();
+    let mut deduped = names.clone();
+    deduped.sort_unstable();
+    deduped.dedup();
+    assert_eq!(deduped.len(), names.len(), "duplicate catalog names");
+    for info in MODEL_CATALOG {
+        assert!(!info.about.is_empty(), "{}: empty about", info.name);
+        assert!(!info.params.is_empty(), "{}: empty params", info.name);
+    }
+    assert!(names.contains(&"sis_factored"));
+    assert!(names.contains(&"factory"));
+}
+
+/// The coverage gate fires: a name outside the catalog (as would appear
+/// if `MODEL_CATALOG` grew without this file keeping up) panics with an
+/// actionable message naming the model.
+#[test]
+#[should_panic(expected = "small-instance parameters")]
+fn uncovered_catalog_entries_panic_loudly() {
+    let _ = small_params("brand_new_model");
+}

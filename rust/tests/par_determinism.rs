@@ -10,10 +10,12 @@
 
 use madupite::api::options::resolve_threads;
 use madupite::api::{MdpBuilder, Solver};
-use madupite::comm::{overlap, OverlapMode};
+use madupite::comm::{overlap, OverlapMode, World};
+use madupite::factored::compile_to_mdpb;
 use madupite::ksp::precond::PcType;
 use madupite::ksp::KspType;
-use madupite::models::{garnet::GarnetSpec, ModelGenerator};
+use madupite::mdp::{io, Objective};
+use madupite::models::{garnet::GarnetSpec, sis_factored::SisFactoredSpec, ModelGenerator};
 use madupite::solver::{
     solve_world, EvalBackend, InnerPrecision, Method, SolveOptions, SolveResult,
 };
@@ -421,6 +423,71 @@ fn async_vi_bitwise_across_threads_and_overlap() {
         }
     }
     overlap::set_mode(OverlapMode::Auto);
+    par::set_threads(1);
+}
+
+/// The factored compile path (DESIGN.md §17) joins the determinism gate:
+/// the `.mdpb` bytes a factored spec streams out are identical for every
+/// (ranks, threads) combination, and the flat solve of the compiled file
+/// is bitwise thread-count independent at each world size.
+#[test]
+fn factored_compile_bitwise_across_ranks_and_threads() {
+    let _guard = lock();
+    let fmdp = Arc::new(
+        SisFactoredSpec::new(6)
+            .unwrap()
+            .factored_mdp()
+            .clone(),
+    );
+    let dir = std::env::temp_dir().join("madupite-par-factored");
+    std::fs::create_dir_all(&dir).unwrap();
+    let opts = SolveOptions {
+        method: Method::Vi,
+        atol: 1e-10,
+        max_outer: 100_000,
+        ..Default::default()
+    };
+    let mut reference_bytes: Option<Vec<u8>> = None;
+    for ranks in [1usize, 3] {
+        let mut reference_fp = None;
+        for threads in [1usize, 4] {
+            par::set_threads(threads);
+            let path = dir.join(format!(
+                "sis6_r{ranks}_t{threads}_{}.mdpb",
+                std::process::id()
+            ));
+            {
+                let fmdp = Arc::clone(&fmdp);
+                let path = path.clone();
+                World::run(ranks, move |comm| {
+                    compile_to_mdpb(&fmdp, &comm, &path, 0.95, Objective::Min, 16).unwrap();
+                });
+            }
+            let bytes = std::fs::read(&path).unwrap();
+            match &reference_bytes {
+                None => reference_bytes = Some(bytes),
+                Some(rb) => assert_eq!(
+                    rb, &bytes,
+                    "compiled bytes differ at ranks={ranks}/threads={threads}"
+                ),
+            }
+            let mdp = Arc::new(io::load(&path).unwrap());
+            let r = solve_world(mdp, ranks, &opts);
+            assert!(
+                r.converged,
+                "factored-compile/ranks={ranks}/threads={threads} did not converge"
+            );
+            let fp = fingerprint(&r);
+            match &reference_fp {
+                None => reference_fp = Some(fp),
+                Some(re) => assert_eq!(
+                    re,
+                    &fp,
+                    "factored-compile/ranks={ranks}: threads={threads} diverged"
+                ),
+            }
+        }
+    }
     par::set_threads(1);
 }
 
